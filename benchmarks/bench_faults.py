@@ -1,0 +1,25 @@
+"""Table IV fault campaign: five scenarios, expected vs observed."""
+from __future__ import annotations
+
+import time
+
+from repro.core.faults import build_campaign, run_campaign
+from benchmarks.common import csv_row, make_testbed, save
+
+
+def run(fast_service) -> list:
+    def factory():
+        orch, _ = make_testbed(fast_service)
+        return orch
+
+    t0 = time.perf_counter()
+    results = run_campaign(factory, build_campaign())
+    us = (time.perf_counter() - t0) * 1e6 / len(results)
+    passed = sum(r["pass"] for r in results)
+    save("bench_faults", results)
+    rows = [csv_row("faults/campaign", us, f"{passed}/{len(results)} expected")]
+    for r in results:
+        rows.append(csv_row(f"faults/{r['scenario']}", 0.0,
+                            f"{r['expected']}->{r['observed']}:"
+                            f"{'PASS' if r['pass'] else 'FAIL'}"))
+    return rows

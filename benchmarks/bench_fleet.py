@@ -1,0 +1,44 @@
+"""Beyond-paper: orchestrated fleet training — placement, straggler
+mitigation and checkpoint-restore fallback through the control plane."""
+from __future__ import annotations
+
+import os
+import tempfile
+
+from repro.substrates.tpu_pod import TpuPodSubstrate
+from repro.training.runner import FleetRunner
+from benchmarks.common import csv_row, save
+
+
+def run(_fast_service=None) -> list:
+    with tempfile.TemporaryDirectory() as td:
+        fr = FleetRunner()
+        a = TpuPodSubstrate("rwkv6-7b", recipe="baseline",
+                            ckpt_dir=os.path.join(td, "a"), batch=2, seq=32)
+        b = TpuPodSubstrate("rwkv6-7b", recipe="tp_only",
+                            ckpt_dir=os.path.join(td, "b"), batch=2, seq=32)
+        fr.add_slice(a)
+        fr.add_slice(b)
+        healthy = fr.train(quanta=3, steps_per_quantum=2)
+        primary = max(healthy.placements, key=healthy.placements.get)
+        fr.slices[primary].inject_straggler(0.4)
+        mitigated = fr.train(quanta=2, steps_per_quantum=2)
+        fr.slices[primary].inject_fault("prepare_failure")
+        recovered = fr.train(quanta=1, steps_per_quantum=1, preferred=primary)
+        out = {
+            "healthy": {"placements": healthy.placements,
+                        "losses": healthy.losses},
+            "straggler_mitigated": {"placements": mitigated.placements},
+            "failure_recovered": {"placements": recovered.placements,
+                                  "fallbacks": recovered.fallbacks},
+        }
+        save("bench_fleet", out)
+        moved = sum(v for k, v in mitigated.placements.items() if k != primary)
+        return [
+            csv_row("fleet/healthy", healthy.wall_s * 1e6 / 3,
+                    f"placements={healthy.placements}"),
+            csv_row("fleet/straggler", 0.0,
+                    f"moved {moved}/2 quanta off straggler"),
+            csv_row("fleet/failure", 0.0,
+                    f"recovered on {list(recovered.placements)}"),
+        ]

@@ -1,0 +1,32 @@
+"""RQ3: externalized HTTP path — 15 invocations, RTT vs backend latency
+(paper: backend 3.95 ms, RTT 8.96 ms → boundary cost ≈ 5 ms)."""
+from __future__ import annotations
+
+import statistics
+
+from repro.core import TaskRequest
+from benchmarks.common import csv_row, make_testbed, save
+
+RUNS = 15
+
+
+def run(fast_service) -> list:
+    orch, _ = make_testbed(fast_service)
+    backend, rtt = [], []
+    for _ in range(RUNS):
+        res, _ = orch.submit(TaskRequest(
+            function="inference", input_modality="vector",
+            output_modality="vector", backend_preference="fast-external",
+            payload=[0.25, 0.25, 0.25, 0.25]))
+        assert res.status == "completed"
+        backend.append(res.timing_ms["backend_ms"])
+        rtt.append(res.timing_ms["backend_ms"]
+                   + res.telemetry["transport_ms"])
+    out = {"runs": RUNS,
+           "backend_ms_mean": statistics.fmean(backend),
+           "rtt_ms_mean": statistics.fmean(rtt),
+           "boundary_cost_ms": statistics.fmean(rtt) - statistics.fmean(backend)}
+    save("bench_http", out)
+    return [csv_row("http/backend", out["backend_ms_mean"] * 1e3, ""),
+            csv_row("http/rtt", out["rtt_ms_mean"] * 1e3,
+                    f"boundary={out['boundary_cost_ms']:.3f}ms")]

@@ -1,0 +1,27 @@
+"""RQ2 selector comparison on the curated 7-task suite (paper: full matcher
+7/7 vs random 4/7, modality-only 3/7, latency-only 3/7)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.matcher import (LatencyOnlySelector, Matcher,
+                                ModalityOnlySelector,
+                                RandomAdmissibleSelector)
+from benchmarks.common import csv_row, save
+from tests.test_matcher import run_suite
+
+
+def run(fast_service) -> list:
+    rows = []
+    out = {}
+    for cls in (Matcher, RandomAdmissibleSelector, ModalityOnlySelector,
+                LatencyOnlySelector):
+        t0 = time.perf_counter()
+        correct, details = run_suite(cls, fast_service)
+        us = (time.perf_counter() - t0) * 1e6 / 7
+        out[cls.name] = {"correct": correct, "total": 7,
+                         "details": [{"expected": e, "got": g, "ok": ok}
+                                     for e, g, ok in details]}
+        rows.append(csv_row(f"matcher/{cls.name}", us, f"{correct}/7"))
+    save("bench_matcher", out)
+    return rows

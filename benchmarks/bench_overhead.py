@@ -1,0 +1,74 @@
+"""RQ3: local control-path overhead — direct adapter vs orchestrated,
+25 runs per backend (paper §VIII-C: 0.361 / 0.194 / 0.189 ms, i.e. sub-ms
+absolute overhead; multipliers large only because direct invocations are
+extremely short)."""
+from __future__ import annotations
+
+import statistics
+import time
+
+from repro.core import TaskRequest
+from benchmarks.common import csv_row, make_testbed, save
+
+RUNS = 25
+
+TASKS = {
+    "chemical-ode": dict(function="assay", input_modality="concentration",
+                         output_modality="concentration",
+                         payload={"concentrations": [0.6, 0.2, 0.1, 0.1]},
+                         required_telemetry=("convergence_ms",)),
+    "wetware-synthetic": dict(function="screening", input_modality="spikes",
+                              output_modality="spikes",
+                              payload={"pattern": [1, 0, 1, 1]},
+                              required_telemetry=("firing_rate_hz",)),
+    "memristive-local": dict(function="inference", input_modality="vector",
+                             output_modality="vector",
+                             payload=[0.2, 0.2, 0.2, 0.2],
+                             required_telemetry=("execution_ms",)),
+}
+
+
+def run(fast_service) -> list:
+    orch, adapters = make_testbed(fast_service)
+    rows = []
+    out = {}
+    for rid, task_kw in TASKS.items():
+        adapter = adapters[rid]
+        # direct path: adapter invoke via a session but no orchestration
+        task = TaskRequest(**task_kw, backend_preference=rid)
+        desc = orch.registry.get(rid)
+        session = orch.invocations.open_session(task, desc)
+        adapter.prepare(session)
+
+        direct = []
+        for _ in range(RUNS):
+            t0 = time.perf_counter()
+            adapter.invoke(session)
+            direct.append((time.perf_counter() - t0) * 1e3)
+        adapter.reset()
+
+        orchestrated, inrun_overhead = [], []
+        for _ in range(RUNS):
+            t0 = time.perf_counter()
+            res, trace = orch.submit(TaskRequest(**task_kw,
+                                                 backend_preference=rid))
+            assert res.status == "completed", (rid, res.telemetry)
+            total = (time.perf_counter() - t0) * 1e3
+            orchestrated.append(total)
+            # within-run decomposition: control path = wall − backend time
+            # (robust to the twins' run-to-run simulation variance)
+            inrun_overhead.append(total - res.timing_ms["backend_ms"])
+        adapter.reset()
+
+        d_mean = statistics.fmean(direct)
+        o_mean = statistics.fmean(orchestrated)
+        overhead = statistics.fmean(inrun_overhead)
+        factor = o_mean / d_mean if d_mean > 0 else float("inf")
+        out[rid] = {"direct_ms": d_mean, "orchestrated_ms": o_mean,
+                    "overhead_ms": overhead,
+                    "overhead_vs_direct_ms": o_mean - d_mean,
+                    "factor": factor, "runs": RUNS}
+        rows.append(csv_row(f"overhead/{rid}", overhead * 1e3,
+                            f"factor={factor:.2f}x direct={d_mean:.3f}ms"))
+    save("bench_overhead", out)
+    return rows

@@ -1,0 +1,70 @@
+"""RQ1: descriptor/invocation shared-key ratios + Table III concern matrix."""
+from __future__ import annotations
+
+from repro.core import TaskRequest, shared_key_ratio
+from benchmarks.common import csv_row, make_testbed, save
+
+# Table III (analytic): which control-plane concerns each approach covers
+TABLE_III = {
+    "plain-mcp": dict(discovery=1, invocation=1, io="part", time=0,
+                      lifecycle=1, telemetry=0, twin=0, selection=0),
+    "w3c-wot": dict(discovery=1, invocation=1, io="part", time="part",
+                    lifecycle=0, telemetry="part", twin=0, selection=0),
+    "nir-mapping": dict(discovery=0, invocation="part", io="part", time=0,
+                        lifecycle=0, telemetry=0, twin=0, selection=0),
+    "substrate-apis": dict(discovery="part", invocation=1, io=1, time="part",
+                           lifecycle="part", telemetry="part", twin="part",
+                           selection="part"),
+    "phys-mcp": dict(discovery=1, invocation=1, io=1, time=1, lifecycle=1,
+                     telemetry=1, twin=1, selection=1),
+}
+
+INVOCATIONS = [
+    dict(function="assay", input_modality="concentration",
+         output_modality="concentration",
+         payload={"concentrations": [0.5, 0.2, 0.2, 0.1]}),
+    dict(function="screening", input_modality="spikes",
+         output_modality="spikes", payload={"pattern": [1, 1, 0, 1]}),
+    dict(function="inference", input_modality="vector",
+         output_modality="vector", payload=[0.1, 0.2, 0.3, 0.4]),
+    dict(function="inference", input_modality="vector",
+         output_modality="vector", payload=[0.4, 0.3, 0.2, 0.1],
+         backend_preference="fast-external"),
+    dict(function="screening", input_modality="spikes",
+         output_modality="spikes", payload={"pattern": [1, 0, 1]},
+         backend_preference="cortical-labs-backend"),
+]
+
+
+def run(fast_service) -> list:
+    orch, adapters = make_testbed(fast_service)
+    descs = [orch.registry.get(r).to_dict()
+             for r in sorted(orch.registry._resources)]
+    desc_ratio = shared_key_ratio(descs)
+    cap_ratio = shared_key_ratio([d["capability"] for d in descs])
+
+    results = []
+    meta = []
+    for kw in INVOCATIONS:
+        res, _ = orch.submit(TaskRequest(**kw))
+        assert res.status == "completed", (kw, res.telemetry)
+        results.append(res.to_dict())
+        meta.append({"backend": res.resource_id,
+                     "telemetry_keys": sorted(res.telemetry.keys())})
+    inv_ratio = shared_key_ratio(results)
+
+    save("bench_portability", {
+        "descriptor_shared_key_ratio": desc_ratio,
+        "capability_shared_key_ratio": cap_ratio,
+        "invocation_shared_key_ratio": inv_ratio,
+        "registered_backends": len(descs),
+        "executed_backends": sorted({m["backend"] for m in meta}),
+        "backend_specific_telemetry": meta,
+        "table_iii": TABLE_III,
+    })
+    return [
+        csv_row("portability/descriptor_ratio", 0.0, f"{desc_ratio:.2f}"),
+        csv_row("portability/invocation_ratio", 0.0, f"{inv_ratio:.2f}"),
+        csv_row("portability/backends", 0.0,
+                f"{len(descs)} registered / {len({m['backend'] for m in meta})} executed"),
+    ]

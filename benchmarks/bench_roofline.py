@@ -1,0 +1,51 @@
+"""§Roofline: per (arch × shape × mesh) table from the dry-run cache."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import csv_row, save
+
+DRYRUN = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_cells():
+    cells = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def run(_fast_service=None) -> list:
+    cells = load_cells()
+    rows = []
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+    failed = [c for c in cells if c.get("status") == "failed"]
+    fits = [c for c in ok if c["memory"]["fits"]]
+    table = []
+    for c in ok:
+        r = c["roofline"]
+        table.append({
+            "cell": c["cell"], "arch": c["arch"], "shape": c["shape"],
+            "mesh": c["mesh"], "recipe": c["recipe"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "roofline_fraction": r["roofline_fraction"],
+            "useful_ratio": c["model_flops"]["useful_ratio"],
+            "peak_live_gb": c["memory"]["peak_live_bytes"] / 1e9,
+            "fits": c["memory"]["fits"],
+        })
+        rows.append(csv_row(
+            f"roofline/{c['cell']}", r["step_time_lb_s"] * 1e6,
+            f"dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+            f"fits={c['memory']['fits']}"))
+    save("bench_roofline", {
+        "cells_ok": len(ok), "cells_skipped": len(skipped),
+        "cells_failed": len(failed), "cells_fitting": len(fits),
+        "table": table,
+    })
+    rows.insert(0, csv_row("roofline/summary", 0.0,
+                           f"{len(ok)} ok / {len(skipped)} skip / "
+                           f"{len(failed)} fail / {len(fits)} fit"))
+    return rows

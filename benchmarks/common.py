@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: result IO + testbed construction."""
+from __future__ import annotations
+
+import json
+import statistics
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def save(name: str, payload) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=2, default=str))
+    return p
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.2f},{derived}"
+
+
+def timed_runs(fn, n: int):
+    xs = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        xs.append((time.perf_counter() - t0) * 1e3)
+    return {"mean_ms": statistics.fmean(xs),
+            "median_ms": statistics.median(xs),
+            "p95_ms": sorted(xs)[int(0.95 * (len(xs) - 1))],
+            "n": n}
+
+
+def make_testbed(fast_service):
+    from repro.core import Orchestrator
+    from repro.substrates import standard_testbed
+
+    orch = Orchestrator()
+    adapters = standard_testbed(orch, http_service=fast_service)
+    return orch, adapters

@@ -1,0 +1,60 @@
+"""Benchmark harness: one bench per paper table/figure + framework extras.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows and writes machine-readable
+JSON under benchmarks/results/.
+
+Paper artifact map:
+    bench_portability — Table III + RQ1 shared-key ratios
+    bench_matcher     — RQ2 selector comparison (7-task suite)
+    bench_faults      — Table IV fault campaign
+    bench_overhead    — RQ3 local control-path cost (25 runs × 3 backends)
+    bench_http        — RQ3 externalized HTTP path (15 invocations)
+    bench_cortical    — §VIII-A/C Cortical Labs end-to-end (3 directed runs)
+    bench_roofline    — EXPERIMENTS.md §Roofline table (dry-run cache)
+    bench_fleet       — beyond-paper orchestrated TPU-fleet training
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import (bench_cortical, bench_faults, bench_fleet, bench_http,
+                        bench_matcher, bench_overhead, bench_portability,
+                        bench_roofline)
+
+BENCHES = {
+    "portability": bench_portability.run,
+    "matcher": bench_matcher.run,
+    "faults": bench_faults.run,
+    "overhead": bench_overhead.run,
+    "http": bench_http.run,
+    "cortical": bench_cortical.run,
+    "roofline": bench_roofline.run,
+    "fleet": bench_fleet.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(BENCHES))
+    args = ap.parse_args()
+
+    from repro.substrates.http_fast import FastService
+    svc = FastService().start()
+    print("name,us_per_call,derived")
+    try:
+        for name, fn in BENCHES.items():
+            if args.only and name != args.only:
+                continue
+            for row in fn(svc):
+                print(row, flush=True)
+    finally:
+        svc.stop()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,3 @@
+"""repro: phys-MCP control plane + multi-pod JAX training/inference framework."""
+
+__version__ = "1.0.0"

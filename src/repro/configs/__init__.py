@@ -1,0 +1,28 @@
+"""Assigned-architecture configs. Importing this package registers all archs."""
+from repro.configs.base import (  # noqa: F401
+    ARCH_REGISTRY,
+    ArchConfig,
+    MLAConfig,
+    MoEConfig,
+    RecurrentConfig,
+    RWKVConfig,
+    ShapeSpec,
+    SHAPES,
+    get_config,
+    list_archs,
+    reduced,
+    register,
+    supports_shape,
+)
+
+# one module per assigned architecture — import order is alphabetical
+from repro.configs import command_r_35b  # noqa: F401,E402
+from repro.configs import deepseek_v2_236b  # noqa: F401,E402
+from repro.configs import internlm2_20b  # noqa: F401,E402
+from repro.configs import llama_3_2_vision_90b  # noqa: F401,E402
+from repro.configs import moonshot_v1_16b_a3b  # noqa: F401,E402
+from repro.configs import nemotron_4_340b  # noqa: F401,E402
+from repro.configs import qwen2_5_32b  # noqa: F401,E402
+from repro.configs import recurrentgemma_9b  # noqa: F401,E402
+from repro.configs import rwkv6_7b  # noqa: F401,E402
+from repro.configs import whisper_large_v3  # noqa: F401,E402

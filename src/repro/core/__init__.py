@@ -1,0 +1,26 @@
+"""phys-MCP control plane: the paper's primary contribution.
+
+Three-plane separation (paper §IV):
+- control plane: registry, matcher, policy, lifecycle, invocation, orchestrator
+- twin plane:    twin.TwinState / TwinSyncManager
+- data plane:    repro.substrates.* adapters
+"""
+from repro.core.contracts import (SessionContracts, TelemetryContract,  # noqa: F401
+                                  TimingContract, LifecycleContract,
+                                  contracts_from_descriptor)
+from repro.core.descriptors import (CapabilityDescriptor, Observability,  # noqa: F401
+                                    PolicyConstraints, ResourceDescriptor,
+                                    SignalSpec, TimingSemantics,
+                                    LifecycleSemantics, shared_key_ratio)
+from repro.core.invocation import (InvocationManager, InvocationResult,  # noqa: F401
+                                   RESULT_KEYS, Session)
+from repro.core.lifecycle import LifecycleManager, LifecycleState  # noqa: F401
+from repro.core.matcher import (Candidate, LatencyOnlySelector, Matcher,  # noqa: F401
+                                MatchWeights, ModalityOnlySelector,
+                                RandomAdmissibleSelector)
+from repro.core.orchestrator import Orchestrator, OrchestrationTrace  # noqa: F401
+from repro.core.policy import PolicyManager  # noqa: F401
+from repro.core.registry import CapabilityRegistry  # noqa: F401
+from repro.core.tasks import TaskRequest  # noqa: F401
+from repro.core.telemetry import RuntimeSnapshot, TelemetryBus, TelemetryEvent  # noqa: F401
+from repro.core.twin import TwinState, TwinSyncManager  # noqa: F401

@@ -1,0 +1,92 @@
+"""Session contracts (paper §V-B), established at invocation time.
+
+Descriptors describe the *resource*; contracts bind a *session*:
+
+- :class:`TimingContract`   — when outputs are authoritative for this session,
+- :class:`LifecycleContract` — which transitions wrap the session,
+- :class:`TelemetryContract` — which observations are delivered, and which of
+  them update the twin plane.
+
+The orchestrator's postcondition check (paper §VII-A) validates an
+invocation result *against its contracts* — missing required telemetry or a
+violated validity bound triggers fallback, which is RQ2's recovery behavior.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingContract:
+    expected_latency_ms: float
+    observation_window_ms: float
+    min_stabilization_ms: float = 0.0
+    deadline_ms: Optional[float] = None      # hard per-session deadline
+    delivery: str = "sampled"                # sampled | streamed | event
+
+    def result_authoritative(self, elapsed_ms: float) -> bool:
+        return elapsed_ms >= self.min_stabilization_ms
+
+    def within_deadline(self, elapsed_ms: float) -> bool:
+        return self.deadline_ms is None or elapsed_ms <= self.deadline_ms
+
+
+@dataclasses.dataclass(frozen=True)
+class LifecycleContract:
+    prepare_actions: Tuple[str, ...] = ()    # e.g. ("warmup", "calibrate")
+    cleanup_actions: Tuple[str, ...] = ()    # e.g. ("flush",), ("rest",)
+    mandatory_recovery_ms: float = 0.0
+    reset_after: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryContract:
+    required_fields: Tuple[str, ...]
+    optional_fields: Tuple[str, ...] = ()
+    twin_linked_fields: Tuple[str, ...] = ()
+    delivery: str = "with_result"            # with_result | streamed
+
+    def validate(self, telemetry: Dict) -> Tuple[bool, Tuple[str, ...]]:
+        missing = tuple(f for f in self.required_fields if f not in telemetry)
+        return (not missing), missing
+
+
+@dataclasses.dataclass
+class SessionContracts:
+    timing: TimingContract
+    lifecycle: LifecycleContract
+    telemetry: TelemetryContract
+    created_at: float = dataclasses.field(default_factory=time.time)
+
+    def to_dict(self) -> Dict:
+        return {
+            "timing": dataclasses.asdict(self.timing),
+            "lifecycle": dataclasses.asdict(self.lifecycle),
+            "telemetry": dataclasses.asdict(self.telemetry),
+            "created_at": self.created_at,
+        }
+
+
+def contracts_from_descriptor(desc, task) -> SessionContracts:
+    """Derive session contracts from a capability descriptor + task request."""
+    cap = desc.capability
+    timing = TimingContract(
+        expected_latency_ms=cap.timing.expected_latency_ms,
+        observation_window_ms=cap.timing.observation_window_ms,
+        min_stabilization_ms=cap.timing.min_stabilization_ms,
+        deadline_ms=task.latency_budget_ms,
+    )
+    lifecycle = LifecycleContract(
+        prepare_actions=("warmup",) if cap.lifecycle.warmup_ms > 0 else (),
+        cleanup_actions=cap.lifecycle.recovery_modes[:1],
+        mandatory_recovery_ms=cap.lifecycle.cooldown_ms,
+    )
+    required = tuple(task.required_telemetry) or cap.observability.telemetry_fields[:1]
+    telemetry = TelemetryContract(
+        required_fields=required,
+        optional_fields=cap.observability.telemetry_fields,
+        twin_linked_fields=cap.observability.twin_linked_fields,
+    )
+    return SessionContracts(timing, lifecycle, telemetry)

@@ -1,0 +1,167 @@
+"""Substrate-aware capability model (paper §V, Table I).
+
+Two descriptor kinds:
+
+- :class:`ResourceDescriptor` — identifies a concrete substrate instance and
+  its operating context (substrate class, location, adapter type, tenancy,
+  twin binding).
+- :class:`CapabilityDescriptor` — what the resource can do and under which
+  conditions: signal modality, admissible I/O, timing regime, lifecycle
+  affordances, programmability, observability, telemetry availability.
+
+These are machine-readable inputs to matching, admission control, invocation
+setup and supervision — not passive documentation.  ``to_dict()`` produces
+the wire form whose *shared-key ratio* across heterogeneous backends is the
+paper's RQ1 portability metric (1.0 in the paper; reproduced in
+``benchmarks/bench_portability.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+# signal modalities used by the reference backends (paper §VI)
+MODALITIES = (
+    "concentration",      # DNA/chemical: molecular concentrations
+    "spikes",             # biological/wetware: stimulation patterns / spike trains
+    "vector",             # memristive/photonic: digital vectors/tensors
+    "tensor",
+    "tensor_shards",      # TPU pod substrate: sharded device arrays
+)
+
+LATENCY_REGIMES = ("slow_seconds", "fast_ms", "sub_ms")
+
+PROGRAMMABILITY = ("fixed", "configurable", "tunable", "in_situ_adaptive")
+
+
+@dataclasses.dataclass(frozen=True)
+class SignalSpec:
+    """Typed multi-physics I/O description (requirement R2)."""
+
+    modality: str
+    encoding: str = "float32"
+    admissible_range: Tuple[float, float] = (0.0, 1.0)
+    sampling_hz: Optional[float] = None
+    transduction: Optional[str] = None    # required conversion step, if any
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingSemantics:
+    """R3: when outputs become meaningful."""
+
+    latency_regime: str                   # slow_seconds | fast_ms | sub_ms
+    expected_latency_ms: float
+    observation_window_ms: float
+    min_stabilization_ms: float = 0.0
+    trigger_mode: str = "request"         # request | stream | event
+    freshness_ms: float = 60_000.0        # results older than this are stale
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class LifecycleSemantics:
+    """R4: warm-up / reset / calibration affordances."""
+
+    warmup_ms: float = 0.0
+    resetable: bool = True
+    reset_modes: Tuple[str, ...] = ("soft",)
+    reset_cost_ms: float = 0.0
+    calibration_interval_s: Optional[float] = None
+    recovery_modes: Tuple[str, ...] = ()
+    cooldown_ms: float = 0.0
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Observability:
+    """R5: which runtime signals exist and which feed the twin."""
+
+    output_channels: Tuple[str, ...]
+    telemetry_fields: Tuple[str, ...]
+    drift_indicators: Tuple[str, ...] = ()
+    twin_linked_fields: Tuple[str, ...] = ()
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConstraints:
+    """R7: safety, isolation, tenancy."""
+
+    exclusive: bool = True
+    requires_supervision: bool = False
+    max_stimulation: Optional[float] = None
+    max_concurrent: int = 1
+    authorized_tenants: Tuple[str, ...] = ("*",)
+    biosafety_level: int = 0
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class CapabilityDescriptor:
+    functions: Tuple[str, ...]            # e.g. ("inference", "screening")
+    input_signal: SignalSpec
+    output_signal: SignalSpec
+    timing: TimingSemantics
+    lifecycle: LifecycleSemantics
+    programmability: str
+    observability: Observability
+    policy: PolicyConstraints
+    supports_repeated_invocation: bool = True
+    energy_proxy_mj: Optional[float] = None
+
+    def to_dict(self) -> Dict:
+        return {
+            "functions": list(self.functions),
+            "input_signal": self.input_signal.to_dict(),
+            "output_signal": self.output_signal.to_dict(),
+            "timing": self.timing.to_dict(),
+            "lifecycle": self.lifecycle.to_dict(),
+            "programmability": self.programmability,
+            "observability": self.observability.to_dict(),
+            "policy": self.policy.to_dict(),
+            "supports_repeated_invocation": self.supports_repeated_invocation,
+            "energy_proxy_mj": self.energy_proxy_mj,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceDescriptor:
+    resource_id: str
+    substrate_class: str                  # chemical | wetware | memristive | ...
+    adapter_type: str                     # in_process | http | external_api
+    location: str                         # extreme_edge | edge | fog | cloud | lab
+    twin_binding: Optional[str]           # twin model id, None = no twin
+    capability: CapabilityDescriptor
+    description: str = ""
+
+    def to_dict(self) -> Dict:
+        return {
+            "resource_id": self.resource_id,
+            "substrate_class": self.substrate_class,
+            "adapter_type": self.adapter_type,
+            "location": self.location,
+            "twin_binding": self.twin_binding,
+            "capability": self.capability.to_dict(),
+            "description": self.description,
+        }
+
+
+def shared_key_ratio(dicts: List[Dict]) -> float:
+    """Paper RQ1 metric: |∩ keys| / |∪ keys| over top-level descriptor keys."""
+    if not dicts:
+        return 0.0
+    key_sets = [set(d.keys()) for d in dicts]
+    inter = set.intersection(*key_sets)
+    union = set.union(*key_sets)
+    return len(inter) / len(union) if union else 1.0

@@ -1,0 +1,147 @@
+"""Fault-injection campaign machinery (paper Table IV).
+
+Five representative scenarios:
+
+1. ``drifted_local_fast``   — local fast backend drifted → matcher prefers
+                              the externalized fast backend directly.
+2. ``local_prepare_failure``— local preparation fails → recover via fallback.
+3. ``wetware_no_supervision`` — policy reject before execution.
+4. ``stale_chemical_twin``  — freshness bound reject before execution.
+5. ``missing_telemetry``    — postcondition check fails → fallback used.
+
+Each scenario states its expected control-plane behavior; the campaign
+returns observed-vs-expected, which tests and benchmarks assert on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List
+
+from repro.core.orchestrator import Orchestrator
+from repro.core.tasks import TaskRequest
+from repro.core.telemetry import RuntimeSnapshot
+
+
+@dataclasses.dataclass
+class FaultScenario:
+    name: str
+    description: str
+    expected: str          # "success_direct" | "success_fallback" | "reject"
+    inject: Callable[[Orchestrator], None]
+    task: Callable[[], TaskRequest]
+    target_hint: str = ""
+
+
+def _set_drift(orch: Orchestrator, rid: str, drift: float) -> None:
+    snap = orch.bus.snapshot(rid) or RuntimeSnapshot(rid)
+    snap.drift_score = drift
+    snap.health_status = "degraded" if drift > 0.3 else "healthy"
+    orch.bus.update_snapshot(snap)
+
+
+def _stale_twin(orch: Orchestrator, rid: str, age_s: float) -> None:
+    tw = orch.twins.get(rid)
+    if tw is not None:
+        tw.last_sync = time.time() - age_s
+
+
+def build_campaign(local_fast="memristive-local", ext_fast="fast-external",
+                   wetware="wetware-synthetic", chemical="chemical-ode",
+                   ) -> List[FaultScenario]:
+    return [
+        FaultScenario(
+            name="drifted_local_fast",
+            description="local fast backend reports excessive drift; matcher "
+                        "should prefer the healthier externalized backend "
+                        "directly (no fallback needed)",
+            expected="success_direct",
+            inject=lambda o: _set_drift(o, local_fast, 0.8),
+            task=lambda: TaskRequest(
+                function="inference", input_modality="vector",
+                output_modality="vector", payload=[0.1, 0.2, 0.3, 0.4],
+                required_telemetry=("execution_ms",)),
+            target_hint=ext_fast,
+        ),
+        FaultScenario(
+            name="local_prepare_failure",
+            description="local fast backend fails during preparation; "
+                        "orchestrator recovers through fallback",
+            expected="success_fallback",
+            inject=lambda o: o.registry.adapter(local_fast).inject_fault(
+                "prepare_failure"),
+            task=lambda: TaskRequest(
+                function="inference", input_modality="vector",
+                output_modality="vector", payload=[0.1, 0.2, 0.3, 0.4],
+                required_telemetry=("execution_ms",)),
+            target_hint=ext_fast,
+        ),
+        FaultScenario(
+            name="wetware_no_supervision",
+            description="wetware requires human supervision; the task "
+                        "declares none → reject before execution",
+            expected="reject",
+            inject=lambda o: None,
+            task=lambda: TaskRequest(
+                function="screening", input_modality="spikes",
+                output_modality="spikes", payload={"pattern": [1, 0, 1, 1]},
+                supervision_available=False,
+                required_telemetry=("viability",)),
+        ),
+        FaultScenario(
+            name="stale_chemical_twin",
+            description="chemical twin exceeds the task's freshness bound "
+                        "despite nominal modality compatibility → reject",
+            expected="reject",
+            inject=lambda o: _stale_twin(o, chemical, age_s=3600.0),
+            task=lambda: TaskRequest(
+                function="assay", input_modality="concentration",
+                output_modality="concentration",
+                payload={"concentrations": [0.2, 0.4]},
+                max_twin_age_ms=60_000.0,
+                required_telemetry=("convergence_ms",)),
+        ),
+        FaultScenario(
+            name="missing_telemetry",
+            description="backend completes but drops a required telemetry "
+                        "field; postcondition validation fails → fallback",
+            expected="success_fallback",
+            inject=lambda o: o.registry.adapter(local_fast).inject_fault(
+                "drop_telemetry"),
+            task=lambda: TaskRequest(
+                function="inference", input_modality="vector",
+                output_modality="vector", payload=[0.5, 0.5, 0.5, 0.5],
+                required_telemetry=("execution_ms", "drift_score")),
+            target_hint=ext_fast,
+        ),
+    ]
+
+
+def run_campaign(make_orchestrator: Callable[[], Orchestrator],
+                 scenarios: List[FaultScenario]) -> List[Dict]:
+    """Run each scenario on a FRESH orchestrator (faults don't leak)."""
+    results = []
+    for sc in scenarios:
+        orch = make_orchestrator()
+        sc.inject(orch)
+        result, trace = orch.submit(sc.task())
+        if result.status == "completed":
+            observed = "success_fallback" if trace.fallback_used else "success_direct"
+        elif result.status == "rejected":
+            observed = "reject"
+        else:
+            observed = result.status
+        ok = observed == sc.expected
+        if ok and sc.target_hint and result.status == "completed":
+            ok = result.resource_id == sc.target_hint
+        results.append({
+            "scenario": sc.name,
+            "description": sc.description,
+            "expected": sc.expected,
+            "observed": observed,
+            "selected": result.resource_id or None,
+            "target_hint": sc.target_hint or None,
+            "attempts": trace.attempts,
+            "pass": bool(ok),
+        })
+    return results

@@ -1,0 +1,140 @@
+"""Invocation manager: sessions, contracts, normalized results (paper §IV-B).
+
+Every backend — chemical twin, synthetic wetware, memristive, HTTP-external,
+Cortical-Labs-style API, TPU pod — returns the SAME normalized result keys
+(:data:`RESULT_KEYS`).  That stability is the paper's RQ1 invocation
+portability claim (shared-key ratio 1.0), while backend-specific payloads
+live under ``output``/``telemetry``/``artifacts``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, Optional
+
+from repro.core.contracts import SessionContracts, contracts_from_descriptor
+from repro.core.descriptors import ResourceDescriptor
+from repro.core.lifecycle import LifecycleManager, LifecycleState
+from repro.core.tasks import TaskRequest
+from repro.core.telemetry import TelemetryBus, TelemetryEvent
+
+RESULT_KEYS = ("task_id", "resource_id", "status", "output", "telemetry",
+               "artifacts", "timing_ms", "contracts", "session_id")
+
+_session_ids = itertools.count(1)
+
+
+@dataclasses.dataclass
+class Session:
+    session_id: str
+    task: TaskRequest
+    descriptor: ResourceDescriptor
+    contracts: SessionContracts
+    state: str = "created"        # created | prepared | running | done | failed
+    started_at: float = 0.0
+
+
+@dataclasses.dataclass
+class InvocationResult:
+    task_id: str
+    resource_id: str
+    status: str                   # completed | rejected | failed | invalidated
+    output: Any
+    telemetry: Dict
+    artifacts: Dict
+    timing_ms: Dict
+    contracts: Dict
+    session_id: str
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class InvocationError(RuntimeError):
+    def __init__(self, phase: str, message: str):
+        super().__init__(message)
+        self.phase = phase
+
+
+class InvocationManager:
+    def __init__(self, registry, lifecycle: LifecycleManager, bus: TelemetryBus):
+        self.registry = registry
+        self.lifecycle = lifecycle
+        self.bus = bus
+
+    def open_session(self, task: TaskRequest, desc: ResourceDescriptor) -> Session:
+        contracts = contracts_from_descriptor(desc, task)
+        return Session(f"session-{next(_session_ids):05d}", task, desc, contracts)
+
+    def prepare(self, session: Session) -> None:
+        """Lifecycle preparation: warm-up / priming / calibration.
+
+        A substrate parked in NEEDS_RESET is recovered first using its
+        descriptor's recovery mode (flush / rest / reprogram) — lifecycle
+        transitions are part of the effective execution cost (paper §V-B).
+        """
+        rid = session.descriptor.resource_id
+        adapter = self.registry.adapter(rid)
+        t0 = time.perf_counter()
+        if self.lifecycle.state(rid) == LifecycleState.NEEDS_RESET:
+            modes = session.descriptor.capability.lifecycle.recovery_modes
+            mode = modes[0] if modes else "soft"
+            adapter.reset(mode)
+            self.lifecycle.recover(rid, mode)
+            self.bus.emit(TelemetryEvent(rid, "lifecycle",
+                                         {"phase": "recover", "mode": mode}))
+        if self.lifecycle.state(rid) in (LifecycleState.UNINITIALIZED,
+                                         LifecycleState.READY):
+            self.lifecycle.prepare(rid)
+        try:
+            adapter.prepare(session)
+        except Exception as e:
+            self.lifecycle.fail(rid, "prepare")
+            raise InvocationError("prepare", str(e)) from e
+        dur = (time.perf_counter() - t0) * 1e3
+        self.lifecycle.ready(rid)
+        session.state = "prepared"
+        self.bus.emit(TelemetryEvent(rid, "lifecycle",
+                                     {"phase": "prepare", "ms": dur}))
+
+    def invoke(self, session: Session) -> InvocationResult:
+        rid = session.descriptor.resource_id
+        adapter = self.registry.adapter(rid)
+        self.lifecycle.run(rid)
+        session.state = "running"
+        session.started_at = time.perf_counter()
+        try:
+            raw = adapter.invoke(session)
+        except Exception as e:
+            self.lifecycle.fail(rid, "invoke")
+            session.state = "failed"
+            raise InvocationError("invoke", str(e)) from e
+        elapsed_ms = (time.perf_counter() - session.started_at) * 1e3
+        needs_reset = bool(raw.get("needs_reset", False))
+        self.lifecycle.complete(rid, needs_reset=needs_reset)
+        session.state = "done"
+        telemetry = dict(raw.get("telemetry", {}))
+        result = InvocationResult(
+            task_id=session.task.task_id,
+            resource_id=rid,
+            status="completed",
+            output=raw.get("output"),
+            telemetry=telemetry,
+            artifacts=dict(raw.get("artifacts", {})),
+            timing_ms={"backend_ms": raw.get("backend_ms", elapsed_ms),
+                       "total_ms": elapsed_ms,
+                       "observation_ms": telemetry.get("observation_ms",
+                                                       elapsed_ms)},
+            contracts=session.contracts.to_dict(),
+            session_id=session.session_id,
+        )
+        self.bus.emit(TelemetryEvent(rid, "result", dict(
+            telemetry, status=result.status, backend_ms=result.timing_ms["backend_ms"])))
+        return result
+
+    def rejected(self, task: TaskRequest, reason: str) -> InvocationResult:
+        return InvocationResult(
+            task_id=task.task_id, resource_id="", status="rejected",
+            output=None, telemetry={"reason": reason}, artifacts={},
+            timing_ms={}, contracts={}, session_id="")

@@ -1,0 +1,101 @@
+"""Lifecycle plane: explicit state machines per substrate (requirement R4).
+
+Physical substrates are not always-ready resources — warm-up, priming,
+calibration, reset, cooldown and recovery are part of the effective
+execution cost.  The manager enforces legal transitions and records their
+wall-clock cost (surfaced in RQ3 as control-path overhead).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Dict, List, Optional, Tuple
+
+
+class LifecycleState(enum.Enum):
+    UNINITIALIZED = "uninitialized"
+    PREPARING = "preparing"        # warm-up / priming / calibration
+    READY = "ready"
+    RUNNING = "running"
+    NEEDS_RESET = "needs_reset"    # must flush/recharge/rest before reuse
+    RECOVERING = "recovering"
+    COOLDOWN = "cooldown"
+    FAILED = "failed"
+    RETIRED = "retired"
+
+
+_LEGAL: Dict[LifecycleState, Tuple[LifecycleState, ...]] = {
+    LifecycleState.UNINITIALIZED: (LifecycleState.PREPARING,),
+    LifecycleState.PREPARING: (LifecycleState.READY, LifecycleState.FAILED),
+    LifecycleState.READY: (LifecycleState.RUNNING, LifecycleState.PREPARING,
+                           LifecycleState.RETIRED, LifecycleState.FAILED),
+    LifecycleState.RUNNING: (LifecycleState.READY, LifecycleState.NEEDS_RESET,
+                             LifecycleState.COOLDOWN, LifecycleState.FAILED),
+    LifecycleState.NEEDS_RESET: (LifecycleState.RECOVERING,
+                                 LifecycleState.FAILED),
+    LifecycleState.RECOVERING: (LifecycleState.READY, LifecycleState.FAILED),
+    LifecycleState.COOLDOWN: (LifecycleState.READY,),
+    LifecycleState.FAILED: (LifecycleState.RECOVERING, LifecycleState.RETIRED),
+    LifecycleState.RETIRED: (),
+}
+
+
+@dataclasses.dataclass
+class Transition:
+    src: str
+    dst: str
+    action: str
+    at: float
+    duration_ms: float = 0.0
+
+
+class LifecycleManager:
+    def __init__(self):
+        self._states: Dict[str, LifecycleState] = {}
+        self._log: Dict[str, List[Transition]] = {}
+
+    def state(self, rid: str) -> LifecycleState:
+        return self._states.get(rid, LifecycleState.UNINITIALIZED)
+
+    def history(self, rid: str) -> List[Transition]:
+        return self._log.get(rid, [])
+
+    def transition(self, rid: str, dst: LifecycleState, action: str = "",
+                   duration_ms: float = 0.0) -> None:
+        src = self.state(rid)
+        if dst not in _LEGAL[src]:
+            raise LifecycleError(
+                f"illegal lifecycle transition {src.value} -> {dst.value} "
+                f"for {rid} (action={action!r})")
+        self._states[rid] = dst
+        self._log.setdefault(rid, []).append(
+            Transition(src.value, dst.value, action, time.time(), duration_ms))
+
+    # convenience wrappers mirroring the paper's verbs -----------------------
+    def prepare(self, rid: str) -> None:
+        if self.state(rid) == LifecycleState.READY:
+            self.transition(rid, LifecycleState.PREPARING, "re-prepare")
+        else:
+            self.transition(rid, LifecycleState.PREPARING, "prepare")
+
+    def ready(self, rid: str) -> None:
+        self.transition(rid, LifecycleState.READY, "ready")
+
+    def run(self, rid: str) -> None:
+        self.transition(rid, LifecycleState.RUNNING, "invoke")
+
+    def complete(self, rid: str, needs_reset: bool = False) -> None:
+        dst = LifecycleState.NEEDS_RESET if needs_reset else LifecycleState.READY
+        self.transition(rid, dst, "complete")
+
+    def fail(self, rid: str, why: str = "") -> None:
+        self.transition(rid, LifecycleState.FAILED, f"fail:{why}")
+
+    def recover(self, rid: str, mode: str = "reset") -> None:
+        self.transition(rid, LifecycleState.RECOVERING, mode)
+        self.transition(rid, LifecycleState.READY, f"{mode}-done")
+
+
+class LifecycleError(RuntimeError):
+    pass

@@ -1,0 +1,208 @@
+"""Task-to-substrate matcher (paper §IV-C, Eq. 1) + simplified baselines.
+
+    S(t,s) = α·C(t,s) + β·T(t,s) + γ·L(t,s) + δ·D(t,s) − ε·O(s)
+
+- C — capability compatibility (modality, function, repeated invocation)
+- T — timing suitability (latency budget vs expected latency regime)
+- L — lifecycle cost (warm-up/reset/cooldown amortization)
+- D — twin confidence & deployment locality
+- O — orchestration overhead (adapter boundary cost)
+
+Admissibility is checked first (hard constraints: modality, policy, twin
+freshness, readiness); Eq. 1 only ranks admissible candidates.  Every score
+is returned with its per-term breakdown — the matcher is *explainable*,
+which the fault-campaign benchmarks rely on.
+
+Baselines (paper RQ2): random-admissible, modality-only, latency-only.
+The decisive suite cases are exactly those needing runtime semantics:
+drifted local backend, stale twin, missing supervision.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.descriptors import ResourceDescriptor
+from repro.core.registry import CapabilityRegistry
+from repro.core.policy import PolicyManager
+from repro.core.tasks import TaskRequest
+from repro.core.telemetry import TelemetryBus
+from repro.core.twin import TwinSyncManager
+
+_LOCALITY_SCORE = {"extreme_edge": 1.0, "edge": 0.9, "device/edge": 0.9,
+                   "fog": 0.6, "cloud": 0.4, "lab": 0.5, "sim./lab": 0.5}
+
+DRIFT_LIMIT = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchWeights:
+    alpha: float = 1.0      # capability compatibility
+    beta: float = 1.0       # timing suitability
+    gamma: float = 0.5      # lifecycle cost
+    delta: float = 0.8      # twin confidence + locality
+    epsilon: float = 0.3    # orchestration overhead
+
+
+@dataclasses.dataclass
+class Candidate:
+    resource_id: str
+    score: float
+    terms: Dict[str, float]
+    admissible: bool
+    reason: str = "ok"
+
+
+class Matcher:
+    """The full phys-MCP matcher: static descriptors + runtime snapshots."""
+
+    name = "phys-mcp"
+
+    def __init__(self, registry: CapabilityRegistry, bus: TelemetryBus,
+                 twins: TwinSyncManager, policy: PolicyManager,
+                 weights: MatchWeights = MatchWeights()):
+        self.registry = registry
+        self.bus = bus
+        self.twins = twins
+        self.policy = policy
+        self.w = weights
+
+    # -- hard admission checks ------------------------------------------------
+    def admissible(self, desc: ResourceDescriptor, task: TaskRequest
+                   ) -> Tuple[bool, str]:
+        cap = desc.capability
+        if task.function not in cap.functions:
+            return False, f"function {task.function!r} unsupported"
+        if cap.input_signal.modality != task.input_modality:
+            return False, "input modality mismatch"
+        if cap.output_signal.modality != task.output_modality:
+            return False, "output modality mismatch"
+        if task.repeated and not cap.supports_repeated_invocation:
+            return False, "repeated invocation unsupported"
+        pol = self.policy.admit(desc, task)
+        if not pol:
+            return False, pol.reason
+        snap = self.bus.snapshot(desc.resource_id)
+        if snap is not None:
+            if snap.health_status == "failed" or snap.readiness == "down":
+                return False, f"runtime state {snap.health_status}/{snap.readiness}"
+            if snap.drift_score > DRIFT_LIMIT:
+                return False, f"drift {snap.drift_score:.2f} > {DRIFT_LIMIT}"
+        twin = self.twins.get(desc.resource_id)
+        if twin is not None and task.max_twin_age_ms is not None:
+            ok, why = twin.valid(task.max_twin_age_ms)
+            if not ok:
+                return False, why
+        return True, "ok"
+
+    # -- Eq. 1 terms ------------------------------------------------------------
+    def _terms(self, desc: ResourceDescriptor, task: TaskRequest) -> Dict[str, float]:
+        cap = desc.capability
+        C = 1.0
+        if task.repeated and cap.supports_repeated_invocation:
+            C += 0.2
+        T = 1.0
+        if task.latency_budget_ms is not None:
+            exp = cap.timing.expected_latency_ms
+            T = max(0.0, min(1.0, task.latency_budget_ms / max(exp, 1e-6) / 2))
+        lc = cap.lifecycle
+        cost_ms = lc.warmup_ms + lc.reset_cost_ms + lc.cooldown_ms
+        L = 1.0 / (1.0 + cost_ms / 1e3)
+        twin = self.twins.get(desc.resource_id)
+        conf = twin.confidence if twin is not None else 0.5
+        snap = self.bus.snapshot(desc.resource_id)
+        drift_pen = snap.drift_score if snap is not None else 0.0
+        D = 0.6 * conf * (1.0 - drift_pen) + 0.4 * _LOCALITY_SCORE.get(
+            desc.location, 0.5)
+        O = {"in_process": 0.05, "http": 0.3, "external_api": 0.5}.get(
+            desc.adapter_type, 0.2)
+        return {"C": C, "T": T, "L": L, "D": D, "O": O}
+
+    def score(self, desc: ResourceDescriptor, task: TaskRequest) -> Candidate:
+        ok, why = self.admissible(desc, task)
+        if not ok:
+            return Candidate(desc.resource_id, float("-inf"), {}, False, why)
+        t = self._terms(desc, task)
+        s = (self.w.alpha * t["C"] + self.w.beta * t["T"] + self.w.gamma * t["L"]
+             + self.w.delta * t["D"] - self.w.epsilon * t["O"])
+        return Candidate(desc.resource_id, s, t, True)
+
+    def rank(self, task: TaskRequest) -> List[Candidate]:
+        cands = [self.score(d, task) for d in self.registry.all()]
+        return sorted(cands, key=lambda c: c.score, reverse=True)
+
+    def select(self, task: TaskRequest) -> Optional[Candidate]:
+        """Directed workflow → admission check only; else Eq. 1 ranking."""
+        if task.backend_preference is not None:
+            desc = self.registry.get(task.backend_preference)
+            if desc is None:
+                return None
+            cand = self.score(desc, task)
+            return cand if cand.admissible else None
+        ranked = [c for c in self.rank(task) if c.admissible]
+        return ranked[0] if ranked else None
+
+
+# ---------------------------------------------------------------------------
+# simplified baseline selectors (paper RQ2)
+
+
+class RandomAdmissibleSelector(Matcher):
+    """Ignores Eq. 1 entirely; uniform choice among *statically* admissible
+    candidates (no runtime snapshots, no twin state)."""
+
+    name = "random"
+
+    def __init__(self, *args, seed: int = 0, **kw):
+        super().__init__(*args, **kw)
+        self._rng = random.Random(seed)
+
+    def _static_ok(self, desc, task) -> bool:
+        cap = desc.capability
+        return (task.function in cap.functions
+                and cap.input_signal.modality == task.input_modality
+                and cap.output_signal.modality == task.output_modality)
+
+    def select(self, task: TaskRequest) -> Optional[Candidate]:
+        if task.backend_preference is not None:
+            desc = self.registry.get(task.backend_preference)
+            if desc is not None and self._static_ok(desc, task):
+                return Candidate(desc.resource_id, 1.0, {}, True)
+            return None
+        cands = [d for d in self.registry.all() if self._static_ok(d, task)]
+        if not cands:
+            return None
+        pick = self._rng.choice(cands)
+        return Candidate(pick.resource_id, 1.0, {}, True)
+
+
+class ModalityOnlySelector(RandomAdmissibleSelector):
+    """First candidate whose modalities match — no timing/runtime semantics."""
+
+    name = "modality-only"
+
+    def select(self, task: TaskRequest) -> Optional[Candidate]:
+        if task.backend_preference is not None:
+            return super().select(task)
+        for d in self.registry.all():
+            if self._static_ok(d, task):
+                return Candidate(d.resource_id, 1.0, {}, True)
+        return None
+
+
+class LatencyOnlySelector(RandomAdmissibleSelector):
+    """Lowest advertised latency with a matching function — ignores modality
+    details, runtime health, twins and policy."""
+
+    name = "latency-only"
+
+    def select(self, task: TaskRequest) -> Optional[Candidate]:
+        if task.backend_preference is not None:
+            return super().select(task)
+        cands = [d for d in self.registry.all()
+                 if task.function in d.capability.functions]
+        if not cands:
+            return None
+        best = min(cands, key=lambda d: d.capability.timing.expected_latency_ms)
+        return Candidate(best.resource_id, 1.0, {}, True)

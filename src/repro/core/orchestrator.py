@@ -1,0 +1,148 @@
+"""End-to-end control plane: match → admit → prepare → invoke → validate →
+(fallback | complete)  (paper §IV-D, §VII-A).
+
+The orchestrator validates postconditions after invocation — required
+telemetry present, health/validity bounds respected, stabilization-time
+honored — and reroutes to a fallback backend after preparation failures,
+invocation failures, or postcondition violations (RQ2, Table IV).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from repro.core.descriptors import ResourceDescriptor
+from repro.core.invocation import (InvocationError, InvocationManager,
+                                   InvocationResult)
+from repro.core.lifecycle import LifecycleManager
+from repro.core.matcher import Candidate, Matcher
+from repro.core.policy import PolicyManager
+from repro.core.registry import CapabilityRegistry
+from repro.core.tasks import TaskRequest
+from repro.core.telemetry import TelemetryBus
+from repro.core.twin import TwinSyncManager
+
+
+@dataclasses.dataclass
+class OrchestrationTrace:
+    """Explainable record of one task's path through the control plane."""
+
+    task_id: str
+    attempts: List[Dict] = dataclasses.field(default_factory=list)
+    selected: Optional[str] = None
+    fallback_used: bool = False
+    rejected_reason: Optional[str] = None
+    control_overhead_ms: float = 0.0
+
+
+class Orchestrator:
+    MAX_ATTEMPTS = 3
+
+    def __init__(self, registry: Optional[CapabilityRegistry] = None,
+                 matcher_cls=Matcher):
+        self.registry = registry or CapabilityRegistry()
+        self.bus = TelemetryBus()
+        self.twins = TwinSyncManager(self.bus)
+        self.policy = PolicyManager()
+        self.lifecycle = LifecycleManager()
+        self.matcher: Matcher = matcher_cls(self.registry, self.bus,
+                                            self.twins, self.policy)
+        self.invocations = InvocationManager(self.registry, self.lifecycle,
+                                             self.bus)
+
+    # -- postconditions -------------------------------------------------------
+    def _postconditions(self, result: InvocationResult, session) -> Optional[str]:
+        ok, missing = session.contracts.telemetry.validate(result.telemetry)
+        if not ok:
+            return f"missing required telemetry: {missing}"
+        health = result.telemetry.get("health_status", "healthy")
+        if health == "failed":
+            return "backend reported failed health after invocation"
+        obs = result.timing_ms.get("observation_ms", 0.0)
+        if not session.contracts.timing.result_authoritative(obs):
+            return (f"observation {obs:.1f}ms below stabilization bound "
+                    f"{session.contracts.timing.min_stabilization_ms}ms")
+        return None
+
+    # -- main entry -----------------------------------------------------------
+    def submit(self, task: TaskRequest) -> (InvocationResult, OrchestrationTrace):
+        trace = OrchestrationTrace(task.task_id)
+        t_ctl = time.perf_counter()
+        tried: set = set()
+        cand = self.matcher.select(task)
+        control_ms = (time.perf_counter() - t_ctl) * 1e3
+
+        for attempt in range(self.MAX_ATTEMPTS):
+            if cand is None:
+                reasons = {c.resource_id: c.reason
+                           for c in self.matcher.rank(task) if not c.admissible}
+                trace.rejected_reason = (
+                    "no acceptable backend candidate: "
+                    + "; ".join(f"{r}={why}" for r, why in reasons.items()))
+                trace.control_overhead_ms += control_ms
+                return (self.invocations.rejected(task, trace.rejected_reason),
+                        trace)
+            rid = cand.resource_id
+            tried.add(rid)
+            desc = self.registry.get(rid)
+            trace.attempts.append({"resource": rid, "score": cand.score,
+                                   "terms": cand.terms})
+            t0 = time.perf_counter()
+            if not self.policy.acquire(desc):
+                failure = "concurrency limit"
+            else:
+                failure = None
+                try:
+                    session = self.invocations.open_session(task, desc)
+                    self.invocations.prepare(session)
+                    result = self.invocations.invoke(session)
+                    post = self._postconditions(result, session)
+                    if post is not None:
+                        failure = f"postcondition: {post}"
+                        result.status = "invalidated"
+                        self.twins.invalidate(rid, post)
+                except InvocationError as e:
+                    failure = f"{e.phase} failure: {e}"
+                finally:
+                    self.policy.release(desc)
+            trace.control_overhead_ms += (time.perf_counter() - t0) * 1e3
+
+            if failure is None:
+                trace.selected = rid
+                trace.fallback_used = attempt > 0
+                # control overhead excludes the backend execution itself
+                trace.control_overhead_ms -= result.timing_ms.get("backend_ms", 0.0)
+                return result, trace
+
+            trace.attempts[-1]["failure"] = failure
+            if not task.allow_fallback:
+                trace.rejected_reason = failure
+                return self.invocations.rejected(task, failure), trace
+            cand = self._next_candidate(task, tried)
+
+        trace.rejected_reason = "fallback attempts exhausted"
+        return self.invocations.rejected(task, trace.rejected_reason), trace
+
+    def _next_candidate(self, task: TaskRequest, tried: set) -> Optional[Candidate]:
+        # fallback ignores the directed preference: capability-based rerank
+        free_task = dataclasses.replace(task) if dataclasses.is_dataclass(task) else task
+        free_task.backend_preference = None
+        ranked = [c for c in self.matcher.rank(free_task)
+                  if c.admissible and c.resource_id not in tried]
+        return ranked[0] if ranked else None
+
+    # -- convenience ----------------------------------------------------------
+    def discover(self, **query) -> List[ResourceDescriptor]:
+        return self.registry.discover(**query)
+
+    def register(self, adapter) -> ResourceDescriptor:
+        desc = adapter.descriptor()
+        self.registry.register(desc, adapter)
+        twin = adapter.make_twin()
+        if twin is not None:
+            self.twins.register(twin)
+        snap = adapter.snapshot()
+        if snap is not None:
+            self.bus.update_snapshot(snap)
+        return desc

@@ -1,0 +1,61 @@
+"""Policy & safety manager (requirement R7).
+
+Enforces admissible operating regions, human-supervision requirements,
+tenant authorization, exclusivity and concurrency limits.  A shared PNN
+cannot be exposed as an unconstrained stateless service — admission happens
+*before* lifecycle preparation, so rejected tasks never touch the substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple
+
+from repro.core.descriptors import ResourceDescriptor
+from repro.core.tasks import TaskRequest
+
+
+@dataclasses.dataclass
+class PolicyDecision:
+    allowed: bool
+    reason: str = "ok"
+
+    def __bool__(self):
+        return self.allowed
+
+
+class PolicyManager:
+    def __init__(self):
+        self._locks: Dict[str, threading.Semaphore] = {}
+        self._lock = threading.Lock()
+
+    def _sem(self, desc: ResourceDescriptor) -> threading.Semaphore:
+        with self._lock:
+            if desc.resource_id not in self._locks:
+                self._locks[desc.resource_id] = threading.Semaphore(
+                    max(desc.capability.policy.max_concurrent, 1))
+            return self._locks[desc.resource_id]
+
+    def admit(self, desc: ResourceDescriptor, task: TaskRequest) -> PolicyDecision:
+        pol = desc.capability.policy
+        if pol.requires_supervision and not task.supervision_available:
+            return PolicyDecision(False,
+                                  "substrate requires human supervision; task "
+                                  "declares none available")
+        if pol.authorized_tenants != ("*",) and task.tenant not in pol.authorized_tenants:
+            return PolicyDecision(False, f"tenant {task.tenant!r} not authorized")
+        stim = None
+        if isinstance(task.metadata, dict):
+            stim = task.metadata.get("stimulation_amplitude")
+        if (pol.max_stimulation is not None and stim is not None
+                and stim > pol.max_stimulation):
+            return PolicyDecision(False,
+                                  f"stimulation {stim} exceeds safety bound "
+                                  f"{pol.max_stimulation}")
+        return PolicyDecision(True)
+
+    def acquire(self, desc: ResourceDescriptor) -> bool:
+        return self._sem(desc).acquire(blocking=False)
+
+    def release(self, desc: ResourceDescriptor) -> None:
+        self._sem(desc).release()

@@ -1,0 +1,62 @@
+"""Capability registry: discovery over resource descriptors (paper §IV-B).
+
+Supports queries like "find a substrate that accepts spike-like event input
+and supports low-latency repeated invocation" via structured filters, plus
+the directed path (lookup by resource id).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+from repro.core.descriptors import ResourceDescriptor
+
+
+class CapabilityRegistry:
+    def __init__(self):
+        self._resources: Dict[str, ResourceDescriptor] = {}
+        self._adapters: Dict[str, object] = {}
+
+    def register(self, desc: ResourceDescriptor, adapter) -> None:
+        self._resources[desc.resource_id] = desc
+        self._adapters[desc.resource_id] = adapter
+
+    def unregister(self, resource_id: str) -> None:
+        self._resources.pop(resource_id, None)
+        self._adapters.pop(resource_id, None)
+
+    def get(self, resource_id: str) -> Optional[ResourceDescriptor]:
+        return self._resources.get(resource_id)
+
+    def adapter(self, resource_id: str):
+        return self._adapters.get(resource_id)
+
+    def all(self) -> List[ResourceDescriptor]:
+        return list(self._resources.values())
+
+    def discover(self, *, function: Optional[str] = None,
+                 input_modality: Optional[str] = None,
+                 output_modality: Optional[str] = None,
+                 latency_regime: Optional[str] = None,
+                 repeated: Optional[bool] = None,
+                 substrate_class: Optional[str] = None,
+                 predicate: Optional[Callable[[ResourceDescriptor], bool]] = None,
+                 ) -> List[ResourceDescriptor]:
+        out = []
+        for d in self._resources.values():
+            cap = d.capability
+            if function is not None and function not in cap.functions:
+                continue
+            if input_modality is not None and cap.input_signal.modality != input_modality:
+                continue
+            if output_modality is not None and cap.output_signal.modality != output_modality:
+                continue
+            if latency_regime is not None and cap.timing.latency_regime != latency_regime:
+                continue
+            if repeated and not cap.supports_repeated_invocation:
+                continue
+            if substrate_class is not None and d.substrate_class != substrate_class:
+                continue
+            if predicate is not None and not predicate(d):
+                continue
+            out.append(d)
+        return out

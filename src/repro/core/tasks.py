@@ -1,0 +1,37 @@
+"""Task model: what a client asks the control plane to do.
+
+A task is expressed in substrate-aware terms (paper §VII-B): modality,
+latency target, required telemetry fields, acceptable twin age, supervision
+availability, an optional direct backend preference, and a fallback policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, Optional, Tuple
+
+_ids = itertools.count(1)
+
+
+@dataclasses.dataclass
+class TaskRequest:
+    function: str                              # e.g. "inference", "screening"
+    input_modality: str
+    output_modality: str
+    payload: Any = None
+    latency_budget_ms: Optional[float] = None
+    required_telemetry: Tuple[str, ...] = ()
+    max_twin_age_ms: Optional[float] = None
+    supervision_available: bool = True
+    backend_preference: Optional[str] = None   # directed workflow target
+    allow_fallback: bool = True
+    tenant: str = "default"
+    repeated: bool = False                     # needs repeated low-latency calls
+    metadata: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    task_id: str = dataclasses.field(
+        default_factory=lambda: f"task-{next(_ids):05d}")
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["payload"] = None if self.payload is None else "<payload>"
+        return d

@@ -1,0 +1,81 @@
+"""Telemetry plane: runtime snapshots + event bus (paper §IV-B).
+
+Adapters publish :class:`RuntimeSnapshot`s (health, drift, readiness,
+age-of-information) which the matcher consults alongside static descriptors
+(paper §VII-A: "the matcher consults lightweight runtime snapshots such as
+health_status, drift_score, and age_of_information_ms").  The bus forwards
+events to local consumers (twin-sync manager, supervisors, benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import defaultdict, deque
+from typing import Callable, Dict, List, Optional
+
+HEALTH = ("healthy", "degraded", "failed")
+
+
+@dataclasses.dataclass
+class RuntimeSnapshot:
+    resource_id: str
+    health_status: str = "healthy"             # healthy | degraded | failed
+    drift_score: float = 0.0                   # 0 = calibrated, 1 = unusable
+    readiness: str = "ready"                   # ready | preparing | busy | down
+    age_of_information_ms: float = 0.0         # staleness of this snapshot
+    viability: Optional[float] = None          # wetware-specific
+    contamination: Optional[float] = None      # chemical-specific
+    queue_depth: int = 0
+    last_updated: float = dataclasses.field(default_factory=time.time)
+    extra: Dict = dataclasses.field(default_factory=dict)
+
+    def aged(self) -> "RuntimeSnapshot":
+        self.age_of_information_ms = (time.time() - self.last_updated) * 1e3
+        return self
+
+    def to_dict(self) -> Dict:
+        self.aged()
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class TelemetryEvent:
+    resource_id: str
+    kind: str                                  # result | health | drift | lifecycle
+    fields: Dict
+    timestamp: float = dataclasses.field(default_factory=time.time)
+
+
+class TelemetryBus:
+    """In-process pub/sub with bounded per-resource history."""
+
+    def __init__(self, history: int = 256):
+        self._subs: List[Callable[[TelemetryEvent], None]] = []
+        self._history: Dict[str, deque] = defaultdict(
+            lambda: deque(maxlen=history))
+        self._snapshots: Dict[str, RuntimeSnapshot] = {}
+        self._lock = threading.Lock()
+
+    def subscribe(self, fn: Callable[[TelemetryEvent], None]) -> None:
+        self._subs.append(fn)
+
+    def emit(self, event: TelemetryEvent) -> None:
+        with self._lock:
+            self._history[event.resource_id].append(event)
+        for fn in list(self._subs):
+            fn(event)
+
+    def update_snapshot(self, snap: RuntimeSnapshot) -> None:
+        snap.last_updated = time.time()
+        with self._lock:
+            self._snapshots[snap.resource_id] = snap
+        self.emit(TelemetryEvent(snap.resource_id, "health", snap.to_dict()))
+
+    def snapshot(self, resource_id: str) -> Optional[RuntimeSnapshot]:
+        snap = self._snapshots.get(resource_id)
+        return snap.aged() if snap is not None else None
+
+    def history(self, resource_id: str) -> List[TelemetryEvent]:
+        with self._lock:
+            return list(self._history[resource_id])

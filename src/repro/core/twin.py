@@ -1,0 +1,107 @@
+"""Twin plane: synchronized, validity-aware digital state (paper §IV-A).
+
+The twin is *not* the substrate: its value depends on how current it is and
+how well it matches observed behavior.  :class:`TwinState` tracks sync
+metadata, confidence and drift; :class:`TwinSyncManager` consumes telemetry
+events and flags stale/diverged twins so the matcher can condition placement
+on twin validity (requirement R5).
+
+For the TPU pod substrate the twin is the roofline model over the compiled
+artifact — the high-fidelity end of the paper's twin spectrum (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+from repro.core.telemetry import TelemetryBus, TelemetryEvent
+
+
+@dataclasses.dataclass
+class TwinState:
+    twin_id: str
+    resource_id: str
+    kind: str = "behavioral"               # ode | behavioral | roofline | record
+    confidence: float = 1.0                # decays with drift & staleness
+    drift_estimate: float = 0.0
+    last_sync: float = dataclasses.field(default_factory=time.time)
+    calibration_ts: float = dataclasses.field(default_factory=time.time)
+    observations: int = 0
+    model: Dict = dataclasses.field(default_factory=dict)   # twin parameters
+
+    def age_ms(self) -> float:
+        return (time.time() - self.last_sync) * 1e3
+
+    def valid(self, max_age_ms: Optional[float], min_confidence: float = 0.3):
+        if max_age_ms is not None and self.age_ms() > max_age_ms:
+            return False, f"twin stale ({self.age_ms():.0f}ms > {max_age_ms}ms)"
+        if self.confidence < min_confidence:
+            return False, f"twin confidence {self.confidence:.2f} < {min_confidence}"
+        return True, "ok"
+
+    def to_dict(self) -> Dict:
+        return {
+            "twin_id": self.twin_id, "resource_id": self.resource_id,
+            "kind": self.kind, "confidence": round(self.confidence, 4),
+            "drift_estimate": round(self.drift_estimate, 4),
+            "age_ms": round(self.age_ms(), 2),
+            "observations": self.observations,
+        }
+
+
+class TwinSyncManager:
+    """Associates telemetry with twin state and updates sync metadata."""
+
+    DRIFT_DECAY = 0.85       # confidence multiplier per unit drift observed
+
+    def __init__(self, bus: TelemetryBus):
+        self._twins: Dict[str, TwinState] = {}
+        self._bus = bus
+        bus.subscribe(self._on_event)
+
+    def register(self, twin: TwinState) -> TwinState:
+        self._twins[twin.resource_id] = twin
+        return twin
+
+    def get(self, resource_id: str) -> Optional[TwinState]:
+        return self._twins.get(resource_id)
+
+    def mark_synced(self, resource_id: str, drift: float = 0.0) -> None:
+        tw = self._twins.get(resource_id)
+        if tw is None:
+            return
+        tw.last_sync = time.time()
+        tw.observations += 1
+        tw.drift_estimate = drift
+        tw.confidence = max(0.0, min(1.0, 1.0 - drift))
+
+    def invalidate(self, resource_id: str, reason: str = "") -> None:
+        tw = self._twins.get(resource_id)
+        if tw is not None:
+            tw.confidence = 0.0
+
+    def recalibrate(self, resource_id: str) -> None:
+        tw = self._twins.get(resource_id)
+        if tw is not None:
+            tw.calibration_ts = time.time()
+            tw.last_sync = time.time()
+            tw.drift_estimate = 0.0
+            tw.confidence = 1.0
+
+    # -- telemetry coupling ---------------------------------------------------
+    def _on_event(self, ev: TelemetryEvent) -> None:
+        tw = self._twins.get(ev.resource_id)
+        if tw is None:
+            return
+        if ev.kind == "result":
+            drift = float(ev.fields.get("drift_score", 0.0))
+            tw.last_sync = ev.timestamp
+            tw.observations += 1
+            tw.drift_estimate = drift
+            tw.confidence = max(0.0, min(1.0, tw.confidence *
+                                         (self.DRIFT_DECAY ** drift) + 0.05
+                                         * (1.0 - drift)))
+        elif ev.kind == "drift":
+            tw.drift_estimate = float(ev.fields.get("drift_score", 0.0))
+            tw.confidence = max(0.0, 1.0 - tw.drift_estimate)

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (  # noqa: F401
+    RECIPES,
+    ShardingRecipe,
+    batch_sharding,
+    cache_shardings,
+    param_shardings,
+    spec_for_axes,
+)

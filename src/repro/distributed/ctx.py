@@ -1,0 +1,93 @@
+"""Trace-time sharding context for activation constraints.
+
+GSPMD propagation alone chooses bad activation shardings at these scales
+(observed: batch replicated, d_model sharded — 114 TB/device live).  The
+model code therefore pins the residual-stream sharding at layer boundaries
+via :func:`constrain`, which resolves logical axes against the *ambient*
+(mesh, recipe) installed by the step builder during lowering.  Outside a
+context (unit tests on one device) it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+_tls = threading.local()
+
+
+def current() -> Optional[Tuple]:
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, recipe):
+    prev = current()
+    _tls.ctx = (mesh, recipe)
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def constrain(x, axes):
+    """Pin logical axes onto x if a sharding context is active."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, recipe = ctx
+    from repro.distributed.sharding import spec_for_axes
+
+    spec = spec_for_axes(axes, recipe, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def heads_shardable(n_heads: int) -> bool:
+    """True if the ambient recipe can shard ``n_heads`` on a tensor axis."""
+    c = current()
+    if c is None:
+        return False
+    mesh, recipe = c
+    return recipe.resolve("heads", mesh, set(), n_heads) is not None
+
+
+def constrain_qkv(x):
+    """Megatron-SP projection constraint for (B, S, H, hd) tensors.
+
+    Heads-sharded when the head count divides the tensor axis (activations
+    gathered over seq, weight grads computed locally sharded — no model-axis
+    grad all-reduce); otherwise keep the sequence sharded and let
+    sp_attention's seq variant handle the core.
+    """
+    if heads_shardable(x.shape[2]):
+        return constrain(x, ("batch", None, "heads", None))
+    return constrain(x, ("batch", "act_seq", None, None))
+
+
+def constrain_hidden(x):
+    """FFN hidden (B, S, F): shard F on the tensor axis, gather seq."""
+    return constrain(x, ("batch", None, "mlp"))
+
+
+def constrain_residual(x):
+    """Layer output back to the sequence-parallel residual layout — GSPMD
+    lowers the partial-sum + constraint into a reduce-scatter (Megatron ḡ)."""
+    return constrain(x, ("batch", "act_seq", None))
+
+
+def constrain_cache(cache: dict) -> dict:
+    """Pin decode-cache leaves (kv_heads-before-seq priority resolution)."""
+    ctx = current()
+    if ctx is None:
+        return cache
+    mesh, recipe = ctx
+    from repro.distributed.sharding import cache_spec
+
+    out = {}
+    for name, x in cache.items():
+        spec = cache_spec(name, x.shape, recipe, mesh)
+        out[name] = jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return out

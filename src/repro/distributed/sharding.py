@@ -1,0 +1,208 @@
+"""Logical-axis sharding rules → concrete NamedShardings.
+
+A :class:`ShardingRecipe` maps *logical* parameter axes (DESIGN.md §5.5,
+``repro.models.common`` docstring) onto mesh axes.  Recipes are first-class
+objects because they double as *substrate capabilities* in the phys-MCP
+control plane: each registered TPU pod-slice substrate is a
+(mesh × recipe × precision) triple, and the matcher (Eq. 1) selects among
+them using the roofline twin.  Hillclimbing in EXPERIMENTS.md §Perf is
+expressed as recipe changes.
+
+Baseline recipe (``"baseline"``):
+- batch            → all data-like axes ("pod","data")
+- heads/mlp/vocab/expert (tensor-/expert-parallel) → "model"
+- embed (FSDP)     → "data"   (parameters ZeRO-3-sharded inside a pod,
+                              replicated across pods; gradients all-reduce
+                              over "pod")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRecipe:
+    name: str
+    # logical axis -> tuple of mesh axis names (filtered by mesh presence)
+    rules: Dict[str, Tuple[str, ...]]
+    description: str = ""
+
+    def resolve(self, logical: Optional[str], mesh: Mesh, used: set,
+                dim: Optional[int] = None):
+        """Mesh axes for one tensor dim.
+
+        Greedy divisibility fallback: mesh axes whose size does not divide
+        the dimension are dropped (e.g. qwen's 40 heads or GQA kv=8 over a
+        16-way model axis → replicated). Input shardings must divide evenly
+        under GSPMD; the redundant compute this produces is visible in the
+        roofline table and is a hillclimb target.
+        """
+        if logical is None:
+            return None
+        want = self.rules.get(logical, ())
+        axes = []
+        prod = 1
+        for a in want:
+            if a not in mesh.axis_names or a in used:
+                continue
+            size = mesh.shape[a]
+            if dim is not None and dim % (prod * size) != 0:
+                continue
+            axes.append(a)
+            prod *= size
+        if not axes:
+            return None
+        used.update(axes)
+        return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+BASELINE = ShardingRecipe(
+    name="baseline",
+    rules={
+        "batch": ("pod", "data"),
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "expert": ("model",),
+        "embed": ("data",),          # FSDP within pod
+        "seq_kv": ("model",),        # KV-cache context sharding fallback
+        "qkv_hd": ("model",),        # head_dim fallback for non-divisible heads
+        "act_seq": ("model",),       # sequence-parallel residual stream
+                                     # (Megatron-SP adapted to GSPMD): layer-
+                                     # boundary activations shard their seq dim
+                                     # over the model axis; attention/FFN
+                                     # re-gather inside the layer
+        "lora": (),
+        "layers": (),
+        "conv": (),
+    },
+    description="DP(pod,data) × TP/EP(model) × FSDP(data) — paper-faithful default",
+)
+
+# hillclimb variants ---------------------------------------------------------
+
+FSDP_POD = ShardingRecipe(
+    name="fsdp_pod",
+    rules={**BASELINE.rules, "embed": ("pod", "data")},
+    description="FSDP spans the pod axis too (param all-gather over DCI)",
+)
+
+TP_ONLY = ShardingRecipe(
+    name="tp_only",
+    rules={**BASELINE.rules, "embed": ()},
+    description="pure DP×TP (params replicated across data axis)",
+)
+
+EXPERT_DATA = ShardingRecipe(
+    name="expert_data",
+    rules={**BASELINE.rules, "expert": ("data", "model"), "embed": ()},
+    description="experts sharded over data×model (2D EP) for large-E MoE",
+)
+
+SEQ_DATA = ShardingRecipe(
+    name="seq_data",
+    rules={**BASELINE.rules, "seq": ("data",), "batch": ("pod", "data")},
+    description="adds sequence sharding over data for long-context prefill",
+)
+
+NO_SP = ShardingRecipe(
+    name="no_sp",
+    rules={**BASELINE.rules, "act_seq": ()},
+    description="baseline without sequence-parallel activations (ablation)",
+)
+
+RECIPES: Dict[str, ShardingRecipe] = {
+    r.name: r for r in (BASELINE, FSDP_POD, TP_ONLY, EXPERT_DATA, SEQ_DATA, NO_SP)
+}
+
+
+def spec_for_axes(axes, recipe: ShardingRecipe, mesh: Mesh, shape=None) -> P:
+    used: set = set()
+    dims = shape if shape is not None else (None,) * len(axes)
+    return P(*[recipe.resolve(a, mesh, used, d) for a, d in zip(axes, dims)])
+
+
+def param_shardings(specs, recipe: ShardingRecipe, mesh: Mesh):
+    """ParamSpec pytree → NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_for_axes(s.axes, recipe, mesh, s.shape)),
+        specs, is_leaf=cm.is_spec)
+
+
+def batch_sharding(mesh: Mesh, recipe: ShardingRecipe, rank: int,
+                   seq_axis: Optional[int] = None, shape=None):
+    """Sharding for an input whose leading dim is batch."""
+    used: set = set()
+    spec = [None] * rank
+    bdim = shape[0] if shape else None
+    spec[0] = recipe.resolve("batch", mesh, used, bdim)
+    if seq_axis is not None and "seq" in recipe.rules:
+        sdim = shape[seq_axis] if shape else None
+        spec[seq_axis] = recipe.resolve("seq", mesh, used, sdim)
+    return NamedSharding(mesh, P(*spec))
+
+
+def for_decode(recipe: ShardingRecipe) -> ShardingRecipe:
+    """Decode-cell variant: batch may additionally shard over the model axis
+    (decode has tiny activations; owning full KV context per chip avoids
+    per-layer KV all-gathers when batch divides)."""
+    rules = dict(recipe.rules)
+    rules["batch"] = tuple(rules.get("batch", ())) + ("model",)
+    return ShardingRecipe(recipe.name + "+decode", rules, recipe.description)
+
+
+# decode-cache leaf-name → logical axes (rank-matched, batch-leading)
+CACHE_AXES = {
+    "k": ("batch", "seq_kv", "kv_heads", None),
+    "v": ("batch", "seq_kv", "kv_heads", None),
+    "ck": ("batch", "seq_kv", "heads", None),
+    "cv": ("batch", "seq_kv", "heads", None),
+    "cross_k": ("batch", "seq_kv", "kv_heads", None),
+    "cross_v": ("batch", "seq_kv", "kv_heads", None),
+    "c_kv": ("batch", "seq_kv", None),
+    "k_rope": ("batch", "seq_kv", None),
+    "s": ("batch", "heads", None, None),
+    "ts_tm": ("batch", None),
+    "ts_cm": ("batch", None),
+    "h": ("batch", "mlp"),
+    "conv": ("batch", None, "mlp"),
+}
+
+# resolution priority: batch first, then parallel dims, context sharding last
+_PRIORITY = {"batch": 0, "kv_heads": 1, "heads": 1, "mlp": 1, "expert": 1,
+             "seq_kv": 2}
+
+
+def cache_spec(name: str, shape, recipe: ShardingRecipe, mesh: Mesh) -> P:
+    axes = CACHE_AXES[name]
+    rank = len(shape)
+    if rank == len(axes) + 1:                # stacked by scan reps
+        axes = (None,) + axes
+    assert rank == len(axes), (name, shape)
+    used: set = set()
+    order = sorted(range(rank), key=lambda i: _PRIORITY.get(axes[i], 3))
+    resolved = [None] * rank
+    for i in order:
+        resolved[i] = recipe.resolve(axes[i], mesh, used, shape[i])
+    return P(*resolved)
+
+
+def cache_shardings(cache_tree, recipe: ShardingRecipe, mesh: Mesh):
+    """Decode-cache pytree (possibly layer-stacked) → NamedSharding pytree."""
+
+    def f(path, leaf):
+        name = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                name = p.key
+                break
+        return NamedSharding(mesh, cache_spec(name, leaf.shape, recipe, mesh))
+
+    return jax.tree_util.tree_map_with_path(f, cache_tree)

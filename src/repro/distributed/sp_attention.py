@@ -1,0 +1,185 @@
+"""Sequence-parallel attention via shard_map (beyond-paper optimization H1).
+
+Problem (measured in EXPERIMENTS.md §Perf): with sequence-parallel
+activations, the pure-pjit query-block scan reshapes the seq axis into
+(blocks, chunk) — GSPMD cannot express that resharding, replicates the
+blocks over the model axis, and the *backward* pass then all-reduces
+multi-GB score gradients per layer (qwen train_4k: 72 s collective term,
+2.3 TB of all-reduce per device-step).
+
+Fix: make the model-axis decomposition explicit with ``shard_map``.
+Two variants, chosen per (arch × mesh):
+
+- **heads-sharded** (preferred; H divisible by TP and each rank's head
+  range lies within one GQA group): every rank computes its own heads over
+  the full sequence; K/V enter replicated (one all-gather at the boundary,
+  ~MBs); ZERO collectives inside the body, so backward stays local.
+- **seq-sharded** (fallback; e.g. qwen's 40 heads): every rank owns a
+  contiguous q-row block and all-gathers K/V inside; backward of the
+  all_gather is a reduce-scatter of dK/dV — bytes ≈ KV size, not scores.
+
+Both bodies reuse the same ``chunked_attention`` oracle that the Pallas
+flash kernel validates against, so numerics are unchanged.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import ctx as dctx
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _resolve(recipe, mesh, logical, dim, used):
+    return recipe.resolve(logical, mesh, used, dim)
+
+
+def sp_attention(q, k, v, *, causal: bool, window: Optional[int],
+                 chunk: int, wo=None, v_head: Optional[int] = None):
+    """Drop-in replacement for chunked_attention under a sharding ctx.
+
+    q: (B, S, H, hd); k, v: (B, S, K, hd). Returns (B, S, H, hd) — or, when
+    ``wo`` (H, hd_o, d) is given, the *fused* residual output (B, S, d)
+    psum-scattered back to the sequence-parallel layout (no post-hoc heads
+    reshard / wo all-gather — EXPERIMENTS.md §Perf H2b). Returns None if no
+    beneficial decomposition applies (caller falls back).
+    """
+    c = dctx.current()
+    if c is None:
+        return None
+    mesh, recipe = c
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+
+    used: set = set()
+    b_axes = _resolve(recipe, mesh, "batch", B, used)
+    used_h = set(used)
+    h_axes = _resolve(recipe, mesh, "heads", H, used_h)
+    tp_h = _axis_size(mesh, h_axes)
+    used_s = set(used)
+    s_axes = _resolve(recipe, mesh, "act_seq", S, used_s)
+    tp_s = _axis_size(mesh, s_axes)
+
+    from repro.models.attention import chunked_attention
+
+    def finalize(o_loc, wo_loc, ax):
+        """Fused out-projection: partial contraction over local heads, then
+        psum-scatter the seq axis back to the SP layout."""
+        if v_head is not None:
+            o_loc = o_loc[..., :v_head]
+        y_part = jnp.einsum("bshk,hkd->bsd", o_loc, wo_loc).astype(o_loc.dtype)
+        return jax.lax.psum_scatter(y_part, ax, scatter_dimension=1,
+                                    tiled=True)
+
+    # -- variant 1: heads sharded, sequence gathered --------------------------
+    # applies when (a) K shards with the q heads (alignment is automatic:
+    # H_loc = G·K_loc), or (b) each rank's contiguous head range sits inside
+    # a single GQA group (kv replicated, group-sliced per rank)
+    kv_sharded = K % tp_h == 0
+    if tp_h > 1 and (kv_sharded or
+                     ((H // tp_h) <= G and G % (H // tp_h) == 0)):
+
+        def body(ql, kl, vl, *wo_arg):
+            # ql: (B_loc, S, H_loc, hd); kl/vl sharded iff kv_sharded
+            if kv_sharded:
+                kg, vg = kl, vl
+            else:
+                h_loc = ql.shape[2]
+                r = jax.lax.axis_index(h_axes)
+                group = (r * h_loc) // G      # single group per rank
+                kg = jax.lax.dynamic_slice_in_dim(kl, group, 1, axis=2)
+                vg = jax.lax.dynamic_slice_in_dim(vl, group, 1, axis=2)
+            o = chunked_attention(ql, kg, vg, causal=causal, window=window,
+                                  chunk=chunk)
+            if wo_arg:
+                return finalize(o, wo_arg[0], s_axes or h_axes)
+            return o
+
+        kv_spec = P(b_axes, None, h_axes if kv_sharded else None, None)
+        args = [q, k, v]
+        in_specs = [P(b_axes, None, h_axes, None), kv_spec, kv_spec]
+        fused = wo is not None and s_axes is not None and S % tp_s == 0
+        if fused:
+            args.append(wo)
+            in_specs.append(P(h_axes, None, None))
+            out_specs = P(b_axes, s_axes, None)
+        else:
+            out_specs = P(b_axes, None, h_axes, None)
+        out = jax.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                            out_specs=out_specs, check_vma=False)(*args)
+        return (out, True) if fused else (out, False)
+
+    # -- variant 2: sequence sharded, K/V gathered inside ----------------------
+    if tp_s > 1 and S % tp_s == 0:
+        s_loc = S // tp_s
+
+        def body(ql, kl, vl):
+            # ql: (B_loc, S_loc, H, hd); kl/vl: (B_loc, S_loc, K, hd)
+            kg = jax.lax.all_gather(kl, s_axes, axis=1, tiled=True)
+            vg = jax.lax.all_gather(vl, s_axes, axis=1, tiled=True)
+            r = jax.lax.axis_index(s_axes)
+            return chunked_attention(ql, kg, vg, causal=causal, window=window,
+                                     chunk=min(chunk, s_loc),
+                                     q_offset=r * s_loc)
+
+        out = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(b_axes, s_axes, None, None),
+                      P(b_axes, s_axes, None, None),
+                      P(b_axes, s_axes, None, None)),
+            out_specs=P(b_axes, s_axes, None, None),
+            check_vma=False,
+        )(q, k, v)
+        return (out, False)
+
+    return None
+
+
+def maybe_sp_attention(q, k, v, *, causal: bool = True,
+                       window: Optional[int] = None, chunk: int = 512):
+    """sp_attention if a profitable decomposition exists, else the plain
+    chunked path. Returns the (B, S, H, hd) attention output (unfused)."""
+    out = sp_attention(q, k, v, causal=causal, window=window, chunk=chunk)
+    if out is not None:
+        o, fused = out
+        assert not fused
+        return o
+    from repro.models.attention import chunked_attention
+
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             chunk=chunk)
+
+
+def maybe_sp_attention_fused(q, k, v, wo, *, causal: bool = True,
+                             window: Optional[int] = None, chunk: int = 512,
+                             v_head: Optional[int] = None):
+    """Attention + fused output projection. Returns (B, S, d) or None."""
+    out = sp_attention(q, k, v, causal=causal, window=window, chunk=chunk,
+                       wo=wo, v_head=v_head)
+    if out is None:
+        return None
+    o, fused = out
+    if fused:
+        return o
+    # decomposition found but fusion not applicable: finish outside
+    if v_head is not None:
+        o = o[..., :v_head]
+    from repro.distributed.ctx import constrain_residual
+
+    return constrain_residual(
+        jnp.einsum("bshk,hkd->bsd", o, wo).astype(o.dtype))

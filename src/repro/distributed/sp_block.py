@@ -1,0 +1,192 @@
+"""Whole-block sequence-parallel attention via shard_map (H2c/H3a).
+
+Measured (EXPERIMENTS.md §Perf): even with the attention *core* in
+shard_map, the q/kv projections outside it still make GSPMD gather x to
+full sequence and then all-reduce full-size dx in backward (deepseek:
+~30% of collective traffic; same pattern in every heads-sharded arch).
+
+Fix: the entire block runs inside one shard_map —
+
+    xg   = all_gather(x, seq_ax)                 [dual: psum_scatter dx]
+    w*   = all_gather(w, fsdp_ax)                [dual: ZeRO-3 grad RS]
+    q/k/v, RoPE, blocked attention  — all local to the rank's heads
+    y    = psum_scatter(o @ wo, seq_ax)          [dual: all_gather dy]
+
+Exactly one activation gather and one activation scatter per layer; weight
+gradients never leave their shard layout.  The GQA variant also returns the
+rank-local K/V slice so prefill caches stay sequence-sharded.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import ctx as dctx
+from repro.distributed.sp_ffn import _gather_weight
+from repro.models import common as cm
+
+
+def _env(x_shape, h, k):
+    c = dctx.current()
+    if c is None:
+        return None
+    mesh, recipe = c
+    B, S, d = x_shape
+    used: set = set()
+    b_axes = recipe.resolve("batch", mesh, used, B)
+    s_ax = recipe.resolve("act_seq", mesh, set(used), S)
+    h_axes = recipe.resolve("heads", mesh, set(used), h)
+    if not isinstance(s_ax, str) or h_axes is None or S % mesh.shape[s_ax]:
+        return None
+    tp = mesh.shape[s_ax]
+    if h % tp:
+        return None
+    wq_used = set(h_axes if isinstance(h_axes, tuple) else (h_axes,))
+    fsdp = recipe.resolve("embed", mesh, wq_used, d)
+    kv_sharded = k % tp == 0
+    G = h // k
+    if not kv_sharded and not ((h // tp) <= G and G % (h // tp) == 0):
+        return None
+    return mesh, recipe, b_axes, s_ax, h_axes, fsdp, tp, kv_sharded
+
+
+def sp_gqa_block(cfg, p: dict, x, positions, *, causal: bool,
+                 window: Optional[int], with_cache: bool):
+    """Full GQA block under shard_map. Returns (y, cache|None) or None."""
+    env = _env(x.shape, cfg.num_heads, cfg.num_kv_heads)
+    if env is None or cfg.family == "encdec":
+        return None
+    mesh, recipe, b_axes, s_ax, h_axes, fsdp, tp, kv_sharded = env
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = H // K
+    from repro.models.attention import chunked_attention
+
+    has_bias = "bq" in p
+
+    def body(xl, pos, wq, wk, wv, wo, *bias):
+        xg = jax.lax.all_gather(xl, s_ax, axis=1, tiled=True)   # (B_loc,S,d)
+        wq_f = _gather_weight(wq, fsdp, 0)
+        wk_f = _gather_weight(wk, fsdp, 0)
+        wv_f = _gather_weight(wv, fsdp, 0)
+        q = jnp.einsum("bsd,dhk->bshk", xg, wq_f)               # local heads
+        kk = jnp.einsum("btd,dgk->btgk", xg, wk_f)
+        vv = jnp.einsum("btd,dgk->btgk", xg, wv_f)
+        if has_bias:
+            bq, bk, bv = bias
+            q = q + bq.astype(q.dtype)
+            kk = kk + bk.astype(kk.dtype)
+            vv = vv + bv.astype(vv.dtype)
+        q = cm.rope(q, pos, cfg.rope_theta)
+        kk_r = cm.rope(kk, pos, cfg.rope_theta)
+        if kv_sharded:
+            kg, vg = kk_r, vv
+        else:
+            r = jax.lax.axis_index(h_axes)
+            group = (r * (H // tp)) // G
+            kg = jax.lax.dynamic_slice_in_dim(kk_r, group, 1, axis=2)
+            vg = jax.lax.dynamic_slice_in_dim(vv, group, 1, axis=2)
+        o = chunked_attention(q, kg, vg, causal=causal, window=window,
+                              chunk=cfg.attn_chunk)
+        y_part = jnp.einsum("bshk,hkd->bsd", o, wo).astype(xl.dtype)
+        y = jax.lax.psum_scatter(y_part, s_ax, scatter_dimension=1,
+                                 tiled=True)
+        if not with_cache:
+            return y
+        # rank-local seq slice of the (replicated or head-sharded) K/V
+        rs = jax.lax.axis_index(s_ax)
+        S_loc = xl.shape[1]
+        k_loc = jax.lax.dynamic_slice_in_dim(kk_r, rs * S_loc, S_loc, axis=1)
+        v_loc = jax.lax.dynamic_slice_in_dim(vv, rs * S_loc, S_loc, axis=1)
+        if kv_sharded:  # heads are rank-local: re-gather heads for the cache
+            k_loc = jax.lax.all_gather(k_loc, h_axes, axis=2, tiled=True)
+            v_loc = jax.lax.all_gather(v_loc, h_axes, axis=2, tiled=True)
+        return y, k_loc, v_loc
+
+    kv_h_spec = h_axes if kv_sharded else None
+    in_specs = [P(b_axes, s_ax, None), P(None),
+                P(fsdp, h_axes, None), P(fsdp, kv_h_spec, None),
+                P(fsdp, kv_h_spec, None), P(h_axes, None, None)]
+    args = [x, positions, p["wq"], p["wk"], p["wv"], p["wo"]]
+    if has_bias:
+        in_specs += [P(h_axes, None), P(kv_h_spec, None), P(kv_h_spec, None)]
+        args += [p["bq"], p["bk"], p["bv"]]
+    if with_cache:
+        out_specs = (P(b_axes, s_ax, None),
+                     P(b_axes, s_ax, None, None), P(b_axes, s_ax, None, None))
+    else:
+        out_specs = P(b_axes, s_ax, None)
+    out = jax.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                        out_specs=out_specs, check_vma=False)(*args)
+    if with_cache:
+        y, k_loc, v_loc = out
+        return y, {"k": k_loc, "v": v_loc}
+    return out, None
+
+
+def sp_mla_block(cfg, p: dict, x, positions, *, with_cache: bool):
+    """Full MLA block (DeepSeek-V2) under shard_map."""
+    env = _env(x.shape, cfg.num_heads, cfg.num_heads)
+    if env is None:
+        return None
+    mesh, recipe, b_axes, s_ax, h_axes, fsdp, tp, _ = env
+    a = cfg.mla
+    H = cfg.num_heads
+    from repro.models.attention import chunked_attention
+
+    def body(xl, pos, w_dq, qn, w_uq, w_dkv, kvn, w_uk, w_uv, wo):
+        xg = jax.lax.all_gather(xl, s_ax, axis=1, tiled=True)
+        # queries (heads local)
+        ql = jnp.einsum("bsd,dr->bsr", xg, _gather_weight(w_dq, fsdp, 0))
+        ql = cm.rmsnorm(ql, qn)
+        q = jnp.einsum("bsr,rhk->bshk", ql, w_uq)
+        q_nope = q[..., :a.qk_nope_head_dim]
+        q_rope = cm.rope(q[..., a.qk_nope_head_dim:], pos, cfg.rope_theta)
+        # latent (replicated across head ranks — it is tiny)
+        dkv = jnp.einsum("btd,dr->btr", xg, _gather_weight(w_dkv, fsdp, 0))
+        c_kv = cm.rmsnorm(dkv[..., :a.kv_lora_rank], kvn)
+        k_rope = cm.rope(dkv[..., a.kv_lora_rank:], pos, cfg.rope_theta)
+        # decompress local heads
+        k_nope = jnp.einsum("btr,rhk->bthk", c_kv, w_uk)
+        v = jnp.einsum("btr,rhk->bthk", c_kv, w_uv)
+        B, T = xg.shape[0], xg.shape[1]
+        h_loc = k_nope.shape[2]
+        k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                    (B, T, h_loc, a.qk_rope_head_dim))
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kf = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+        pad = qf.shape[-1] - v.shape[-1]
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        o = chunked_attention(qf, kf, vp, causal=True, chunk=cfg.attn_chunk)
+        o = o[..., :a.v_head_dim]
+        y_part = jnp.einsum("bshk,hkd->bsd", o, wo).astype(xl.dtype)
+        y = jax.lax.psum_scatter(y_part, s_ax, scatter_dimension=1,
+                                 tiled=True)
+        if not with_cache:
+            return y
+        rs = jax.lax.axis_index(s_ax)
+        S_loc = xl.shape[1]
+        c_loc = jax.lax.dynamic_slice_in_dim(c_kv, rs * S_loc, S_loc, axis=1)
+        kr_loc = jax.lax.dynamic_slice_in_dim(k_rope, rs * S_loc, S_loc,
+                                              axis=1)
+        return y, c_loc, kr_loc
+
+    in_specs = (P(b_axes, s_ax, None), P(None),
+                P(fsdp, None), P(None), P(None, h_axes, None),
+                P(fsdp, None), P(None), P(None, h_axes, None),
+                P(None, h_axes, None), P(h_axes, None, None))
+    if with_cache:
+        out_specs = (P(b_axes, s_ax, None),
+                     P(b_axes, s_ax, None), P(b_axes, s_ax, None))
+    else:
+        out_specs = P(b_axes, s_ax, None)
+    out = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_vma=False)(
+        x, positions, p["w_dq"], p["q_norm"], p["w_uq"], p["w_dkv"],
+        p["kv_norm"], p["w_uk"], p["w_uv"], p["wo"])
+    if with_cache:
+        y, c_loc, kr_loc = out
+        return y, {"c_kv": c_loc, "k_rope": kr_loc}
+    return out, None

@@ -1,0 +1,94 @@
+"""Explicit Megatron-SP + ZeRO-3 FFN via shard_map (optimization H1c).
+
+Measured problem (EXPERIMENTS.md §Perf): under pjit, the FFN's backward
+psum+reshard patterns lower to *full-tensor all-reduces* instead of
+reduce-scatters ("involuntary full rematerialization" in the SPMD
+partitioner) — 4.5e11 link bytes/device-step on qwen train_4k, 60% of all
+collective traffic.
+
+Fix: hand-write the block's collectives inside shard_map, where autodiff
+produces the exact duals:
+
+    forward                              backward (automatic)
+    x_full = all_gather(x, seq_ax)       dx = psum_scatter(dx_full)
+    w_full = all_gather(w, fsdp_ax)      dw = psum_scatter(dw)  (ZeRO-3 grad RS)
+    h      = act(x_full @ w_gate) * ..   (local; weight grads local-sharded)
+    y_part = h @ w_down                  dh local
+    y      = psum_scatter(y_part, seq)   dy_full = all_gather(dy)
+
+Nothing is ever all-reduced at full size; weight gradients never leave
+their shard layout.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import ctx as dctx
+from repro.models import common as cm
+
+
+def _gather_weight(w, axes, axis_pos):
+    """All-gather a weight's FSDP axis inside shard_map (no-op if None)."""
+    if axes is None:
+        return w
+    names = axes if isinstance(axes, tuple) else (axes,)
+    for a in names:
+        w = jax.lax.all_gather(w, a, axis=axis_pos, tiled=True)
+    return w
+
+
+def sp_ffn(cfg, p: dict, x):
+    """Explicit-collective FFN. Returns None if inapplicable (caller falls
+    back to the pjit path)."""
+    c = dctx.current()
+    if c is None or x.ndim != 3:
+        return None
+    mesh, recipe = c
+    B, S, d = x.shape
+    f = p["w_up"].shape[-1]
+
+    used: set = set()
+    b_axes = recipe.resolve("batch", mesh, used, B)
+    s_axes = recipe.resolve("act_seq", mesh, set(used), S)
+    used_w: set = set()
+    fsdp = recipe.resolve("embed", mesh, used_w, d)
+    mlp = recipe.resolve("mlp", mesh, set(used_w), f)
+    if s_axes is None or mlp is None or not isinstance(s_axes, str):
+        return None
+    if S % mesh.shape[s_axes] != 0:
+        return None
+
+    gated = "w_gate" in p
+    act = cm.ACTIVATIONS["silu" if cfg.ffn_activation == "swiglu" else
+                         "gelu" if gated else cfg.ffn_activation]
+
+    def body(xl, wu, wd, *wg):
+        # xl: (B_loc, S_loc, d); wu: (d_loc, f_loc); wd: (f_loc, d_loc)
+        xg = jax.lax.all_gather(xl, s_axes, axis=1, tiled=True)
+        wu_f = _gather_weight(wu, fsdp, 0)
+        wd_f = _gather_weight(wd, fsdp, 1)
+        up = jnp.einsum("bsd,df->bsf", xg, wu_f)
+        if gated:
+            wg_f = _gather_weight(wg[0], fsdp, 0)
+            h = act(jnp.einsum("bsd,df->bsf", xg, wg_f)) * up
+        else:
+            h = act(up)
+        y_part = jnp.einsum("bsf,fd->bsd", h, wd_f).astype(xl.dtype)
+        return jax.lax.psum_scatter(y_part, s_axes, scatter_dimension=1,
+                                    tiled=True)
+
+    w_spec_up = P(fsdp, mlp)
+    w_spec_down = P(mlp, fsdp)
+    args = [x, p["w_up"], p["w_down"]]
+    in_specs = [P(b_axes, s_axes, None), w_spec_up, w_spec_down]
+    if gated:
+        args.append(p["w_gate"])
+        in_specs.append(w_spec_up)
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=tuple(in_specs),
+        out_specs=P(b_axes, s_axes, None), check_vma=False,
+    )(*args)

@@ -1,0 +1,40 @@
+"""custom_vjp wrappers making the Pallas kernels trainable.
+
+Forward runs the Pallas kernel (MXU/VPU-shaped, VMEM-resident); backward
+recomputes through the pure-jnp oracle under ``jax.vjp`` — the
+flash-attention-style recompute pattern. A fused backward kernel is the
+natural next step on hardware; the oracle backward is numerically identical
+and keeps the forward win.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+def kernel_with_ref_vjp(kernel_fn, ref_fn):
+    """Differentiable op: ``kernel_fn`` forward, grads through ``ref_fn``.
+
+    Both must share the same positional-arg signature; keyword args must be
+    passed by the caller via functools.partial before wrapping.
+    """
+
+    @jax.custom_vjp
+    def op(*args):
+        return kernel_fn(*args)
+
+    def fwd(*args):
+        return kernel_fn(*args), args
+
+    def bwd(args, g):
+        _, vjp = jax.vjp(lambda *a: ref_fn(*a), *args)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def differentiable(kernel_fn, ref_fn, **kernel_kwargs):
+    k = functools.partial(kernel_fn, **kernel_kwargs)
+    return kernel_with_ref_vjp(k, ref_fn)

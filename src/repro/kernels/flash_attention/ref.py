@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, H, S, hd); k, v: (B, K, T, hd), H = K·G. fp32 math."""
+    B, H, S, hd = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, K, G, S, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgsh,bkth->bkgst", qf, kf) / np.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bkth->bkgsh", p, vf)
+    return o.reshape(B, H, S, hd).astype(q.dtype)

@@ -1,0 +1,60 @@
+"""RG-LRU diagonal linear recurrence — Pallas TPU kernel.
+
+h_t = a_t ⊙ h_{t-1} + b_t over the time axis, channel-blocked:
+
+- grid = (batch, width_blocks, chunks); chunks innermost/sequential with the
+  carried state h ∈ R^{wb} (fp32) in VMEM scratch,
+- the channel dimension is blocked to the 128-lane VPU width (this is a
+  VPU kernel, not an MXU one — elementwise FMA over lanes),
+- within a chunk the recurrence is an in-register ``fori_loop`` over C
+  timesteps with a dynamic row store per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h_ref, state_scr, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    a = a_ref[0].astype(jnp.float32)         # (C, wb)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        pl.store(h_ref, (0, pl.dslice(t, 1), slice(None)),
+                 h[None].astype(h_ref.dtype))
+        return h
+
+    h_final = jax.lax.fori_loop(0, chunk, step, state_scr[...])
+    state_scr[...] = h_final
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w", "interpret"))
+def rglru_scan(a, b, *, chunk: int = 64, block_w: int = 128,
+               interpret: bool = True):
+    """a, b: (B, S, W) — returns h: (B, S, W) with h_t = a_t·h_{t-1} + b_t."""
+    B, S, W = a.shape
+    assert S % chunk == 0, (S, chunk)
+    wb = min(block_w, W)
+    assert W % wb == 0, (W, wb)
+    grid = (B, W // wb, S // chunk)
+    spec = pl.BlockSpec((1, chunk, wb), lambda bi, wi, ci: (bi, ci, wi))
+    return pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, W), a.dtype),
+        scratch_shapes=[pltpu.VMEM((wb,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

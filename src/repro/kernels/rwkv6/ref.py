@@ -1,0 +1,29 @@
+"""Sequential-recurrence oracle for the RWKV-6 kernel.
+
+    S_t = diag(w_t)·S_{t-1} + k_tᵀ v_t
+    y_t = r_t · (S_{t-1} + diag(u)·k_tᵀ v_t)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r, k, v, lw, u):
+    """r,k,v,lw: (B, H, S, hd); u: (H, hd). Sequential scan over S."""
+    B, H, S, hd = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(lw.astype(jnp.float32))
+
+    def step(S_c, xs):
+        rt, kt, vt, wt = xs                      # (B, H, hd)
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        y = jnp.einsum("bhd,bhde->bhe", rt,
+                       S_c + u[None, :, :, None] * kv)
+        S_n = S_c * wt[..., None] + kv
+        return S_n, y
+
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (rf, kf, vf, w))
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype)

@@ -1,0 +1,3 @@
+# NOTE: do not import repro.launch.dryrun here — it sets XLA_FLAGS at import
+# time and must only be imported by the dry-run entrypoint itself.
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh  # noqa: F401

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The single-pod mesh is 16×16 =
+256 chips (one v5e pod); the multi-pod mesh is 2×16×16 = 512 chips with the
+leading "pod" axis mapping to the inter-pod DCI domain.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for mesh {shape}; found {len(devices)}. "
+            "The dry-run launcher must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (see launch/dryrun.py).")
+    return jax.make_mesh(shape, axes, devices=devices[:ndev],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
+    """A 1×1 mesh over the single real CPU device (tests/benches)."""
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:1],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))

@@ -1,0 +1,66 @@
+"""Roofline report CLI: render the dry-run caches as tables.
+
+    python -m repro.launch.report                    # optimized table
+    python -m repro.launch.report --compare          # baseline vs optimized
+    python -m repro.launch.report --cell deepseek-v2-236b__train_4k__pod256__baseline
+"""
+import argparse
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+
+def load(d):
+    out = {}
+    for f in sorted((ROOT / d).glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") == "ok":
+            out[r["cell"]] = r
+    return out
+
+
+def fmt_row(c):
+    r, m = c["roofline"], c["memory"]
+    fit = "Y" if m["fits"] else ("D" if m.get("fits_with_donation") else "N")
+    return (f"{c['arch']:22s} {c['shape']:12s} {c['mesh']:8s} "
+            f"{c['recipe']:10s} c={r['compute_s']:8.2f}s m={r['memory_s']:8.2f}s "
+            f"x={r['collective_s']:8.2f}s {r['dominant']:10s} "
+            f"frac={r['roofline_fraction']:.3f} live={m['peak_live_bytes']/1e9:5.1f}GB "
+            f"fit={fit}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--compare", action="store_true")
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--shape", default=None)
+    args = ap.parse_args()
+
+    opt = load("dryrun")
+    if args.cell:
+        print(json.dumps(opt.get(args.cell) or
+                         load("dryrun_baseline").get(args.cell), indent=2))
+        return
+    if args.compare:
+        base = load("dryrun_baseline")
+        print(f"{'cell':64s} {'frac(base)':>10s} {'frac(opt)':>10s} "
+              f"{'coll(base)':>11s} {'coll(opt)':>10s}")
+        for cid, o in sorted(opt.items()):
+            b = base.get(cid)
+            if b is None:
+                continue
+            print(f"{cid:64s} {b['roofline']['roofline_fraction']:10.3f} "
+                  f"{o['roofline']['roofline_fraction']:10.3f} "
+                  f"{b['roofline']['collective_s']:10.2f}s "
+                  f"{o['roofline']['collective_s']:9.2f}s")
+        return
+    for cid, c in sorted(opt.items(),
+                         key=lambda kv: (kv[1]["shape"], kv[1]["arch"])):
+        if args.shape and c["shape"] != args.shape:
+            continue
+        print(fmt_row(c))
+
+
+if __name__ == "__main__":
+    main()

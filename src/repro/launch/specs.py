@@ -1,0 +1,97 @@
+"""ShapeDtypeStruct input builders for every (arch × shape) cell.
+
+Everything here is allocation-free: weak-type-correct ShapeDtypeStructs with
+NamedShardings attached, ready for ``jax.jit(...).lower()``.  The modality
+frontends are stubs per the assignment: whisper gets precomputed frame
+embeddings, llama-vision gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.distributed.sharding import (ShardingRecipe, batch_sharding,
+                                        cache_shardings, param_shardings)
+from repro.models import decode_cache
+from repro.models.model import model_specs
+from repro.training.train_step import TrainState, train_state_specs
+
+
+def _sds(shape, dtype, sharding):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh, recipe: ShardingRecipe,
+                include_labels: bool) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    tok_sh = batch_sharding(mesh, recipe, 2, seq_axis=1, shape=(B, S))
+    out = {"tokens": _sds((B, S), jnp.int32, tok_sh)}
+    if include_labels:
+        out["labels"] = _sds((B, S), jnp.int32, tok_sh)
+    if cfg.family == "encdec":
+        out["frames"] = _sds((B, cfg.encoder_frames, cfg.d_model),
+                             jnp.dtype(cfg.param_dtype),
+                             batch_sharding(mesh, recipe, 3, shape=(B, 0, 0)))
+    if cfg.family == "vision":
+        out["image_embeds"] = _sds((B, cfg.num_image_tokens, cfg.d_model),
+                                   jnp.dtype(cfg.param_dtype),
+                                   batch_sharding(mesh, recipe, 3, shape=(B, 0, 0)))
+    return out
+
+
+def state_specs(cfg: ArchConfig, mesh, recipe: ShardingRecipe) -> TrainState:
+    """Abstract TrainState with shardings attached."""
+    from repro.models import common as cm
+    from repro.distributed.sharding import spec_for_axes
+    from jax.sharding import NamedSharding
+
+    def to_sds(s):
+        sh = NamedSharding(mesh, spec_for_axes(s.axes, recipe, mesh, s.shape))
+        return _sds(s.shape, s.dtype, sh)
+
+    return jax.tree.map(to_sds, train_state_specs(cfg), is_leaf=cm.is_spec)
+
+
+def param_specs_only(cfg: ArchConfig, mesh, recipe: ShardingRecipe):
+    from repro.models import common as cm
+    from repro.distributed.sharding import spec_for_axes
+    from jax.sharding import NamedSharding
+
+    def to_sds(s):
+        sh = NamedSharding(mesh, spec_for_axes(s.axes, recipe, mesh, s.shape))
+        return _sds(s.shape, s.dtype, sh)
+
+    return jax.tree.map(to_sds, model_specs(cfg), is_leaf=cm.is_spec)
+
+
+def decode_cache_specs(cfg: ArchConfig, shape: ShapeSpec, mesh,
+                       recipe: ShardingRecipe):
+    cache = decode_cache(cfg, shape.global_batch, shape.seq_len, abstract=True)
+    shardings = cache_shardings(cache, recipe, mesh)
+    return jax.tree.map(lambda c, s: _sds(c.shape, c.dtype, s), cache, shardings)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh, recipe: ShardingRecipe):
+    """Full argument tuple specs for the step function of this cell."""
+    if shape.kind == "train":
+        return {
+            "state": state_specs(cfg, mesh, recipe),
+            "batch": batch_specs(cfg, shape, mesh, recipe, include_labels=True),
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": param_specs_only(cfg, mesh, recipe),
+            "batch": batch_specs(cfg, shape, mesh, recipe, include_labels=False),
+        }
+    # decode
+    return {
+        "params": param_specs_only(cfg, mesh, recipe),
+        "cache": decode_cache_specs(cfg, shape, mesh, recipe),
+        "token": _sds((shape.global_batch, 1), jnp.int32,
+                      batch_sharding(mesh, recipe, 2,
+                                     shape=(shape.global_batch, 1))),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

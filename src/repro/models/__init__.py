@@ -1,0 +1,10 @@
+from repro.models import common  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    build_decode_step,
+    build_prefill_step,
+    chunked_xent,
+    count_params,
+    decode_cache,
+    loss_fn,
+    model_specs,
+)

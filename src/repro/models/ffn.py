@@ -1,0 +1,69 @@
+"""Dense feed-forward variants: SwiGLU, squared-ReLU, (gated-)GELU."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+from repro.distributed.ctx import constrain_hidden, constrain_residual
+from repro.models import common as cm
+
+
+def ffn_specs(cfg, d_ff=None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    gated = cfg.ffn_activation in ("swiglu", "gelu")  # gelu == GeGLU (gemma-style)
+    s = {
+        "w_up": cm.ParamSpec((d, f), ("embed", "mlp"), dt),
+        "w_down": cm.ParamSpec((f, d), ("mlp", "embed"), dt),
+    }
+    if gated:
+        s["w_gate"] = cm.ParamSpec((d, f), ("embed", "mlp"), dt)
+    return s
+
+
+def ffn(cfg, p: dict, x):
+    from repro.distributed.sp_ffn import sp_ffn
+
+    y = sp_ffn(cfg, p, x)    # explicit-collective Megatron/ZeRO-3 block
+    if y is not None:
+        return y
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if "w_gate" in p:
+        act = cm.ACTIVATIONS["silu" if cfg.ffn_activation == "swiglu" else "gelu"]
+        h = act(jnp.einsum("...d,df->...f", x, p["w_gate"])) * up
+    else:
+        h = cm.ACTIVATIONS[cfg.ffn_activation](up)
+    if h.ndim == 3:
+        # Megatron-SP: hidden sharded on the tensor axis, full seq local —
+        # weight grads are then computed in sharded form (no grad all-reduce)
+        h = constrain_hidden(h)
+    y = jnp.einsum("...f,fd->...d", h, p["w_down"]).astype(x.dtype)
+    return constrain_residual(y) if y.ndim == 3 else y
+
+
+def rwkv_channel_mix_specs(cfg) -> dict:
+    """RWKV-6 channel mix: token-shift + squared-ReLU keyed by receptance."""
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "mu_k": cm.ParamSpec((d,), ("embed",), jnp.float32, "small"),
+        "mu_r": cm.ParamSpec((d,), ("embed",), jnp.float32, "small"),
+        "w_k": cm.ParamSpec((d, f), ("embed", "mlp"), dt),
+        "w_v": cm.ParamSpec((f, d), ("mlp", "embed"), dt),
+        "w_r": cm.ParamSpec((d, d), ("embed", "embed"), dt),
+    }
+
+
+def rwkv_channel_mix(cfg, p: dict, x, x_prev):
+    """x: (B,S,d); x_prev: (B,S,d) token-shifted input (prev token)."""
+    sx = x_prev - x
+    kx = x + sx * p["mu_k"].astype(x.dtype)
+    rx = x + sx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(jnp.einsum("...d,df->...f", kx, p["w_k"])))
+    if k.ndim == 3:
+        k = constrain_hidden(k)
+    kv = jnp.einsum("...f,fd->...d", k, p["w_v"])
+    if kv.ndim == 3:
+        kv = constrain_residual(kv)
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", rx, p["w_r"]).astype(jnp.float32))
+    return (r.astype(x.dtype) * kv).astype(x.dtype)

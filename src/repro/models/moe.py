@@ -1,0 +1,136 @@
+"""Routed mixture-of-experts with sort-based capacity dispatch.
+
+Dispatch strategy (DESIGN.md §5): the classic GShard one-hot-einsum dispatch
+materializes a (tokens, experts, capacity) tensor, which at the assigned
+sizes (65k tokens/shard × 160 experts × ~3k capacity) is terabytes. We
+instead use the *sort-based* dropless-style formulation:
+
+1. route: top-k expert ids per token,
+2. flatten (token, choice) pairs and stable-sort by expert id,
+3. compute each pair's slot within its expert via a running count,
+4. scatter token activations into an (E, C, d) buffer (overflow → dropped,
+   weight zeroed — capacity_factor controls the drop rate),
+5. per-expert batched GEMM (E-sharded on the "expert"/model axis),
+6. gather outputs back per (token, choice) and combine with router weights.
+
+All shapes are static; the sort is O(T·k log) and the buffers are
+E-sharded, which is what makes the 160-expert DeepSeek cell fit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+from repro.models import common as cm
+
+
+def moe_specs(cfg) -> dict:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.expert_d_ff, m.num_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    s = {
+        "router": cm.ParamSpec((d, e), ("embed", None), jnp.float32, "small"),
+        "w_gate": cm.ParamSpec((e, d, f), ("expert", "embed", "mlp"), dt),
+        "w_up": cm.ParamSpec((e, d, f), ("expert", "embed", "mlp"), dt),
+        "w_down": cm.ParamSpec((e, f, d), ("expert", "mlp", "embed"), dt),
+    }
+    if m.num_shared_experts:
+        fs = m.shared_ff
+        s["shared"] = {
+            "w_gate": cm.ParamSpec((d, fs), ("embed", "mlp"), dt),
+            "w_up": cm.ParamSpec((d, fs), ("embed", "mlp"), dt),
+            "w_down": cm.ParamSpec((fs, d), ("mlp", "embed"), dt),
+        }
+    return s
+
+
+def _route(cfg, p, x2d):
+    """x2d: (T, d) -> probs (T, k), ids (T, k), aux load-balance loss."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)       # renormalize
+    # Switch-style load-balance aux loss: E * sum_e f_e * P_e
+    density = jnp.mean(jax.nn.one_hot(top_i[:, 0], m.num_experts), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = m.num_experts * jnp.sum(density * mean_prob)
+    return top_p, top_i, aux
+
+
+def moe_ffn(cfg, p: dict, x):
+    """x: (B, S, d) -> (B, S, d), plus aux loss (returned via dict)."""
+    from repro.distributed.sp_moe import sp_moe
+
+    sp = sp_moe(cfg, p, x)       # explicit EP dispatch when sharded (H2)
+    if sp is not None:
+        y, aux = sp
+        if "shared" in p:
+            y = y + _shared_experts(cfg, p["shared"], x)
+        return y, aux
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    x2d = x.reshape(T, d)
+    top_p, top_i, aux = _route(cfg, p, x2d)
+
+    k = m.top_k
+    E = m.num_experts
+    cap = int(max(1, round(T * k / E * m.capacity_factor)))
+    # pad capacity to the 128-lane boundary so the expert GEMM is MXU-aligned
+    cap = -(-cap // 128) * 128 if cap > 128 else cap
+
+    flat_e = top_i.reshape(T * k)                                 # expert id / pair
+    order = jnp.argsort(flat_e, stable=True)                      # sort pairs by expert
+    sorted_e = flat_e[order]
+    # slot of each sorted pair within its expert = rank - start_of_expert
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=sorted_e.dtype))
+    slot = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    keep = slot < cap                                             # overflow drops
+    slot_c = jnp.minimum(slot, cap - 1)
+
+    tok = (order // k).astype(jnp.int32)                          # source token / pair
+    buf = jnp.zeros((E, cap, d), x.dtype)
+    upd = jnp.where(keep[:, None], x2d[tok], 0)
+    buf = buf.at[sorted_e, slot_c].add(upd, mode="drop")
+    buf = constrain(buf, ("expert", None, None))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).astype(x.dtype)
+    out_buf = constrain(out_buf, ("expert", None, None))
+
+    gathered = out_buf[sorted_e, slot_c]                          # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    pair_w = top_p.reshape(T * k)[order].astype(x.dtype)
+    contrib = gathered * pair_w[:, None]
+    y2d = jnp.zeros((T, d), x.dtype).at[tok].add(contrib)
+
+    if "shared" in p:
+        y2d = y2d + _shared_experts(cfg, p["shared"], x2d).reshape(T, d)
+
+    return y2d.reshape(B, S, d), aux
+
+
+def _shared_experts(cfg, sp: dict, x):
+    """Always-on shared experts (DeepSeek/Moonlight).
+
+    Same weight layout as the dense FFN, so the explicit-collective
+    Megatron/ZeRO-3 block applies directly (H2d — without it the shared
+    experts re-introduce the full-seq gather + dx all-reduce per layer)."""
+    if x.ndim == 3:
+        from repro.distributed.sp_ffn import sp_ffn
+
+        y = sp_ffn(cfg, sp, x)
+        if y is not None:
+            return y
+    h = jax.nn.silu(jnp.einsum("...d,df->...f", x, sp["w_gate"])) * \
+        jnp.einsum("...d,df->...f", x, sp["w_up"])
+    if h.ndim == 3:
+        h = constrain(h, ("batch", None, "mlp"))
+    y = jnp.einsum("...f,fd->...d", h, sp["w_down"]).astype(x.dtype)
+    if y.ndim == 3:
+        y = constrain(y, ("batch", "act_seq", None))
+    return y

@@ -1,0 +1,56 @@
+"""Three-term roofline model over the AOT-compiled artifact.
+
+Hardware constants (TPU v5e target — the assignment's numbers):
+    peak    197e12 FLOP/s bf16 per chip
+    hbm_bw  819e9  B/s per chip
+    link_bw 50e9   B/s per link (1 effective link per chip, conservative)
+
+Terms (per §Roofline of the assignment):
+    compute    = HLO_FLOPs(per-device) / peak
+    memory     = HLO_bytes(per-device) / hbm_bw
+    collective = collective_link_bytes(per-device) / link_bw
+
+``cost_analysis()`` on an SPMD executable reports per-device numbers, so no
+division by chip count is needed.  MODEL_FLOPS uses 6·N·D (dense) or
+6·N_active·D (MoE) with N excluding embeddings, D = tokens processed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12
+    hbm_bw: float = 819e9
+    link_bw: float = 50e9
+    hbm_bytes: float = 16e9
+
+
+HW = Hardware()
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   coll_bytes_per_device: float, hw: Hardware = HW) -> Dict:
+    compute = flops_per_device / hw.peak_flops
+    memory = bytes_per_device / hw.hbm_bw
+    collective = coll_bytes_per_device / hw.link_bw
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    terms.update({
+        "dominant": dom.replace("_s", ""),
+        "step_time_lb_s": bound,
+        # fraction of the bound spent doing useful math = how close the cell
+        # sits to its compute roofline
+        "roofline_fraction": (compute / bound) if bound > 0 else 0.0,
+    })
+    return terms
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str = "train") -> float:
+    """6·N·D for train (fwd+bwd), 2·N·D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens

@@ -1,0 +1,58 @@
+"""Decode-cache utilities: growing a prefill cache into a decode cache.
+
+Prefill emits caches sized to the prompt; decode wants ``max_seq`` slots.
+``extend_cache`` right-pads the sequence axis of global KV leaves and
+re-rolls ring-buffered local-window leaves so that slot ``p % window`` holds
+absolute position ``p`` (the invariant ``decode_attention`` relies on).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# leaf name -> seq axis (in the unstacked (B, S, ...) layout); stacked leaves
+# gain a leading layer axis
+_SEQ_LEAVES = {"k": 1, "v": 1, "c_kv": 1, "k_rope": 1}
+
+
+def _leaf_name(path):
+    for p in reversed(path):
+        if isinstance(p, jax.tree_util.DictKey):
+            return p.key
+    return None
+
+
+def extend_cache(template, prefill_cache, prompt_len: int):
+    """Fit ``prefill_cache`` into ``template`` (zeros of decode shape)."""
+
+    def f(path, tmpl, src):
+        name = _leaf_name(path)
+        tmpl = jnp.asarray(tmpl)
+        src = jnp.asarray(src).astype(tmpl.dtype)
+        if src.shape == tmpl.shape:
+            return src
+        if name in _SEQ_LEAVES:
+            base_rank = 3 if name in ("c_kv", "k_rope") else 4
+            ax = _SEQ_LEAVES[name] + (src.ndim - base_rank)
+            src_len = src.shape[ax]
+            tmpl_len = tmpl.shape[ax]
+            if src_len < prompt_len:
+                # ring buffer (local window): slot p % w must hold position p
+                w = src_len
+                shift = prompt_len % w
+                src = jnp.roll(src, shift, axis=ax)
+            if src.shape[ax] <= tmpl_len:
+                pad = [(0, 0)] * src.ndim
+                pad[ax] = (0, tmpl_len - src.shape[ax])
+                out = jnp.pad(src, pad)
+                return out
+            # template window smaller than source: keep the latest slots
+            sl = [slice(None)] * src.ndim
+            sl[ax] = slice(src.shape[ax] - tmpl_len, None)
+            return src[tuple(sl)]
+        raise ValueError(
+            f"cache leaf {name!r}: prefill shape {src.shape} does not fit "
+            f"decode template {tmpl.shape}")
+
+    return jax.tree_util.tree_map_with_path(f, template, prefill_cache)

@@ -1,0 +1,31 @@
+from repro.substrates.base import SubstrateAdapter  # noqa: F401
+from repro.substrates.chemical import ChemicalAdapter  # noqa: F401
+from repro.substrates.cortical import (CLClient, CLSimulator,  # noqa: F401
+                                       CorticalLabsAdapter)
+from repro.substrates.http_fast import FastService, HTTPFastAdapter  # noqa: F401
+from repro.substrates.memristive import MemristiveAdapter  # noqa: F401
+from repro.substrates.tpu_pod import TpuPodSubstrate  # noqa: F401
+from repro.substrates.wetware import WetwareAdapter  # noqa: F401
+
+
+def standard_testbed(orchestrator, *, http_service=None, include_cortical=True):
+    """Register the paper's five-backend test bed on an orchestrator.
+
+    Returns dict of adapters keyed by resource id.  ``http_service`` may be a
+    running :class:`FastService`; if None one is started (caller stops it).
+    """
+    adapters = {}
+    for a in (ChemicalAdapter(), WetwareAdapter(), MemristiveAdapter()):
+        orchestrator.register(a)
+        adapters[a.resource_id] = a
+    if http_service is None:
+        http_service = FastService().start()
+    ext = HTTPFastAdapter(http_service.url)
+    orchestrator.register(ext)
+    adapters[ext.resource_id] = ext
+    adapters["_service"] = http_service
+    if include_cortical:
+        cl = CorticalLabsAdapter()
+        orchestrator.register(cl)
+        adapters[cl.resource_id] = cl
+    return adapters

@@ -1,0 +1,174 @@
+"""Externalized fast backend: HTTP service + adapter (paper §VII-A).
+
+Same fast device-proximate capability profile as the memristive backend but
+reached across an explicit software boundary — an HTTP service running in a
+separate thread (the paper runs it as a separate same-machine process).
+This is NOT a fourth substrate class; it validates that the control-plane
+contract survives a real service boundary, and it is the designated fallback
+target of the fault campaign.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.descriptors import (CapabilityDescriptor, LifecycleSemantics,
+                                    Observability, PolicyConstraints,
+                                    ResourceDescriptor, SignalSpec,
+                                    TimingSemantics)
+from repro.core.telemetry import RuntimeSnapshot
+from repro.core.twin import TwinState
+from repro.substrates.base import SubstrateAdapter
+from repro.substrates.memristive import CrossbarTwin
+
+RESOURCE_ID = "fast-external"
+
+
+class _Handler(BaseHTTPRequestHandler):
+    twin: CrossbarTwin = None  # set by server factory
+
+    def do_POST(self):
+        if self.path != "/invoke":
+            self.send_error(404)
+            return
+        length = int(self.headers.get("Content-Length", 0))
+        payload = json.loads(self.rfile.read(length) or b"{}")
+        x = np.asarray(payload.get("vector", [0.5, 0.5, 0.5, 0.5]), np.float64)
+        t0 = time.perf_counter()
+        y = self.server.twin.mvm(x[: self.server.twin.g.shape[1]])
+        backend_ms = (time.perf_counter() - t0) * 1e3
+        body = json.dumps({
+            "vector": y.tolist(),
+            "backend_ms": backend_ms,
+            "drift_score": round(self.server.twin.drift(), 4),
+        }).encode()
+        self.send_response(200)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_GET(self):
+        if self.path != "/health":
+            self.send_error(404)
+            return
+        body = json.dumps({"status": "ok",
+                           "drift_score": round(self.server.twin.drift(), 4)
+                           }).encode()
+        self.send_response(200)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, *args):  # quiet
+        pass
+
+
+class FastService:
+    """The externalized execution service (own thread, loopback HTTP)."""
+
+    def __init__(self, port: int = 0):
+        self.server = ThreadingHTTPServer(("127.0.0.1", port), _Handler)
+        self.server.twin = CrossbarTwin(seed=5)
+        self.port = self.server.server_address[1]
+        self._thread = threading.Thread(target=self.server.serve_forever,
+                                        daemon=True)
+
+    def start(self) -> "FastService":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self.server.shutdown()
+        self.server.server_close()
+
+    @property
+    def url(self) -> str:
+        return f"http://127.0.0.1:{self.port}"
+
+
+class HTTPFastAdapter(SubstrateAdapter):
+    """Control-plane adapter for the externalized fast backend."""
+
+    def __init__(self, url: str, resource_id: str = RESOURCE_ID):
+        super().__init__()
+        self.url = url
+        self.resource_id = resource_id
+        self.last_drift = 0.0
+
+    def descriptor(self) -> ResourceDescriptor:
+        cap = CapabilityDescriptor(
+            functions=("inference", "mvm"),
+            input_signal=SignalSpec("vector", "float32", (-1.0, 1.0)),
+            output_signal=SignalSpec("vector", "float32", (-10.0, 10.0)),
+            timing=TimingSemantics("fast_ms", 8.0, observation_window_ms=10.0,
+                                   freshness_ms=10_000.0),
+            lifecycle=LifecycleSemantics(
+                warmup_ms=0.0, resetable=True, reset_modes=("reprogram",),
+                reset_cost_ms=25.0, recovery_modes=("reprogram",)),
+            programmability="tunable",
+            observability=Observability(
+                output_channels=("vector_out",),
+                telemetry_fields=("execution_ms", "drift_score",
+                                  "transport_ms"),
+                drift_indicators=("drift_score",),
+                twin_linked_fields=("drift_score",)),
+            policy=PolicyConstraints(exclusive=False, max_concurrent=8),
+            supports_repeated_invocation=True,
+            energy_proxy_mj=0.001,
+        )
+        return ResourceDescriptor(
+            resource_id=self.resource_id, substrate_class="memristive",
+            adapter_type="http", location="edge",
+            twin_binding=f"twin-{self.resource_id}", capability=cap,
+            description="HTTP-externalized fast vector backend "
+                        "(service boundary validation)")
+
+    def prepare(self, session) -> None:
+        self._check_prepare_fault()
+        with urllib.request.urlopen(f"{self.url}/health", timeout=5) as r:
+            if json.loads(r.read()).get("status") != "ok":
+                raise RuntimeError("externalized backend unhealthy")
+
+    def invoke(self, session) -> Dict:
+        payload = {"vector": list(np.asarray(
+            session.task.payload if session.task.payload is not None
+            else [0.5, 0.5, 0.5, 0.5], float))}
+        data = json.dumps(payload).encode()
+        req = urllib.request.Request(f"{self.url}/invoke", data=data,
+                                     headers={"Content-Type": "application/json"})
+        t0 = time.perf_counter()
+        with urllib.request.urlopen(req, timeout=10) as r:
+            body = json.loads(r.read())
+        rtt_ms = (time.perf_counter() - t0) * 1e3
+        backend_ms = float(body.get("backend_ms", 0.0))
+        self.last_drift = float(body.get("drift_score", 0.0))
+        telemetry = self._apply_telemetry_faults({
+            "execution_ms": round(backend_ms, 4),
+            "transport_ms": round(rtt_ms - backend_ms, 4),
+            "drift_score": self.last_drift,
+            "health_status": "healthy",
+            "observation_ms": rtt_ms,
+        })
+        return {
+            "output": {"vector": body.get("vector")},
+            "telemetry": telemetry,
+            "artifacts": {},
+            "backend_ms": backend_ms,
+            "rtt_ms": rtt_ms,
+            "needs_reset": False,
+        }
+
+    def snapshot(self) -> Optional[RuntimeSnapshot]:
+        return RuntimeSnapshot(self.resource_id, drift_score=self.last_drift)
+
+    def make_twin(self) -> Optional[TwinState]:
+        return TwinState(f"twin-{self.resource_id}", self.resource_id,
+                         kind="behavioral", model={"transport": "http"})

@@ -1,0 +1,219 @@
+"""TPU pod-slice substrate: the control plane's beyond-paper binding.
+
+A registered resource is a (architecture × mesh geometry × sharding recipe ×
+precision) tuple.  Its capability descriptor carries the roofline terms
+derived from the AOT-compiled dry-run artifact (``benchmarks/results/dryrun``)
+— i.e. the *digital twin is the compiled cost model* (DESIGN.md §2), the
+high-fidelity end of the paper's twin spectrum:
+
+- twin confidence     — decays when measured step telemetry diverges from
+                        the roofline prediction (drift),
+- lifecycle           — COMPILING = warm-up, checkpoint-restore = reset,
+- timing contract     — roofline step-time lower bound × slack,
+- telemetry contract  — loss / grad-norm / tokens-per-second / step-time.
+
+``invoke`` executes real jitted train steps of a *reduced* same-family
+config on the local device mesh (this container is CPU-only; the full
+configs exist via the dry-run path).  Step-time regression beyond the
+straggler threshold marks the substrate DEGRADED, which the matcher sees —
+the paper's drift-aware placement, applied to a TPU fleet.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.descriptors import (CapabilityDescriptor, LifecycleSemantics,
+                                    Observability, PolicyConstraints,
+                                    ResourceDescriptor, SignalSpec,
+                                    TimingSemantics)
+from repro.core.telemetry import RuntimeSnapshot
+from repro.core.twin import TwinState
+from repro.substrates.base import SubstrateAdapter
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import SyntheticTokenDataset
+from repro.training.train_step import build_train_step, init_train_state
+
+DRYRUN_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+STRAGGLER_FACTOR = 2.0       # step slower than 2x median => degraded
+
+
+def load_dryrun_record(arch: str, shape: str = "train_4k",
+                       mesh: str = "pod256", recipe: str = "baseline"
+                       ) -> Optional[Dict]:
+    p = DRYRUN_DIR / f"{arch}__{shape}__{mesh}__{recipe}.json"
+    if not p.exists():
+        return None
+    rec = json.loads(p.read_text())
+    return rec if rec.get("status") == "ok" else None
+
+
+class TpuPodSubstrate(SubstrateAdapter):
+    def __init__(self, arch: str, *, shape: str = "train_4k",
+                 mesh_tag: str = "pod256", recipe: str = "baseline",
+                 steps_per_invoke: int = 3, batch: int = 4, seq: int = 64,
+                 ckpt_dir: Optional[str] = None, seed: int = 0):
+        super().__init__()
+        self.arch = arch
+        self.shape = shape
+        self.mesh_tag = mesh_tag
+        self.recipe = recipe
+        self.resource_id = f"tpu-{arch}-{mesh_tag}-{recipe}"
+        self.record = load_dryrun_record(arch, shape, mesh_tag, recipe)
+        self.steps_per_invoke = steps_per_invoke
+        self.cfg = reduced(get_config(arch))
+        self.batch, self.seq = batch, seq
+        self._state = None
+        self._step_fn = None
+        self._data = SyntheticTokenDataset(self.cfg.vocab_size, seq, batch,
+                                           seed=seed)
+        self._step = 0
+        self._step_times: list = []
+        self._compiled = False
+        self._ckpt = (CheckpointManager(ckpt_dir, keep=2)
+                      if ckpt_dir is not None else None)
+        self._injected_slowdown = 0.0
+
+    # -- descriptor -----------------------------------------------------------
+    def descriptor(self) -> ResourceDescriptor:
+        rec = self.record or {}
+        roof = rec.get("roofline", {})
+        step_lb_ms = roof.get("step_time_lb_s", 0.1) * 1e3
+        mem = rec.get("memory", {})
+        cap = CapabilityDescriptor(
+            functions=("train", "train_step"),
+            input_signal=SignalSpec("tensor_shards", "int32_tokens",
+                                    (0.0, float(self.cfg.vocab_size))),
+            output_signal=SignalSpec("tensor_shards", "metrics", (0.0, 1e9)),
+            timing=TimingSemantics(
+                "fast_ms", expected_latency_ms=max(step_lb_ms, 1.0),
+                observation_window_ms=step_lb_ms * self.steps_per_invoke,
+                freshness_ms=600_000.0),
+            lifecycle=LifecycleSemantics(
+                warmup_ms=float(rec.get("compile_seconds", 10.0)) * 1e3,
+                resetable=True,
+                reset_modes=("restore_checkpoint", "rescale"),
+                reset_cost_ms=2_000.0,
+                recovery_modes=("restore_checkpoint",)),
+            programmability="configurable",
+            observability=Observability(
+                output_channels=("metrics",),
+                telemetry_fields=("loss", "grad_norm", "tokens_per_s",
+                                  "step_ms", "drift_score"),
+                drift_indicators=("drift_score", "step_ms"),
+                twin_linked_fields=("step_ms", "drift_score")),
+            policy=PolicyConstraints(exclusive=True, max_concurrent=1),
+            supports_repeated_invocation=True,
+        )
+        return ResourceDescriptor(
+            resource_id=self.resource_id, substrate_class="tpu_pod",
+            adapter_type="in_process", location="cloud",
+            twin_binding=f"twin-{self.resource_id}", capability=cap,
+            description=f"{self.arch} on {rec.get('mesh', self.mesh_tag)} "
+                        f"mesh, recipe={self.recipe} "
+                        f"(fits={mem.get('fits', 'n/a')})")
+
+    # -- data plane -------------------------------------------------------------
+    def prepare(self, session) -> None:
+        self._check_prepare_fault()
+        if not self._compiled:
+            t0 = time.perf_counter()
+            self._state = init_train_state(self.cfg)
+            self._step_fn = jax.jit(build_train_step(self.cfg),
+                                    donate_argnums=0)
+            # warm-up = compilation (lifecycle cost, visible in telemetry)
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self._data.batch_at(0).items()}
+            self._state, _ = self._step_fn(self._state, batch)
+            self._compile_ms = (time.perf_counter() - t0) * 1e3
+            self._compiled = True
+
+    def invoke(self, session) -> Dict:
+        payload = session.task.payload or {}
+        # elastic/shared-job mode: if the shared checkpoint directory has a
+        # newer step than this slice (another slice advanced the job, or
+        # this slice just joined), resume from it before training
+        if payload.get("resume") and self._ckpt is not None:
+            latest = self._ckpt.latest_step()
+            if latest is not None and latest > self._step \
+                    and self._state is not None:
+                self._state, _ = self._ckpt.restore(self._state, latest)
+                self._step = latest
+        n_steps = int(payload.get("steps", self.steps_per_invoke))
+        t0 = time.perf_counter()
+        metrics = {}
+        for _ in range(n_steps):
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self._data.batch_at(self._step).items()}
+            ts = time.perf_counter()
+            self._state, metrics = self._step_fn(self._state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            if self._injected_slowdown:
+                time.sleep(self._injected_slowdown)
+            self._step_times.append((time.perf_counter() - ts) * 1e3)
+            self._step += 1
+        backend_ms = (time.perf_counter() - t0) * 1e3
+        step_ms = float(np.mean(self._step_times[-n_steps:]))
+        med = float(np.median(self._step_times)) if self._step_times else step_ms
+        drift = max(0.0, min(1.0, step_ms / max(med, 1e-9) / STRAGGLER_FACTOR
+                             - 0.5))
+        tokens_per_s = self.batch * self.seq / max(step_ms / 1e3, 1e-9)
+        if self._ckpt is not None and payload.get("checkpoint", True):
+            self._ckpt.save(self._step, self._state,
+                            {"loss": metrics.get("loss", float("nan"))})
+        telemetry = self._apply_telemetry_faults({
+            "loss": metrics.get("loss", float("nan")),
+            "grad_norm": metrics.get("grad_norm", float("nan")),
+            "tokens_per_s": round(tokens_per_s, 1),
+            "step_ms": round(step_ms, 3),
+            "drift_score": round(drift, 4),
+            "health_status": "degraded" if drift > 0.5 else "healthy",
+            "observation_ms": backend_ms,
+        })
+        return {
+            "output": {"step": self._step,
+                       "loss": metrics.get("loss", float("nan"))},
+            "telemetry": telemetry,
+            "artifacts": {"roofline_twin": (self.record or {}).get("roofline"),
+                          "checkpoint_step": (self._ckpt.latest_step()
+                                              if self._ckpt else None)},
+            "backend_ms": backend_ms,
+            "needs_reset": False,
+        }
+
+    def reset(self, mode: str = "restore_checkpoint") -> None:
+        if mode == "restore_checkpoint" and self._ckpt is not None \
+                and self._state is not None:
+            step = self._ckpt.latest_step()
+            if step is not None:
+                self._state, _ = self._ckpt.restore(self._state, step)
+                self._step = step
+        self._injected_slowdown = 0.0
+        self._step_times.clear()
+
+    # fault hooks used by the fleet tests ------------------------------------
+    def inject_straggler(self, seconds: float) -> None:
+        self._injected_slowdown = seconds
+
+    def snapshot(self) -> Optional[RuntimeSnapshot]:
+        if not self._step_times:
+            return RuntimeSnapshot(self.resource_id)
+        med = float(np.median(self._step_times))
+        last = self._step_times[-1]
+        drift = max(0.0, min(1.0, last / max(med, 1e-9) / STRAGGLER_FACTOR - 0.5))
+        return RuntimeSnapshot(
+            self.resource_id,
+            health_status="degraded" if drift > 0.5 else "healthy",
+            drift_score=round(drift, 4))
+
+    def make_twin(self) -> Optional[TwinState]:
+        roof = (self.record or {}).get("roofline", {})
+        return TwinState(f"twin-{self.resource_id}", self.resource_id,
+                         kind="roofline", model=dict(roof))

@@ -1,0 +1,159 @@
+"""Biological/wetware backend: synthetic spike-response twin (paper §VI-B).
+
+A leaky-integrate-and-fire population responds to a stimulation pattern;
+usefulness depends on *health and observability*, not equilibration: the
+adapter exposes ms-scale timing, viability-sensitive state and rest/
+recalibrate recovery — the state-sensitive contrast case to the chemical
+backend.  Requires human supervision by policy (R7), which the fault
+campaign's reject scenario exercises.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.descriptors import (CapabilityDescriptor, LifecycleSemantics,
+                                    Observability, PolicyConstraints,
+                                    ResourceDescriptor, SignalSpec,
+                                    TimingSemantics)
+from repro.core.telemetry import RuntimeSnapshot
+from repro.core.twin import TwinState
+from repro.substrates.base import SubstrateAdapter
+
+RESOURCE_ID = "wetware-synthetic"
+
+
+class SpikeResponseTwin:
+    """LIF population: stimulation pattern -> spike counts / response delay."""
+
+    def __init__(self, n_neurons: int = 64, seed: int = 11):
+        rng = np.random.default_rng(seed)
+        self.n = n_neurons
+        self.w_in = rng.normal(0.8, 0.2, (n_neurons,))
+        self.w_rec = rng.normal(0.0, 0.35 / np.sqrt(n_neurons),
+                                (n_neurons, n_neurons))
+        self.tau = 12.0          # ms
+        self.v_th = 1.0
+
+    def run(self, pattern, amplitude: float, noise: float, steps: int = 120,
+            dt: float = 1.0, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        pattern = np.asarray(pattern, np.float64)
+        v = np.zeros(self.n)
+        spikes = np.zeros((steps, self.n), bool)
+        stim = np.zeros(steps)
+        stim[:len(pattern)] = pattern * amplitude
+        first_spike = None
+        for t in range(steps):
+            inp = self.w_in * stim[t] + self.w_rec @ spikes[t - 1].astype(float)
+            v = v + dt / self.tau * (-v) + inp * dt / self.tau
+            v = v + noise * rng.normal(size=self.n) * 0.05
+            fired = v >= self.v_th
+            spikes[t] = fired
+            v = np.where(fired, 0.0, v)
+            if first_spike is None and fired.any():
+                first_spike = t * dt
+        rate = spikes.mean() * 1e3 / dt      # Hz per neuron
+        fingerprint = spikes.sum(0)          # per-neuron counts
+        return fingerprint, rate, (first_spike if first_spike is not None
+                                   else float(steps) * dt)
+
+
+class WetwareAdapter(SubstrateAdapter):
+    def __init__(self, resource_id: str = RESOURCE_ID):
+        super().__init__()
+        self.resource_id = resource_id
+        self.twin = SpikeResponseTwin()
+        self.viability = 1.0
+        self.noise = 0.2
+        self.sessions_since_rest = 0
+
+    def descriptor(self) -> ResourceDescriptor:
+        cap = CapabilityDescriptor(
+            functions=("screening", "stimulus_response"),
+            input_signal=SignalSpec("spikes", "binary_pattern", (0.0, 1.0),
+                                    sampling_hz=1000.0,
+                                    transduction="MEA stimulation"),
+            output_signal=SignalSpec("spikes", "spike_counts", (0.0, 500.0),
+                                     transduction="MEA recording"),
+            timing=TimingSemantics("fast_ms", 40.0, observation_window_ms=120.0,
+                                   min_stabilization_ms=5.0,
+                                   freshness_ms=30_000.0),
+            lifecycle=LifecycleSemantics(
+                warmup_ms=50.0, resetable=True, reset_modes=("rest",),
+                reset_cost_ms=500.0, calibration_interval_s=120.0,
+                recovery_modes=("rest", "recalibrate"), cooldown_ms=50.0),
+            programmability="in_situ_adaptive",
+            observability=Observability(
+                output_channels=("spike_counts", "firing_rate"),
+                telemetry_fields=("firing_rate_hz", "response_delay_ms",
+                                  "noise_level", "viability", "drift_score"),
+                drift_indicators=("noise_level", "drift_score"),
+                twin_linked_fields=("firing_rate_hz", "drift_score")),
+            policy=PolicyConstraints(exclusive=True, requires_supervision=True,
+                                     max_stimulation=2.0, biosafety_level=2),
+            supports_repeated_invocation=True,
+            energy_proxy_mj=0.02,
+        )
+        return ResourceDescriptor(
+            resource_id=self.resource_id, substrate_class="wetware",
+            adapter_type="in_process", location="lab",
+            twin_binding=f"twin-{self.resource_id}", capability=cap,
+            description="synthetic spike-response wetware twin "
+                        "(health/viability-aware closed loop)")
+
+    def prepare(self, session) -> None:
+        self._check_prepare_fault()
+        self.sessions_since_rest += 1
+
+    def invoke(self, session) -> Dict:
+        payload = session.task.payload or {}
+        pattern = payload.get("pattern", [1, 0, 1, 1])
+        amplitude = float(payload.get("amplitude", 1.0))
+        t0 = time.perf_counter()
+        fp, rate, delay = self.twin.run(pattern, amplitude, self.noise,
+                                        seed=self.sessions_since_rest)
+        backend_ms = (time.perf_counter() - t0) * 1e3
+        # repeated stimulation degrades viability slightly
+        self.viability = max(0.2, self.viability - 0.01)
+        self.noise = min(1.0, self.noise + 0.01)
+        drift = round(1.0 - self.viability + 0.2 * self.noise, 4)
+        telemetry = self._apply_telemetry_faults({
+            "firing_rate_hz": round(float(rate), 3),
+            "response_delay_ms": round(float(delay), 3),
+            "noise_level": round(self.noise, 4),
+            "viability": round(self.viability, 4),
+            "drift_score": max(0.0, drift),
+            "health_status": "healthy" if self.viability > 0.5 else "degraded",
+            "observation_ms": 120.0,
+        })
+        return {
+            "output": {"fingerprint": fp.tolist(),
+                       "responded": bool(rate > 1.0)},
+            "telemetry": telemetry,
+            "artifacts": {"recording": {"channels": self.twin.n,
+                                        "duration_ms": 120}},
+            "backend_ms": backend_ms,
+            "needs_reset": self.sessions_since_rest >= 5,
+        }
+
+    def reset(self, mode: str = "rest") -> None:
+        if mode == "rest":
+            self.sessions_since_rest = 0
+            self.viability = min(1.0, self.viability + 0.2)
+        elif mode == "recalibrate":
+            self.noise = 0.2
+
+    def snapshot(self) -> Optional[RuntimeSnapshot]:
+        return RuntimeSnapshot(
+            self.resource_id,
+            health_status="healthy" if self.viability > 0.5 else "degraded",
+            drift_score=max(0.0, 1.0 - self.viability),
+            viability=self.viability)
+
+    def make_twin(self) -> Optional[TwinState]:
+        return TwinState(f"twin-{self.resource_id}", self.resource_id,
+                         kind="behavioral",
+                         model={"n_neurons": self.twin.n, "tau": self.twin.tau})

@@ -1,0 +1,8 @@
+from repro.training.optimizer import AdamWConfig, OptState, apply_updates, init_opt_state  # noqa: F401
+from repro.training.train_step import (  # noqa: F401
+    TrainState,
+    abstract_train_state,
+    build_train_step,
+    init_train_state,
+    train_state_specs,
+)

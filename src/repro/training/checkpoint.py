@@ -1,0 +1,116 @@
+"""Checkpointing: atomic save/restore of train state, async writer, retention.
+
+No external deps: pytrees are flattened with path-derived keys into ``.npz``
+archives.  Saves are atomic (tmp + rename), optionally asynchronous (the
+fault-tolerance path in ``repro.training.runner`` checkpoints on a cadence
+without blocking the step loop), and retention keeps the newest K checkpoints.
+Restore validates step metadata and reproduces the exact pytree structure.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx")
+            else str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray]):
+    paths_leaves = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx")
+            else str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        want = np.asarray(leaf)
+        if tuple(arr.shape) != tuple(want.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {want.shape}")
+        leaves.append(arr.astype(want.dtype))
+    return jax.tree_util.tree_unflatten(paths_leaves[1], leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep: int = 3, async_save: bool = False):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: Optional[threading.Thread] = None
+
+    # -- save -------------------------------------------------------------
+    def save(self, step: int, state, metadata: Optional[Dict] = None) -> Path:
+        if self.async_save:
+            self.wait()
+            host_state = jax.tree.map(np.asarray, state)  # snapshot now
+            t = threading.Thread(target=self._write,
+                                 args=(step, host_state, metadata or {}))
+            t.start()
+            self._pending = t
+            return self.dir / f"ckpt-{step:08d}.npz"
+        return self._write(step, state, metadata or {})
+
+    def _write(self, step: int, state, metadata: Dict) -> Path:
+        flat = _flatten(state)
+        final = self.dir / f"ckpt-{step:08d}.npz"
+        tmp = self.dir / f".tmp-{step:08d}-{os.getpid()}.npz"
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        meta = dict(metadata, step=step, saved_at=time.time(),
+                    leaves=len(flat))
+        tmp_meta = self.dir / f".tmp-{step:08d}.json"
+        tmp_meta.write_text(json.dumps(meta))
+        os.replace(tmp, final)                      # atomic
+        os.replace(tmp_meta, self.dir / f"ckpt-{step:08d}.json")
+        self._retain()
+        return final
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _retain(self) -> None:
+        ckpts = self.list_steps()
+        for s in ckpts[:-self.keep] if self.keep else []:
+            (self.dir / f"ckpt-{s:08d}.npz").unlink(missing_ok=True)
+            (self.dir / f"ckpt-{s:08d}.json").unlink(missing_ok=True)
+
+    # -- restore ------------------------------------------------------------
+    def list_steps(self) -> List[int]:
+        return sorted(int(p.stem.split("-")[1]) for p in
+                      self.dir.glob("ckpt-*.npz"))
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None
+                ) -> Tuple[Any, Dict]:
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        with np.load(self.dir / f"ckpt-{step:08d}.npz") as z:
+            flat = {k: z[k] for k in z.files}
+        meta_path = self.dir / f"ckpt-{step:08d}.json"
+        meta = json.loads(meta_path.read_text()) if meta_path.exists() else {}
+        return _unflatten(template, flat), meta

@@ -1,0 +1,40 @@
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py forces 512 host devices.
+
+
+@pytest.fixture(scope="session")
+def fast_service():
+    from repro.substrates.http_fast import FastService
+
+    svc = FastService().start()
+    yield svc
+    svc.stop()
+
+
+@pytest.fixture()
+def orchestrator(fast_service):
+    from repro.core import Orchestrator
+    from repro.substrates import standard_testbed
+
+    orch = Orchestrator()
+    standard_testbed(orch, http_service=fast_service)
+    return orch
+
+
+def make_testbed_factory(fast_service):
+    from repro.core import Orchestrator
+    from repro.substrates import standard_testbed
+
+    def factory():
+        orch = Orchestrator()
+        standard_testbed(orch, http_service=fast_service)
+        return orch
+
+    return factory

@@ -1,0 +1,56 @@
+"""Capability-model tests (paper Table I + RQ1 shared-key ratio)."""
+import pytest
+
+from repro.core import shared_key_ratio
+from repro.core.descriptors import CapabilityDescriptor
+from repro.substrates import (ChemicalAdapter, CorticalLabsAdapter,
+                              MemristiveAdapter, WetwareAdapter)
+from repro.substrates.http_fast import HTTPFastAdapter
+
+ADAPTERS = [ChemicalAdapter(), WetwareAdapter(), MemristiveAdapter(),
+            HTTPFastAdapter("http://127.0.0.1:1"), CorticalLabsAdapter()]
+
+
+def test_descriptor_shared_key_ratio_is_one():
+    """RQ1: the same top-level descriptor structure across all 5 backends."""
+    dicts = [a.descriptor().to_dict() for a in ADAPTERS]
+    assert shared_key_ratio(dicts) == 1.0
+    cap_dicts = [d["capability"] for d in dicts]
+    assert shared_key_ratio(cap_dicts) == 1.0
+
+
+def test_descriptor_covers_table_one_categories():
+    d = ChemicalAdapter().descriptor().to_dict()
+    cap = d["capability"]
+    # Table I: identity, signal, timing, lifecycle, programmability,
+    # observability, policy/tenancy
+    assert d["substrate_class"] and d["adapter_type"] and d["location"]
+    assert d["twin_binding"]
+    for section in ("input_signal", "output_signal", "timing", "lifecycle",
+                    "programmability", "observability", "policy"):
+        assert section in cap, section
+    assert cap["timing"]["latency_regime"] in ("slow_seconds", "fast_ms",
+                                               "sub_ms")
+    assert cap["lifecycle"]["reset_modes"]
+    assert cap["observability"]["telemetry_fields"]
+
+
+def test_substrate_differences_stay_explicit():
+    """The control plane must NOT flatten substrate differences (paper §I)."""
+    chem = ChemicalAdapter().descriptor()
+    wet = WetwareAdapter().descriptor()
+    mem = MemristiveAdapter().descriptor()
+    assert chem.capability.input_signal.modality == "concentration"
+    assert wet.capability.input_signal.modality == "spikes"
+    assert mem.capability.input_signal.modality == "vector"
+    assert chem.capability.timing.latency_regime == "slow_seconds"
+    assert wet.capability.timing.latency_regime == "fast_ms"
+    assert chem.capability.lifecycle.reset_modes == ("flush", "recharge")
+    assert "rest" in wet.capability.lifecycle.reset_modes
+    assert wet.capability.policy.requires_supervision
+    assert not mem.capability.policy.requires_supervision
+
+
+def test_shared_key_ratio_detects_divergence():
+    assert shared_key_ratio([{"a": 1, "b": 2}, {"a": 1}]) == 0.5
+    assert shared_key_ratio([]) == 0.0

@@ -1,0 +1,33 @@
+"""Table IV fault campaign: five scenarios, expected control-plane behavior."""
+from repro.core.faults import build_campaign, run_campaign
+from tests.conftest import make_testbed_factory
+
+
+def test_fault_campaign_all_pass(fast_service):
+    results = run_campaign(make_testbed_factory(fast_service),
+                           build_campaign())
+    assert len(results) == 5
+    failures = [r for r in results if not r["pass"]]
+    assert not failures, failures
+
+
+def test_fallback_target_is_externalized_backend(fast_service):
+    results = run_campaign(make_testbed_factory(fast_service),
+                           build_campaign())
+    by_name = {r["scenario"]: r for r in results}
+    assert by_name["local_prepare_failure"]["selected"] == "fast-external"
+    assert by_name["missing_telemetry"]["selected"] == "fast-external"
+    # drifted case selects the externalized backend DIRECTLY (no fallback)
+    drifted = by_name["drifted_local_fast"]
+    assert drifted["observed"] == "success_direct"
+    assert drifted["selected"] == "fast-external"
+
+
+def test_rejects_happen_before_execution(fast_service):
+    results = run_campaign(make_testbed_factory(fast_service),
+                           build_campaign())
+    by_name = {r["scenario"]: r for r in results}
+    for sc in ("wetware_no_supervision", "stale_chemical_twin"):
+        r = by_name[sc]
+        assert r["observed"] == "reject"
+        assert r["attempts"] == []      # nothing touched the substrate

@@ -1,0 +1,93 @@
+"""Externalized HTTP path (RQ3) + Cortical-Labs API path (RQ1/RQ3)."""
+import numpy as np
+import pytest
+
+from repro.core import Orchestrator, TaskRequest
+from repro.substrates import standard_testbed
+from repro.substrates.cortical import CLClient, CLSimulator
+
+
+def test_http_backend_roundtrip(orchestrator):
+    res, _ = orchestrator.submit(TaskRequest(
+        function="inference", input_modality="vector",
+        output_modality="vector", backend_preference="fast-external",
+        payload=[0.25, 0.25, 0.25, 0.25],
+        required_telemetry=("execution_ms", "transport_ms")))
+    assert res.status == "completed"
+    assert res.resource_id == "fast-external"
+    assert len(res.output["vector"]) == 4
+    # transport cost is real (HTTP over loopback) and separated from backend
+    assert res.telemetry["transport_ms"] > 0.0
+    assert res.timing_ms["backend_ms"] < res.timing_ms["total_ms"]
+
+
+def test_http_rtt_structure(orchestrator):
+    """RTT = backend + transport/boundary cost (paper RQ3 decomposition)."""
+    adapter = orchestrator.registry.adapter("fast-external")
+    samples = []
+    for _ in range(5):
+        res, _ = orchestrator.submit(TaskRequest(
+            function="inference", input_modality="vector",
+            output_modality="vector", backend_preference="fast-external",
+            payload=[0.1, 0.9, 0.1, 0.9]))
+        samples.append((res.timing_ms["backend_ms"],
+                        res.timing_ms["total_ms"]))
+    for backend_ms, total_ms in samples:
+        assert total_ms >= backend_ms
+
+
+class TestCorticalPath:
+    def test_cl_simulator_session_api(self):
+        sim = CLSimulator()
+        cultures = sim.list_cultures()
+        assert cultures and cultures[0]["culture_id"] == "culture-A"
+        sid = sim.open_session("culture-A")
+        sim.upload_stim_program(sid, {"pattern": [1, 0, 1], "amplitude": 1.0})
+        rec = sim.stim_and_record(sid, window_ms=120.0)
+        sim.close_session(sid)
+        assert rec["recording_id"].startswith("rec-")
+        assert len(rec["spike_counts"]) == 64
+        assert rec["observation_ms"] == 120.0
+
+    def test_stim_before_program_fails(self):
+        sim = CLSimulator()
+        sid = sim.open_session("culture-A")
+        with pytest.raises(RuntimeError):
+            sim.stim_and_record(sid)
+
+    def test_three_directed_screening_runs(self, orchestrator):
+        """Paper §VIII-A: three directed runs, no fallback, structured
+        recording artifact, health exposed before and after."""
+        snap_before = orchestrator.bus.snapshot("cortical-labs-backend")
+        assert snap_before is not None
+        for i in range(3):
+            res, trace = orchestrator.submit(TaskRequest(
+                function="screening", input_modality="spikes",
+                output_modality="spikes",
+                backend_preference="cortical-labs-backend",
+                payload={"pattern": [1, 0, 1, 1], "amplitude": 1.0},
+                required_telemetry=("culture_health", "firing_rate_hz")))
+            assert res.status == "completed", res.telemetry
+            assert res.resource_id == "cortical-labs-backend"
+            assert not trace.fallback_used
+            rec = res.artifacts["recording"]
+            assert rec["recording_id"].startswith("rec-")
+            assert rec["format"] == "spike_counts/v1"
+            # the paper's timing-structure point: session handling dominates
+            # the short observation cycle
+            assert res.telemetry["session_ms"] > res.telemetry["observation_ms"]
+
+    def test_cl_backend_falls_back_to_synthetic_wetware(self, orchestrator):
+        """Paper §IV-D: the same request can fall back to a compatible
+        synthetic wetware backend when the external path fails."""
+        orchestrator.registry.adapter("cortical-labs-backend").inject_fault(
+            "prepare_failure")
+        res, trace = orchestrator.submit(TaskRequest(
+            function="screening", input_modality="spikes",
+            output_modality="spikes",
+            backend_preference="cortical-labs-backend",
+            payload={"pattern": [1, 1, 0, 1]},
+            required_telemetry=("firing_rate_hz",)))
+        assert res.status == "completed"
+        assert res.resource_id == "wetware-synthetic"
+        assert trace.fallback_used

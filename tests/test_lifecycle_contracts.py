@@ -1,0 +1,71 @@
+"""Lifecycle state machine (R4) + session contracts (§V-B)."""
+import pytest
+
+from repro.core import TaskRequest, contracts_from_descriptor
+from repro.core.contracts import TelemetryContract, TimingContract
+from repro.core.lifecycle import (LifecycleError, LifecycleManager,
+                                  LifecycleState)
+from repro.substrates import ChemicalAdapter
+
+
+def test_legal_transition_chain():
+    lm = LifecycleManager()
+    rid = "r1"
+    lm.prepare(rid)
+    lm.ready(rid)
+    lm.run(rid)
+    lm.complete(rid, needs_reset=True)
+    assert lm.state(rid) == LifecycleState.NEEDS_RESET
+    lm.recover(rid, "flush")
+    assert lm.state(rid) == LifecycleState.READY
+    assert [t.action for t in lm.history(rid)] == [
+        "prepare", "ready", "invoke", "complete", "flush", "flush-done"]
+
+
+def test_illegal_transition_raises():
+    lm = LifecycleManager()
+    with pytest.raises(LifecycleError):
+        lm.run("r2")                      # cannot run from UNINITIALIZED
+    lm.prepare("r2")
+    with pytest.raises(LifecycleError):
+        lm.transition("r2", LifecycleState.RUNNING)  # PREPARING -> RUNNING
+
+
+def test_failed_substrate_can_recover_or_retire():
+    lm = LifecycleManager()
+    lm.prepare("r3")
+    lm.fail("r3", "boom")
+    assert lm.state("r3") == LifecycleState.FAILED
+    lm.recover("r3")
+    assert lm.state("r3") == LifecycleState.READY
+    lm.transition("r3", LifecycleState.RETIRED, "retire")
+    with pytest.raises(LifecycleError):
+        lm.prepare("r3")                  # retired is terminal
+
+
+def test_contracts_derive_from_descriptor_and_task():
+    desc = ChemicalAdapter().descriptor()
+    task = TaskRequest(function="assay", input_modality="concentration",
+                       output_modality="concentration",
+                       latency_budget_ms=10_000.0,
+                       required_telemetry=("convergence_ms",))
+    c = contracts_from_descriptor(desc, task)
+    assert c.timing.deadline_ms == 10_000.0
+    assert c.timing.min_stabilization_ms == 500.0
+    assert c.telemetry.required_fields == ("convergence_ms",)
+    assert c.lifecycle.prepare_actions == ("warmup",)
+
+
+def test_timing_contract_authoritative_bound():
+    t = TimingContract(expected_latency_ms=10, observation_window_ms=100,
+                       min_stabilization_ms=50)
+    assert not t.result_authoritative(10.0)
+    assert t.result_authoritative(51.0)
+
+
+def test_telemetry_contract_validation():
+    c = TelemetryContract(required_fields=("a", "b"))
+    ok, missing = c.validate({"a": 1, "b": 2, "c": 3})
+    assert ok and missing == ()
+    ok, missing = c.validate({"a": 1})
+    assert not ok and missing == ("b",)

@@ -1,0 +1,123 @@
+"""RQ2: full matcher vs simplified selectors on the curated 7-task suite.
+
+The decisive cases are the ones that need *runtime* semantics (paper §VIII-B):
+drifted local backend, stale twin, missing supervision — a flat
+discovery-only interface cannot get these right.
+"""
+import pytest
+
+from repro.core import TaskRequest
+from repro.core.matcher import (LatencyOnlySelector, Matcher,
+                                ModalityOnlySelector,
+                                RandomAdmissibleSelector)
+from repro.core.telemetry import RuntimeSnapshot
+
+
+def seven_task_suite():
+    """[(task_factory, inject_fn, expected_resource_or_None)]"""
+
+    def no_inject(orch):
+        pass
+
+    def drift_local(orch):
+        snap = RuntimeSnapshot("memristive-local", drift_score=0.8,
+                               health_status="degraded")
+        orch.bus.update_snapshot(snap)
+
+    def stale_chem(orch):
+        tw = orch.twins.get("chemical-ode")
+        tw.last_sync -= 3600.0
+
+    return [
+        # 1: plain fast inference → local in-process fast backend
+        (lambda: TaskRequest(function="inference", input_modality="vector",
+                             output_modality="vector"),
+         no_inject, "memristive-local"),
+        # 2: drifted local fast → externalized fast backend
+        (lambda: TaskRequest(function="inference", input_modality="vector",
+                             output_modality="vector"),
+         drift_local, "fast-external"),
+        # 3: stale chemical twin within freshness bound → no candidate
+        (lambda: TaskRequest(function="assay", input_modality="concentration",
+                             output_modality="concentration",
+                             max_twin_age_ms=60_000.0),
+         stale_chem, None),
+        # 4: wetware without supervision → no candidate
+        (lambda: TaskRequest(function="screening", input_modality="spikes",
+                             output_modality="spikes",
+                             supervision_available=False),
+         no_inject, None),
+        # 5: healthy slow assay → chemical backend
+        (lambda: TaskRequest(function="assay", input_modality="concentration",
+                             output_modality="concentration"),
+         no_inject, "chemical-ode"),
+        # 6: supervised screening → local synthetic wetware (lower
+        #    lifecycle + orchestration cost than the external CL path)
+        (lambda: TaskRequest(function="screening", input_modality="spikes",
+                             output_modality="spikes"),
+         no_inject, "wetware-synthetic"),
+        # 7: directed CL request → validated and accepted
+        (lambda: TaskRequest(function="screening", input_modality="spikes",
+                             output_modality="spikes",
+                             backend_preference="cortical-labs-backend"),
+         no_inject, "cortical-labs-backend"),
+    ]
+
+
+def run_suite(selector_cls, fast_service, seed=0):
+    from repro.core import Orchestrator
+    from repro.substrates import standard_testbed
+
+    correct = 0
+    details = []
+    for task_fn, inject, expected in seven_task_suite():
+        orch = Orchestrator()
+        standard_testbed(orch, http_service=fast_service)
+        kw = {"seed": seed} if selector_cls is RandomAdmissibleSelector else {}
+        sel = selector_cls(orch.registry, orch.bus, orch.twins, orch.policy,
+                           **kw)
+        inject(orch)
+        cand = sel.select(task_fn())
+        got = cand.resource_id if cand is not None else None
+        ok = got == expected
+        correct += ok
+        details.append((expected, got, ok))
+    return correct, details
+
+
+def test_full_matcher_seven_of_seven(fast_service):
+    correct, details = run_suite(Matcher, fast_service)
+    assert correct == 7, details
+
+
+@pytest.mark.parametrize("selector_cls", [RandomAdmissibleSelector,
+                                          ModalityOnlySelector,
+                                          LatencyOnlySelector])
+def test_baselines_strictly_worse(selector_cls, fast_service):
+    correct, details = run_suite(selector_cls, fast_service)
+    assert correct < 7, (selector_cls.name, details)
+    # the runtime-semantics cases (2, 3, 4) are exactly where they fail
+    assert correct <= 5
+
+
+def test_matcher_is_explainable(orchestrator):
+    task = TaskRequest(function="inference", input_modality="vector",
+                       output_modality="vector")
+    ranked = orchestrator.matcher.rank(task)
+    top = [c for c in ranked if c.admissible][0]
+    assert set(top.terms) == {"C", "T", "L", "D", "O"}
+
+
+def test_directed_request_skips_ranking(orchestrator):
+    task = TaskRequest(function="inference", input_modality="vector",
+                       output_modality="vector",
+                       backend_preference="fast-external")
+    cand = orchestrator.matcher.select(task)
+    assert cand.resource_id == "fast-external"
+
+
+def test_directed_request_still_validates(orchestrator):
+    task = TaskRequest(function="assay", input_modality="vector",
+                       output_modality="vector",
+                       backend_preference="chemical-ode")
+    assert orchestrator.matcher.select(task) is None  # modality mismatch

@@ -1,0 +1,107 @@
+"""Per-architecture smoke tests: reduced same-family config, one train step
++ prefill + decode on CPU, asserting output shapes and finiteness.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, reduced, supports_shape
+from repro.models import (build_decode_step, build_prefill_step, count_params,
+                          decode_cache, loss_fn, model_specs)
+from repro.models.common import init_params
+from repro.training.train_step import build_train_step, init_train_state
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                               jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                               jnp.int32)}
+    if cfg.family == "encdec":
+        b["frames"] = jnp.asarray(rng.normal(size=(B, cfg.encoder_frames,
+                                                   cfg.d_model)),
+                                  jnp.dtype(cfg.param_dtype))
+    if cfg.family == "vision":
+        b["image_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_image_tokens, cfg.d_model)),
+            jnp.dtype(cfg.param_dtype))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch):
+    cfg = reduced(get_config(arch))
+    state = init_train_state(cfg)
+    step = jax.jit(build_train_step(cfg))
+    state, metrics = step(state, _batch(cfg))
+    assert jnp.isfinite(metrics["loss"]), (arch, metrics)
+    assert metrics["loss"] > 0
+    assert jnp.isfinite(metrics["grad_norm"])
+    assert int(state.opt.step) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_prefill_and_decode(arch):
+    cfg = reduced(get_config(arch))
+    params = init_params(model_specs(cfg))
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    cache, logits0 = jax.jit(build_prefill_step(cfg))(params, batch)
+    assert logits0.shape == (B, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits0))
+    dcache = decode_cache(cfg, B, S + 8)
+    step = jax.jit(build_decode_step(cfg))
+    cache2, logits = step(params, dcache, batch["tokens"][:, :1],
+                          jnp.int32(3))
+    assert logits.shape == (B, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The registered FULL config carries the assigned dimensions."""
+    cfg = get_config(arch)
+    assigned = {
+        "rwkv6-7b": (32, 4096, 14336, 65536),
+        "moonshot-v1-16b-a3b": (48, 2048, None, 163840),
+        "deepseek-v2-236b": (60, 5120, None, 102400),
+        "whisper-large-v3": (32, 1280, 5120, 51866),
+        "llama-3.2-vision-90b": (100, 8192, 28672, 128256),
+        "recurrentgemma-9b": (38, 4096, 12288, 256000),
+        "internlm2-20b": (48, 6144, 16384, 92544),
+        "command-r-35b": (40, 8192, 22528, 256000),
+        "nemotron-4-340b": (96, 18432, 73728, 256000),
+        "qwen2.5-32b": (64, 5120, 27648, 152064),
+    }[arch]
+    L, d, ff, v = assigned
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    if ff is not None:
+        assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+
+
+def test_param_counts_in_expected_range():
+    expect = {"rwkv6-7b": (6, 9), "deepseek-v2-236b": (220, 250),
+              "nemotron-4-340b": (320, 360), "qwen2.5-32b": (28, 36),
+              "command-r-35b": (28, 40), "internlm2-20b": (17, 23)}
+    for arch, (lo, hi) in expect.items():
+        n = count_params(get_config(arch)) / 1e9
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params_much_smaller():
+    ds = get_config("deepseek-v2-236b")
+    assert count_params(ds, active_only=True) < 0.15 * count_params(ds)
+
+
+def test_long_context_admission():
+    """long_500k runs only for sub-quadratic archs (capability check)."""
+    runs = {a for a in ARCHS
+            if supports_shape(get_config(a), SHAPES["long_500k"])[0]}
+    assert runs == {"rwkv6-7b", "recurrentgemma-9b"}

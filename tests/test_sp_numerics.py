@@ -1,0 +1,96 @@
+"""Numerical equivalence of the explicit shard_map SP/EP paths.
+
+The hillclimb replaced pjit-propagated attention/FFN/MoE with hand-written
+shard_map blocks (sp_attention, sp_ffn, sp_moe, sp_block). These tests
+prove the distributed graphs compute the SAME loss and gradients as the
+single-device model — run in a subprocess so an 8-device host platform can
+be configured before JAX initializes.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    sys.path.insert(0, "src")
+    import dataclasses
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P, NamedSharding
+
+    from repro.configs import get_config, reduced
+    from repro.distributed.ctx import sharding_ctx
+    from repro.distributed.sharding import RECIPES, param_shardings
+    from repro.models import loss_fn, model_specs
+    from repro.models.common import init_params
+
+    arch = sys.argv[1]
+    overrides = dict(d_model=64, num_layers=2, vocab_size=128, attn_chunk=16)
+    if arch != "rwkv6-7b":   # rwkv head layout is fixed by its own config
+        overrides.update(num_heads=8, num_kv_heads={kv}, head_dim=16)
+    cfg = reduced(get_config(arch), **overrides)
+    params = init_params(model_specs(cfg), seed=3)
+    rng = np.random.default_rng(0)
+    B, S = 4, 32
+    batch = {{"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+              "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}}
+    if cfg.family == "vision":
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_image_tokens, cfg.d_model)), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_frames, cfg.d_model)), jnp.float32)
+
+    def grad_loss(p, b):
+        (l, _), g = jax.value_and_grad(lambda q: loss_fn(cfg, q, b),
+                                       has_aux=True)(p)
+        return l, g
+
+    # reference: single device, no sharding ctx
+    l_ref, g_ref = jax.jit(grad_loss)(params, batch)
+
+    # distributed: 2x4 mesh (data x model), SP/EP shard_map paths active
+    mesh = jax.make_mesh((2, 4), ("data", "model"), devices=jax.devices(),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    recipe = RECIPES["baseline"]
+    shardings = param_shardings(model_specs(cfg), recipe, mesh)
+    p_sh = jax.device_put(params, shardings)
+    b_sh = jax.device_put(batch, NamedSharding(mesh, P("data")))
+    with mesh, sharding_ctx(mesh, recipe):
+        l_sp, g_sp = jax.jit(grad_loss)(p_sh, b_sh)
+
+    dl = abs(float(l_ref) - float(l_sp))
+    worst = 0.0
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_sp)):
+        an = np.asarray(a, np.float32); bn = np.asarray(b, np.float32)
+        scale = max(np.abs(an).max(), 1e-3)
+        worst = max(worst, float(np.abs(an - bn).max() / scale))
+    print(json.dumps({{"loss_ref": float(l_ref), "loss_sp": float(l_sp),
+                       "dloss": dl, "worst_grad_rel": worst}}))
+""")
+
+
+@pytest.mark.parametrize("arch,kv", [
+    ("internlm2-20b", 4),        # heads-sharded GQA variant (8H over 4-way TP)
+    ("qwen2.5-32b", 2),          # seq-sharded variant lives via non-div kv? (8%4=0 -> heads)
+    ("deepseek-v2-236b", 8),     # MLA whole-block + EP MoE (4 experts over 4)
+    ("recurrentgemma-9b", 1),    # RG-LRU + local attn hybrid
+    ("rwkv6-7b", 8),             # rwkv constraints path
+])
+def test_sp_paths_match_single_device(arch, kv):
+    script = SCRIPT.format(kv=kv)
+    out = subprocess.run([sys.executable, "-c", script, arch],
+                         capture_output=True, text=True, cwd=ROOT,
+                         timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["dloss"] < 2e-4, res
+    assert res["worst_grad_rel"] < 5e-3, res

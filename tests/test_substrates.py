@@ -1,0 +1,109 @@
+"""Data-plane adapter behaviour: chemical, wetware, memristive, HTTP, CL."""
+import numpy as np
+import pytest
+
+from repro.core import Orchestrator, TaskRequest
+from repro.core.invocation import RESULT_KEYS
+from repro.core import shared_key_ratio
+from repro.substrates import standard_testbed
+
+
+def _submit(orch, **kw):
+    res, trace = orch.submit(TaskRequest(**kw))
+    return res, trace
+
+
+def test_chemical_lifecycle_and_telemetry(orchestrator):
+    res, _ = _submit(orchestrator, function="assay",
+                     input_modality="concentration",
+                     output_modality="concentration",
+                     payload={"concentrations": [0.9, 0.1, 0.1, 0.1]},
+                     required_telemetry=("convergence_ms", "contamination"))
+    assert res.status == "completed"
+    assert res.resource_id == "chemical-ode"
+    # winner-take-all: highest input concentration wins
+    assert res.output["winner"] == 0
+    assert res.telemetry["contamination"] > 0.0
+    assert res.telemetry["convergence_ms"] > 0.0
+
+
+def test_chemical_contamination_accumulates_and_flush_resets(orchestrator):
+    adapter = orchestrator.registry.adapter("chemical-ode")
+    for _ in range(3):
+        _submit(orchestrator, function="assay",
+                input_modality="concentration",
+                output_modality="concentration",
+                payload={"concentrations": [0.5, 0.5, 0.2, 0.2]},
+                required_telemetry=("convergence_ms",))
+    assert adapter.contamination > 0.05
+    adapter.reset("flush")
+    assert adapter.contamination == 0.0
+
+
+def test_wetware_viability_sensitivity(orchestrator):
+    adapter = orchestrator.registry.adapter("wetware-synthetic")
+    v0 = adapter.viability
+    res, _ = _submit(orchestrator, function="screening",
+                     input_modality="spikes", output_modality="spikes",
+                     payload={"pattern": [1, 1, 0, 1], "amplitude": 1.5},
+                     required_telemetry=("viability", "firing_rate_hz"))
+    assert res.status == "completed"
+    assert adapter.viability < v0
+    assert res.telemetry["firing_rate_hz"] >= 0.0
+    assert "fingerprint" in res.output
+
+
+def test_wetware_stimulation_safety_bound(orchestrator):
+    res, trace = _submit(orchestrator, function="screening",
+                         input_modality="spikes", output_modality="spikes",
+                         payload={"pattern": [1], "amplitude": 5.0},
+                         metadata={"stimulation_amplitude": 5.0},
+                         allow_fallback=False)
+    assert res.status == "rejected"
+    assert "safety bound" in trace.rejected_reason or \
+           "safety bound" in res.telemetry.get("reason", "")
+
+
+def test_memristive_drift_and_reprogram(orchestrator):
+    adapter = orchestrator.registry.adapter("memristive-local")
+    for _ in range(12):
+        _submit(orchestrator, function="inference", input_modality="vector",
+                output_modality="vector", payload=[0.1, 0.2, 0.3, 0.4],
+                required_telemetry=("execution_ms",))
+    assert adapter.twin.drift() > 0.05
+    adapter.reset("reprogram")
+    assert adapter.twin.drift() < 1e-9
+
+
+def test_invocation_result_shared_keys_across_backends(orchestrator):
+    """RQ1: invocation shared-key ratio 1.0 across executable backends."""
+    results = []
+    results.append(_submit(orchestrator, function="inference",
+                           input_modality="vector", output_modality="vector",
+                           payload=[0.1, 0.2, 0.3, 0.4])[0])
+    results.append(_submit(orchestrator, function="assay",
+                           input_modality="concentration",
+                           output_modality="concentration",
+                           payload={"concentrations": [0.4, 0.2, 0.1, 0.3]})[0])
+    results.append(_submit(orchestrator, function="screening",
+                           input_modality="spikes", output_modality="spikes",
+                           payload={"pattern": [1, 0, 1]})[0])
+    results.append(_submit(orchestrator, function="inference",
+                           input_modality="vector", output_modality="vector",
+                           backend_preference="fast-external",
+                           payload=[0.3, 0.3, 0.3, 0.3])[0])
+    assert {r.resource_id for r in results} >= {
+        "memristive-local", "chemical-ode", "fast-external"}
+    dicts = [r.to_dict() for r in results]
+    assert shared_key_ratio(dicts) == 1.0
+    for d in dicts:
+        assert set(d.keys()) == set(RESULT_KEYS)
+
+
+def test_twin_plane_tracks_results(orchestrator):
+    tw = orchestrator.twins.get("memristive-local")
+    obs0 = tw.observations
+    _submit(orchestrator, function="inference", input_modality="vector",
+            output_modality="vector", payload=[0.5, 0.1, 0.1, 0.1])
+    assert tw.observations > obs0
+    assert tw.age_ms() < 5_000.0

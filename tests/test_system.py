@@ -1,0 +1,66 @@
+"""End-to-end behaviour tests for the phys-MCP system (paper workflows)."""
+import numpy as np
+
+from repro.core import Orchestrator, TaskRequest
+from repro.core.invocation import RESULT_KEYS
+
+
+def test_capability_driven_workflow(orchestrator):
+    """Paper §IV-D: discover → submit → normalized result."""
+    found = orchestrator.discover(input_modality="spikes", repeated=True)
+    assert {d.resource_id for d in found} >= {"wetware-synthetic",
+                                              "cortical-labs-backend"}
+    res, trace = orchestrator.submit(TaskRequest(
+        function="screening", input_modality="spikes",
+        output_modality="spikes", payload={"pattern": [1, 0, 1, 1]},
+        required_telemetry=("firing_rate_hz",)))
+    assert res.status == "completed"
+    assert set(res.to_dict().keys()) == set(RESULT_KEYS)
+    assert trace.selected == res.resource_id
+
+
+def test_directed_workflow(orchestrator):
+    res, trace = orchestrator.submit(TaskRequest(
+        function="assay", input_modality="concentration",
+        output_modality="concentration",
+        backend_preference="chemical-ode",
+        payload={"concentrations": [0.1, 0.8, 0.1, 0.1]}))
+    assert res.status == "completed"
+    assert res.resource_id == "chemical-ode"
+    assert res.output["winner"] == 1
+
+
+def test_orchestration_trace_is_explainable(orchestrator):
+    res, trace = orchestrator.submit(TaskRequest(
+        function="inference", input_modality="vector",
+        output_modality="vector", payload=[0.2, 0.2, 0.2, 0.2]))
+    assert trace.attempts and trace.attempts[0]["terms"]
+    assert trace.control_overhead_ms >= 0.0
+
+
+def test_control_overhead_is_small(orchestrator):
+    """RQ3: absolute control-path overhead below ~10 ms per invocation
+    (paper reports <1 ms; CI boxes are slower, keep headroom)."""
+    overheads = []
+    for _ in range(10):
+        res, trace = orchestrator.submit(TaskRequest(
+            function="inference", input_modality="vector",
+            output_modality="vector", payload=[0.4, 0.1, 0.1, 0.4]))
+        overheads.append(trace.control_overhead_ms)
+    assert np.median(overheads) < 10.0, overheads
+
+
+def test_tpu_fleet_joins_the_same_control_plane(orchestrator):
+    """DESIGN.md §2: pod slices are substrates like any other."""
+    from repro.substrates.tpu_pod import TpuPodSubstrate
+    sub = TpuPodSubstrate("rwkv6-7b", batch=2, seq=16)
+    orchestrator.register(sub)
+    res, _ = orchestrator.submit(TaskRequest(
+        function="train_step", input_modality="tensor_shards",
+        output_modality="tensor_shards", payload={"steps": 1},
+        required_telemetry=("loss", "step_ms")))
+    assert res.status == "completed"
+    assert res.resource_id == sub.resource_id
+    assert np.isfinite(res.telemetry["loss"])
+    twin = orchestrator.twins.get(sub.resource_id)
+    assert twin.kind == "roofline"
