@@ -1,0 +1,30 @@
+# phys-MCP reproduction — reproducible verify + benchmark entry points.
+#
+#   make test              tier-1 verify (the ROADMAP.md command)
+#   make test-fast         control-plane tests only (seconds, no kernels)
+#   make bench-throughput  headline serial-vs-pooled scheduler benchmark
+#   make bench             full benchmark harness (all paper tables)
+#   make dev-deps          install dev/test dependencies
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench bench-throughput dev-deps
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+test-fast:
+	$(PYTHON) -m pytest -q tests/test_system.py tests/test_matcher.py \
+	    tests/test_faults.py tests/test_lifecycle_contracts.py \
+	    tests/test_scheduler_concurrency.py \
+	    tests/test_orchestrator_accounting.py
+
+bench-throughput:
+	$(PYTHON) -m benchmarks.bench_throughput
+
+bench:
+	$(PYTHON) -m benchmarks.run
+
+dev-deps:
+	$(PYTHON) -m pip install -r requirements-dev.txt

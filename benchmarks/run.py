@@ -14,6 +14,8 @@ Paper artifact map:
     bench_cortical    — §VIII-A/C Cortical Labs end-to-end (3 directed runs)
     bench_roofline    — EXPERIMENTS.md §Roofline table (dry-run cache)
     bench_fleet       — beyond-paper orchestrated TPU-fleet training
+    bench_throughput  — beyond-paper sustained throughput: serial submit
+                        loop vs pooled ControlPlaneScheduler
 """
 import argparse
 import sys
@@ -24,7 +26,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import (bench_cortical, bench_faults, bench_fleet, bench_http,
                         bench_matcher, bench_overhead, bench_portability,
-                        bench_roofline)
+                        bench_roofline, bench_throughput)
 
 BENCHES = {
     "portability": bench_portability.run,
@@ -35,6 +37,7 @@ BENCHES = {
     "cortical": bench_cortical.run,
     "roofline": bench_roofline.run,
     "fleet": bench_fleet.run,
+    "throughput": bench_throughput.run,
 }
 
 

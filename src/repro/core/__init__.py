@@ -20,6 +20,7 @@ from repro.core.matcher import (Candidate, LatencyOnlySelector, Matcher,  # noqa
                                 RandomAdmissibleSelector)
 from repro.core.orchestrator import Orchestrator, OrchestrationTrace  # noqa: F401
 from repro.core.policy import PolicyManager  # noqa: F401
+from repro.core.scheduler import ControlPlaneScheduler, SchedulerClosed  # noqa: F401
 from repro.core.registry import CapabilityRegistry  # noqa: F401
 from repro.core.tasks import TaskRequest  # noqa: F401
 from repro.core.telemetry import RuntimeSnapshot, TelemetryBus, TelemetryEvent  # noqa: F401

@@ -5,11 +5,17 @@ Cortical-Labs-style API, TPU pod — returns the SAME normalized result keys
 (:data:`RESULT_KEYS`).  That stability is the paper's RQ1 invocation
 portability claim (shared-key ratio 1.0), while backend-specific payloads
 live under ``output``/``telemetry``/``artifacts``.
+
+Concurrency: session-id allocation is lock-protected (process-unique ids
+even across orchestrator instances), and prepare/recover sequences hold the
+substrate's lifecycle lock so concurrent sessions serialize per resource —
+overlapping invocations on ``max_concurrent > 1`` substrates are handled by
+the lifecycle manager's active-session accounting.
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
+import threading
 import time
 from typing import Any, Dict, Optional
 
@@ -22,7 +28,15 @@ from repro.core.telemetry import TelemetryBus, TelemetryEvent
 RESULT_KEYS = ("task_id", "resource_id", "status", "output", "telemetry",
                "artifacts", "timing_ms", "contracts", "session_id")
 
-_session_ids = itertools.count(1)
+_session_counter = 0
+_session_lock = threading.Lock()
+
+
+def _next_session_id() -> str:
+    global _session_counter
+    with _session_lock:
+        _session_counter += 1
+        return f"session-{_session_counter:05d}"
 
 
 @dataclasses.dataclass
@@ -65,7 +79,34 @@ class InvocationManager:
 
     def open_session(self, task: TaskRequest, desc: ResourceDescriptor) -> Session:
         contracts = contracts_from_descriptor(desc, task)
-        return Session(f"session-{next(_session_ids):05d}", task, desc, contracts)
+        return Session(_next_session_id(), task, desc, contracts)
+
+    def _recover_if_needed(self, session: Session,
+                           phase: str = "prepare") -> None:
+        """Run the descriptor's recovery mode if the substrate is parked in
+        NEEDS_RESET (or FAILED, so a faulted substrate re-selected after
+        fallback is re-armed instead of wedging the state machine).  Caller
+        must hold the substrate's lifecycle lock.
+
+        A physical reset must never fire while other sessions are still on
+        the hardware — in that case this attempt fails (and falls back)
+        rather than invalidating in-flight work."""
+        rid = session.descriptor.resource_id
+        if self.lifecycle.state(rid) not in (LifecycleState.NEEDS_RESET,
+                                             LifecycleState.FAILED):
+            return
+        in_flight = self.lifecycle.active_sessions(rid)
+        if in_flight > 0:
+            raise InvocationError(
+                phase, f"{rid} awaiting recovery with {in_flight} "
+                       "session(s) still in flight")
+        adapter = self.registry.adapter(rid)
+        modes = session.descriptor.capability.lifecycle.recovery_modes
+        mode = modes[0] if modes else "soft"
+        adapter.reset(mode)
+        self.lifecycle.recover(rid, mode)
+        self.bus.emit(TelemetryEvent(rid, "lifecycle",
+                                     {"phase": "recover", "mode": mode}))
 
     def prepare(self, session: Session) -> None:
         """Lifecycle preparation: warm-up / priming / calibration.
@@ -73,27 +114,40 @@ class InvocationManager:
         A substrate parked in NEEDS_RESET is recovered first using its
         descriptor's recovery mode (flush / rest / reprogram) — lifecycle
         transitions are part of the effective execution cost (paper §V-B).
+        The whole sequence holds the substrate's lifecycle lock, so
+        concurrent prepares serialize per resource; if another session has
+        the substrate RUNNING, the state machine is left alone (the
+        substrate is already warm) and only the adapter-level prepare runs.
         """
         rid = session.descriptor.resource_id
         adapter = self.registry.adapter(rid)
         t0 = time.perf_counter()
-        if self.lifecycle.state(rid) == LifecycleState.NEEDS_RESET:
-            modes = session.descriptor.capability.lifecycle.recovery_modes
-            mode = modes[0] if modes else "soft"
-            adapter.reset(mode)
-            self.lifecycle.recover(rid, mode)
-            self.bus.emit(TelemetryEvent(rid, "lifecycle",
-                                         {"phase": "recover", "mode": mode}))
-        if self.lifecycle.state(rid) in (LifecycleState.UNINITIALIZED,
-                                         LifecycleState.READY):
-            self.lifecycle.prepare(rid)
-        try:
-            adapter.prepare(session)
-        except Exception as e:
-            self.lifecycle.fail(rid, "prepare")
-            raise InvocationError("prepare", str(e)) from e
-        dur = (time.perf_counter() - t0) * 1e3
-        self.lifecycle.ready(rid)
+
+        def adapter_prepare() -> float:
+            try:
+                adapter.prepare(session)
+            except Exception as e:
+                self.lifecycle.fail(rid, "prepare")
+                raise InvocationError("prepare", str(e)) from e
+            return (time.perf_counter() - t0) * 1e3
+
+        with self.lifecycle.lock(rid):
+            self._recover_if_needed(session)
+            did_transition = False
+            if self.lifecycle.state(rid) in (LifecycleState.UNINITIALIZED,
+                                             LifecycleState.READY):
+                self.lifecycle.prepare(rid)
+                did_transition = True
+            if did_transition:
+                # substrate-wide warm-up/calibration: adapter prepare runs
+                # under the resource lock (serialized per substrate)
+                dur = adapter_prepare()
+                self.lifecycle.ready(rid)
+        if not did_transition:
+            # substrate already warm (e.g. RUNNING with overlapping
+            # sessions): session-level prepare needs no state transition,
+            # so don't serialize concurrent sessions behind the lock
+            dur = adapter_prepare()
         session.state = "prepared"
         self.bus.emit(TelemetryEvent(rid, "lifecycle",
                                      {"phase": "prepare", "ms": dur}))
@@ -101,13 +155,19 @@ class InvocationManager:
     def invoke(self, session: Session) -> InvocationResult:
         rid = session.descriptor.resource_id
         adapter = self.registry.adapter(rid)
-        self.lifecycle.run(rid)
+        with self.lifecycle.lock(rid):
+            # a concurrent session may have parked the substrate in
+            # NEEDS_RESET between our prepare and invoke
+            self._recover_if_needed(session, phase="invoke")
+            self.lifecycle.run(rid)
         session.state = "running"
         session.started_at = time.perf_counter()
         try:
             raw = adapter.invoke(session)
         except Exception as e:
-            self.lifecycle.fail(rid, "invoke")
+            # this session holds a RUNNING slot; release only its own so
+            # overlapping sessions' complete() accounting stays balanced
+            self.lifecycle.fail(rid, "invoke", held_slot=True)
             session.state = "failed"
             raise InvocationError("invoke", str(e)) from e
         elapsed_ms = (time.perf_counter() - session.started_at) * 1e3

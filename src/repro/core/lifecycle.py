@@ -4,11 +4,20 @@ Physical substrates are not always-ready resources — warm-up, priming,
 calibration, reset, cooldown and recovery are part of the effective
 execution cost.  The manager enforces legal transitions and records their
 wall-clock cost (surfaced in RQ3 as control-path overhead).
+
+Concurrency model: every resource has its own reentrant lock (``lock``),
+so concurrent prepare/recover transitions are serialized *per substrate*
+rather than globally.  Substrates whose policy allows ``max_concurrent > 1``
+can have overlapping invocations: ``run``/``complete`` keep a per-resource
+active-session count, and only the last session out performs the
+RUNNING → READY/NEEDS_RESET transition (a reset requested by any
+overlapping session is remembered until then).
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -54,47 +63,124 @@ class LifecycleManager:
     def __init__(self):
         self._states: Dict[str, LifecycleState] = {}
         self._log: Dict[str, List[Transition]] = {}
+        self._active: Dict[str, int] = {}
+        self._pending_reset: Dict[str, bool] = {}
+        self._rid_locks: Dict[str, threading.RLock] = {}
+        self._global = threading.Lock()
+
+    def lock(self, rid: str) -> threading.RLock:
+        """Per-resource reentrant lock; hold it to make a multi-step
+        lifecycle sequence (recover → prepare → ready) atomic for ``rid``
+        without serializing unrelated substrates."""
+        with self._global:
+            lk = self._rid_locks.get(rid)
+            if lk is None:
+                lk = self._rid_locks[rid] = threading.RLock()
+            return lk
 
     def state(self, rid: str) -> LifecycleState:
-        return self._states.get(rid, LifecycleState.UNINITIALIZED)
+        with self._global:
+            return self._states.get(rid, LifecycleState.UNINITIALIZED)
+
+    def active_sessions(self, rid: str) -> int:
+        with self._global:
+            return self._active.get(rid, 0)
 
     def history(self, rid: str) -> List[Transition]:
-        return self._log.get(rid, [])
+        with self._global:
+            return list(self._log.get(rid, []))
+
+    def _append(self, rid: str, tr: Transition) -> None:
+        with self._global:
+            self._log.setdefault(rid, []).append(tr)
 
     def transition(self, rid: str, dst: LifecycleState, action: str = "",
                    duration_ms: float = 0.0) -> None:
-        src = self.state(rid)
-        if dst not in _LEGAL[src]:
-            raise LifecycleError(
-                f"illegal lifecycle transition {src.value} -> {dst.value} "
-                f"for {rid} (action={action!r})")
-        self._states[rid] = dst
-        self._log.setdefault(rid, []).append(
-            Transition(src.value, dst.value, action, time.time(), duration_ms))
+        with self.lock(rid):
+            src = self.state(rid)
+            if dst not in _LEGAL[src]:
+                raise LifecycleError(
+                    f"illegal lifecycle transition {src.value} -> {dst.value} "
+                    f"for {rid} (action={action!r})")
+            with self._global:
+                self._states[rid] = dst
+                self._log.setdefault(rid, []).append(
+                    Transition(src.value, dst.value, action, time.time(),
+                               duration_ms))
 
     # convenience wrappers mirroring the paper's verbs -----------------------
     def prepare(self, rid: str) -> None:
-        if self.state(rid) == LifecycleState.READY:
-            self.transition(rid, LifecycleState.PREPARING, "re-prepare")
-        else:
-            self.transition(rid, LifecycleState.PREPARING, "prepare")
+        with self.lock(rid):
+            if self.state(rid) == LifecycleState.READY:
+                self.transition(rid, LifecycleState.PREPARING, "re-prepare")
+            else:
+                self.transition(rid, LifecycleState.PREPARING, "prepare")
 
     def ready(self, rid: str) -> None:
         self.transition(rid, LifecycleState.READY, "ready")
 
     def run(self, rid: str) -> None:
-        self.transition(rid, LifecycleState.RUNNING, "invoke")
+        """Enter RUNNING; overlapping entry is legal for substrates whose
+        policy admits several concurrent sessions (tracked by count)."""
+        with self.lock(rid):
+            if (self.state(rid) == LifecycleState.RUNNING
+                    and self.active_sessions(rid) > 0):
+                with self._global:
+                    self._active[rid] += 1
+                self._append(rid, Transition("running", "running",
+                                             "invoke-overlap", time.time()))
+                return
+            self.transition(rid, LifecycleState.RUNNING, "invoke")
+            with self._global:
+                self._active[rid] = 1
 
     def complete(self, rid: str, needs_reset: bool = False) -> None:
-        dst = LifecycleState.NEEDS_RESET if needs_reset else LifecycleState.READY
-        self.transition(rid, dst, "complete")
+        """Leave RUNNING; only the last overlapping session transitions the
+        substrate state, honoring any reset requested while overlapped."""
+        with self.lock(rid):
+            with self._global:
+                remaining = max(0, self._active.get(rid, 1) - 1)
+                self._active[rid] = remaining
+            if self.state(rid) == LifecycleState.FAILED:
+                # a concurrent session already failed the substrate; this
+                # session's completion is bookkeeping only — do NOT record a
+                # pending reset (recovery from FAILED resets anyway, and a
+                # stale flag would force a spurious NEEDS_RESET later)
+                self._append(rid, Transition("failed", "failed",
+                                             "complete-after-fail", time.time()))
+                return
+            if needs_reset:
+                with self._global:
+                    self._pending_reset[rid] = True
+            if remaining > 0:
+                self._append(rid, Transition("running", "running",
+                                             "complete-overlap", time.time()))
+                return
+            with self._global:
+                pending = self._pending_reset.pop(rid, False)
+            dst = (LifecycleState.NEEDS_RESET if pending
+                   else LifecycleState.READY)
+            self.transition(rid, dst, "complete")
 
-    def fail(self, rid: str, why: str = "") -> None:
-        self.transition(rid, LifecycleState.FAILED, f"fail:{why}")
+    def fail(self, rid: str, why: str = "", held_slot: bool = False) -> None:
+        """Mark the substrate FAILED.  ``held_slot=True`` releases the
+        failing session's own RUNNING slot; slots of other sessions still
+        in flight are preserved so their complete() stays balanced."""
+        with self.lock(rid):
+            if self.state(rid) == LifecycleState.FAILED:
+                self._append(rid, Transition("failed", "failed",
+                                             f"fail:{why}", time.time()))
+            else:
+                self.transition(rid, LifecycleState.FAILED, f"fail:{why}")
+            with self._global:
+                if held_slot:
+                    self._active[rid] = max(0, self._active.get(rid, 0) - 1)
+                self._pending_reset.pop(rid, None)
 
     def recover(self, rid: str, mode: str = "reset") -> None:
-        self.transition(rid, LifecycleState.RECOVERING, mode)
-        self.transition(rid, LifecycleState.READY, f"{mode}-done")
+        with self.lock(rid):
+            self.transition(rid, LifecycleState.RECOVERING, mode)
+            self.transition(rid, LifecycleState.READY, f"{mode}-done")
 
 
 class LifecycleError(RuntimeError):

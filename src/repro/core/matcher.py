@@ -16,11 +16,22 @@ which the fault-campaign benchmarks rely on.
 Baselines (paper RQ2): random-admissible, modality-only, latency-only.
 The decisive suite cases are exactly those needing runtime semantics:
 drifted local backend, stale twin, missing supervision.
+
+Sustained-throughput path: the static half of admission + scoring (function,
+modality, repeated-invocation checks and the C/T/L/O terms — everything
+derivable from descriptors and the task shape alone) is cached per task
+signature and invalidated whenever the registry epoch moves
+(register/unregister).  Runtime semantics — policy, snapshots, twin
+validity, live queue depth — are always evaluated fresh, so snapshot
+changes take effect immediately without cache invalidation and caching
+never changes a decision, only removes repeated descriptor walks when many
+similar tasks stream through the scheduler.
 """
 from __future__ import annotations
 
 import dataclasses
 import random
+import threading
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.descriptors import ResourceDescriptor
@@ -34,6 +45,8 @@ _LOCALITY_SCORE = {"extreme_edge": 1.0, "edge": 0.9, "device/edge": 0.9,
                    "fog": 0.6, "cloud": 0.4, "lab": 0.5, "sim./lab": 0.5}
 
 DRIFT_LIMIT = 0.5
+QUEUE_PENALTY = 0.15      # added to O per session queued BEYOND max_concurrent
+_STATIC_CACHE_MAX = 256   # distinct (epoch, task-shape) entries retained
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,19 +80,71 @@ class Matcher:
         self.twins = twins
         self.policy = policy
         self.w = weights
+        self._cache_lock = threading.Lock()
+        self._static_cache: Dict[Tuple, Dict[str, Tuple]] = {}
+
+    # -- static-work cache ----------------------------------------------------
+    @staticmethod
+    def _task_shape(task: TaskRequest) -> Tuple:
+        """The task fields the static checks/terms depend on — tasks sharing
+        a shape share cached static admissibility and C/T/L/O terms."""
+        return (task.function, task.input_modality, task.output_modality,
+                task.repeated, task.latency_budget_ms)
+
+    def _static_eval(self, desc: ResourceDescriptor, task: TaskRequest
+                     ) -> Tuple[bool, str, Optional[Dict[str, float]]]:
+        """Cached static admissibility + static score terms for one
+        descriptor, invalidated by registry epoch moves.  Snapshot changes
+        need no invalidation: nothing telemetry-dependent is ever cached
+        (runtime terms are recomputed fresh in _finish_terms /
+        _runtime_admissible), so keying on bus.epoch would only kill the
+        hit rate for workloads that publish health snapshots.
+
+        Hits validate the cached entry against the caller's descriptor
+        OBJECT (descriptors are frozen, so re-registration produces a new
+        object): a racing re-register can therefore never pin stale
+        capabilities onto a fresh epoch."""
+        key = (self.registry.epoch, self._task_shape(task))
+        with self._cache_lock:
+            per_shape = self._static_cache.get(key)
+            if per_shape is not None:
+                hit = per_shape.get(desc.resource_id)
+                if hit is not None and hit[0] is desc:
+                    return hit[1:]
+        entry = (desc,) + self._static_one(desc, task)
+        with self._cache_lock:
+            if key not in self._static_cache:
+                # evict oldest epochs/shapes first; never drop the whole
+                # cache at once (insertion order ≈ staleness)
+                while len(self._static_cache) >= _STATIC_CACHE_MAX:
+                    self._static_cache.pop(next(iter(self._static_cache)))
+                self._static_cache[key] = {}
+            self._static_cache[key][desc.resource_id] = entry
+        return entry[1:]
+
+    def _static_one(self, desc: ResourceDescriptor, task: TaskRequest
+                    ) -> Tuple[bool, str, Optional[Dict[str, float]]]:
+        cap = desc.capability
+        if task.function not in cap.functions:
+            return False, f"function {task.function!r} unsupported", None
+        if cap.input_signal.modality != task.input_modality:
+            return False, "input modality mismatch", None
+        if cap.output_signal.modality != task.output_modality:
+            return False, "output modality mismatch", None
+        if task.repeated and not cap.supports_repeated_invocation:
+            return False, "repeated invocation unsupported", None
+        return True, "ok", self._static_terms(desc, task)
 
     # -- hard admission checks ------------------------------------------------
     def admissible(self, desc: ResourceDescriptor, task: TaskRequest
                    ) -> Tuple[bool, str]:
-        cap = desc.capability
-        if task.function not in cap.functions:
-            return False, f"function {task.function!r} unsupported"
-        if cap.input_signal.modality != task.input_modality:
-            return False, "input modality mismatch"
-        if cap.output_signal.modality != task.output_modality:
-            return False, "output modality mismatch"
-        if task.repeated and not cap.supports_repeated_invocation:
-            return False, "repeated invocation unsupported"
+        ok, why, _ = self._static_eval(desc, task)
+        if not ok:
+            return False, why
+        return self._runtime_admissible(desc, task)
+
+    def _runtime_admissible(self, desc: ResourceDescriptor, task: TaskRequest
+                            ) -> Tuple[bool, str]:
         pol = self.policy.admit(desc, task)
         if not pol:
             return False, pol.reason
@@ -97,7 +162,10 @@ class Matcher:
         return True, "ok"
 
     # -- Eq. 1 terms ------------------------------------------------------------
-    def _terms(self, desc: ResourceDescriptor, task: TaskRequest) -> Dict[str, float]:
+    def _static_terms(self, desc: ResourceDescriptor, task: TaskRequest
+                      ) -> Dict[str, float]:
+        """Descriptor/task-shape-only terms: C, T, L, the adapter-boundary
+        base of O, and locality (folded into D at score time)."""
         cap = desc.capability
         C = 1.0
         if task.repeated and cap.supports_repeated_invocation:
@@ -109,21 +177,40 @@ class Matcher:
         lc = cap.lifecycle
         cost_ms = lc.warmup_ms + lc.reset_cost_ms + lc.cooldown_ms
         L = 1.0 / (1.0 + cost_ms / 1e3)
+        O = {"in_process": 0.05, "http": 0.3, "external_api": 0.5}.get(
+            desc.adapter_type, 0.2)
+        locality = _LOCALITY_SCORE.get(desc.location, 0.5)
+        return {"C": C, "T": T, "L": L, "O": O, "_locality": locality}
+
+    def _terms(self, desc: ResourceDescriptor, task: TaskRequest) -> Dict[str, float]:
+        static = self._static_terms(desc, task)
+        return self._finish_terms(desc, static)
+
+    def _finish_terms(self, desc: ResourceDescriptor,
+                      static: Dict[str, float]) -> Dict[str, float]:
+        """Overlay the runtime-dependent parts: twin confidence + drift into
+        D, live queue pressure into O."""
         twin = self.twins.get(desc.resource_id)
         conf = twin.confidence if twin is not None else 0.5
         snap = self.bus.snapshot(desc.resource_id)
         drift_pen = snap.drift_score if snap is not None else 0.0
-        D = 0.6 * conf * (1.0 - drift_pen) + 0.4 * _LOCALITY_SCORE.get(
-            desc.location, 0.5)
-        O = {"in_process": 0.05, "http": 0.3, "external_api": 0.5}.get(
-            desc.adapter_type, 0.2)
-        return {"C": C, "T": T, "L": L, "D": D, "O": O}
+        D = 0.6 * conf * (1.0 - drift_pen) + 0.4 * static["_locality"]
+        # live pressure: only sessions the substrate cannot absorb within its
+        # max_concurrent budget count as orchestration cost, so a wide
+        # substrate with free slots beats a narrow one with a waiting line
+        over = max(0, self.bus.queue_depth(desc.resource_id)
+                   - desc.capability.policy.max_concurrent)
+        O = static["O"] + QUEUE_PENALTY * over
+        return {"C": static["C"], "T": static["T"], "L": static["L"],
+                "D": D, "O": O}
 
     def score(self, desc: ResourceDescriptor, task: TaskRequest) -> Candidate:
-        ok, why = self.admissible(desc, task)
+        ok, why, static = self._static_eval(desc, task)
+        if ok:
+            ok, why = self._runtime_admissible(desc, task)
         if not ok:
             return Candidate(desc.resource_id, float("-inf"), {}, False, why)
-        t = self._terms(desc, task)
+        t = self._finish_terms(desc, static)
         s = (self.w.alpha * t["C"] + self.w.beta * t["T"] + self.w.gamma * t["L"]
              + self.w.delta * t["D"] - self.w.epsilon * t["O"])
         return Candidate(desc.resource_id, s, t, True)

@@ -5,12 +5,20 @@ The orchestrator validates postconditions after invocation — required
 telemetry present, health/validity bounds respected, stabilization-time
 honored — and reroutes to a fallback backend after preparation failures,
 invocation failures, or postcondition violations (RQ2, Table IV).
+
+Concurrency: :meth:`execute` is safe to call from many threads at once —
+per-substrate admission uses deadline-aware blocking acquisition, lifecycle
+transitions are serialized per resource, and live queue-depth telemetry is
+maintained so the matcher steers new tasks away from saturated substrates.
+``submit`` stays the one-shot synchronous entry point; sustained workloads
+go through :class:`repro.core.scheduler.ControlPlaneScheduler`, which feeds
+``execute`` from a worker pool.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.descriptors import ResourceDescriptor
 from repro.core.invocation import (InvocationError, InvocationManager,
@@ -26,7 +34,15 @@ from repro.core.twin import TwinSyncManager
 
 @dataclasses.dataclass
 class OrchestrationTrace:
-    """Explainable record of one task's path through the control plane."""
+    """Explainable record of one task's path through the control plane.
+
+    ``control_overhead_ms`` counts control-plane *work* (matching, policy,
+    lifecycle bookkeeping); time spent blocked waiting for a substrate
+    concurrency slot is backpressure, not overhead, and is reported
+    separately as ``queue_wait_ms``.  A trace is owned by the single
+    worker executing its task (it needs no locking and stays a plain
+    serializable dataclass — ``dataclasses.asdict`` works).
+    """
 
     task_id: str
     attempts: List[Dict] = dataclasses.field(default_factory=list)
@@ -34,18 +50,34 @@ class OrchestrationTrace:
     fallback_used: bool = False
     rejected_reason: Optional[str] = None
     control_overhead_ms: float = 0.0
+    queue_wait_ms: float = 0.0
+
+    def add_control_ms(self, ms: float) -> None:
+        self.control_overhead_ms += ms
+
+    def add_queue_wait_ms(self, ms: float) -> None:
+        self.queue_wait_ms += ms
+
+    def record_attempt(self, entry: Dict) -> Dict:
+        self.attempts.append(entry)
+        return entry
 
 
 class Orchestrator:
     MAX_ATTEMPTS = 3
+    #: how long ``execute`` may block waiting for a substrate concurrency
+    #: slot when the task carries no latency budget (seconds)
+    DEFAULT_ACQUIRE_TIMEOUT_S = 30.0
 
     def __init__(self, registry: Optional[CapabilityRegistry] = None,
-                 matcher_cls=Matcher):
+                 matcher_cls=Matcher,
+                 acquire_timeout_s: float = DEFAULT_ACQUIRE_TIMEOUT_S):
         self.registry = registry or CapabilityRegistry()
         self.bus = TelemetryBus()
         self.twins = TwinSyncManager(self.bus)
         self.policy = PolicyManager()
         self.lifecycle = LifecycleManager()
+        self.acquire_timeout_s = acquire_timeout_s
         self.matcher: Matcher = matcher_cls(self.registry, self.bus,
                                             self.twins, self.policy)
         self.invocations = InvocationManager(self.registry, self.lifecycle,
@@ -66,68 +98,181 @@ class Orchestrator:
         return None
 
     # -- main entry -----------------------------------------------------------
-    def submit(self, task: TaskRequest) -> (InvocationResult, OrchestrationTrace):
+    def submit(self, task: TaskRequest
+               ) -> Tuple[InvocationResult, OrchestrationTrace]:
+        """One-shot synchronous submission (compatibility wrapper around
+        :meth:`execute`)."""
+        return self.execute(task)
+
+    def execute(self, task: TaskRequest, deadline: Optional[float] = None
+                ) -> Tuple[InvocationResult, OrchestrationTrace]:
+        """Run one task through match → admit → invoke → validate, with
+        fallback.  ``deadline`` (``time.monotonic`` timestamp) bounds how
+        long admission may block on a busy substrate; without one, the
+        task's latency budget (or the orchestrator default) applies.
+        """
         trace = OrchestrationTrace(task.task_id)
+        if deadline is None and task.latency_budget_ms is not None:
+            # pin the budget to a fixed deadline once, so repeated fallback
+            # attempts share it instead of each getting a fresh full budget
+            deadline = time.monotonic() + task.latency_budget_ms / 1e3
         t_ctl = time.perf_counter()
         tried: set = set()
         cand = self.matcher.select(task)
-        control_ms = (time.perf_counter() - t_ctl) * 1e3
+        # initial match cost is control overhead on EVERY path (success,
+        # fallback, rejection), not just rejection
+        trace.add_control_ms((time.perf_counter() - t_ctl) * 1e3)
 
         for attempt in range(self.MAX_ATTEMPTS):
             if cand is None:
+                t_rej = time.perf_counter()
                 reasons = {c.resource_id: c.reason
                            for c in self.matcher.rank(task) if not c.admissible}
                 trace.rejected_reason = (
                     "no acceptable backend candidate: "
                     + "; ".join(f"{r}={why}" for r, why in reasons.items()))
-                trace.control_overhead_ms += control_ms
+                trace.add_control_ms((time.perf_counter() - t_rej) * 1e3)
                 return (self.invocations.rejected(task, trace.rejected_reason),
                         trace)
             rid = cand.resource_id
             tried.add(rid)
             desc = self.registry.get(rid)
-            trace.attempts.append({"resource": rid, "score": cand.score,
-                                   "terms": cand.terms})
-            t0 = time.perf_counter()
-            if not self.policy.acquire(desc):
-                failure = "concurrency limit"
+            trace.record_attempt({"resource": rid, "score": cand.score,
+                                  "terms": cand.terms})
+            if desc is None:
+                # fleet changed between ranking and attempt (concurrent
+                # unregister): treat like any other attempt failure
+                result, failure, spill = None, "resource unregistered", None
             else:
-                failure = None
-                try:
-                    session = self.invocations.open_session(task, desc)
-                    self.invocations.prepare(session)
-                    result = self.invocations.invoke(session)
-                    post = self._postconditions(result, session)
-                    if post is not None:
-                        failure = f"postcondition: {post}"
-                        result.status = "invalidated"
-                        self.twins.invalidate(rid, post)
-                except InvocationError as e:
-                    failure = f"{e.phase} failure: {e}"
-                finally:
-                    self.policy.release(desc)
-            trace.control_overhead_ms += (time.perf_counter() - t0) * 1e3
+                result, failure, spill = self._attempt(task, desc, trace,
+                                                       deadline, tried)
 
             if failure is None:
                 trace.selected = rid
                 trace.fallback_used = attempt > 0
-                # control overhead excludes the backend execution itself
-                trace.control_overhead_ms -= result.timing_ms.get("backend_ms", 0.0)
                 return result, trace
 
             trace.attempts[-1]["failure"] = failure
             if not task.allow_fallback:
                 trace.rejected_reason = failure
                 return self.invocations.rejected(task, failure), trace
-            cand = self._next_candidate(task, tried)
+            t_fb = time.perf_counter()
+            cand = spill if spill is not None else \
+                self._next_candidate(task, tried)
+            trace.add_control_ms((time.perf_counter() - t_fb) * 1e3)
 
         trace.rejected_reason = "fallback attempts exhausted"
         return self.invocations.rejected(task, trace.rejected_reason), trace
 
+    def _acquire_timeout(self, task: TaskRequest,
+                         deadline: Optional[float]) -> float:
+        """Deadline-aware admission budget: remaining time to the caller's
+        deadline (``execute`` pins the task latency budget to one), else
+        the orchestrator default.  Returns seconds (<= 0: non-blocking)."""
+        if deadline is not None:
+            return deadline - time.monotonic()
+        return self.acquire_timeout_s
+
+    #: floor for how long admission waits on a busy substrate before
+    #: considering a spill to an alternative backend (seconds)
+    MIN_ACQUIRE_PATIENCE_S = 0.02
+
+    def _acquire_with_patience(self, task: TaskRequest,
+                               desc: ResourceDescriptor,
+                               deadline: Optional[float],
+                               tried: set
+                               ) -> Tuple[bool, Optional[Candidate], float]:
+        """Deadline-aware blocking admission with bounded patience.
+
+        Block roughly two service times for a slot; if the substrate is
+        still saturated and another admissible backend exists, give up so
+        the caller spills there (keeping workers productive instead of
+        camped on one semaphore).  With no alternative, camp for the full
+        remaining deadline — contention must become queueing, not a
+        spurious "concurrency limit" rejection.
+
+        Returns ``(acquired, spill_candidate, rank_ms)``; the spill
+        candidate is the ranked alternative found while probing, handed
+        back so the caller does not repeat the rank, and ``rank_ms`` is the
+        matching work spent probing (control overhead, not queue wait).
+        """
+        remaining = self._acquire_timeout(task, deadline)
+        patience = remaining
+        if task.allow_fallback:
+            exp_s = desc.capability.timing.expected_latency_ms / 1e3
+            patience = min(remaining,
+                           max(self.MIN_ACQUIRE_PATIENCE_S, 2.0 * exp_s))
+        t0 = time.monotonic()
+        if self.policy.acquire(desc, patience):
+            return True, None, 0.0
+        if patience >= remaining:
+            return False, None, 0.0
+        t_rank = time.perf_counter()
+        alt = self._next_candidate(task, tried)
+        rank_ms = (time.perf_counter() - t_rank) * 1e3
+        if alt is not None:
+            return False, alt, rank_ms   # spill: an alternative can take it
+        rest = remaining - (time.monotonic() - t0)
+        return self.policy.acquire(desc, rest), None, rank_ms
+
+    def _attempt(self, task: TaskRequest, desc: ResourceDescriptor,
+                 trace: OrchestrationTrace, deadline: Optional[float],
+                 tried: set) -> Tuple[Optional[InvocationResult], Optional[str],
+                                      Optional[Candidate]]:
+        """One prepare→invoke→validate attempt against a chosen substrate.
+        Returns (result, failure_reason, spill_candidate): failure_reason is
+        None on success; spill_candidate carries the pre-ranked fallback
+        when admission spilled, so the caller skips a redundant rank."""
+        rid = desc.resource_id
+        result = None
+        self.bus.adjust_queue_depth(rid, +1)
+        t_wait = time.perf_counter()
+        try:
+            acquired, spill, rank_ms = self._acquire_with_patience(
+                task, desc, deadline, tried)
+            # the spill-probe rank is matching work, not backpressure
+            trace.add_control_ms(rank_ms)
+            wait_ms = max(0.0, (time.perf_counter() - t_wait) * 1e3 - rank_ms)
+            if not acquired:
+                trace.add_queue_wait_ms(wait_ms)
+                return None, "concurrency limit", spill
+            trace.add_queue_wait_ms(wait_ms)
+            t0 = time.perf_counter()
+            failure = None
+            try:
+                session = self.invocations.open_session(task, desc)
+                self.invocations.prepare(session)
+                result = self.invocations.invoke(session)
+                post = self._postconditions(result, session)
+                if post is not None:
+                    failure = f"postcondition: {post}"
+                    result.status = "invalidated"
+                    self.twins.invalidate(rid, post)
+            except InvocationError as e:
+                failure = f"{e.phase} failure: {e}"
+            finally:
+                self.policy.release(desc)
+            elapsed_ms = (time.perf_counter() - t0) * 1e3
+            if result is not None:
+                # control overhead excludes the backend execution itself
+                elapsed_ms -= result.timing_ms.get("backend_ms", 0.0)
+            trace.add_control_ms(max(0.0, elapsed_ms))
+            return result, failure, None
+        finally:
+            self.bus.adjust_queue_depth(rid, -1)
+
     def _next_candidate(self, task: TaskRequest, tried: set) -> Optional[Candidate]:
-        # fallback ignores the directed preference: capability-based rerank
-        free_task = dataclasses.replace(task) if dataclasses.is_dataclass(task) else task
-        free_task.backend_preference = None
+        # fallback ignores the directed preference: capability-based rerank.
+        # replace() shares mutable fields with the original task, so give the
+        # copy its own metadata dict instead of aliasing the caller's.
+        if dataclasses.is_dataclass(task):
+            free_task = dataclasses.replace(
+                task, backend_preference=None,
+                metadata=dict(task.metadata) if isinstance(task.metadata, dict)
+                else task.metadata)
+        else:
+            free_task = task
+            free_task.backend_preference = None
         ranked = [c for c in self.matcher.rank(free_task)
                   if c.admissible and c.resource_id not in tried]
         return ranked[0] if ranked else None

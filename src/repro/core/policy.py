@@ -4,6 +4,12 @@ Enforces admissible operating regions, human-supervision requirements,
 tenant authorization, exclusivity and concurrency limits.  A shared PNN
 cannot be exposed as an unconstrained stateless service — admission happens
 *before* lifecycle preparation, so rejected tasks never touch the substrate.
+
+Concurrency admission is deadline-aware: ``acquire`` blocks up to the
+caller's remaining deadline for a per-substrate slot instead of turning
+transient contention into spurious "concurrency limit" fallbacks.  Held
+slots are accounted per resource so a drained control plane can be audited
+for semaphore leaks (``outstanding`` / ``fully_released``).
 """
 from __future__ import annotations
 
@@ -27,6 +33,7 @@ class PolicyDecision:
 class PolicyManager:
     def __init__(self):
         self._locks: Dict[str, threading.Semaphore] = {}
+        self._held: Dict[str, int] = {}
         self._lock = threading.Lock()
 
     def _sem(self, desc: ResourceDescriptor) -> threading.Semaphore:
@@ -54,8 +61,39 @@ class PolicyManager:
                                   f"{pol.max_stimulation}")
         return PolicyDecision(True)
 
-    def acquire(self, desc: ResourceDescriptor) -> bool:
-        return self._sem(desc).acquire(blocking=False)
+    def acquire(self, desc: ResourceDescriptor,
+                timeout_s: Optional[float] = 0.0) -> bool:
+        """Take one concurrency slot on the substrate.
+
+        ``timeout_s=0.0`` (default) is the seed's non-blocking behaviour;
+        a positive value blocks up to that deadline; ``None`` blocks
+        indefinitely.  Returns False iff no slot became available in time.
+        """
+        sem = self._sem(desc)
+        if timeout_s is None:
+            ok = sem.acquire()
+        elif timeout_s <= 0.0:
+            ok = sem.acquire(blocking=False)
+        else:
+            ok = sem.acquire(timeout=timeout_s)
+        if ok:
+            with self._lock:
+                self._held[desc.resource_id] = \
+                    self._held.get(desc.resource_id, 0) + 1
+        return ok
 
     def release(self, desc: ResourceDescriptor) -> None:
+        with self._lock:
+            self._held[desc.resource_id] = max(
+                0, self._held.get(desc.resource_id, 0) - 1)
         self._sem(desc).release()
+
+    # -- leak auditing --------------------------------------------------------
+    def outstanding(self) -> Dict[str, int]:
+        """Currently-held slot count per resource (non-zero entries only)."""
+        with self._lock:
+            return {rid: n for rid, n in self._held.items() if n > 0}
+
+    def fully_released(self) -> bool:
+        """True iff every acquired slot has been released (no leaks)."""
+        return not self.outstanding()

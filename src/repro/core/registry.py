@@ -3,9 +3,15 @@
 Supports queries like "find a substrate that accepts spike-like event input
 and supports low-latency repeated invocation" via structured filters, plus
 the directed path (lookup by resource id).
+
+The registry is thread-safe and versioned: ``epoch`` increments on every
+register/unregister, so the matcher can cache per-task admissibility and
+static scoring work across many concurrent tasks and invalidate the cache
+exactly when the fleet composition changes.
 """
 from __future__ import annotations
 
+import threading
 from typing import Callable, Dict, List, Optional
 
 from repro.core.descriptors import ResourceDescriptor
@@ -15,23 +21,38 @@ class CapabilityRegistry:
     def __init__(self):
         self._resources: Dict[str, ResourceDescriptor] = {}
         self._adapters: Dict[str, object] = {}
+        self._epoch = 0
+        self._lock = threading.RLock()
+
+    @property
+    def epoch(self) -> int:
+        """Monotonic fleet version; bumps on register/unregister."""
+        with self._lock:
+            return self._epoch
 
     def register(self, desc: ResourceDescriptor, adapter) -> None:
-        self._resources[desc.resource_id] = desc
-        self._adapters[desc.resource_id] = adapter
+        with self._lock:
+            self._resources[desc.resource_id] = desc
+            self._adapters[desc.resource_id] = adapter
+            self._epoch += 1
 
     def unregister(self, resource_id: str) -> None:
-        self._resources.pop(resource_id, None)
-        self._adapters.pop(resource_id, None)
+        with self._lock:
+            self._resources.pop(resource_id, None)
+            self._adapters.pop(resource_id, None)
+            self._epoch += 1
 
     def get(self, resource_id: str) -> Optional[ResourceDescriptor]:
-        return self._resources.get(resource_id)
+        with self._lock:
+            return self._resources.get(resource_id)
 
     def adapter(self, resource_id: str):
-        return self._adapters.get(resource_id)
+        with self._lock:
+            return self._adapters.get(resource_id)
 
     def all(self) -> List[ResourceDescriptor]:
-        return list(self._resources.values())
+        with self._lock:
+            return list(self._resources.values())
 
     def discover(self, *, function: Optional[str] = None,
                  input_modality: Optional[str] = None,
@@ -42,7 +63,7 @@ class CapabilityRegistry:
                  predicate: Optional[Callable[[ResourceDescriptor], bool]] = None,
                  ) -> List[ResourceDescriptor]:
         out = []
-        for d in self._resources.values():
+        for d in self.all():
             cap = d.capability
             if function is not None and function not in cap.functions:
                 continue

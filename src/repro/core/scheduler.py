@@ -1,0 +1,251 @@
+"""Concurrent control-plane scheduler: queued admission + worker pool.
+
+The paper's control loop (§IV-D) processes one task at a time; real PNN
+serving is many-client, so this module turns the orchestrator's
+match → admit → invoke → validate path into a sustained-throughput pipeline:
+
+- a bounded task queue gives explicit backpressure (a full queue blocks the
+  producer instead of growing without bound);
+- a worker pool keeps many tasks in flight so every substrate's
+  ``max_concurrent`` budget stays saturated instead of serializing behind a
+  single control loop;
+- per-task deadlines bound both queue wait and substrate admission
+  (tasks whose deadline lapses while queued are rejected without ever
+  touching a substrate);
+- results are futures, so clients can pipeline (``submit_async``), batch
+  (``submit_many``) or quiesce (``drain``).
+
+``Orchestrator.submit`` remains the one-shot synchronous path; both go
+through ``Orchestrator.execute``, so scheduling changes placement *timing*
+but never placement *semantics*.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.invocation import InvocationResult
+from repro.core.orchestrator import Orchestrator, OrchestrationTrace
+from repro.core.tasks import TaskRequest
+
+_STOP = object()
+
+
+class SchedulerClosed(RuntimeError):
+    pass
+
+
+class ControlPlaneScheduler:
+    """Bounded-queue, worker-pool front end over an :class:`Orchestrator`.
+
+    Usage::
+
+        with ControlPlaneScheduler(orch, workers=16) as sched:
+            futs = [sched.submit_async(t) for t in tasks]
+            results = [f.result() for f in futs]
+
+    or batched: ``results = sched.submit_many(tasks)``.
+    """
+
+    def __init__(self, orchestrator: Orchestrator, workers: int = 8,
+                 queue_size: int = 256,
+                 default_deadline_s: Optional[float] = None):
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        self.orchestrator = orchestrator
+        self.workers = workers
+        self.default_deadline_s = default_deadline_s
+        self._queue: "queue.Queue" = queue.Queue(maxsize=queue_size)
+        self._threads: List[threading.Thread] = []
+        self._started = False
+        self._closed = False
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self._pending = 0                       # queued + in-flight tasks
+        self._stats_lock = threading.Lock()
+        self._status_counts: Dict[str, int] = {}
+        self._per_resource: Dict[str, int] = {}
+        self._latencies_ms: List[float] = []
+        self._first_enqueue: Optional[float] = None
+        self._last_done: Optional[float] = None
+
+    # -- lifecycle ------------------------------------------------------------
+    def start(self) -> "ControlPlaneScheduler":
+        with self._lock:
+            if self._closed:
+                raise SchedulerClosed("scheduler already shut down")
+            if self._started:
+                return self
+            self._started = True
+            for i in range(self.workers):
+                t = threading.Thread(target=self._worker, daemon=True,
+                                     name=f"phys-mcp-worker-{i}")
+                t.start()
+                self._threads.append(t)
+        return self
+
+    def __enter__(self) -> "ControlPlaneScheduler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(wait=exc == (None, None, None))
+
+    def shutdown(self, wait: bool = True) -> None:
+        # setting _closed under the lock before any sentinel is enqueued
+        # guarantees no real task can land behind a sentinel: submit_async
+        # re-checks _closed under this same lock right before its put
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            started = self._started
+            threads = list(self._threads)
+        if started:
+            for _ in range(self.workers):
+                self._queue.put((_STOP, None, None, 0.0))
+            if wait:
+                for t in threads:
+                    t.join()
+
+    # -- submission -----------------------------------------------------------
+    def submit_async(self, task: TaskRequest,
+                     deadline_s: Optional[float] = None
+                     ) -> "Future[Tuple[InvocationResult, OrchestrationTrace]]":
+        """Enqueue one task; returns a future resolving to the same
+        ``(result, trace)`` pair ``Orchestrator.submit`` gives.  Blocks for
+        queue space when the bounded queue is full (backpressure)."""
+        self.start()                 # raises SchedulerClosed when shut down
+        fut: Future = Future()
+        # only an EXPLICIT deadline (per-call or scheduler default) rejects
+        # tasks that lapse while queued; a task's latency_budget_ms stays the
+        # soft signal it is on the serial path (Orchestrator.execute pins it
+        # to bound admission blocking identically in both modes)
+        budget = deadline_s if deadline_s is not None \
+            else self.default_deadline_s
+        deadline = (time.monotonic() + budget) if budget is not None else None
+        enqueued = time.perf_counter()
+        # closed-check + enqueue are atomic w.r.t. shutdown(), so a task is
+        # either rejected here or is guaranteed to sit ahead of the stop
+        # sentinels; only the final successful put needs the lock, so the
+        # queue-full backpressure wait polls at a coarse interval outside it
+        # (this path is only reached when producers have outrun the fleet by
+        # a full queue, where a few ms of producer latency is immaterial)
+        while True:
+            with self._lock:
+                if self._closed:
+                    raise SchedulerClosed("scheduler already shut down")
+                try:
+                    self._queue.put_nowait((task, fut, deadline, enqueued))
+                except queue.Full:
+                    pass
+                else:
+                    self._pending += 1
+                    if self._first_enqueue is None:
+                        self._first_enqueue = time.perf_counter()
+                    return fut
+            time.sleep(0.01)
+
+    def submit_many(self, tasks: Sequence[TaskRequest],
+                    deadline_s: Optional[float] = None, wait: bool = True
+                    ) -> Union[List[Tuple[InvocationResult, OrchestrationTrace]],
+                               List[Future]]:
+        """Enqueue a batch.  With ``wait=True`` (default) blocks until every
+        task resolved and returns ``(result, trace)`` pairs in submission
+        order; with ``wait=False`` returns the unresolved futures instead."""
+        futs = [self.submit_async(t, deadline_s=deadline_s) for t in tasks]
+        if not wait:
+            return futs
+        return [f.result() for f in futs]
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every enqueued task has resolved (or timeout).
+        Returns True when the scheduler is fully quiesced."""
+        end = None if timeout is None else time.monotonic() + timeout
+        with self._idle:
+            while self._pending > 0:
+                remaining = None if end is None else end - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._idle.wait(timeout=remaining)
+        return True
+
+    # -- worker loop ----------------------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            task, fut, deadline, enqueued = self._queue.get()
+            if task is _STOP:
+                return
+            try:
+                if not fut.set_running_or_notify_cancel():
+                    continue
+                if deadline is not None and time.monotonic() > deadline:
+                    result = self.orchestrator.invocations.rejected(
+                        task, "deadline exceeded while queued")
+                    trace = OrchestrationTrace(task.task_id)
+                    trace.rejected_reason = result.telemetry["reason"]
+                    fut.set_result((result, trace))
+                    self._account(result, enqueued)
+                    continue
+                try:
+                    result, trace = self.orchestrator.execute(
+                        task, deadline=deadline)
+                except BaseException as e:   # noqa: BLE001 — surfaced via future
+                    fut.set_exception(e)
+                    self._account(None, enqueued)
+                    continue
+                fut.set_result((result, trace))
+                self._account(result, enqueued)
+            finally:
+                with self._idle:
+                    self._pending -= 1
+                    self._idle.notify_all()
+
+    def _account(self, result: Optional[InvocationResult],
+                 enqueued: float) -> None:
+        now = time.perf_counter()
+        with self._stats_lock:
+            status = result.status if result is not None else "error"
+            self._status_counts[status] = \
+                self._status_counts.get(status, 0) + 1
+            if result is not None and result.resource_id:
+                self._per_resource[result.resource_id] = \
+                    self._per_resource.get(result.resource_id, 0) + 1
+            self._latencies_ms.append((now - enqueued) * 1e3)
+            self._last_done = now
+
+    # -- observability --------------------------------------------------------
+    def stats(self) -> Dict:
+        """Live counters: status mix, per-substrate placement, end-to-end
+        latency percentiles (enqueue → resolve) and observed throughput."""
+        with self._stats_lock:
+            lats = sorted(self._latencies_ms)
+            counts = dict(self._status_counts)
+            per_resource = dict(self._per_resource)
+            first, last = self._first_enqueue, self._last_done
+        done = len(lats)
+        wall_s = (last - first) if (first is not None and last is not None
+                                    and last > first) else None
+
+        def pct(p: float) -> Optional[float]:
+            if not lats:
+                return None
+            return lats[min(done - 1, int(p * (done - 1)))]
+
+        return {
+            "done": done,
+            "pending": self.pending,
+            "statuses": counts,
+            "per_resource": per_resource,
+            "p50_ms": pct(0.50),
+            "p95_ms": pct(0.95),
+            "wall_s": wall_s,
+            "tasks_per_s": (done / wall_s) if wall_s else None,
+        }
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return self._pending

@@ -5,6 +5,13 @@ age-of-information) which the matcher consults alongside static descriptors
 (paper §VII-A: "the matcher consults lightweight runtime snapshots such as
 health_status, drift_score, and age_of_information_ms").  The bus forwards
 events to local consumers (twin-sync manager, supervisors, benchmarks).
+
+The bus is fully thread-safe: ``subscribe`` is locked, ``snapshot`` returns
+copy-on-read views (callers never observe in-place mutation of stored
+state), and per-resource ``queue_depth`` counters are maintained live by the
+orchestrator/scheduler so the matcher can score against instantaneous
+substrate pressure.  ``epoch`` increments on every stored-snapshot change
+(a cheap change-detection handle for consumers polling the store).
 """
 from __future__ import annotations
 
@@ -31,12 +38,13 @@ class RuntimeSnapshot:
     extra: Dict = dataclasses.field(default_factory=dict)
 
     def aged(self) -> "RuntimeSnapshot":
-        self.age_of_information_ms = (time.time() - self.last_updated) * 1e3
-        return self
+        """Copy with age_of_information_ms recomputed (copy-on-read: the
+        stored snapshot is never mutated, so concurrent readers are safe)."""
+        return dataclasses.replace(
+            self, age_of_information_ms=(time.time() - self.last_updated) * 1e3)
 
     def to_dict(self) -> Dict:
-        self.aged()
-        return dataclasses.asdict(self)
+        return dataclasses.asdict(self.aged())
 
 
 @dataclasses.dataclass
@@ -48,33 +56,65 @@ class TelemetryEvent:
 
 
 class TelemetryBus:
-    """In-process pub/sub with bounded per-resource history."""
+    """In-process pub/sub with bounded per-resource history (thread-safe)."""
 
     def __init__(self, history: int = 256):
         self._subs: List[Callable[[TelemetryEvent], None]] = []
         self._history: Dict[str, deque] = defaultdict(
             lambda: deque(maxlen=history))
         self._snapshots: Dict[str, RuntimeSnapshot] = {}
+        self._queue_depth: Dict[str, int] = defaultdict(int)
+        self._epoch = 0
         self._lock = threading.Lock()
 
+    @property
+    def epoch(self) -> int:
+        """Monotonic snapshot-store version; bumps on update_snapshot."""
+        with self._lock:
+            return self._epoch
+
     def subscribe(self, fn: Callable[[TelemetryEvent], None]) -> None:
-        self._subs.append(fn)
+        with self._lock:
+            self._subs.append(fn)
 
     def emit(self, event: TelemetryEvent) -> None:
         with self._lock:
             self._history[event.resource_id].append(event)
-        for fn in list(self._subs):
+            subs = list(self._subs)
+        for fn in subs:
             fn(event)
 
     def update_snapshot(self, snap: RuntimeSnapshot) -> None:
-        snap.last_updated = time.time()
+        stored = dataclasses.replace(snap, last_updated=time.time())
         with self._lock:
-            self._snapshots[snap.resource_id] = snap
-        self.emit(TelemetryEvent(snap.resource_id, "health", snap.to_dict()))
+            self._snapshots[snap.resource_id] = stored
+            self._epoch += 1
+        self.emit(TelemetryEvent(snap.resource_id, "health", stored.to_dict()))
 
     def snapshot(self, resource_id: str) -> Optional[RuntimeSnapshot]:
-        snap = self._snapshots.get(resource_id)
-        return snap.aged() if snap is not None else None
+        """Aged copy of the stored snapshot with the LIVE queue depth
+        overlaid — safe for the caller to read or mutate freely."""
+        with self._lock:
+            snap = self._snapshots.get(resource_id)
+            depth = self._queue_depth.get(resource_id, 0)
+        if snap is None:
+            return None
+        view = snap.aged()
+        view.queue_depth = depth
+        return view
+
+    # -- live per-resource pressure ------------------------------------------
+    def adjust_queue_depth(self, resource_id: str, delta: int) -> int:
+        """Atomically add ``delta`` to a resource's in-flight/waiting count
+        (maintained by the orchestrator around admission + invocation)."""
+        with self._lock:
+            depth = max(0, self._queue_depth[resource_id] + delta)
+            self._queue_depth[resource_id] = depth
+            return depth
+
+    def queue_depth(self, resource_id: str) -> int:
+        with self._lock:
+            return self._queue_depth.get(resource_id, 0)
 
     def history(self, resource_id: str) -> List[TelemetryEvent]:
         with self._lock:

@@ -12,6 +12,7 @@ artifact — the high-fidelity end of the paper's twin spectrum (DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, Optional
 
@@ -51,57 +52,71 @@ class TwinState:
 
 
 class TwinSyncManager:
-    """Associates telemetry with twin state and updates sync metadata."""
+    """Associates telemetry with twin state and updates sync metadata.
+
+    All state updates are serialized under one lock: with the concurrent
+    control plane, telemetry-driven confidence updates (``_on_event``) race
+    against postcondition invalidation (``invalidate``); unlocked
+    read-modify-writes could silently restore confidence to a twin that was
+    just invalidated.
+    """
 
     DRIFT_DECAY = 0.85       # confidence multiplier per unit drift observed
 
     def __init__(self, bus: TelemetryBus):
         self._twins: Dict[str, TwinState] = {}
         self._bus = bus
+        self._lock = threading.Lock()
         bus.subscribe(self._on_event)
 
     def register(self, twin: TwinState) -> TwinState:
-        self._twins[twin.resource_id] = twin
+        with self._lock:
+            self._twins[twin.resource_id] = twin
         return twin
 
     def get(self, resource_id: str) -> Optional[TwinState]:
-        return self._twins.get(resource_id)
+        with self._lock:
+            return self._twins.get(resource_id)
 
     def mark_synced(self, resource_id: str, drift: float = 0.0) -> None:
-        tw = self._twins.get(resource_id)
-        if tw is None:
-            return
-        tw.last_sync = time.time()
-        tw.observations += 1
-        tw.drift_estimate = drift
-        tw.confidence = max(0.0, min(1.0, 1.0 - drift))
+        with self._lock:
+            tw = self._twins.get(resource_id)
+            if tw is None:
+                return
+            tw.last_sync = time.time()
+            tw.observations += 1
+            tw.drift_estimate = drift
+            tw.confidence = max(0.0, min(1.0, 1.0 - drift))
 
     def invalidate(self, resource_id: str, reason: str = "") -> None:
-        tw = self._twins.get(resource_id)
-        if tw is not None:
-            tw.confidence = 0.0
+        with self._lock:
+            tw = self._twins.get(resource_id)
+            if tw is not None:
+                tw.confidence = 0.0
 
     def recalibrate(self, resource_id: str) -> None:
-        tw = self._twins.get(resource_id)
-        if tw is not None:
-            tw.calibration_ts = time.time()
-            tw.last_sync = time.time()
-            tw.drift_estimate = 0.0
-            tw.confidence = 1.0
+        with self._lock:
+            tw = self._twins.get(resource_id)
+            if tw is not None:
+                tw.calibration_ts = time.time()
+                tw.last_sync = time.time()
+                tw.drift_estimate = 0.0
+                tw.confidence = 1.0
 
     # -- telemetry coupling ---------------------------------------------------
     def _on_event(self, ev: TelemetryEvent) -> None:
-        tw = self._twins.get(ev.resource_id)
-        if tw is None:
-            return
-        if ev.kind == "result":
-            drift = float(ev.fields.get("drift_score", 0.0))
-            tw.last_sync = ev.timestamp
-            tw.observations += 1
-            tw.drift_estimate = drift
-            tw.confidence = max(0.0, min(1.0, tw.confidence *
-                                         (self.DRIFT_DECAY ** drift) + 0.05
-                                         * (1.0 - drift)))
-        elif ev.kind == "drift":
-            tw.drift_estimate = float(ev.fields.get("drift_score", 0.0))
-            tw.confidence = max(0.0, 1.0 - tw.drift_estimate)
+        with self._lock:
+            tw = self._twins.get(ev.resource_id)
+            if tw is None:
+                return
+            if ev.kind == "result":
+                drift = float(ev.fields.get("drift_score", 0.0))
+                tw.last_sync = ev.timestamp
+                tw.observations += 1
+                tw.drift_estimate = drift
+                tw.confidence = max(0.0, min(1.0, tw.confidence *
+                                             (self.DRIFT_DECAY ** drift) + 0.05
+                                             * (1.0 - drift)))
+            elif ev.kind == "drift":
+                tw.drift_estimate = float(ev.fields.get("drift_score", 0.0))
+                tw.confidence = max(0.0, 1.0 - tw.drift_estimate)
