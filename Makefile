@@ -1,27 +1,35 @@
 # phys-MCP reproduction — reproducible verify + benchmark entry points.
 #
 #   make test              tier-1 verify (the ROADMAP.md command)
-#   make test-fast         control-plane tests only (seconds, no kernels)
+#   make test-fast         everything not marked slow (control plane,
+#                          chaos, health; ~20s, no kernel/model suites)
+#   make chaos-smoke       ~30s concurrent mini-campaign: recovery bench
+#                          (1 quick trial) + full chaos scenario matrix
 #   make bench-throughput  headline serial-vs-pooled scheduler benchmark
+#   make bench-recovery    resilience benchmark: goodput under faults with
+#                          vs without the HealthManager
 #   make bench             full benchmark harness (all paper tables)
 #   make dev-deps          install dev/test dependencies
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-throughput dev-deps
+.PHONY: test test-fast chaos-smoke bench bench-throughput bench-recovery dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
 
 test-fast:
-	$(PYTHON) -m pytest -q tests/test_system.py tests/test_matcher.py \
-	    tests/test_faults.py tests/test_lifecycle_contracts.py \
-	    tests/test_scheduler_concurrency.py \
-	    tests/test_orchestrator_accounting.py
+	$(PYTHON) -m pytest -q -m "not slow"
+
+chaos-smoke:
+	$(PYTHON) -m benchmarks.bench_recovery --smoke
 
 bench-throughput:
 	$(PYTHON) -m benchmarks.bench_throughput
+
+bench-recovery:
+	$(PYTHON) -m benchmarks.bench_recovery
 
 bench:
 	$(PYTHON) -m benchmarks.run

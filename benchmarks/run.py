@@ -16,6 +16,8 @@ Paper artifact map:
     bench_fleet       — beyond-paper orchestrated TPU-fleet training
     bench_throughput  — beyond-paper sustained throughput: serial submit
                         loop vs pooled ControlPlaneScheduler
+    bench_recovery    — beyond-paper resilience: goodput under faults with
+                        vs without the HealthManager (circuit breakers)
 """
 import argparse
 import sys
@@ -26,7 +28,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import (bench_cortical, bench_faults, bench_fleet, bench_http,
                         bench_matcher, bench_overhead, bench_portability,
-                        bench_roofline, bench_throughput)
+                        bench_recovery, bench_roofline, bench_throughput)
 
 BENCHES = {
     "portability": bench_portability.run,
@@ -38,6 +40,7 @@ BENCHES = {
     "roofline": bench_roofline.run,
     "fleet": bench_fleet.run,
     "throughput": bench_throughput.run,
+    "recovery": bench_recovery.run,
 }
 
 

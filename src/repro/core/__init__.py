@@ -12,6 +12,9 @@ from repro.core.descriptors import (CapabilityDescriptor, Observability,  # noqa
                                     PolicyConstraints, ResourceDescriptor,
                                     SignalSpec, TimingSemantics,
                                     LifecycleSemantics, shared_key_ratio)
+from repro.core.health import (BreakerState, BreakerTransition,  # noqa: F401
+                               HealthManager, HealthThresholds,
+                               LEGAL_BREAKER)
 from repro.core.invocation import (InvocationManager, InvocationResult,  # noqa: F401
                                    RESULT_KEYS, Session)
 from repro.core.lifecycle import LifecycleManager, LifecycleState  # noqa: F401

@@ -1,6 +1,9 @@
-"""Fault-injection campaign machinery (paper Table IV).
+"""Fault-injection machinery: Table IV campaign + composable chaos harness.
 
-Five representative scenarios:
+Two layers:
+
+**Serial campaign (paper Table IV).**  Five representative scenarios, each
+run on a FRESH orchestrator so faults cannot leak between scenarios:
 
 1. ``drifted_local_fast``   — local fast backend drifted → matcher prefers
                               the externalized fast backend directly.
@@ -9,14 +12,25 @@ Five representative scenarios:
 4. ``stale_chemical_twin``  — freshness bound reject before execution.
 5. ``missing_telemetry``    — postcondition check fails → fallback used.
 
-Each scenario states its expected control-plane behavior; the campaign
-returns observed-vs-expected, which tests and benchmarks assert on.
+**Concurrent chaos harness.**  The paper's claim is *telemetry-aware
+recovery under representative faults*, which a scripted fresh-orchestrator
+demo cannot exercise: real recovery happens on a live, loaded control
+plane.  :class:`ChaosInjector` (any fault: drift, adapter faults, raising
+invokes, stale twins — composable), :class:`ChaosScenario` (injector ×
+task template × expected outcomes × expected breaker trajectory) and
+:func:`run_campaign_concurrent` fire scenarios through the scheduler
+against ONE shared orchestrator under background load, asserting
+observed-vs-expected AND the HealthManager breaker trajectories
+(quarantine → probation → re-admission), with a zero-tasks-on-quarantined
+audit.  Every row carries ``mismatch_reason`` so harness failures are
+actionable.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List
+from collections import Counter
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.orchestrator import Orchestrator
 from repro.core.tasks import TaskRequest
@@ -117,6 +131,15 @@ def build_campaign(local_fast="memristive-local", ext_fast="fast-external",
     ]
 
 
+def classify(result, trace) -> str:
+    """Map a (result, trace) pair onto the campaign outcome vocabulary."""
+    if result.status == "completed":
+        return "success_fallback" if trace.fallback_used else "success_direct"
+    if result.status == "rejected":
+        return "reject"
+    return result.status
+
+
 def run_campaign(make_orchestrator: Callable[[], Orchestrator],
                  scenarios: List[FaultScenario]) -> List[Dict]:
     """Run each scenario on a FRESH orchestrator (faults don't leak)."""
@@ -125,15 +148,16 @@ def run_campaign(make_orchestrator: Callable[[], Orchestrator],
         orch = make_orchestrator()
         sc.inject(orch)
         result, trace = orch.submit(sc.task())
-        if result.status == "completed":
-            observed = "success_fallback" if trace.fallback_used else "success_direct"
-        elif result.status == "rejected":
-            observed = "reject"
-        else:
-            observed = result.status
-        ok = observed == sc.expected
-        if ok and sc.target_hint and result.status == "completed":
-            ok = result.resource_id == sc.target_hint
+        observed = classify(result, trace)
+        mismatch_reason = None
+        if observed != sc.expected:
+            mismatch_reason = (f"expected {sc.expected!r}, observed "
+                               f"{observed!r} (status={result.status!r}, "
+                               f"selected={result.resource_id or None!r})")
+        elif (sc.target_hint and result.status == "completed"
+                and result.resource_id != sc.target_hint):
+            mismatch_reason = (f"completed on {result.resource_id!r} but "
+                               f"target_hint was {sc.target_hint!r}")
         results.append({
             "scenario": sc.name,
             "description": sc.description,
@@ -142,6 +166,382 @@ def run_campaign(make_orchestrator: Callable[[], Orchestrator],
             "selected": result.resource_id or None,
             "target_hint": sc.target_hint or None,
             "attempts": trace.attempts,
-            "pass": bool(ok),
+            "pass": mismatch_reason is None,
+            "mismatch_reason": mismatch_reason,
         })
     return results
+
+
+# ---------------------------------------------------------------------------
+# composable chaos harness (concurrent campaign on a live control plane)
+
+
+@dataclasses.dataclass
+class ChaosInjector:
+    """A named, reversible fault: ``apply`` arms it on a live orchestrator,
+    ``clear`` removes it.  Injectors compose (``compose``), so a scenario
+    matrix can pair any fault combination with any task template."""
+
+    name: str
+    apply: Callable[[Orchestrator], None]
+    clear: Callable[[Orchestrator], None] = lambda orch: None
+
+
+def inject_drift(rid: str, drift: float) -> ChaosInjector:
+    """Simulate a genuinely drifted device: publish a drifted snapshot AND
+    make the adapter keep reporting that drift, so recover-on-reopen's
+    snapshot refresh cannot wipe the fault (a merely-stale snapshot would
+    legitimately self-heal through reset).  Clear restores the adapter and
+    republishes its real state."""
+    saved: Dict[str, Callable] = {}
+
+    def apply(orch: Orchestrator) -> None:
+        adapter = orch.registry.adapter(rid)
+        if adapter is not None and "snapshot" not in saved:
+            saved["snapshot"] = adapter.snapshot
+
+            def drifted_snapshot():
+                return RuntimeSnapshot(
+                    rid, drift_score=drift,
+                    health_status="degraded" if drift > 0.3 else "healthy")
+
+            adapter.snapshot = drifted_snapshot
+        _set_drift(orch, rid, drift)
+
+    def clear(orch: Orchestrator) -> None:
+        adapter = orch.registry.adapter(rid)
+        if adapter is not None and "snapshot" in saved:
+            adapter.snapshot = saved.pop("snapshot")
+        _set_drift(orch, rid, 0.0)
+
+    return ChaosInjector(f"drift({rid},{drift})", apply, clear)
+
+
+def inject_adapter_fault(rid: str, fault: str) -> ChaosInjector:
+    """Arm one of the adapter-level fault switches (``prepare_failure``,
+    ``drop_telemetry``, ...); clear removes all armed adapter faults."""
+    return ChaosInjector(
+        name=f"adapter_fault({rid},{fault})",
+        apply=lambda o: o.registry.adapter(rid).inject_fault(fault),
+        clear=lambda o: o.registry.adapter(rid).clear_faults())
+
+
+def inject_invoke_failure(rid: str, delay_ms: float = 0.0) -> ChaosInjector:
+    """Make the adapter's ``invoke`` raise (after an optional dwell standing
+    in for a hung-then-failing backend); clear restores the original."""
+    saved: Dict[str, Callable] = {}
+
+    def apply(orch: Orchestrator) -> None:
+        adapter = orch.registry.adapter(rid)
+        if "invoke" in saved:
+            return
+        saved["invoke"] = adapter.invoke
+
+        def failing_invoke(session):
+            if delay_ms:
+                time.sleep(delay_ms / 1e3)
+            raise RuntimeError(f"chaos: injected invoke failure on {rid}")
+
+        adapter.invoke = failing_invoke
+
+    def clear(orch: Orchestrator) -> None:
+        adapter = orch.registry.adapter(rid)
+        if "invoke" in saved:
+            adapter.invoke = saved.pop("invoke")
+
+    return ChaosInjector(f"invoke_failure({rid})", apply, clear)
+
+
+def inject_stale_twin(rid: str, age_s: float) -> ChaosInjector:
+    """Age the twin past freshness bounds; clear re-syncs it."""
+
+    def clear(orch: Orchestrator) -> None:
+        tw = orch.twins.get(rid)
+        if tw is not None:
+            tw.last_sync = time.time()
+
+    return ChaosInjector(f"stale_twin({rid},{age_s}s)",
+                         lambda o: _stale_twin(o, rid, age_s), clear)
+
+
+def compose(*injectors: ChaosInjector) -> ChaosInjector:
+    """Apply several faults together; clear runs in reverse order."""
+
+    def apply(orch: Orchestrator) -> None:
+        for inj in injectors:
+            inj.apply(orch)
+
+    def clear(orch: Orchestrator) -> None:
+        for inj in reversed(injectors):
+            inj.clear(orch)
+
+    return ChaosInjector("+".join(i.name for i in injectors), apply, clear)
+
+
+@dataclasses.dataclass
+class ChaosScenario:
+    """One cell of a chaos matrix: injector × task template × expectations.
+
+    ``expected`` lists every acceptable per-task outcome (under concurrency
+    the same fault legitimately yields ``success_fallback`` before the
+    breaker trips and ``success_direct`` after quarantine).
+    ``expect_trajectory`` is an in-order subsequence the breaker history of
+    ``breaker_rid`` must eventually contain — e.g. ``("open", "probation",
+    "healthy")`` asserts quarantine AND re-admission after ``clear``.
+    """
+
+    name: str
+    injector: ChaosInjector
+    template: Callable[[int], TaskRequest]
+    expected: Tuple[str, ...]
+    n_tasks: int = 6
+    target_hint: str = ""
+    breaker_rid: str = ""
+    expect_trajectory: Tuple[str, ...] = ()
+
+
+def scenario_matrix(injectors: Sequence[ChaosInjector],
+                    templates: Sequence[Tuple[str, Callable[[int], TaskRequest]]],
+                    expected: Callable[[str, str], Tuple[str, ...]],
+                    **kw) -> List[ChaosScenario]:
+    """Cross product helper: every injector against every named template;
+    ``expected(injector_name, template_name)`` supplies the outcome set."""
+    return [
+        ChaosScenario(name=f"{inj.name}x{tname}", injector=inj,
+                      template=tmpl, expected=tuple(expected(inj.name, tname)),
+                      **kw)
+        for inj in injectors for tname, tmpl in templates
+    ]
+
+
+def _vector_task(i: int) -> TaskRequest:
+    return TaskRequest(function="inference", input_modality="vector",
+                       output_modality="vector",
+                       payload=[0.1, 0.2, 0.3, 0.4],
+                       required_telemetry=("execution_ms",))
+
+
+def _directed_telemetry_template(rid: str) -> Callable[[int], TaskRequest]:
+    """Directed tasks pin the attempt to ``rid`` regardless of ranking —
+    needed to keep exercising a postcondition fault: an undirected task
+    stops reaching the faulty backend after the first twin invalidation."""
+
+    def template(i: int) -> TaskRequest:
+        return TaskRequest(function="inference", input_modality="vector",
+                           output_modality="vector",
+                           payload=[0.5, 0.5, 0.5, 0.5],
+                           backend_preference=rid,
+                           required_telemetry=("execution_ms", "drift_score"))
+
+    return template
+
+
+def _unsupervised_task(i: int) -> TaskRequest:
+    return TaskRequest(function="screening", input_modality="spikes",
+                       output_modality="spikes",
+                       payload={"pattern": [1, 0, 1, 1]},
+                       supervision_available=False,
+                       required_telemetry=("viability",))
+
+
+def _stale_assay_task(i: int) -> TaskRequest:
+    return TaskRequest(function="assay", input_modality="concentration",
+                       output_modality="concentration",
+                       payload={"concentrations": [0.2, 0.4]},
+                       max_twin_age_ms=60_000.0,
+                       required_telemetry=("convergence_ms",))
+
+
+def build_concurrent_campaign(local_fast="memristive-local",
+                              ext_fast="fast-external",
+                              wetware="wetware-synthetic",
+                              chemical="chemical-ode") -> List[ChaosScenario]:
+    """The Table IV fault classes reshaped for a live, loaded control plane:
+    persistent faults must trip the breaker, quarantine must reroute without
+    losing tasks, and clearing the fault must re-admit through probation."""
+    return [
+        ChaosScenario(
+            name="invoke_failure_quarantine_readmit",
+            injector=inject_invoke_failure(local_fast, delay_ms=2.0),
+            template=_vector_task, n_tasks=8,
+            expected=("success_fallback", "success_direct"),
+            breaker_rid=local_fast,
+            expect_trajectory=("open", "probation", "healthy")),
+        ChaosScenario(
+            name="drift_quarantine_readmit",
+            injector=inject_drift(local_fast, 0.8),
+            template=_vector_task, n_tasks=4,
+            expected=("success_direct",),
+            target_hint=ext_fast,
+            breaker_rid=local_fast,
+            expect_trajectory=("open", "probation", "healthy")),
+        ChaosScenario(
+            name="prepare_failure_quarantine_readmit",
+            injector=inject_adapter_fault(local_fast, "prepare_failure"),
+            template=_vector_task, n_tasks=8,
+            expected=("success_fallback", "success_direct"),
+            breaker_rid=local_fast,
+            expect_trajectory=("open", "probation", "healthy")),
+        ChaosScenario(
+            name="wetware_no_supervision_reject",
+            injector=ChaosInjector("none", lambda o: None),
+            template=_unsupervised_task, n_tasks=4,
+            expected=("reject",)),
+        ChaosScenario(
+            name="stale_chemical_twin_reject",
+            injector=inject_stale_twin(chemical, age_s=3600.0),
+            template=_stale_assay_task, n_tasks=4,
+            expected=("reject",)),
+        ChaosScenario(
+            name="missing_telemetry_quarantine_readmit",
+            injector=inject_adapter_fault(local_fast, "drop_telemetry"),
+            template=_directed_telemetry_template(local_fast), n_tasks=8,
+            # fallback while the breaker counts failures, then the open
+            # breaker shields even DIRECTED workflows from the bad backend
+            expected=("success_fallback", "reject"),
+            breaker_rid=local_fast,
+            expect_trajectory=("open", "probation", "healthy")),
+    ]
+
+
+def _is_subsequence(needle: Sequence[str], haystack: Sequence[str]) -> bool:
+    it = iter(haystack)
+    return all(any(x == y for y in it) for x in needle)
+
+
+def run_campaign_concurrent(orch: Orchestrator,
+                            scenarios: List[ChaosScenario], *,
+                            scheduler=None, workers: int = 8,
+                            load_template: Optional[
+                                Callable[[int], TaskRequest]] = None,
+                            load_tasks: int = 0,
+                            trajectory_timeout_s: float = 10.0) -> Dict:
+    """Fire chaos scenarios through the scheduler against ONE shared, live
+    orchestrator — optionally under background load — and check observed
+    outcomes plus breaker-state trajectories.
+
+    Returns ``{"rows": [...], "all_pass": bool, "audit": {...},
+    "load_statuses": {...}}``.  Each row mirrors :func:`run_campaign`'s
+    shape (scenario / expected / observed / pass / mismatch_reason) plus
+    the breaker trajectory observed for ``breaker_rid``.
+
+    Re-admission is *driven*: after ``clear``, a bounded trickle of real
+    tasks keeps flowing until the breaker trajectory contains the expected
+    subsequence (probation probes only progress when tasks arrive).
+    """
+    if orch.health is None:
+        raise ValueError("run_campaign_concurrent needs an orchestrator "
+                         "with its HealthManager enabled")
+    from repro.core.scheduler import ControlPlaneScheduler
+
+    own_scheduler = scheduler is None
+    sched = scheduler or ControlPlaneScheduler(orch, workers=workers)
+    sched.start()
+    load_futures = []
+    per_scenario_load = (load_tasks // max(1, len(scenarios))
+                         if load_template is not None else 0)
+    rows: List[Dict] = []
+    try:
+        for sc in scenarios:
+            for i in range(per_scenario_load):
+                load_futures.append(sched.submit_async(load_template(i)))
+            # a shared live plane carries breaker history across scenarios:
+            # settle the target breaker back to healthy, then scope this
+            # scenario's trajectory assertions to ITS OWN history window so
+            # an earlier scenario's transitions can never satisfy them
+            settled = True
+            if sc.breaker_rid:
+                settled = _settle_healthy(orch, sched, sc,
+                                          timeout_s=trajectory_timeout_s)
+            history_start = (len(orch.health.history(sc.breaker_rid))
+                             if sc.breaker_rid else 0)
+            sc.injector.apply(orch)
+            try:
+                results = sched.submit_many(
+                    [sc.template(i) for i in range(sc.n_tasks)])
+                observed = Counter(classify(r, t) for r, t in results)
+                selected = sorted({r.resource_id for r, _ in results
+                                   if r.resource_id})
+                mismatch = None
+                unexpected = {o: n for o, n in observed.items()
+                              if o not in sc.expected}
+                if unexpected:
+                    mismatch = (f"expected only {sc.expected}, but observed "
+                                f"{unexpected} (selected={selected})")
+                bad_target = [r.resource_id for r, _ in results
+                              if sc.target_hint and r.status == "completed"
+                              and r.resource_id != sc.target_hint]
+                if mismatch is None and bad_target:
+                    mismatch = (f"{len(bad_target)} task(s) completed on "
+                                f"{sorted(set(bad_target))} but target_hint "
+                                f"was {sc.target_hint!r}")
+            finally:
+                sc.injector.clear(orch)
+            trajectory_ok = True
+            if sc.expect_trajectory and sc.breaker_rid:
+                trajectory_ok = _drive_trajectory(
+                    orch, sched, sc, history_start,
+                    timeout_s=trajectory_timeout_s)
+            trajectory = (orch.health.trajectory(
+                sc.breaker_rid)[history_start:] if sc.breaker_rid else [])
+            if mismatch is None and not settled:
+                mismatch = (f"breaker for {sc.breaker_rid!r} could not be "
+                            "settled back to healthy before the scenario")
+            if mismatch is None and not trajectory_ok:
+                mismatch = (f"breaker trajectory {trajectory} never "
+                            f"contained {sc.expect_trajectory} within "
+                            f"{trajectory_timeout_s}s")
+            rows.append({
+                "scenario": sc.name,
+                "injector": sc.injector.name,
+                "expected": list(sc.expected),
+                "observed": dict(observed),
+                "selected": selected,
+                "target_hint": sc.target_hint or None,
+                "breaker_rid": sc.breaker_rid or None,
+                "breaker_trajectory": trajectory,
+                "pass": mismatch is None,
+                "mismatch_reason": mismatch,
+            })
+        load_results = [f.result(timeout=120) for f in load_futures]
+    finally:
+        if own_scheduler:
+            sched.shutdown()
+    return {
+        "rows": rows,
+        "all_pass": all(r["pass"] for r in rows),
+        "audit": orch.health.audit(),
+        "policy_leak_free": orch.policy.fully_released(),
+        "load_statuses": dict(Counter(r.status for r, _ in load_results)),
+    }
+
+
+def _drive_trajectory(orch: Orchestrator, sched, sc: ChaosScenario,
+                      history_start: int, *, timeout_s: float) -> bool:
+    """Trickle real tasks until the breaker history SINCE THIS SCENARIO
+    contains the expected subsequence (probation → healthy needs actual
+    probe traffic)."""
+    deadline = time.monotonic() + timeout_s
+    while not _is_subsequence(
+            sc.expect_trajectory,
+            orch.health.trajectory(sc.breaker_rid)[history_start:]):
+        if time.monotonic() > deadline:
+            return False
+        sched.submit_many([sc.template(-1)])
+        time.sleep(0.01)
+    return True
+
+
+def _settle_healthy(orch: Orchestrator, sched, sc: ChaosScenario, *,
+                    timeout_s: float) -> bool:
+    """Drive the scenario's breaker back to HEALTHY (no fault armed) so the
+    scenario starts from a known state; real tasks feed the probes."""
+    from repro.core.health import BreakerState
+
+    deadline = time.monotonic() + timeout_s
+    while orch.health.state(sc.breaker_rid) is not BreakerState.HEALTHY:
+        if time.monotonic() > deadline:
+            return False
+        sched.submit_many([sc.template(-1)])
+        time.sleep(0.01)
+    return True

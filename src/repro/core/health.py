@@ -1,0 +1,509 @@
+"""Telemetry-driven health manager: per-resource circuit breakers.
+
+The paper's Table IV exercises recovery as a scripted one-shot campaign;
+physical substrates drift, degrade and fail over their *lifetime*, so
+recovery must be a continuous control loop on the live control plane.  The
+HealthManager subscribes to the :class:`TelemetryBus` and drives one
+circuit breaker per resource through
+
+    healthy -> degraded -> open (quarantined) -> probation -> healthy
+
+- **healthy → degraded** — soft signals: moderate drift or a rising error
+  rate.  Degraded resources stay admissible (the matcher's runtime terms
+  already de-prefer them); the state is an early-warning hysteresis band.
+- **→ open** — hard signals: consecutive failures, windowed error rate,
+  drift beyond the matcher's hard limit, a ``failed`` health snapshot, or
+  (when enabled) sustained latency blow-up.  Open means *quarantined*: the
+  matcher refuses the resource outright, so no new session ever starts on
+  it.
+- **open → probation** — after a cooldown (exponential backoff across
+  re-opens) the breaker half-opens.  Probation routes a *bounded trickle*
+  of real tasks through the resource: concurrent probes are capped by the
+  :class:`~repro.core.policy.PolicyManager` probe-slot budget, and the
+  lifecycle plane re-arms a substrate parked in FAILED/NEEDS_RESET before
+  the first probe (recover-on-reopen).
+- **probation → healthy** — enough consecutive probe successes re-admit
+  the resource (counters and cooldown reset).  Any probe failure re-opens
+  the breaker with a longer cooldown.
+
+Thresholds are derived from the resource descriptor
+(:meth:`HealthThresholds.from_descriptor`); every transition is validated
+against :data:`LEGAL_BREAKER` and recorded (timestamped) so tests,
+the chaos harness and ``bench_recovery`` can assert on trajectories and
+measure time-to-quarantine / time-to-readmit.  All state is guarded by one
+reentrant lock; telemetry events are emitted *outside* the lock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+import threading
+
+from repro.core.telemetry import TelemetryBus, TelemetryEvent
+
+
+class BreakerState(enum.Enum):
+    HEALTHY = "healthy"
+    DEGRADED = "degraded"
+    OPEN = "open"             # quarantined: matcher refuses the resource
+    PROBATION = "probation"   # half-open: bounded trickle of real tasks
+
+
+#: legal breaker transitions — the property suite asserts every recorded
+#: transition is in this map no matter what telemetry sequence arrives
+LEGAL_BREAKER: Dict[BreakerState, Tuple[BreakerState, ...]] = {
+    BreakerState.HEALTHY: (BreakerState.DEGRADED, BreakerState.OPEN),
+    BreakerState.DEGRADED: (BreakerState.HEALTHY, BreakerState.OPEN),
+    BreakerState.OPEN: (BreakerState.PROBATION,),
+    BreakerState.PROBATION: (BreakerState.HEALTHY, BreakerState.OPEN),
+}
+
+
+class BreakerError(RuntimeError):
+    """An internal attempt at an illegal breaker transition (a bug)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthThresholds:
+    """Trip points for one resource's breaker, derived from its descriptor."""
+
+    consecutive_failures_to_open: int = 3
+    window: int = 16                       # outcomes kept for rate estimates
+    min_samples: int = 6                   # rate thresholds need this many
+    error_rate_to_open: float = 0.5
+    error_rate_to_degrade: float = 0.25
+    drift_to_degrade: float = 0.3
+    drift_to_open: float = 0.5             # matches matcher.DRIFT_LIMIT
+    #: multiple of the descriptor's expected latency that trips the breaker
+    #: (None disables latency tripping — physical dwell is often legitimate)
+    latency_factor_to_open: Optional[float] = None
+    expected_latency_ms: float = 1.0
+
+    @classmethod
+    def from_descriptor(cls, desc, **overrides) -> "HealthThresholds":
+        kw = dict(expected_latency_ms=desc.capability.timing.expected_latency_ms)
+        kw.update(overrides)
+        return cls(**kw)
+
+
+@dataclasses.dataclass
+class BreakerTransition:
+    resource_id: str
+    src: str
+    dst: str
+    reason: str
+    at: float                              # manager clock (monotonic)
+
+
+@dataclasses.dataclass
+class AttemptToken:
+    """Handed out by :meth:`HealthManager.begin_attempt`; carries whether the
+    attempt consumed a probation probe slot (must be returned via
+    :meth:`HealthManager.finish_attempt` exactly once) and the breaker state
+    at issuance — the quarantine audit trips on any token issued while
+    OPEN, independently of the refusal gate."""
+
+    resource_id: str
+    probe: bool = False
+    finished: bool = False
+    issued_state: str = BreakerState.HEALTHY.value
+
+
+class _Breaker:
+    """Per-resource mutable breaker record (internal, lock-protected)."""
+
+    def __init__(self, thresholds: HealthThresholds, cooldown_s: float):
+        self.state = BreakerState.HEALTHY
+        self.thresholds = thresholds
+        self.outcomes: deque = deque(maxlen=thresholds.window)
+        self.latencies: deque = deque(maxlen=thresholds.window)
+        self.consecutive_failures = 0
+        self.last_drift = 0.0
+        self.opened_at: Optional[float] = None
+        self.base_cooldown_s = cooldown_s
+        self.cooldown_s = cooldown_s
+        self.probe_successes = 0
+        self.open_reason = ""
+        #: False from half-open until recover-on-reopen completed — probes
+        #: are refused meanwhile, so no session ever runs on un-rearmed
+        #: hardware and the recoverer never races an early probe
+        self.rearmed = True
+
+    def error_rate(self) -> float:
+        if not self.outcomes:
+            return 0.0
+        return 1.0 - (sum(self.outcomes) / len(self.outcomes))
+
+
+class HealthManager:
+    """Continuous, concurrency-safe recovery loop over the telemetry plane.
+
+    Construction wires a bus subscription (snapshot/health events feed the
+    drift path); attempt outcomes are reported explicitly by the
+    orchestrator via :meth:`begin_attempt` / :meth:`finish_attempt`, which
+    also enforce the quarantine ("no session starts while open") and the
+    probation trickle budget.
+    """
+
+    def __init__(self, bus: TelemetryBus, policy, registry=None, *,
+                 cooldown_s: float = 5.0,
+                 cooldown_backoff: float = 2.0,
+                 cooldown_max_s: float = 60.0,
+                 probe_budget: int = 1,
+                 probes_to_close: int = 3,
+                 thresholds: Optional[Dict] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 recoverer: Optional[Callable[[str], bool]] = None):
+        self.bus = bus
+        self.policy = policy
+        self.registry = registry
+        self.cooldown_s = cooldown_s
+        self.cooldown_backoff = cooldown_backoff
+        self.cooldown_max_s = cooldown_max_s
+        self.probe_budget = max(1, probe_budget)
+        self.probes_to_close = max(1, probes_to_close)
+        self._threshold_overrides = dict(thresholds or {})
+        self.clock = clock
+        self.recoverer = recoverer
+        self._breakers: Dict[str, _Breaker] = {}
+        self._history: Dict[str, List[BreakerTransition]] = {}
+        self._lock = threading.RLock()
+        # audit counters for the chaos harness / stress suite
+        self._refused_while_open = 0
+        self._refused_probe_budget = 0
+        self._refused_awaiting_rearm = 0
+        self._started_while_open = 0       # MUST stay 0: quarantine invariant
+        bus.subscribe(self._on_event)
+
+    # -- breaker bookkeeping --------------------------------------------------
+    def _breaker(self, rid: str) -> _Breaker:
+        br = self._breakers.get(rid)
+        if br is None:
+            th = HealthThresholds(**self._threshold_overrides)
+            if self.registry is not None:
+                desc = self.registry.get(rid)
+                if desc is not None:
+                    th = HealthThresholds.from_descriptor(
+                        desc, **self._threshold_overrides)
+            br = self._breakers[rid] = _Breaker(th, self.cooldown_s)
+            self._history.setdefault(rid, [])
+        return br
+
+    def _transition(self, rid: str, br: _Breaker, dst: BreakerState,
+                    reason: str, pending: List[BreakerTransition]) -> None:
+        src = br.state
+        if dst is src:
+            return
+        if dst not in LEGAL_BREAKER[src]:
+            raise BreakerError(
+                f"illegal breaker transition {src.value} -> {dst.value} "
+                f"for {rid} ({reason!r})")
+        br.state = dst
+        tr = BreakerTransition(rid, src.value, dst.value, reason, self.clock())
+        self._history[rid].append(tr)
+        pending.append(tr)
+
+    def _emit(self, pending: List[BreakerTransition]) -> None:
+        for tr in pending:
+            self.bus.emit(TelemetryEvent(
+                tr.resource_id, "breaker",
+                {"from": tr.src, "to": tr.dst, "reason": tr.reason}))
+
+    def _open(self, rid: str, br: _Breaker, reason: str,
+              pending: List[BreakerTransition], reopen: bool = False) -> None:
+        self._transition(rid, br, BreakerState.OPEN, reason, pending)
+        br.opened_at = self.clock()
+        br.open_reason = reason
+        br.probe_successes = 0
+        br.consecutive_failures = 0
+        br.outcomes.clear()
+        br.latencies.clear()
+        if reopen:
+            br.cooldown_s = min(self.cooldown_max_s,
+                                br.cooldown_s * self.cooldown_backoff)
+
+    def _close(self, rid: str, br: _Breaker, reason: str,
+               pending: List[BreakerTransition]) -> None:
+        self._transition(rid, br, BreakerState.HEALTHY, reason, pending)
+        br.cooldown_s = br.base_cooldown_s
+        br.opened_at = None
+        br.open_reason = ""
+        br.probe_successes = 0
+        br.consecutive_failures = 0
+        br.outcomes.clear()
+        br.latencies.clear()
+
+    def _maybe_promote(self, rid: str, br: _Breaker,
+                       pending: List[BreakerTransition]) -> None:
+        """OPEN → PROBATION once the cooldown elapsed (half-open)."""
+        if br.state is not BreakerState.OPEN or br.opened_at is None:
+            return
+        if self.clock() - br.opened_at < br.cooldown_s:
+            return
+        self._transition(rid, br, BreakerState.PROBATION,
+                         f"cooldown {br.cooldown_s:.2f}s elapsed", pending)
+        br.probe_successes = 0
+        br.rearmed = self.recoverer is None    # gate probes until re-armed
+
+    # -- telemetry coupling ---------------------------------------------------
+    def _on_event(self, ev: TelemetryEvent) -> None:
+        if ev.kind not in ("health",):
+            return
+        drift = ev.fields.get("drift_score")
+        status = ev.fields.get("health_status")
+        pending: List[BreakerTransition] = []
+        with self._lock:
+            br = self._breaker(ev.resource_id)
+            if drift is not None:
+                br.last_drift = float(drift)
+            th = br.thresholds
+            if br.state in (BreakerState.HEALTHY, BreakerState.DEGRADED):
+                if status == "failed":
+                    self._open(ev.resource_id, br,
+                               "snapshot reported failed health", pending)
+                elif drift is not None and br.last_drift >= th.drift_to_open:
+                    self._open(ev.resource_id, br,
+                               f"drift {br.last_drift:.2f} >= "
+                               f"{th.drift_to_open}", pending)
+                elif (drift is not None
+                      and br.last_drift >= th.drift_to_degrade
+                      and br.state is BreakerState.HEALTHY):
+                    self._transition(ev.resource_id, br, BreakerState.DEGRADED,
+                                     f"drift {br.last_drift:.2f} >= "
+                                     f"{th.drift_to_degrade}", pending)
+                elif (br.state is BreakerState.DEGRADED and drift is not None
+                      and br.last_drift < th.drift_to_degrade
+                      and br.error_rate() < th.error_rate_to_degrade):
+                    self._close(ev.resource_id, br,
+                                f"drift recovered ({br.last_drift:.2f})",
+                                pending)
+        self._emit(pending)
+
+    # -- admission ------------------------------------------------------------
+    def admissible(self, rid: str) -> Tuple[bool, str]:
+        """Matcher-facing admission term.  OPEN resources are quarantined;
+        PROBATION resources are admissible only once re-armed and while a
+        probe slot is free (non-reserving check — the reservation happens
+        at attempt time).
+
+        A cooled-down breaker is lazily promoted here, which runs one
+        recover-on-reopen (adapter reset) on the calling thread — at most
+        once per open→probation cycle.  Serial deployments need this (no
+        background ticker exists); under a scheduler the ticker usually
+        promotes first, keeping resets off the matching path."""
+        pending: List[BreakerTransition] = []
+        with self._lock:
+            br = self._breaker(rid)
+            self._maybe_promote(rid, br, pending)
+        self._emit(pending)
+        self._recover_if_promoted(rid, pending)
+        with self._lock:
+            br = self._breaker(rid)
+            state, reason, rearmed = br.state, br.open_reason, br.rearmed
+        if state is BreakerState.OPEN:
+            return False, f"circuit open (quarantined): {reason}"
+        if state is BreakerState.PROBATION:
+            if not rearmed:
+                return False, "probation awaiting re-arm"
+            if self.policy.probes_held(rid) >= self.probe_budget:
+                return False, "probation trickle budget exhausted"
+        return True, "ok"
+
+    def _recover_if_promoted(self, rid: str,
+                             pending: List[BreakerTransition]) -> None:
+        """Recover-on-reopen: when a breaker just half-opened, re-arm the
+        substrate (lifecycle recovery + fresh snapshot) before probing.
+        Runs outside the manager lock; a failing recovery re-opens."""
+        if self.recoverer is None:
+            return
+        if not any(tr.dst == BreakerState.PROBATION.value for tr in pending):
+            return
+        try:
+            recovered = self.recoverer(rid)
+            why = "" if recovered else "recover-on-reopen unavailable " \
+                                      "(busy or unregistered substrate)"
+        except Exception as e:                       # noqa: BLE001
+            recovered, why = False, f"recover-on-reopen failed: {e}"
+        if recovered:
+            with self._lock:
+                br = self._breaker(rid)
+                if br.state is BreakerState.PROBATION:
+                    br.rearmed = True      # probes may flow now
+            return
+        # probing un-rearmed hardware would break the re-arm guarantee:
+        # go back to OPEN with backoff and retry the recovery later
+        reopen_pending: List[BreakerTransition] = []
+        with self._lock:
+            br = self._breaker(rid)
+            if br.state is BreakerState.PROBATION:
+                self._open(rid, br, why, reopen_pending, reopen=True)
+        self._emit(reopen_pending)
+
+    def tick(self) -> None:
+        """Background probe tick (driven by the scheduler): promote every
+        cooled-down OPEN breaker into PROBATION.  Time comes from the
+        injectable constructor ``clock``."""
+        pending: List[BreakerTransition] = []
+        with self._lock:
+            for rid, br in list(self._breakers.items()):
+                self._maybe_promote(rid, br, pending)
+        self._emit(pending)
+        # group recoveries per promoted resource (outside the lock)
+        for rid in {tr.resource_id for tr in pending
+                    if tr.dst == BreakerState.PROBATION.value}:
+            self._recover_if_promoted(
+                rid, [tr for tr in pending if tr.resource_id == rid])
+
+    # -- attempt lifecycle (orchestrator-facing) ------------------------------
+    def begin_attempt(self, rid: str
+                      ) -> Tuple[bool, Optional[AttemptToken], str]:
+        """Gate one execution attempt.  Returns ``(allowed, token, reason)``;
+        the token must be handed back through :meth:`finish_attempt`."""
+        pending: List[BreakerTransition] = []
+        try:
+            with self._lock:
+                br = self._breaker(rid)
+                self._maybe_promote(rid, br, pending)
+                if br.state is BreakerState.OPEN:
+                    self._refused_while_open += 1
+                    return False, None, \
+                        f"circuit open (quarantined): {br.open_reason}"
+                if br.state is BreakerState.PROBATION:
+                    if not br.rearmed:
+                        self._refused_awaiting_rearm += 1
+                        return False, None, "probation awaiting re-arm"
+                    if not self.policy.acquire_probe(rid, self.probe_budget):
+                        self._refused_probe_budget += 1
+                        return False, None, "probation trickle budget exhausted"
+                    return True, AttemptToken(rid, probe=True,
+                                              issued_state=br.state.value), "ok"
+                return True, AttemptToken(rid, probe=False,
+                                          issued_state=br.state.value), "ok"
+        finally:
+            self._emit(pending)
+            self._recover_if_promoted(rid, pending)
+
+    def finish_attempt(self, token: Optional[AttemptToken], ok: bool,
+                       kind: str = "", latency_ms: Optional[float] = None
+                       ) -> None:
+        """Report the outcome of an attempt started with
+        :meth:`begin_attempt` (probe slots are always returned)."""
+        if token is None or token.finished:
+            return
+        token.finished = True
+        rid = token.resource_id
+        pending: List[BreakerTransition] = []
+        try:
+            with self._lock:
+                br = self._breaker(rid)
+                if token.issued_state == BreakerState.OPEN.value:
+                    # quarantine invariant violated: some path handed out a
+                    # token while the breaker was open (begin_attempt must
+                    # refuse) — record it so audits catch the regression
+                    self._started_while_open += 1
+                th = br.thresholds
+                br.outcomes.append(1 if ok else 0)
+                if latency_ms is not None:
+                    br.latencies.append(latency_ms)
+                if ok:
+                    br.consecutive_failures = 0
+                else:
+                    br.consecutive_failures += 1
+
+                if token.probe and br.state is BreakerState.PROBATION:
+                    if ok:
+                        br.probe_successes += 1
+                        if br.probe_successes >= self.probes_to_close:
+                            self._close(rid, br,
+                                        f"{br.probe_successes} probe "
+                                        "successes", pending)
+                    else:
+                        self._open(rid, br, f"probe failed: {kind}",
+                                   pending, reopen=True)
+                    return
+
+                if br.state not in (BreakerState.HEALTHY,
+                                    BreakerState.DEGRADED):
+                    return                 # tripped mid-flight: no-op
+                if not ok:
+                    n = len(br.outcomes)
+                    rate = br.error_rate()
+                    if br.consecutive_failures >= \
+                            th.consecutive_failures_to_open:
+                        self._open(rid, br,
+                                   f"{br.consecutive_failures} consecutive "
+                                   f"failures ({kind})", pending)
+                    elif n >= th.min_samples and rate >= th.error_rate_to_open:
+                        self._open(rid, br,
+                                   f"error rate {rate:.2f} over {n} attempts",
+                                   pending)
+                    elif (rate >= th.error_rate_to_degrade
+                          and br.state is BreakerState.HEALTHY):
+                        self._transition(rid, br, BreakerState.DEGRADED,
+                                         f"error rate {rate:.2f}", pending)
+                else:
+                    if self._latency_tripped(br):
+                        self._open(rid, br, "sustained latency blow-up",
+                                   pending)
+                    elif (br.state is BreakerState.DEGRADED
+                          and br.last_drift < th.drift_to_degrade
+                          and len(br.outcomes) >= th.min_samples
+                          and br.error_rate() < th.error_rate_to_degrade):
+                        self._close(rid, br, "error rate recovered", pending)
+        finally:
+            if token.probe:
+                self.policy.release_probe(rid)
+            self._emit(pending)
+
+    def _latency_tripped(self, br: _Breaker) -> bool:
+        th = br.thresholds
+        if th.latency_factor_to_open is None:
+            return False
+        if len(br.latencies) < th.min_samples:
+            return False
+        xs = sorted(br.latencies)
+        p50 = xs[len(xs) // 2]
+        return p50 > th.latency_factor_to_open * th.expected_latency_ms
+
+    # -- observability --------------------------------------------------------
+    def state(self, rid: str) -> BreakerState:
+        with self._lock:
+            return self._breaker(rid).state
+
+    def history(self, rid: str) -> List[BreakerTransition]:
+        with self._lock:
+            return list(self._history.get(rid, []))
+
+    def trajectory(self, rid: str) -> List[str]:
+        """Destination states in transition order (starts implicit healthy)."""
+        return [tr.dst for tr in self.history(rid)]
+
+    def audit(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "refused_while_open": self._refused_while_open,
+                "refused_probe_budget": self._refused_probe_budget,
+                "refused_awaiting_rearm": self._refused_awaiting_rearm,
+                "started_while_open": self._started_while_open,
+                "probes_outstanding": sum(
+                    self.policy.probe_outstanding().values()),
+            }
+
+    def status(self) -> Dict[str, Dict]:
+        with self._lock:
+            out = {}
+            for rid, br in self._breakers.items():
+                out[rid] = {
+                    "state": br.state.value,
+                    "error_rate": round(br.error_rate(), 4),
+                    "consecutive_failures": br.consecutive_failures,
+                    "last_drift": round(br.last_drift, 4),
+                    "cooldown_s": br.cooldown_s,
+                    "open_reason": br.open_reason or None,
+                    "transitions": len(self._history.get(rid, [])),
+                }
+            return out

@@ -182,6 +182,20 @@ class LifecycleManager:
             self.transition(rid, LifecycleState.RECOVERING, mode)
             self.transition(rid, LifecycleState.READY, f"{mode}-done")
 
+    def reopen(self, rid: str, mode: str = "reset") -> bool:
+        """Recover-on-reopen for the health manager: when a circuit breaker
+        half-opens, a substrate parked in NEEDS_RESET or FAILED is recovered
+        before the first probation probe — but never while sessions are
+        still on the hardware.  Returns True iff a recovery ran."""
+        with self.lock(rid):
+            if self.active_sessions(rid) > 0:
+                return False
+            if self.state(rid) in (LifecycleState.NEEDS_RESET,
+                                   LifecycleState.FAILED):
+                self.recover(rid, mode)
+                return True
+            return False
+
 
 class LifecycleError(RuntimeError):
     pass

@@ -74,12 +74,15 @@ class Matcher:
 
     def __init__(self, registry: CapabilityRegistry, bus: TelemetryBus,
                  twins: TwinSyncManager, policy: PolicyManager,
-                 weights: MatchWeights = MatchWeights()):
+                 weights: MatchWeights = MatchWeights(), health=None):
         self.registry = registry
         self.bus = bus
         self.twins = twins
         self.policy = policy
         self.w = weights
+        #: optional HealthManager: quarantined (open-breaker) resources are
+        #: inadmissible, probation ones only while probe budget remains
+        self.health = health
         self._cache_lock = threading.Lock()
         self._static_cache: Dict[Tuple, Dict[str, Tuple]] = {}
 
@@ -148,6 +151,10 @@ class Matcher:
         pol = self.policy.admit(desc, task)
         if not pol:
             return False, pol.reason
+        if self.health is not None:
+            ok, why = self.health.admissible(desc.resource_id)
+            if not ok:
+                return False, why
         snap = self.bus.snapshot(desc.resource_id)
         if snap is not None:
             if snap.health_status == "failed" or snap.readiness == "down":

@@ -21,6 +21,7 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.descriptors import ResourceDescriptor
+from repro.core.health import HealthManager
 from repro.core.invocation import (InvocationError, InvocationManager,
                                    InvocationResult)
 from repro.core.lifecycle import LifecycleManager
@@ -71,17 +72,52 @@ class Orchestrator:
 
     def __init__(self, registry: Optional[CapabilityRegistry] = None,
                  matcher_cls=Matcher,
-                 acquire_timeout_s: float = DEFAULT_ACQUIRE_TIMEOUT_S):
+                 acquire_timeout_s: float = DEFAULT_ACQUIRE_TIMEOUT_S,
+                 health=True):
         self.registry = registry or CapabilityRegistry()
         self.bus = TelemetryBus()
         self.twins = TwinSyncManager(self.bus)
         self.policy = PolicyManager()
         self.lifecycle = LifecycleManager()
         self.acquire_timeout_s = acquire_timeout_s
+        # telemetry-driven recovery loop: ``health=True`` (default) builds a
+        # HealthManager with default thresholds, a dict forwards constructor
+        # overrides (cooldown_s, probes_to_close, ...), False disables it
+        self.health: Optional[HealthManager] = None
+        if health is not False and health is not None:
+            kw = dict(health) if isinstance(health, dict) else {}
+            self.health = HealthManager(self.bus, self.policy, self.registry,
+                                        recoverer=self._reopen_resource, **kw)
         self.matcher: Matcher = matcher_cls(self.registry, self.bus,
-                                            self.twins, self.policy)
+                                            self.twins, self.policy,
+                                            health=self.health)
         self.invocations = InvocationManager(self.registry, self.lifecycle,
                                              self.bus)
+
+    def _reopen_resource(self, rid: str) -> bool:
+        """Recover-on-reopen hook for the health manager: re-arm a substrate
+        whose breaker just half-opened.  A physical reset runs whenever the
+        substrate is idle — a breaker trips on *misbehavior* (error rate,
+        drift, postconditions), which lifecycle state alone may not reflect
+        (a drifted crossbar sits READY) — plus the lifecycle recovery when
+        it is parked in NEEDS_RESET/FAILED.  Never resets under live
+        sessions.  A fresh runtime snapshot is published so the matcher
+        sees post-reset drift/health before the first probation probe."""
+        desc = self.registry.get(rid)
+        adapter = self.registry.adapter(rid)
+        if desc is None or adapter is None:
+            return False
+        modes = desc.capability.lifecycle.recovery_modes
+        mode = modes[0] if modes else "soft"
+        with self.lifecycle.lock(rid):
+            if self.lifecycle.active_sessions(rid) > 0:
+                return False
+            adapter.reset(mode)
+            self.lifecycle.reopen(rid, mode)
+        snap = adapter.snapshot()
+        if snap is not None:
+            self.bus.update_snapshot(snap)
+        return True
 
     # -- postconditions -------------------------------------------------------
     def _postconditions(self, result: InvocationResult, session) -> Optional[str]:
@@ -237,8 +273,18 @@ class Orchestrator:
                 trace.add_queue_wait_ms(wait_ms)
                 return None, "concurrency limit", spill
             trace.add_queue_wait_ms(wait_ms)
+            # breaker gate: a quarantined resource refuses outright (the
+            # matcher raced a trip), probation reserves a probe slot so the
+            # re-admission trickle stays bounded
+            health_token = None
+            if self.health is not None:
+                allowed, health_token, why = self.health.begin_attempt(rid)
+                if not allowed:
+                    self.policy.release(desc)
+                    return None, why, None
             t0 = time.perf_counter()
             failure = None
+            attempt_ok = False
             try:
                 session = self.invocations.open_session(task, desc)
                 self.invocations.prepare(session)
@@ -248,10 +294,16 @@ class Orchestrator:
                     failure = f"postcondition: {post}"
                     result.status = "invalidated"
                     self.twins.invalidate(rid, post)
+                attempt_ok = failure is None
             except InvocationError as e:
                 failure = f"{e.phase} failure: {e}"
             finally:
                 self.policy.release(desc)
+                if self.health is not None:
+                    self.health.finish_attempt(
+                        health_token, ok=attempt_ok,
+                        kind=failure or "exception",
+                        latency_ms=(time.perf_counter() - t0) * 1e3)
             elapsed_ms = (time.perf_counter() - t0) * 1e3
             if result is not None:
                 # control overhead excludes the backend execution itself

@@ -34,6 +34,7 @@ class PolicyManager:
     def __init__(self):
         self._locks: Dict[str, threading.Semaphore] = {}
         self._held: Dict[str, int] = {}
+        self._probes: Dict[str, int] = {}
         self._lock = threading.Lock()
 
     def _sem(self, desc: ResourceDescriptor) -> threading.Semaphore:
@@ -88,6 +89,32 @@ class PolicyManager:
                 0, self._held.get(desc.resource_id, 0) - 1)
         self._sem(desc).release()
 
+    # -- probation slot budget (health manager trickle) -----------------------
+    def acquire_probe(self, resource_id: str, budget: int) -> bool:
+        """Reserve one probation probe slot; the health manager routes a
+        bounded trickle of real tasks through a half-open resource, capped
+        at ``budget`` concurrent probes per resource."""
+        with self._lock:
+            held = self._probes.get(resource_id, 0)
+            if held >= max(1, budget):
+                return False
+            self._probes[resource_id] = held + 1
+            return True
+
+    def release_probe(self, resource_id: str) -> None:
+        with self._lock:
+            self._probes[resource_id] = max(
+                0, self._probes.get(resource_id, 0) - 1)
+
+    def probes_held(self, resource_id: str) -> int:
+        with self._lock:
+            return self._probes.get(resource_id, 0)
+
+    def probe_outstanding(self) -> Dict[str, int]:
+        """Currently-held probe slot count per resource (non-zero only)."""
+        with self._lock:
+            return {rid: n for rid, n in self._probes.items() if n > 0}
+
     # -- leak auditing --------------------------------------------------------
     def outstanding(self) -> Dict[str, int]:
         """Currently-held slot count per resource (non-zero entries only)."""
@@ -95,5 +122,6 @@ class PolicyManager:
             return {rid: n for rid, n in self._held.items() if n > 0}
 
     def fully_released(self) -> bool:
-        """True iff every acquired slot has been released (no leaks)."""
-        return not self.outstanding()
+        """True iff every acquired slot — concurrency AND probation probe —
+        has been released (no leaks)."""
+        return not self.outstanding() and not self.probe_outstanding()

@@ -52,12 +52,19 @@ class ControlPlaneScheduler:
 
     def __init__(self, orchestrator: Orchestrator, workers: int = 8,
                  queue_size: int = 256,
-                 default_deadline_s: Optional[float] = None):
+                 default_deadline_s: Optional[float] = None,
+                 health_tick_interval_s: float = 0.05):
         if workers < 1:
             raise ValueError("workers must be >= 1")
         self.orchestrator = orchestrator
         self.workers = workers
         self.default_deadline_s = default_deadline_s
+        # background probe cadence for the health manager (0 disables):
+        # cooled-down breakers half-open on the tick, not only when a task
+        # happens to rank the resource
+        self.health_tick_interval_s = health_tick_interval_s
+        self._health_stop = threading.Event()
+        self._health_thread: Optional[threading.Thread] = None
         self._queue: "queue.Queue" = queue.Queue(maxsize=queue_size)
         self._threads: List[threading.Thread] = []
         self._started = False
@@ -85,6 +92,12 @@ class ControlPlaneScheduler:
                                      name=f"phys-mcp-worker-{i}")
                 t.start()
                 self._threads.append(t)
+            if (self.health_tick_interval_s
+                    and getattr(self.orchestrator, "health", None) is not None):
+                self._health_thread = threading.Thread(
+                    target=self._health_probe_loop, daemon=True,
+                    name="phys-mcp-health-ticker")
+                self._health_thread.start()
         return self
 
     def __enter__(self) -> "ControlPlaneScheduler":
@@ -103,12 +116,26 @@ class ControlPlaneScheduler:
             self._closed = True
             started = self._started
             threads = list(self._threads)
+        self._health_stop.set()
         if started:
             for _ in range(self.workers):
                 self._queue.put((_STOP, None, None, 0.0))
             if wait:
                 for t in threads:
                     t.join()
+                if self._health_thread is not None:
+                    self._health_thread.join()
+
+    def _health_probe_loop(self) -> None:
+        """Background probe ticks: periodically promote cooled-down OPEN
+        breakers to PROBATION so re-admission does not depend on task
+        arrival timing.  Exceptions never kill the ticker."""
+        health = self.orchestrator.health
+        while not self._health_stop.wait(self.health_tick_interval_s):
+            try:
+                health.tick()
+            except Exception:              # noqa: BLE001 — keep ticking
+                pass
 
     # -- submission -----------------------------------------------------------
     def submit_async(self, task: TaskRequest,

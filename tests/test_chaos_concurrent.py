@@ -1,0 +1,136 @@
+"""Concurrent chaos: recovery exercised on a live, loaded control plane.
+
+- 8 producer threads × ~100 tasks against ONE shared orchestrator while a
+  fault is injected mid-stream: the breaker must quarantine the faulty
+  substrate, no session may start on it while quarantined, no semaphore
+  (or probe slot) may leak, and every task must still resolve.
+- ``run_campaign_concurrent``: the full scenario matrix passes on a shared
+  loaded orchestrator, with breaker trajectories asserting quarantine AND
+  probation re-admission.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import ControlPlaneScheduler, Orchestrator, TaskRequest
+from repro.core.faults import (build_concurrent_campaign, inject_drift,
+                               inject_invoke_failure, run_campaign_concurrent)
+from repro.core.health import BreakerState
+from tests.test_scheduler_concurrency import (NORMALIZED_STATUSES,
+                                              SyntheticAdapter)
+
+pytestmark = pytest.mark.chaos
+
+
+def _task(i: int) -> TaskRequest:
+    # 4-wide payload: the crossbar/HTTP backends expect a length-4 vector
+    return TaskRequest(function="inference", input_modality="vector",
+                       output_modality="vector",
+                       payload=[0.2, 0.4, 0.1, 0.3])
+
+
+def test_stress_8_threads_with_midstream_fault_quarantines_and_recovers():
+    orch = Orchestrator(health={"cooldown_s": 60.0})   # no auto re-admission
+    flaky = SyntheticAdapter("syn-flaky", 4, dwell_s=0.001)
+    stable = SyntheticAdapter("syn-stable", 4, dwell_s=0.001)
+    orch.register(flaky)           # registered first → preferred while tied
+    orch.register(stable)
+
+    fail = {"on": False}
+    inner = SyntheticAdapter.invoke
+
+    def flaky_invoke(session):
+        if fail["on"]:
+            raise RuntimeError("chaos: mid-stream invoke failure")
+        return inner(flaky, session)
+
+    flaky.invoke = flaky_invoke
+
+    results = []
+    res_lock = threading.Lock()
+    with ControlPlaneScheduler(orch, workers=12, queue_size=128) as sched:
+        def producer(k):
+            futs = []
+            for i in range(13):
+                if k == 0 and i == 4:
+                    fail["on"] = True          # fault lands mid-stream
+                futs.append(sched.submit_async(_task(k * 100 + i)))
+                time.sleep(0.001)
+            got = [f.result(timeout=60) for f in futs]
+            with res_lock:
+                results.extend(got)
+
+        threads = [threading.Thread(target=producer, args=(k,))
+                   for k in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert sched.drain(timeout=60)
+
+        assert orch.health.state("syn-flaky") is BreakerState.OPEN
+        # zero sessions on the quarantined substrate: its invocation count
+        # must stay frozen across a fresh burst of tasks
+        n_frozen = flaky.invocations
+        more = sched.submit_many([_task(1000 + i) for i in range(30)])
+        assert flaky.invocations == n_frozen
+        assert all(r.status == "completed" for r, _ in more)
+        assert {r.resource_id for r, _ in more} == {"syn-stable"}
+
+    assert len(results) == 8 * 13
+    assert {r.status for r, _ in results} <= NORMALIZED_STATUSES
+    # the campaign loses nothing: every task completed (fallback covered
+    # the fault window; the breaker only changes WHERE tasks run)
+    assert all(r.status == "completed" for r, _ in results), \
+        {r.status for r, _ in results}
+    sids = [r.session_id for r, _ in results]
+    assert len(set(sids)) == len(sids)
+    # no semaphore or probe-slot leaks, and the quarantine audit is clean
+    assert orch.policy.fully_released(), orch.policy.outstanding()
+    assert orch.health.audit()["started_while_open"] == 0
+    for a in (flaky, stable):
+        assert a.peak_in_flight <= a.max_concurrent
+        assert orch.lifecycle.active_sessions(a.resource_id) == 0
+
+
+def test_concurrent_campaign_matrix_passes_on_shared_loaded_plane(
+        fast_service):
+    from repro.substrates import standard_testbed
+
+    orch = Orchestrator(health={"cooldown_s": 0.2, "probes_to_close": 2})
+    standard_testbed(orch, http_service=fast_service)
+    report = run_campaign_concurrent(
+        orch, build_concurrent_campaign(), workers=8,
+        load_template=_task, load_tasks=48)
+    assert report["all_pass"], \
+        [r for r in report["rows"] if not r["pass"]]
+    # observed-vs-expected table matches scenario by scenario
+    for row in report["rows"]:
+        assert set(row["observed"]) <= set(row["expected"]), row
+        assert row["mismatch_reason"] is None
+    # quarantine + re-admission trajectories were really exercised
+    readmitted = [r for r in report["rows"] if r["breaker_rid"]]
+    assert len(readmitted) == 4
+    # zero tasks started on quarantined resources; nothing leaked
+    assert report["audit"]["started_while_open"] == 0
+    assert report["audit"]["probes_outstanding"] == 0
+    assert report["policy_leak_free"]
+    assert set(report["load_statuses"]) == {"completed"}
+
+
+def test_injectors_compose_and_clear():
+    orch = Orchestrator(health=False)
+    a = SyntheticAdapter("syn-a", 2, dwell_s=0.0)
+    orch.register(a)
+    from repro.core.faults import compose
+    inj = compose(inject_drift("syn-a", 0.9),
+                  inject_invoke_failure("syn-a"))
+    inj.apply(orch)
+    assert orch.bus.snapshot("syn-a").drift_score == 0.9
+    with pytest.raises(RuntimeError, match="chaos"):
+        a.invoke(None)
+    inj.clear(orch)
+    assert orch.bus.snapshot("syn-a").drift_score == 0.0
+    res, _ = orch.submit(_task(1))
+    assert res.status == "completed"

@@ -20,6 +20,8 @@ from repro.models.model import _decoder, _encoder, _logit_kernel, _sinusoid, _em
 from repro.models.common import init_params
 from repro.serving.cache_utils import extend_cache
 
+pytestmark = pytest.mark.slow    # heavy suite: excluded from make test-fast
+
 # fp32 reduced configs keep the comparison numerically clean
 PARITY_ARCHS = ["internlm2-20b", "qwen2.5-32b", "command-r-35b",
                 "recurrentgemma-9b", "rwkv6-7b", "deepseek-v2-236b",

@@ -1,4 +1,13 @@
-"""Table IV fault campaign: five scenarios, expected control-plane behavior."""
+"""Table IV fault campaign: five scenarios, expected control-plane behavior.
+
+Includes regressions for the serial fresh-orchestrator path: the exact five
+paper scenarios keep their expected outcomes with the HealthManager live,
+rows carry actionable ``mismatch_reason`` strings, and the campaign leaks
+no threads or resources across scenarios."""
+import dataclasses
+import threading
+import time
+
 from repro.core.faults import build_campaign, run_campaign
 from tests.conftest import make_testbed_factory
 
@@ -31,3 +40,65 @@ def test_rejects_happen_before_execution(fast_service):
         r = by_name[sc]
         assert r["observed"] == "reject"
         assert r["attempts"] == []      # nothing touched the substrate
+
+
+def test_serial_campaign_exact_paper_outcomes(fast_service):
+    """Regression: the 5 paper scenarios produce EXACTLY their Table IV
+    expected outcomes (not merely pass=True) on the serial path."""
+    results = run_campaign(make_testbed_factory(fast_service),
+                           build_campaign())
+    expected = {
+        "drifted_local_fast": "success_direct",
+        "local_prepare_failure": "success_fallback",
+        "wetware_no_supervision": "reject",
+        "stale_chemical_twin": "reject",
+        "missing_telemetry": "success_fallback",
+    }
+    assert {r["scenario"]: r["observed"] for r in results} == expected
+    assert all(r["mismatch_reason"] is None for r in results)
+
+
+def test_serial_campaign_leaks_no_threads_or_slots(fast_service):
+    """Each scenario's fresh orchestrator must leave nothing running:
+    thread count is unchanged after the campaign (no scheduler/worker or
+    ticker threads leak across scenarios) and no slots stay held."""
+    factory = make_testbed_factory(fast_service)
+    orchestrators = []
+
+    def tracking_factory():
+        orch = factory()
+        orchestrators.append(orch)
+        return orch
+
+    before = set(threading.enumerate())
+    run_campaign(tracking_factory, build_campaign())
+    # transient threads (e.g. per-request HTTP handlers of the shared test
+    # service) may take a moment to exit; a leaked scheduler worker or
+    # health ticker would block forever and still fail here
+    deadline = time.monotonic() + 5.0
+    while True:
+        leaked = [t for t in set(threading.enumerate()) - before
+                  if t.is_alive()]
+        if not leaked or time.monotonic() > deadline:
+            break
+        time.sleep(0.05)
+    assert not leaked, [t.name for t in leaked]
+    for orch in orchestrators:
+        assert orch.policy.fully_released(), orch.policy.outstanding()
+
+
+def test_mismatch_reason_is_actionable(fast_service):
+    """A failing row must explain itself: wrong outcome and wrong target
+    both produce a populated mismatch_reason (pass stays False)."""
+    scenarios = build_campaign()
+    wrong_outcome = dataclasses.replace(scenarios[0], expected="reject")
+    wrong_target = dataclasses.replace(scenarios[0],
+                                       target_hint="wetware-synthetic")
+    results = run_campaign(make_testbed_factory(fast_service),
+                           [wrong_outcome, wrong_target])
+    assert not results[0]["pass"]
+    assert "expected 'reject'" in results[0]["mismatch_reason"]
+    assert "success_direct" in results[0]["mismatch_reason"]
+    assert not results[1]["pass"]
+    assert "target_hint" in results[1]["mismatch_reason"]
+    assert "fast-external" in results[1]["mismatch_reason"]

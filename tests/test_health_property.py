@@ -1,0 +1,86 @@
+"""Property-based tests (hypothesis) for the recovery subsystem.
+
+1. Breaker legality: NO sequence of telemetry events, attempt outcomes,
+   clock advances and probe ticks may ever produce an illegal breaker
+   transition, and transitions must chain (each src == previous dst).
+2. PolicyManager slot-audit invariants: under any acquire/release
+   interleaving (concurrency slots and probation probe slots),
+   ``outstanding`` matches the model and ``fully_released`` holds exactly
+   when everything acquired has been returned.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policy import PolicyManager
+from tests.test_health_manager import (assert_history_legal,
+                                       run_breaker_sequence)
+from tests.test_scheduler_concurrency import SyntheticAdapter
+
+breaker_op = st.one_of(
+    st.tuples(st.just("outcome"), st.booleans()),
+    st.tuples(st.just("drift"), st.floats(0.0, 1.0)),
+    st.tuples(st.just("advance"), st.floats(0.0, 2.0)),
+    st.tuples(st.just("tick")),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(breaker_op, max_size=80),
+       cooldown=st.floats(0.1, 2.0),
+       probes=st.integers(1, 4))
+def test_breaker_transitions_always_legal(ops, cooldown, probes):
+    """Arbitrary telemetry/outcome/clock sequences: the state machine never
+    leaves the legal transition graph and never leaks a probe slot."""
+    h, history = run_breaker_sequence(ops, cooldown_s=cooldown,
+                                      probes_to_close=probes)
+    assert_history_legal(history)
+    audit = h.audit()
+    assert audit["probes_outstanding"] == 0
+    assert audit["started_while_open"] == 0
+
+
+slot_op = st.one_of(
+    st.tuples(st.just("acquire")),
+    st.tuples(st.just("release")),
+    st.tuples(st.just("acquire_probe"), st.integers(1, 3)),
+    st.tuples(st.just("release_probe")),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(slot_op, max_size=60), max_concurrent=st.integers(1, 4))
+def test_policy_slot_audit_invariants(ops, max_concurrent):
+    """outstanding/fully_released track exactly the acquired-minus-released
+    slots under any interleaving; acquisition respects max_concurrent and
+    probe acquisition respects the probe budget."""
+    pm = PolicyManager()
+    desc = SyntheticAdapter("res", max_concurrent).descriptor()
+    held = 0
+    probes = 0
+    for op in ops:
+        if op[0] == "acquire":
+            got = pm.acquire(desc, timeout_s=0.0)
+            assert got == (held < max_concurrent)
+            held += got
+        elif op[0] == "release" and held > 0:
+            pm.release(desc)
+            held -= 1
+        elif op[0] == "acquire_probe":
+            budget = op[1]
+            got = pm.acquire_probe("res", budget)
+            assert got == (probes < budget)
+            probes += got
+        elif op[0] == "release_probe" and probes > 0:
+            pm.release_probe("res")
+            probes -= 1
+        # audit matches the model at EVERY step, not just at the end
+        assert pm.outstanding().get("res", 0) == held
+        assert pm.probes_held("res") == probes
+        assert pm.fully_released() == (held == 0 and probes == 0)
+    for _ in range(held):
+        pm.release(desc)
+    for _ in range(probes):
+        pm.release_probe("res")
+    assert pm.fully_released()

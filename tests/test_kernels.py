@@ -9,6 +9,8 @@ from repro.kernels.flash_attention.ops import mha, mha_ref
 from repro.kernels.rglru.ops import linear_recurrence, linear_recurrence_ref
 from repro.kernels.rwkv6.ops import time_mix_scan, time_mix_ref
 
+pytestmark = pytest.mark.slow    # heavy suite: excluded from make test-fast
+
 RNG = np.random.default_rng(42)
 
 

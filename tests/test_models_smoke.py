@@ -13,6 +13,8 @@ from repro.models import (build_decode_step, build_prefill_step, count_params,
 from repro.models.common import init_params
 from repro.training.train_step import build_train_step, init_train_state
 
+pytestmark = pytest.mark.slow    # heavy suite: excluded from make test-fast
+
 ARCHS = list_archs()
 
 

@@ -10,6 +10,8 @@ from repro.distributed.sharding import (BASELINE, RECIPES, cache_spec,
 from repro.launch.mesh import make_smoke_mesh
 from repro.roofline.hlo import analyze, parse_module
 
+pytestmark = pytest.mark.slow    # heavy suite: excluded from make test-fast
+
 
 @pytest.fixture(scope="module")
 def mesh22():

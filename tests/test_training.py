@@ -16,6 +16,8 @@ from repro.training.optimizer import apply_updates, global_norm, init_opt_state
 from repro.training.runner import FleetRunner
 from repro.substrates.tpu_pod import TpuPodSubstrate
 
+pytestmark = pytest.mark.slow    # heavy suite: excluded from make test-fast
+
 
 def test_loss_decreases_over_steps():
     cfg = reduced(get_config("internlm2-20b"), vocab_size=64, num_layers=2)

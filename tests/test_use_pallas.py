@@ -11,6 +11,8 @@ from repro.configs import get_config, reduced
 from repro.models import loss_fn, model_specs
 from repro.models.common import init_params
 
+pytestmark = pytest.mark.slow    # heavy suite: excluded from make test-fast
+
 
 @pytest.mark.parametrize("arch", ["internlm2-20b", "rwkv6-7b",
                                   "recurrentgemma-9b", "qwen2.5-32b"])
