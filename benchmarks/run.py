@@ -18,6 +18,10 @@ Paper artifact map:
                         loop vs pooled ControlPlaneScheduler
     bench_recovery    — beyond-paper resilience: goodput under faults with
                         vs without the HealthManager (circuit breakers)
+    bench_twin        — beyond-paper executable twins: goodput retained
+                        under quarantine with twin-served fallback vs the
+                        reject-only baseline (same fault schedule as
+                        bench_recovery; zero-invalid-serves audited)
 """
 import argparse
 import sys
@@ -28,7 +32,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import (bench_cortical, bench_faults, bench_fleet, bench_http,
                         bench_matcher, bench_overhead, bench_portability,
-                        bench_recovery, bench_roofline, bench_throughput)
+                        bench_recovery, bench_roofline, bench_throughput,
+                        bench_twin)
 
 BENCHES = {
     "portability": bench_portability.run,
@@ -41,6 +46,7 @@ BENCHES = {
     "fleet": bench_fleet.run,
     "throughput": bench_throughput.run,
     "recovery": bench_recovery.run,
+    "twin": bench_twin.run,
 }
 
 

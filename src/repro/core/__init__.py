@@ -27,4 +27,7 @@ from repro.core.scheduler import ControlPlaneScheduler, SchedulerClosed  # noqa:
 from repro.core.registry import CapabilityRegistry  # noqa: F401
 from repro.core.tasks import TaskRequest  # noqa: F401
 from repro.core.telemetry import RuntimeSnapshot, TelemetryBus, TelemetryEvent  # noqa: F401
-from repro.core.twin import TwinState, TwinSyncManager  # noqa: F401
+from repro.core.twin import (RecordReplaySurrogate, TwinNotReady,  # noqa: F401
+                             TwinState, TwinSurrogate, TwinSyncManager,
+                             output_divergence)
+from repro.core.twin_executor import TwinExecutor, TwinUnavailable  # noqa: F401

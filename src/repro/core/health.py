@@ -12,8 +12,10 @@ circuit breaker per resource through
   rate.  Degraded resources stay admissible (the matcher's runtime terms
   already de-prefer them); the state is an early-warning hysteresis band.
 - **→ open** — hard signals: consecutive failures, windowed error rate,
-  drift beyond the matcher's hard limit, a ``failed`` health snapshot, or
-  (when enabled) sustained latency blow-up.  Open means *quarantined*: the
+  drift beyond the matcher's hard limit, a ``failed`` health snapshot,
+  sustained twin-fidelity collapse (measured shadow divergence — see
+  ``twin_shadow`` events), or (when enabled) sustained latency blow-up.
+  Open means *quarantined*: the
   matcher refuses the resource outright, so no new session ever starts on
   it.
 - **open → probation** — after a cooldown (exponential backoff across
@@ -82,6 +84,37 @@ class HealthThresholds:
     #: (None disables latency tripping — physical dwell is often legitimate)
     latency_factor_to_open: Optional[float] = None
     expected_latency_ms: float = 1.0
+    #: twin-fidelity trips: MEASURED shadow divergence expressed as a
+    #: multiple of the surrogate's declared tolerance (``twin_shadow``
+    #: events).  A resource whose twin repeatedly disagrees with it this
+    #: badly is misbehaving even if its self-reported drift looks clean.
+    #: Divergence metrics clip at 1.0, so the effective trip divergences
+    #: are capped (:data:`FIDELITY_DEGRADE_DIV_CAP` /
+    #: :data:`FIDELITY_OPEN_DIV_CAP`) to stay reachable for
+    #: high-tolerance surrogates (tolerance >= 1/excess).
+    fidelity_excess_to_degrade: float = 1.5
+    fidelity_excess_to_open: float = 3.0
+    #: consecutive beyond-OPEN-threshold comparisons required to quarantine
+    #: (one noisy comparison must not quarantine a healthy substrate; a
+    #: merely-degraded comparison breaks the streak)
+    fidelity_streak_to_open: int = 2
+
+    #: effective-divergence ceilings for the fidelity trip points: a metric
+    #: reporting total disagreement (1.0) must be able to quarantine any
+    #: surrogate, whatever its declared tolerance
+    FIDELITY_OPEN_DIV_CAP = 0.95
+    FIDELITY_DEGRADE_DIV_CAP = 0.75
+
+    def fidelity_trip_divergences(self, tolerance: float
+                                  ) -> Tuple[float, float]:
+        """(degrade_divergence, open_divergence) for one surrogate's
+        declared tolerance, with the reachability caps applied."""
+        tol = max(tolerance, 1e-9)
+        open_div = min(self.fidelity_excess_to_open * tol,
+                       self.FIDELITY_OPEN_DIV_CAP)
+        degrade_div = min(self.fidelity_excess_to_degrade * tol,
+                          self.FIDELITY_DEGRADE_DIV_CAP, open_div)
+        return degrade_div, open_div
 
     @classmethod
     def from_descriptor(cls, desc, **overrides) -> "HealthThresholds":
@@ -123,6 +156,7 @@ class _Breaker:
         self.latencies: deque = deque(maxlen=thresholds.window)
         self.consecutive_failures = 0
         self.last_drift = 0.0
+        self.fidelity_bad_streak = 0
         self.opened_at: Optional[float] = None
         self.base_cooldown_s = cooldown_s
         self.cooldown_s = cooldown_s
@@ -251,6 +285,9 @@ class HealthManager:
 
     # -- telemetry coupling ---------------------------------------------------
     def _on_event(self, ev: TelemetryEvent) -> None:
+        if ev.kind == "twin_shadow":
+            self._on_fidelity(ev)
+            return
         if ev.kind not in ("health",):
             return
         drift = ev.fields.get("drift_score")
@@ -281,6 +318,44 @@ class HealthManager:
                     self._close(ev.resource_id, br,
                                 f"drift recovered ({br.last_drift:.2f})",
                                 pending)
+        self._emit(pending)
+
+    def _on_fidelity(self, ev: TelemetryEvent) -> None:
+        """Fidelity-driven trips: measured twin-vs-real divergence
+        (``twin_shadow`` events from the TwinExecutor) beyond a multiple of
+        the surrogate's declared tolerance degrades and — sustained —
+        quarantines the resource.  This is the paper's twin-synchronization
+        claim turned into a recovery signal: the divergence is MEASURED
+        against real outputs, so it catches misbehavior that adapter-self-
+        reported drift misses."""
+        div = float(ev.fields.get("divergence", 0.0))
+        tol = max(float(ev.fields.get("tolerance", 1.0)), 1e-9)
+        pending: List[BreakerTransition] = []
+        with self._lock:
+            br = self._breaker(ev.resource_id)
+            th = br.thresholds
+            degrade_div, open_div = th.fidelity_trip_divergences(tol)
+            if div < degrade_div:
+                br.fidelity_bad_streak = 0
+            elif br.state in (BreakerState.HEALTHY, BreakerState.DEGRADED):
+                if div >= open_div:
+                    # only beyond-OPEN comparisons count as the consecutive
+                    # streak; a degrade-band comparison breaks it below
+                    br.fidelity_bad_streak += 1
+                    if br.fidelity_bad_streak >= th.fidelity_streak_to_open:
+                        self._open(
+                            ev.resource_id, br,
+                            f"twin fidelity collapse: measured divergence "
+                            f"{div:.3f} >= {open_div:.3f} "
+                            f"(tolerance {tol})", pending)
+                        br.fidelity_bad_streak = 0
+                else:
+                    br.fidelity_bad_streak = 0
+                if br.state is BreakerState.HEALTHY:
+                    self._transition(
+                        ev.resource_id, br, BreakerState.DEGRADED,
+                        f"twin divergence {div:.3f} >= {degrade_div:.3f} "
+                        f"(tolerance {tol})", pending)
         self._emit(pending)
 
     # -- admission ------------------------------------------------------------

@@ -162,11 +162,48 @@ class Matcher:
             if snap.drift_score > DRIFT_LIMIT:
                 return False, f"drift {snap.drift_score:.2f} > {DRIFT_LIMIT}"
         twin = self.twins.get(desc.resource_id)
-        if twin is not None and task.max_twin_age_ms is not None:
-            ok, why = twin.valid(task.max_twin_age_ms)
+        if twin is not None and (task.max_twin_age_ms is not None
+                                 or task.twin_min_confidence is not None):
+            # twin validity is an opt-in hard constraint: a freshness bound
+            # and/or a per-task confidence floor; the reason (including any
+            # recorded invalidation cause) is surfaced in the rejection
+            ok, why = twin.valid(task.max_twin_age_ms,
+                                 task.twin_min_confidence)
             if not ok:
                 return False, why
         return True, "ok"
+
+    def twin_candidates(self, task: TaskRequest
+                        ) -> List[Tuple[ResourceDescriptor, object, bool, str]]:
+        """The twin-serve set for fallback/speculation: every statically
+        admissible resource carrying an EXECUTABLE twin, with its serve-time
+        validity verdict, ordered best-confidence first.
+
+        Policy still applies — except the human-supervision requirement: a
+        twin serve never touches hardware, so simulation needs no
+        supervisor.  Invalid twins are returned too (``ok=False`` + reason)
+        so refusals can be surfaced in rejection messages.
+        """
+        policy_task = task.clone(supervision_available=True) \
+            if hasattr(task, "clone") else task
+        out: List[Tuple[ResourceDescriptor, object, bool, str]] = []
+        for desc in self.registry.all():
+            if (task.backend_preference is not None
+                    and desc.resource_id != task.backend_preference):
+                continue
+            ok, _, _ = self._static_eval(desc, task)
+            if not ok:
+                continue
+            if not self.policy.admit(desc, policy_task):
+                continue
+            twin = self.twins.get(desc.resource_id)
+            if twin is None or twin.surrogate is None:
+                continue
+            valid, why = twin.valid(task.max_twin_age_ms,
+                                    task.twin_min_confidence)
+            out.append((desc, twin, valid, why))
+        out.sort(key=lambda t: (t[2], t[1].confidence), reverse=True)
+        return out
 
     # -- Eq. 1 terms ------------------------------------------------------------
     def _static_terms(self, desc: ResourceDescriptor, task: TaskRequest
@@ -195,13 +232,19 @@ class Matcher:
 
     def _finish_terms(self, desc: ResourceDescriptor,
                       static: Dict[str, float]) -> Dict[str, float]:
-        """Overlay the runtime-dependent parts: twin confidence + drift into
-        D, live queue pressure into O."""
+        """Overlay the runtime-dependent parts: twin confidence, MEASURED
+        twin fidelity + drift into D, live queue pressure into O."""
         twin = self.twins.get(desc.resource_id)
         conf = twin.confidence if twin is not None else 0.5
+        # fidelity_score is 1.0 until a shadow/speculation comparison has
+        # actually measured divergence, so unmeasured twins score exactly as
+        # before; a twin demonstrably diverging from its hardware halves D
+        # even when the adapter self-reports clean drift
+        fid = twin.fidelity_score if twin is not None else 1.0
         snap = self.bus.snapshot(desc.resource_id)
         drift_pen = snap.drift_score if snap is not None else 0.0
-        D = 0.6 * conf * (1.0 - drift_pen) + 0.4 * static["_locality"]
+        D = (0.6 * conf * (0.5 + 0.5 * fid) * (1.0 - drift_pen)
+             + 0.4 * static["_locality"])
         # live pressure: only sessions the substrate cannot absorb within its
         # max_concurrent budget count as orchestration cost, so a wide
         # substrate with free slots beats a narrow one with a waiting line

@@ -6,6 +6,14 @@ telemetry present, health/validity bounds respected, stabilization-time
 honored — and reroutes to a fallback backend after preparation failures,
 invocation failures, or postcondition violations (RQ2, Table IV).
 
+Executable-twin tier: tasks may opt in (``TaskRequest.twin_mode``) to
+shadow execution (the twin runs concurrently with the real invocation and
+the measured divergence feeds twin confidence/fidelity and the
+HealthManager) or twin-served fallback (a VALID twin answers instead of a
+rejection when hardware is quarantined or saturated, with ``served_by:
+twin`` provenance on the trace and result telemetry).  Speculative serving
+lives on the scheduler (``submit_speculative``).
+
 Concurrency: :meth:`execute` is safe to call from many threads at once —
 per-substrate admission uses deadline-aware blocking acquisition, lifecycle
 transitions are serialized per resource, and live queue-depth telemetry is
@@ -31,6 +39,7 @@ from repro.core.registry import CapabilityRegistry
 from repro.core.tasks import TaskRequest
 from repro.core.telemetry import TelemetryBus
 from repro.core.twin import TwinSyncManager
+from repro.core.twin_executor import TwinExecutor
 
 
 @dataclasses.dataclass
@@ -52,6 +61,14 @@ class OrchestrationTrace:
     rejected_reason: Optional[str] = None
     control_overhead_ms: float = 0.0
     queue_wait_ms: float = 0.0
+    #: provenance: "substrate" (real hardware) or "twin" (served by an
+    #: executable digital twin — degraded-confidence accounting applies)
+    served_by: str = "substrate"
+    #: twin confidence captured atomically at serve time (twin serves only)
+    twin_confidence: Optional[float] = None
+    #: measured twin-vs-real divergence for shadow-mode tasks (None when the
+    #: twin could not answer or the task did not opt in)
+    shadow_divergence: Optional[float] = None
 
     def add_control_ms(self, ms: float) -> None:
         self.control_overhead_ms += ms
@@ -70,13 +87,23 @@ class Orchestrator:
     #: slot when the task carries no latency budget (seconds)
     DEFAULT_ACQUIRE_TIMEOUT_S = 30.0
 
+    #: queue-saturation threshold for twin-served fallback: an opted-in task
+    #: whose best candidate has more than this many queued sessions per
+    #: concurrency slot is served by a valid twin instead of waiting
+    #: (None disables the proactive path; the reject path stays active)
+    TWIN_FALLBACK_QUEUE_FACTOR = 3.0
+
     def __init__(self, registry: Optional[CapabilityRegistry] = None,
                  matcher_cls=Matcher,
                  acquire_timeout_s: float = DEFAULT_ACQUIRE_TIMEOUT_S,
-                 health=True):
+                 health=True,
+                 twin_fallback_queue_factor: Optional[float]
+                 = TWIN_FALLBACK_QUEUE_FACTOR):
         self.registry = registry or CapabilityRegistry()
         self.bus = TelemetryBus()
         self.twins = TwinSyncManager(self.bus)
+        self.twin_exec = TwinExecutor(self.twins, self.bus)
+        self.twin_fallback_queue_factor = twin_fallback_queue_factor
         self.policy = PolicyManager()
         self.lifecycle = LifecycleManager()
         self.acquire_timeout_s = acquire_timeout_s
@@ -159,17 +186,20 @@ class Orchestrator:
         # fallback, rejection), not just rejection
         trace.add_control_ms((time.perf_counter() - t_ctl) * 1e3)
 
+        served = self._twin_if_saturated(task, trace, cand)
+        if served is not None:
+            return served, trace
+
         for attempt in range(self.MAX_ATTEMPTS):
             if cand is None:
                 t_rej = time.perf_counter()
                 reasons = {c.resource_id: c.reason
                            for c in self.matcher.rank(task) if not c.admissible}
-                trace.rejected_reason = (
-                    "no acceptable backend candidate: "
-                    + "; ".join(f"{r}={why}" for r, why in reasons.items()))
+                reason = ("no acceptable backend candidate: "
+                          + "; ".join(f"{r}={why}"
+                                      for r, why in reasons.items()))
                 trace.add_control_ms((time.perf_counter() - t_rej) * 1e3)
-                return (self.invocations.rejected(task, trace.rejected_reason),
-                        trace)
+                return self._reject_or_twin(task, trace, reason)
             rid = cand.resource_id
             tried.add(rid)
             desc = self.registry.get(rid)
@@ -180,8 +210,25 @@ class Orchestrator:
                 # unregister): treat like any other attempt failure
                 result, failure, spill = None, "resource unregistered", None
             else:
+                # shadow mode: the twin answers the same task concurrently
+                # with the real invocation (executor pool vs this worker);
+                # the measured divergence feeds confidence/fidelity/health
+                shadow_fut = None
+                if task.twin_mode == "shadow":
+                    shadow_fut = self.twin_exec.shadow_start(task, rid)
                 result, failure, spill = self._attempt(task, desc, trace,
                                                        deadline, tried)
+                if failure is None and result is not None:
+                    self.twin_exec.observe(task, rid, result)
+                    if shadow_fut is not None:
+                        trace.shadow_divergence = self.twin_exec.shadow_finish(
+                            task, rid, result, shadow_fut)
+                        if trace.shadow_divergence is not None:
+                            result.telemetry.setdefault(
+                                "shadow_divergence",
+                                round(trace.shadow_divergence, 6))
+                elif shadow_fut is not None:
+                    self.twin_exec.shadow_abandon(shadow_fut)
 
             if failure is None:
                 trace.selected = rid
@@ -190,15 +237,65 @@ class Orchestrator:
 
             trace.attempts[-1]["failure"] = failure
             if not task.allow_fallback:
-                trace.rejected_reason = failure
-                return self.invocations.rejected(task, failure), trace
+                return self._reject_or_twin(task, trace, failure)
             t_fb = time.perf_counter()
             cand = spill if spill is not None else \
                 self._next_candidate(task, tried)
             trace.add_control_ms((time.perf_counter() - t_fb) * 1e3)
 
-        trace.rejected_reason = "fallback attempts exhausted"
-        return self.invocations.rejected(task, trace.rejected_reason), trace
+        return self._reject_or_twin(task, trace,
+                                    "fallback attempts exhausted")
+
+    # -- twin-served fallback -------------------------------------------------
+    @staticmethod
+    def _mark_twin_served(trace: OrchestrationTrace, served) -> None:
+        trace.selected = served.resource_id
+        trace.served_by = "twin"
+        trace.twin_confidence = served.telemetry.get("twin_confidence")
+        trace.fallback_used = True
+        trace.rejected_reason = None
+
+    def _twin_if_saturated(self, task: TaskRequest, trace: OrchestrationTrace,
+                           cand: Optional[Candidate]):
+        """Proactive twin serving: an opted-in task whose best candidate is
+        queue-saturated past the policy threshold gets a valid-twin answer
+        instead of joining the waiting line."""
+        if (cand is None or task.twin_mode != "fallback"
+                or self.twin_fallback_queue_factor is None):
+            return None
+        desc = self.registry.get(cand.resource_id)
+        if desc is None:
+            return None
+        depth = self.bus.queue_depth(cand.resource_id)
+        limit = (self.twin_fallback_queue_factor
+                 * max(1, desc.capability.policy.max_concurrent))
+        if depth < limit:
+            return None
+        served, _ = self.twin_exec.serve_fallback(
+            task, self.matcher,
+            f"queue saturated (depth {depth} >= {limit:.0f})")
+        if served is not None:
+            self._mark_twin_served(trace, served)
+        return served
+
+    def _reject_or_twin(self, task: TaskRequest, trace: OrchestrationTrace,
+                        reason: str
+                        ) -> Tuple[InvocationResult, OrchestrationTrace]:
+        """Terminal rejection funnel: tasks that opted in (twin_mode
+        "fallback" — an explicit opt-in, honored even when substrate
+        fallback is disallowed) are served by a VALID twin instead of
+        rejected; twin refusal reasons (staleness, invalidation, missing
+        telemetry) are appended to the rejection message."""
+        if task.twin_mode == "fallback":
+            served, refusals = self.twin_exec.serve_fallback(
+                task, self.matcher, reason)
+            if served is not None:
+                self._mark_twin_served(trace, served)
+                return served, trace
+            reason = (reason + "; twin fallback unavailable: "
+                      + "; ".join(refusals))
+        trace.rejected_reason = reason
+        return self.invocations.rejected(task, reason), trace
 
     def _acquire_timeout(self, task: TaskRequest,
                          deadline: Optional[float]) -> float:
@@ -314,14 +411,10 @@ class Orchestrator:
             self.bus.adjust_queue_depth(rid, -1)
 
     def _next_candidate(self, task: TaskRequest, tried: set) -> Optional[Candidate]:
-        # fallback ignores the directed preference: capability-based rerank.
-        # replace() shares mutable fields with the original task, so give the
-        # copy its own metadata dict instead of aliasing the caller's.
-        if dataclasses.is_dataclass(task):
-            free_task = dataclasses.replace(
-                task, backend_preference=None,
-                metadata=dict(task.metadata) if isinstance(task.metadata, dict)
-                else task.metadata)
+        # fallback ignores the directed preference: capability-based rerank
+        # (clone() un-aliases metadata so the caller's dict stays untouched)
+        if hasattr(task, "clone"):
+            free_task = task.clone(backend_preference=None)
         else:
             free_task = task
             free_task.backend_preference = None

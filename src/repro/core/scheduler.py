@@ -187,6 +187,47 @@ class ControlPlaneScheduler:
             return futs
         return [f.result() for f in futs]
 
+    def submit_speculative(self, task: TaskRequest,
+                           deadline_s: Optional[float] = None
+                           ) -> Tuple[Optional[InvocationResult], Future]:
+        """Speculate mode: a VALID executable twin answers immediately; the
+        real execution is enqueued for asynchronous confirmation.
+
+        Returns ``(speculative_result, confirmation_future)``.  When a twin
+        could speculate, the future resolves to ``(real_result, trace,
+        verdict)`` where the verdict records confirmed / divergence /
+        retro_invalidated — a beyond-tolerance mismatch retro-invalidates
+        the twin (its next ``valid()`` fails until an explicit re-sync).
+        When no valid twin exists the speculative result is None and the
+        future is the plain ``submit_async`` future resolving to
+        ``(result, trace)``.
+        """
+        self.start()
+        orch = self.orchestrator
+        spec = orch.twin_exec.speculate(task, orch.matcher)
+        # the confirmation run must execute on real hardware: strip the twin
+        # mode (clone() un-aliases the metadata dict) from the enqueued copy
+        confirm_task = task.clone(twin_mode=None) \
+            if hasattr(task, "clone") else task
+        real_fut = self.submit_async(confirm_task, deadline_s=deadline_s)
+        if spec is None:
+            return None, real_fut
+        twin_result, rid = spec
+        confirm_fut: Future = Future()
+
+        def _confirm(f: Future) -> None:
+            try:
+                real_result, trace = f.result()
+            except BaseException as e:          # noqa: BLE001 — via future
+                confirm_fut.set_exception(e)
+                return
+            verdict = orch.twin_exec.confirm_speculation(
+                task, rid, twin_result, real_result)
+            confirm_fut.set_result((real_result, trace, verdict))
+
+        real_fut.add_done_callback(_confirm)
+        return twin_result, confirm_fut
+
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until every enqueued task has resolved (or timeout).
         Returns True when the scheduler is fully quiesced."""
@@ -209,10 +250,17 @@ class ControlPlaneScheduler:
                 if not fut.set_running_or_notify_cancel():
                     continue
                 if deadline is not None and time.monotonic() > deadline:
-                    result = self.orchestrator.invocations.rejected(
-                        task, "deadline exceeded while queued")
-                    trace = OrchestrationTrace(task.task_id)
-                    trace.rejected_reason = result.telemetry["reason"]
+                    # queue saturation endpoint: an opted-in task whose
+                    # deadline lapsed while queued is served by a valid twin
+                    # instead of rejected (same funnel as the orchestrator's)
+                    try:
+                        result, trace = self.orchestrator._reject_or_twin(
+                            task, OrchestrationTrace(task.task_id),
+                            "deadline exceeded while queued")
+                    except BaseException as e:  # noqa: BLE001 — via future
+                        fut.set_exception(e)
+                        self._account(None, enqueued)
+                        continue
                     fut.set_result((result, trace))
                     self._account(result, enqueued)
                     continue

@@ -27,9 +27,29 @@ class TaskRequest:
     allow_fallback: bool = True
     tenant: str = "default"
     repeated: bool = False                     # needs repeated low-latency calls
+    #: executable-twin opt-in: None (off) | "shadow" (twin runs alongside the
+    #: real invocation, divergence measured) | "fallback" (a valid twin may
+    #: serve instead of a rejection) | "speculate" (twin answers first, real
+    #: hardware confirms asynchronously — see submit_speculative)
+    twin_mode: Optional[str] = None
+    #: per-task override of the twin validity confidence floor
+    #: (None = TwinState.DEFAULT_MIN_CONFIDENCE)
+    twin_min_confidence: Optional[float] = None
     metadata: Dict[str, Any] = dataclasses.field(default_factory=dict)
     task_id: str = dataclasses.field(
         default_factory=lambda: f"task-{next(_ids):05d}")
+
+    def clone(self, **overrides) -> "TaskRequest":
+        """Copy with field overrides and an UN-ALIASED metadata dict.
+
+        ``dataclasses.replace`` shares mutable fields with the original, so
+        every control-plane path that derives a task variant (fallback
+        re-rank, twin-candidate policy check, speculation confirm) must go
+        through here or risk mutating the caller's metadata.  ``task_id``
+        is preserved: a clone is the same task, re-expressed."""
+        if "metadata" not in overrides and isinstance(self.metadata, dict):
+            overrides["metadata"] = dict(self.metadata)
+        return dataclasses.replace(self, **overrides)
 
     def to_dict(self) -> Dict:
         d = dataclasses.asdict(self)

@@ -1,22 +1,197 @@
-"""Twin plane: synchronized, validity-aware digital state (paper §IV-A).
+"""Twin plane: executable, synchronized, validity-aware digital state
+(paper §IV-A).
 
 The twin is *not* the substrate: its value depends on how current it is and
 how well it matches observed behavior.  :class:`TwinState` tracks sync
-metadata, confidence and drift; :class:`TwinSyncManager` consumes telemetry
-events and flags stale/diverged twins so the matcher can condition placement
-on twin validity (requirement R5).
+metadata, confidence, drift and *measured* fidelity; :class:`TwinSyncManager`
+consumes telemetry events and flags stale/diverged/invalidated twins so the
+matcher can condition placement on twin validity (requirement R5).
+
+Executable-twin contract
+------------------------
+
+Since PR 3 the twin plane is an executable tier, not passive metadata.
+Every adapter's ``make_twin()`` may attach a :class:`TwinSurrogate` — an
+executable model keyed by ``TwinState.kind``:
+
+- ``ode``        — integrates the same dynamics the physical system realizes
+                   (chemical mass-action network);
+- ``behavioral`` — mirror of the programmed device/population (ideal
+                   crossbar conductances, LIF population with nominal noise);
+- ``roofline``   — the compiled cost model plus last-observed training
+                   metrics (TPU pod);
+- ``record``     — record/replay twin learned from recent invocation
+                   results (:class:`RecordReplaySurrogate`).
+
+The surrogate contract:
+
+- ``simulate(task)`` returns the same RAW dict shape as
+  ``SubstrateAdapter.invoke`` (``output`` / ``telemetry`` / ``artifacts`` /
+  ``backend_ms``), or raises :class:`TwinNotReady` when the twin has not
+  learned enough to answer;
+- ``observe(task, raw)`` is the learning hook — the orchestrator feeds every
+  successful real invocation back so record/roofline twins stay current;
+- ``divergence(real_output, twin_output)`` is NORMALIZED (0 = exact
+  agreement, ~1 = unusable) and ``tolerance`` declares the acceptable
+  divergence for this substrate.
+
+:class:`~repro.core.twin_executor.TwinExecutor` drives surrogates in three
+modes (shadow / fallback / speculate); the *measured* divergence it reports
+through :meth:`TwinSyncManager.observe_divergence` — not adapter-self-
+reported drift — feeds one shared confidence law plus ``fidelity_score``,
+which the matcher's D term and the HealthManager's fidelity trips consume.
+
+Confidence law (one law for every sync path): each observation blends
+``confidence * DRIFT_DECAY**drift + SYNC_CREDIT * (1 - drift)``, clamped to
+[0, 1].  An explicit :meth:`TwinSyncManager.invalidate` records its reason
+on the state and pins validity False until an explicit re-sync
+(``mark_synced`` / ``recalibrate``) or a measured within-tolerance shadow
+comparison — passive telemetry may rebuild confidence but cannot clear an
+invalidation by itself.
 
 For the TPU pod substrate the twin is the roofline model over the compiled
 artifact — the high-fidelity end of the paper's twin spectrum (DESIGN.md §2).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import threading
 import time
-from typing import Dict, Optional
+from collections import OrderedDict
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
 
 from repro.core.telemetry import TelemetryBus, TelemetryEvent
+
+
+class TwinNotReady(RuntimeError):
+    """The surrogate has not learned/observed enough to answer yet."""
+
+
+# ---------------------------------------------------------------------------
+# divergence metric
+
+
+def output_divergence(real, twin) -> float:
+    """Normalized divergence between two adapter ``output`` payloads.
+
+    0.0 = exact agreement, 1.0 = unusable.  Handles the shapes adapters
+    produce: dicts (mean over the union of keys, missing key = 1), numeric
+    scalars (relative error), sequences (relative L2), bools/strings
+    (exact match).  NaNs compare equal to NaNs (a twin predicting "no loss
+    yet" for a backend reporting the same is agreement, not divergence).
+    """
+    if real is None and twin is None:
+        return 0.0
+    if real is None or twin is None:
+        return 1.0
+    if isinstance(real, bool) or isinstance(twin, bool):
+        return 0.0 if bool(real) == bool(twin) else 1.0
+    if isinstance(real, dict) and isinstance(twin, dict):
+        keys = set(real) | set(twin)
+        if not keys:
+            return 0.0
+        return float(np.mean([
+            output_divergence(real.get(k), twin.get(k)) if k in real
+            and k in twin else 1.0 for k in sorted(keys)]))
+    if isinstance(real, str) or isinstance(twin, str):
+        return 0.0 if real == twin else 1.0
+    try:
+        a = np.asarray(real, dtype=np.float64).ravel()
+        b = np.asarray(twin, dtype=np.float64).ravel()
+    except (TypeError, ValueError):
+        return 0.0 if real == twin else 1.0
+    if a.shape != b.shape:
+        return 1.0
+    if a.size == 0:
+        return 0.0
+    both_nan = np.isnan(a) & np.isnan(b)
+    a = np.where(both_nan, 0.0, a)
+    b = np.where(both_nan, 0.0, b)
+    if np.isnan(a).any() or np.isnan(b).any():
+        return 1.0
+    denom = max(float(np.linalg.norm(a)), float(np.linalg.norm(b)), 1e-9)
+    return float(min(1.0, np.linalg.norm(a - b) / denom))
+
+
+# ---------------------------------------------------------------------------
+# surrogate contract
+
+
+class TwinSurrogate:
+    """Executable surrogate model behind a :class:`TwinState`.
+
+    Subclasses override :meth:`simulate` (required), :meth:`observe` and
+    :meth:`divergence` (optional), and declare ``kind`` / ``tolerance``.
+    Surrogates may be called from shadow-pool threads concurrently with
+    adapter invocations — keep internal state small and lock it if mutated.
+    """
+
+    kind: str = "behavioral"
+    #: declared acceptable normalized divergence vs the real output
+    tolerance: float = 0.2
+
+    def simulate(self, task) -> Dict:
+        """Answer ``task`` digitally; same raw dict shape as
+        ``SubstrateAdapter.invoke``.  Raise :class:`TwinNotReady` when the
+        twin cannot answer yet."""
+        raise NotImplementedError
+
+    def observe(self, task, raw: Dict) -> None:
+        """Learning hook: called with every successful real invocation's
+        ``{"output": ..., "telemetry": ...}``."""
+
+    def divergence(self, real_output, twin_output) -> float:
+        return output_divergence(real_output, twin_output)
+
+
+class RecordReplaySurrogate(TwinSurrogate):
+    """Record/replay twin learned from recent invocation results.
+
+    Replays the last observed result for the task's payload key (exact
+    match preferred, else the most recent record as a degraded behavioral
+    approximation); :class:`TwinNotReady` until the first observation.
+    """
+
+    kind = "record"
+    tolerance = 0.5
+
+    def __init__(self, capacity: int = 32,
+                 key_fn: Optional[Callable] = None):
+        self.capacity = capacity
+        self._key = key_fn or (lambda task: repr(task.payload))
+        self._records: "OrderedDict[str, Dict]" = OrderedDict()
+        self._lock = threading.Lock()
+
+    def observe(self, task, raw: Dict) -> None:
+        rec = {"output": copy.deepcopy(raw.get("output")),
+               "telemetry": copy.deepcopy(raw.get("telemetry", {}))}
+        with self._lock:
+            self._records[self._key(task)] = rec
+            self._records.move_to_end(self._key(task))
+            while len(self._records) > self.capacity:
+                self._records.popitem(last=False)
+
+    def simulate(self, task) -> Dict:
+        with self._lock:
+            if not self._records:
+                raise TwinNotReady("record twin has no observations yet")
+            rec = self._records.get(self._key(task))
+            exact = rec is not None
+            if rec is None:
+                rec = next(reversed(self._records.values()))
+            rec = copy.deepcopy(rec)
+        telemetry = dict(rec.get("telemetry", {}))
+        telemetry["replayed"] = True
+        telemetry["replay_exact_key"] = exact
+        return {"output": rec.get("output"), "telemetry": telemetry,
+                "artifacts": {}, "backend_ms": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# twin state + sync manager
 
 
 @dataclasses.dataclass
@@ -30,11 +205,40 @@ class TwinState:
     calibration_ts: float = dataclasses.field(default_factory=time.time)
     observations: int = 0
     model: Dict = dataclasses.field(default_factory=dict)   # twin parameters
+    #: why the twin was last invalidated ("" = not invalidated); pins
+    #: ``valid()`` False until an explicit re-sync or a measured
+    #: within-tolerance shadow comparison
+    invalidation_reason: str = ""
+    #: EMA of MEASURED shadow/speculation divergence (None = never measured)
+    divergence_ema: Optional[float] = None
+    #: 1.0 = twin demonstrably matches reality, 0.0 = demonstrably wrong;
+    #: stays 1.0 until a divergence is actually measured
+    fidelity_score: float = 1.0
+    #: executable surrogate (None = metadata-only twin); excluded from
+    #: serialization — it is code, not state
+    surrogate: Optional[TwinSurrogate] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    #: default ``valid()`` confidence floor; tasks override it via
+    #: ``TaskRequest.twin_min_confidence``
+    DEFAULT_MIN_CONFIDENCE = 0.3
 
     def age_ms(self) -> float:
         return (time.time() - self.last_sync) * 1e3
 
-    def valid(self, max_age_ms: Optional[float], min_confidence: float = 0.3):
+    @property
+    def executable(self) -> bool:
+        return self.surrogate is not None
+
+    def valid(self, max_age_ms: Optional[float],
+              min_confidence: Optional[float] = None) -> Tuple[bool, str]:
+        """Is this twin trustworthy right now?  ``min_confidence=None``
+        applies :data:`DEFAULT_MIN_CONFIDENCE`; tasks may tighten or relax
+        it per request."""
+        if min_confidence is None:
+            min_confidence = self.DEFAULT_MIN_CONFIDENCE
+        if self.invalidation_reason:
+            return False, f"twin invalidated: {self.invalidation_reason}"
         if max_age_ms is not None and self.age_ms() > max_age_ms:
             return False, f"twin stale ({self.age_ms():.0f}ms > {max_age_ms}ms)"
         if self.confidence < min_confidence:
@@ -48,6 +252,11 @@ class TwinState:
             "drift_estimate": round(self.drift_estimate, 4),
             "age_ms": round(self.age_ms(), 2),
             "observations": self.observations,
+            "invalidation_reason": self.invalidation_reason or None,
+            "divergence_ema": (round(self.divergence_ema, 4)
+                               if self.divergence_ema is not None else None),
+            "fidelity_score": round(self.fidelity_score, 4),
+            "executable": self.executable,
         }
 
 
@@ -56,12 +265,17 @@ class TwinSyncManager:
 
     All state updates are serialized under one lock: with the concurrent
     control plane, telemetry-driven confidence updates (``_on_event``) race
-    against postcondition invalidation (``invalidate``); unlocked
-    read-modify-writes could silently restore confidence to a twin that was
-    just invalidated.
+    against postcondition invalidation (``invalidate``) and shadow-measured
+    divergence (``observe_divergence``); unlocked read-modify-writes could
+    silently restore confidence to a twin that was just invalidated.
+
+    One confidence law serves every sync path (``mark_synced``, result
+    telemetry, drift telemetry, measured divergence): see :meth:`_observe`.
     """
 
     DRIFT_DECAY = 0.85       # confidence multiplier per unit drift observed
+    SYNC_CREDIT = 0.05       # confidence restored per clean observation
+    DIVERGENCE_EMA = 0.3     # weight of the newest measured divergence
 
     def __init__(self, bus: TelemetryBus):
         self._twins: Dict[str, TwinState] = {}
@@ -78,21 +292,38 @@ class TwinSyncManager:
         with self._lock:
             return self._twins.get(resource_id)
 
+    # -- the one shared confidence update -------------------------------------
+    def _observe(self, tw: TwinState, drift: float,
+                 ts: Optional[float] = None) -> None:
+        """The single confidence law (caller holds the lock): blend the
+        current confidence toward agreement, never outside [0, 1]."""
+        drift = max(0.0, min(1.0, drift))
+        tw.last_sync = ts if ts is not None else time.time()
+        tw.observations += 1
+        tw.drift_estimate = drift
+        tw.confidence = max(0.0, min(1.0, tw.confidence *
+                                     (self.DRIFT_DECAY ** drift)
+                                     + self.SYNC_CREDIT * (1.0 - drift)))
+
     def mark_synced(self, resource_id: str, drift: float = 0.0) -> None:
+        """Explicit synchronization against the resource: applies the shared
+        confidence law AND clears any standing invalidation."""
         with self._lock:
             tw = self._twins.get(resource_id)
             if tw is None:
                 return
-            tw.last_sync = time.time()
-            tw.observations += 1
-            tw.drift_estimate = drift
-            tw.confidence = max(0.0, min(1.0, 1.0 - drift))
+            tw.invalidation_reason = ""
+            self._observe(tw, drift)
 
     def invalidate(self, resource_id: str, reason: str = "") -> None:
+        """Hard invalidation (postcondition violation, speculation
+        mismatch): confidence drops to zero and ``reason`` is recorded on
+        the state so admissibility rejections can surface it."""
         with self._lock:
             tw = self._twins.get(resource_id)
             if tw is not None:
                 tw.confidence = 0.0
+                tw.invalidation_reason = reason or "invalidated"
 
     def recalibrate(self, resource_id: str) -> None:
         with self._lock:
@@ -102,6 +333,54 @@ class TwinSyncManager:
                 tw.last_sync = time.time()
                 tw.drift_estimate = 0.0
                 tw.confidence = 1.0
+                tw.invalidation_reason = ""
+                tw.divergence_ema = None
+                tw.fidelity_score = 1.0
+
+    # -- measured fidelity (shadow / speculation comparisons) ------------------
+    def observe_divergence(self, resource_id: str, divergence: float,
+                           tolerance: float) -> None:
+        """Feed one MEASURED twin-vs-real divergence into the twin state.
+
+        Unlike adapter-self-reported drift, this is direct evidence: it
+        drives ``fidelity_score`` (an EMA normalized by the surrogate's
+        declared tolerance, consumed by the matcher's D term), runs the
+        shared confidence law with a divergence-equivalent drift, and — when
+        the twin demonstrably agrees with reality (divergence within
+        tolerance) — clears a standing invalidation.
+        """
+        tol = max(float(tolerance), 1e-9)
+        divergence = max(0.0, float(divergence))
+        with self._lock:
+            tw = self._twins.get(resource_id)
+            if tw is None:
+                return
+            if tw.divergence_ema is None:
+                tw.divergence_ema = divergence
+            else:
+                tw.divergence_ema = ((1.0 - self.DIVERGENCE_EMA)
+                                     * tw.divergence_ema
+                                     + self.DIVERGENCE_EMA * divergence)
+            tw.fidelity_score = max(
+                0.0, min(1.0, 1.0 - tw.divergence_ema / (2.0 * tol)))
+            if divergence <= tol:
+                tw.invalidation_reason = ""
+            self._observe(tw, min(1.0, divergence / (2.0 * tol)))
+
+    def check_serve(self, resource_id: str,
+                    max_age_ms: Optional[float] = None,
+                    min_confidence: Optional[float] = None
+                    ) -> Tuple[Optional[TwinState], bool, str, float]:
+        """Atomic validity check for twin-served execution: returns
+        ``(twin, ok, reason, confidence_at_check)`` evaluated under the
+        manager lock, so a serve decision and the confidence it cites can
+        never straddle a concurrent invalidation."""
+        with self._lock:
+            tw = self._twins.get(resource_id)
+            if tw is None:
+                return None, False, "no twin bound to resource", 0.0
+            ok, why = tw.valid(max_age_ms, min_confidence)
+            return tw, ok, why, tw.confidence
 
     # -- telemetry coupling ---------------------------------------------------
     def _on_event(self, ev: TelemetryEvent) -> None:
@@ -111,12 +390,7 @@ class TwinSyncManager:
                 return
             if ev.kind == "result":
                 drift = float(ev.fields.get("drift_score", 0.0))
-                tw.last_sync = ev.timestamp
-                tw.observations += 1
-                tw.drift_estimate = drift
-                tw.confidence = max(0.0, min(1.0, tw.confidence *
-                                             (self.DRIFT_DECAY ** drift) + 0.05
-                                             * (1.0 - drift)))
+                self._observe(tw, drift, ts=ev.timestamp)
             elif ev.kind == "drift":
-                tw.drift_estimate = float(ev.fields.get("drift_score", 0.0))
-                tw.confidence = max(0.0, 1.0 - tw.drift_estimate)
+                self._observe(tw, float(ev.fields.get("drift_score", 0.0)),
+                              ts=ev.timestamp)

@@ -1,0 +1,307 @@
+"""Executable twin tier: shadow, fallback and speculative serving.
+
+The :class:`TwinExecutor` drives adapters' executable surrogates
+(:class:`~repro.core.twin.TwinSurrogate`) in three modes:
+
+- **shadow** — the twin runs concurrently with the real invocation (on the
+  executor's shadow pool while a scheduler worker drives the hardware); the
+  outputs are compared and the MEASURED divergence — not adapter-self-
+  reported drift — feeds :meth:`TwinSyncManager.observe_divergence` (twin
+  confidence + fidelity) and, via ``twin_shadow`` telemetry events, the
+  HealthManager's fidelity trips.
+- **fallback** — when hardware is quarantined (breaker open), saturated past
+  the orchestrator's queue-factor threshold, or a deadline lapsed while
+  queued, tasks that opt in (``twin_mode="fallback"``) are served by a
+  *valid* twin instead of rejected, with ``served_by: twin`` provenance and
+  degraded-confidence accounting in result telemetry and the
+  OrchestrationTrace.
+- **speculate** — the twin answers immediately; real hardware confirms
+  asynchronously (:meth:`ControlPlaneScheduler.submit_speculative`) and a
+  beyond-tolerance mismatch retro-invalidates the twin.
+
+Serve-time validity is checked ATOMICALLY (under the TwinSyncManager lock)
+and every serve is logged with the validity + confidence captured at that
+instant — ``audit()['twin_serves_invalid']`` must stay 0, which the fidelity
+test suite and ``bench_twin`` assert.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.invocation import InvocationResult
+from repro.core.tasks import TaskRequest
+from repro.core.telemetry import TelemetryBus, TelemetryEvent
+from repro.core.twin import TwinNotReady, TwinSyncManager
+
+_serve_ids = itertools.count(1)
+
+
+class TwinUnavailable(RuntimeError):
+    """No valid executable twin can serve this task right now."""
+
+
+class TwinExecutor:
+    """Runs executable twins for the orchestrator (shadow / fallback /
+    speculate).  Thread-safe; the shadow pool is created lazily so control
+    planes that never use twins spawn no extra threads."""
+
+    SHADOW_TIMEOUT_S = 30.0
+    SHADOW_WORKERS = 4
+
+    #: ONE process-wide shadow pool shared by every executor: orchestrators
+    #: are created freely (per chaos scenario, per test) and have no close
+    #: lifecycle, so a per-instance pool would leak its threads; the shared
+    #: pool is lazily created once and bounded at SHADOW_WORKERS threads no
+    #: matter how many control planes exist
+    _shared_pool: Optional[ThreadPoolExecutor] = None
+    _shared_pool_lock = threading.Lock()
+
+    def __init__(self, twins: TwinSyncManager, bus: TelemetryBus):
+        self.twins = twins
+        self.bus = bus
+        self._lock = threading.Lock()
+        self._serve_log: List[Dict] = []
+        self._counters: Dict[str, int] = {
+            "twin_serves": 0,
+            "twin_serves_invalid": 0,     # MUST stay 0: serve-validity invariant
+            "twin_serve_refusals": 0,
+            "speculations": 0,
+            "speculations_confirmed": 0,
+            "retro_invalidated": 0,
+            "shadow_runs": 0,
+            "shadow_not_ready": 0,
+            "shadow_failures": 0,
+        }
+
+    # -- shadow mode ----------------------------------------------------------
+    @classmethod
+    def _shadow_pool(cls) -> ThreadPoolExecutor:
+        with TwinExecutor._shared_pool_lock:
+            if TwinExecutor._shared_pool is None:
+                TwinExecutor._shared_pool = ThreadPoolExecutor(
+                    max_workers=cls.SHADOW_WORKERS,
+                    thread_name_prefix="phys-mcp-twin-shadow")
+            return TwinExecutor._shared_pool
+
+    def shadow_start(self, task: TaskRequest, rid: str) -> Optional[Future]:
+        """Launch the twin concurrently with the real invocation.  Returns
+        None when the resource has no executable twin."""
+        tw = self.twins.get(rid)
+        if tw is None or tw.surrogate is None:
+            return None
+        return self._shadow_pool().submit(tw.surrogate.simulate, task)
+
+    def shadow_finish(self, task: TaskRequest, rid: str,
+                      result: InvocationResult,
+                      fut: Future) -> Optional[float]:
+        """Join the shadow run and compare against the real result.  Returns
+        the measured divergence (None when the twin could not answer); feeds
+        the twin-sync manager and emits a ``twin_shadow`` event either way
+        it *can*."""
+        tw = self.twins.get(rid)
+        if tw is None or tw.surrogate is None:
+            return None
+        try:
+            raw = fut.result(timeout=self.SHADOW_TIMEOUT_S)
+        except TwinNotReady:
+            with self._lock:
+                self._counters["shadow_not_ready"] += 1
+            return None
+        except Exception:                                  # noqa: BLE001
+            with self._lock:
+                self._counters["shadow_failures"] += 1
+            return None
+        sur = tw.surrogate
+        div = float(sur.divergence(result.output, raw.get("output")))
+        with self._lock:
+            self._counters["shadow_runs"] += 1
+        self.twins.observe_divergence(rid, div, sur.tolerance)
+        self.bus.emit(TelemetryEvent(rid, "twin_shadow", {
+            "divergence": round(div, 6), "tolerance": sur.tolerance,
+            "within": div <= sur.tolerance, "mode": "shadow",
+            "task_id": task.task_id}))
+        return div
+
+    @staticmethod
+    def shadow_abandon(fut: Optional[Future]) -> None:
+        """Drop a shadow run whose real attempt failed: cancel if still
+        queued, otherwise let it finish and swallow its outcome."""
+        if fut is None or fut.cancel():
+            return
+        fut.add_done_callback(lambda f: f.exception())
+
+    def observe(self, task: TaskRequest, rid: str,
+                result: InvocationResult) -> None:
+        """Feed a successful real invocation to the surrogate's learning
+        hook (record/roofline twins stay current).  Never raises."""
+        tw = self.twins.get(rid)
+        if tw is None or tw.surrogate is None:
+            return
+        try:
+            tw.surrogate.observe(task, {"output": result.output,
+                                        "telemetry": result.telemetry})
+        except Exception:                                  # noqa: BLE001
+            pass
+
+    # -- twin-served execution (fallback / speculate) --------------------------
+    def serve(self, task: TaskRequest, rid: str, mode: str,
+              reason: str = "") -> InvocationResult:
+        """Serve ``task`` from the resource's twin, refusing unless the twin
+        is VALID at serve time (validity + confidence captured atomically).
+        Raises :class:`TwinUnavailable` / :class:`TwinNotReady` on refusal.
+        """
+        tw, ok, why, conf = self.twins.check_serve(
+            rid, task.max_twin_age_ms, task.twin_min_confidence)
+        if tw is None or not ok:
+            with self._lock:
+                self._counters["twin_serve_refusals"] += 1
+            raise TwinUnavailable(why)
+        if tw.surrogate is None:
+            with self._lock:
+                self._counters["twin_serve_refusals"] += 1
+            raise TwinUnavailable("twin is not executable")
+        try:
+            raw = tw.surrogate.simulate(task)
+        except TwinNotReady:
+            with self._lock:
+                self._counters["twin_serve_refusals"] += 1
+            raise
+        except Exception as e:                             # noqa: BLE001
+            # a crashing surrogate must refuse cleanly, exactly like real
+            # hardware failing an attempt — never escape into the caller
+            with self._lock:
+                self._counters["twin_serve_refusals"] += 1
+            raise TwinUnavailable(f"twin simulate failed: {e}") from e
+        telemetry = dict(raw.get("telemetry", {}))
+        missing = [f for f in task.required_telemetry if f not in telemetry]
+        if missing:
+            with self._lock:
+                self._counters["twin_serve_refusals"] += 1
+            raise TwinUnavailable(
+                f"twin cannot satisfy telemetry contract (missing {missing})")
+        serve_id = next(_serve_ids)
+        telemetry.update({
+            "served_by": "twin",
+            "twin_id": tw.twin_id,
+            "twin_kind": tw.kind,
+            "twin_mode": mode,
+            "twin_confidence": round(conf, 4),
+            # twin answers are honest about their epistemic status: anything
+            # below full confidence is flagged for downstream accounting
+            "degraded_confidence": bool(conf < 1.0),
+        })
+        if reason:
+            telemetry["twin_serve_reason"] = reason
+        result = InvocationResult(
+            task_id=task.task_id, resource_id=rid, status="completed",
+            output=raw.get("output"), telemetry=telemetry,
+            artifacts=dict(raw.get("artifacts", {})),
+            timing_ms={"backend_ms": float(raw.get("backend_ms", 0.0)),
+                       "total_ms": float(raw.get("backend_ms", 0.0)),
+                       "observation_ms": float(
+                           telemetry.get("observation_ms", 0.0))},
+            contracts={}, session_id=f"twin-serve-{serve_id:05d}")
+        entry = {
+            "serve_id": serve_id, "task_id": task.task_id,
+            "resource_id": rid, "twin_id": tw.twin_id, "mode": mode,
+            "valid_at_serve": ok, "confidence_at_serve": round(conf, 4),
+            "reason": reason, "at": time.time(),
+        }
+        with self._lock:
+            self._serve_log.append(entry)
+            self._counters["twin_serves"] += 1
+            if not ok:          # unreachable by construction; audited anyway
+                self._counters["twin_serves_invalid"] += 1
+        self.bus.emit(TelemetryEvent(rid, "twin_serve", dict(entry)))
+        return result
+
+    def serve_fallback(self, task: TaskRequest, matcher, reason: str
+                       ) -> Tuple[Optional[InvocationResult], List[str]]:
+        """Fallback mode: serve an opted-in task from the best valid twin
+        instead of rejecting it.  Returns ``(result, refusal_reasons)`` —
+        result None when no twin could serve; the refusal reasons (per
+        candidate twin) are surfaced in the rejection message."""
+        refusals: List[str] = []
+        for desc, tw, ok, why in matcher.twin_candidates(task):
+            rid = desc.resource_id
+            if not ok:
+                refusals.append(f"{rid}: {why}")
+                with self._lock:
+                    self._counters["twin_serve_refusals"] += 1
+                continue
+            try:
+                return self.serve(task, rid, "fallback", reason), refusals
+            except (TwinUnavailable, TwinNotReady) as e:
+                refusals.append(f"{rid}: {e}")
+        if not refusals:
+            refusals.append("no executable twin for this task shape")
+        return None, refusals
+
+    # -- speculation ----------------------------------------------------------
+    def speculate(self, task: TaskRequest, matcher
+                  ) -> Optional[Tuple[InvocationResult, str]]:
+        """Speculate mode: answer immediately from the best valid twin.
+        Returns ``(speculative_result, resource_id)`` or None when no twin
+        can speculate (caller falls back to plain real execution)."""
+        for desc, tw, ok, why in matcher.twin_candidates(task):
+            if not ok:
+                continue
+            try:
+                result = self.serve(task, desc.resource_id, "speculate")
+            except (TwinUnavailable, TwinNotReady):
+                continue
+            with self._lock:
+                self._counters["speculations"] += 1
+            return result, desc.resource_id
+        return None
+
+    def confirm_speculation(self, task: TaskRequest, rid: str,
+                            twin_result: InvocationResult,
+                            real_result: InvocationResult) -> Dict:
+        """Compare a speculative twin answer against the asynchronous real
+        confirmation; retro-invalidate the twin on a beyond-tolerance
+        mismatch.  A failed/rejected real run leaves the twin alone (the
+        hardware's inability to confirm is not evidence the twin is wrong)
+        but reports ``confirmed=False``."""
+        verdict = {"resource_id": rid, "confirmed": False,
+                   "divergence": None, "retro_invalidated": False,
+                   "reason": ""}
+        tw = self.twins.get(rid)
+        if real_result.status != "completed":
+            verdict["reason"] = (f"real execution did not complete "
+                                 f"(status={real_result.status})")
+        elif tw is None or tw.surrogate is None:
+            verdict["reason"] = "twin disappeared before confirmation"
+        else:
+            sur = tw.surrogate
+            div = float(sur.divergence(real_result.output, twin_result.output))
+            verdict["divergence"] = round(div, 6)
+            self.twins.observe_divergence(rid, div, sur.tolerance)
+            if div > sur.tolerance:
+                reason = (f"speculation mismatch: divergence {div:.4f} > "
+                          f"tolerance {sur.tolerance} (task {task.task_id})")
+                self.twins.invalidate(rid, reason)
+                verdict["retro_invalidated"] = True
+                verdict["reason"] = reason
+                with self._lock:
+                    self._counters["retro_invalidated"] += 1
+            else:
+                verdict["confirmed"] = True
+                with self._lock:
+                    self._counters["speculations_confirmed"] += 1
+        self.bus.emit(TelemetryEvent(rid, "twin_speculation", dict(
+            verdict, task_id=task.task_id)))
+        return verdict
+
+    # -- observability --------------------------------------------------------
+    def audit(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._counters)
+
+    def serve_log(self) -> List[Dict]:
+        with self._lock:
+            return [dict(e) for e in self._serve_log]

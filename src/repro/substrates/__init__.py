@@ -1,11 +1,15 @@
 from repro.substrates.base import SubstrateAdapter  # noqa: F401
-from repro.substrates.chemical import ChemicalAdapter  # noqa: F401
+from repro.substrates.chemical import (ChemicalAdapter,  # noqa: F401
+                                       ChemicalOdeSurrogate)
 from repro.substrates.cortical import (CLClient, CLSimulator,  # noqa: F401
                                        CorticalLabsAdapter)
 from repro.substrates.http_fast import FastService, HTTPFastAdapter  # noqa: F401
-from repro.substrates.memristive import MemristiveAdapter  # noqa: F401
-from repro.substrates.tpu_pod import TpuPodSubstrate  # noqa: F401
-from repro.substrates.wetware import WetwareAdapter  # noqa: F401
+from repro.substrates.memristive import (CrossbarMirrorSurrogate,  # noqa: F401
+                                         MemristiveAdapter)
+from repro.substrates.tpu_pod import (RooflineSurrogate,  # noqa: F401
+                                      TpuPodSubstrate)
+from repro.substrates.wetware import (WetwareAdapter,  # noqa: F401
+                                      WetwareBehavioralSurrogate)
 
 
 def standard_testbed(orchestrator, *, http_service=None, include_cortical=True):

@@ -9,6 +9,14 @@ drive it: ``descriptor()``, ``prepare()``, ``invoke()``, ``reset()``,
 ``invoke`` returns a RAW dict (output / telemetry / artifacts / backend_ms /
 needs_reset); normalization into the stable client-visible result shape is
 the invocation manager's job, keeping adapters substrate-idiomatic.
+
+``make_twin`` returns the adapter's digital-twin binding.  Since PR 3 the
+twin should be EXECUTABLE: attach a
+:class:`~repro.core.twin.TwinSurrogate` whose ``simulate(task)`` returns
+the same raw dict shape as ``invoke`` — the control plane uses it for
+shadow comparison, twin-served fallback and speculation (see
+``repro.core.twin_executor``).  A metadata-only twin (``surrogate=None``)
+remains legal; it simply opts the resource out of twin serving.
 """
 from __future__ import annotations
 
@@ -48,6 +56,10 @@ class SubstrateAdapter(abc.ABC):
         return RuntimeSnapshot(self.descriptor().resource_id)
 
     def make_twin(self) -> Optional[TwinState]:
+        """Digital-twin binding for this substrate (None = no twin).
+        Adapters should attach an executable surrogate
+        (``TwinState.surrogate``) so the twin plane can shadow, serve
+        fallback and speculate — see the module docstring."""
         return None
 
     # -- fault injection (Table IV campaign) ----------------------------------

@@ -30,7 +30,7 @@ from repro.core.descriptors import (CapabilityDescriptor, LifecycleSemantics,
                                     ResourceDescriptor, SignalSpec,
                                     TimingSemantics)
 from repro.core.telemetry import RuntimeSnapshot
-from repro.core.twin import TwinState
+from repro.core.twin import RecordReplaySurrogate, TwinState
 from repro.substrates.base import SubstrateAdapter
 from repro.substrates.wetware import SpikeResponseTwin
 
@@ -229,5 +229,9 @@ class CorticalLabsAdapter(SubstrateAdapter):
             drift_score=max(0.0, 1.0 - health), viability=health)
 
     def make_twin(self) -> Optional[TwinState]:
+        # record/replay twin learned from recent recordings: the CL API
+        # exposes no culture model, so the twin is what we observed —
+        # TwinNotReady until the first real stimulate/record cycle
         return TwinState(f"twin-{self.resource_id}", self.resource_id,
-                         kind="record", model={"api": "CL", "sim": True})
+                         kind="record", model={"api": "CL", "sim": True},
+                         surrogate=RecordReplaySurrogate())

@@ -23,7 +23,7 @@ from repro.core.descriptors import (CapabilityDescriptor, LifecycleSemantics,
                                     ResourceDescriptor, SignalSpec,
                                     TimingSemantics)
 from repro.core.telemetry import RuntimeSnapshot
-from repro.core.twin import TwinState
+from repro.core.twin import TwinState, TwinSurrogate
 from repro.substrates.base import SubstrateAdapter
 from repro.substrates.memristive import CrossbarTwin
 
@@ -55,12 +55,20 @@ class _Handler(BaseHTTPRequestHandler):
         self.wfile.write(body)
 
     def do_GET(self):
-        if self.path != "/health":
+        if self.path == "/health":
+            body = json.dumps({"status": "ok",
+                               "drift_score": round(self.server.twin.drift(),
+                                                    4)}).encode()
+        elif self.path == "/twin":
+            # twin-binding endpoint: the PROGRAMMED (target) conductances,
+            # so a control-plane-side mirror surrogate stays synchronized
+            # with the service across the software boundary
+            body = json.dumps({
+                "g_target": self.server.twin.g_target.tolist(),
+            }).encode()
+        else:
             self.send_error(404)
             return
-        body = json.dumps({"status": "ok",
-                           "drift_score": round(self.server.twin.drift(), 4)
-                           }).encode()
         self.send_response(200)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
@@ -92,6 +100,50 @@ class FastService:
     @property
     def url(self) -> str:
         return f"http://127.0.0.1:{self.port}"
+
+
+class HTTPMirrorSurrogate(TwinSurrogate):
+    """Mirror twin for the externalized crossbar that RE-FETCHES the
+    service's programmed conductances (``GET /twin``) when its cached copy
+    ages past the TTL, so a service-side reprogram cannot leave a "valid"
+    twin answering with stale weights.  Refresh failures keep the cached
+    program (the service being down is exactly when the twin must serve)."""
+
+    REFRESH_TTL_S = 30.0
+
+    def __init__(self, url: str, g_target):
+        from repro.substrates.memristive import CrossbarMirrorSurrogate
+
+        self._mirror = CrossbarMirrorSurrogate(g_target)
+        self.kind = self._mirror.kind
+        self.tolerance = self._mirror.tolerance
+        self.url = url
+        self._fetched = time.monotonic()
+        self._refresh_lock = threading.Lock()
+
+    def _maybe_refresh(self) -> None:
+        with self._refresh_lock:
+            if time.monotonic() - self._fetched < self.REFRESH_TTL_S:
+                return
+            self._fetched = time.monotonic()    # back off even on failure
+            try:
+                with urllib.request.urlopen(f"{self.url}/twin",
+                                            timeout=2) as r:
+                    g_target = json.loads(r.read()).get("g_target")
+                if g_target is not None:
+                    self._mirror.g = np.array(g_target, np.float64)
+            except Exception:                              # noqa: BLE001
+                pass
+
+    def simulate(self, task) -> Dict:
+        self._maybe_refresh()
+        return self._mirror.simulate(task)
+
+    def observe(self, task, raw: Dict) -> None:
+        self._mirror.observe(task, raw)
+
+    def divergence(self, real_output, twin_output) -> float:
+        return self._mirror.divergence(real_output, twin_output)
 
 
 class HTTPFastAdapter(SubstrateAdapter):
@@ -170,5 +222,17 @@ class HTTPFastAdapter(SubstrateAdapter):
         return RuntimeSnapshot(self.resource_id, drift_score=self.last_drift)
 
     def make_twin(self) -> Optional[TwinState]:
+        # fetch the service's programmed conductances so the mirror twin is
+        # synchronized across the boundary; an unreachable/old service
+        # degrades to a metadata-only (non-executable) twin
+        surrogate = None
+        try:
+            with urllib.request.urlopen(f"{self.url}/twin", timeout=5) as r:
+                g_target = json.loads(r.read()).get("g_target")
+            if g_target is not None:
+                surrogate = HTTPMirrorSurrogate(self.url, g_target)
+        except Exception:                                  # noqa: BLE001
+            surrogate = None
         return TwinState(f"twin-{self.resource_id}", self.resource_id,
-                         kind="behavioral", model={"transport": "http"})
+                         kind="behavioral", model={"transport": "http"},
+                         surrogate=surrogate)

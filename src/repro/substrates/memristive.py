@@ -18,7 +18,7 @@ from repro.core.descriptors import (CapabilityDescriptor, LifecycleSemantics,
                                     ResourceDescriptor, SignalSpec,
                                     TimingSemantics)
 from repro.core.telemetry import RuntimeSnapshot
-from repro.core.twin import TwinState
+from repro.core.twin import TwinState, TwinSurrogate
 from repro.substrates.base import SubstrateAdapter
 
 RESOURCE_ID = "memristive-local"
@@ -45,6 +45,40 @@ class CrossbarTwin:
 
     def reprogram(self) -> None:
         self.g = self.g_target.copy()
+
+
+class CrossbarMirrorSurrogate(TwinSurrogate):
+    """Behavioral mirror of the programmed crossbar: the TARGET conductances
+    with no relaxation.  Measured divergence vs the real device is therefore
+    exactly the accumulated conductance drift — the canonical twin-fidelity
+    signal."""
+
+    kind = "behavioral"
+    tolerance = 0.25
+
+    def __init__(self, g_target):
+        self.g = np.array(g_target, np.float64)
+
+    def simulate(self, task) -> Dict:
+        x = np.asarray(task.payload if task.payload is not None
+                       else [0.5, 0.5, 0.5, 0.5], np.float64)
+        x = x[: self.g.shape[1]]
+        t0 = time.perf_counter()
+        y = self.g @ x
+        backend_ms = (time.perf_counter() - t0) * 1e3
+        return {
+            "output": {"vector": y.tolist()},
+            "telemetry": {
+                "execution_ms": round(backend_ms, 4),
+                "drift_score": 0.0,
+                "energy_proxy_mj": 0.0,
+                "transport_ms": 0.0,
+                "health_status": "healthy",
+                "observation_ms": backend_ms,
+            },
+            "artifacts": {},
+            "backend_ms": backend_ms,
+        }
 
 
 class MemristiveAdapter(SubstrateAdapter):
@@ -121,4 +155,5 @@ class MemristiveAdapter(SubstrateAdapter):
     def make_twin(self) -> Optional[TwinState]:
         return TwinState(f"twin-{self.resource_id}", self.resource_id,
                          kind="behavioral",
-                         model={"n": int(self.twin.g.shape[0])})
+                         model={"n": int(self.twin.g.shape[0])},
+                         surrogate=CrossbarMirrorSurrogate(self.twin.g_target))

@@ -19,7 +19,7 @@ from repro.core.descriptors import (CapabilityDescriptor, LifecycleSemantics,
                                     ResourceDescriptor, SignalSpec,
                                     TimingSemantics)
 from repro.core.telemetry import RuntimeSnapshot
-from repro.core.twin import TwinState
+from repro.core.twin import TwinState, TwinSurrogate
 from repro.substrates.base import SubstrateAdapter
 
 RESOURCE_ID = "wetware-synthetic"
@@ -59,6 +59,75 @@ class SpikeResponseTwin:
         fingerprint = spikes.sum(0)          # per-neuron counts
         return fingerprint, rate, (first_spike if first_spike is not None
                                    else float(steps) * dt)
+
+
+class WetwareBehavioralSurrogate(TwinSurrogate):
+    """Behavioral twin of the LIF population: same synaptic weights (same
+    construction seed), nominal noise tracked from observed telemetry.
+
+    Spike trains from different noise realizations never match
+    elementwise, so divergence compares the behavioral summary — response
+    presence and total spike-count mass — not raw fingerprints; the
+    declared tolerance reflects trial-to-trial biological variability.
+    """
+
+    kind = "behavioral"
+    tolerance = 0.5
+
+    def __init__(self, n_neurons: int = 64, seed: int = 11):
+        self.model = SpikeResponseTwin(n_neurons=n_neurons, seed=seed)
+        self._noise = 0.2
+        self._viability = 1.0
+        self._runs = 0
+
+    def observe(self, task, raw: Dict) -> None:
+        tele = raw.get("telemetry") or {}
+        if "noise_level" in tele:
+            self._noise = float(tele["noise_level"])
+        if "viability" in tele:
+            self._viability = float(tele["viability"])
+
+    def simulate(self, task) -> Dict:
+        payload = task.payload if isinstance(task.payload, dict) else {}
+        pattern = payload.get("pattern", [1, 0, 1, 1])
+        amplitude = float(payload.get("amplitude", 1.0))
+        self._runs += 1
+        t0 = time.perf_counter()
+        fp, rate, delay = self.model.run(pattern, amplitude, self._noise,
+                                         seed=self._runs)
+        backend_ms = (time.perf_counter() - t0) * 1e3
+        drift = max(0.0, round(1.0 - self._viability + 0.2 * self._noise, 4))
+        return {
+            "output": {"fingerprint": fp.tolist(),
+                       "responded": bool(rate > 1.0)},
+            "telemetry": {
+                "firing_rate_hz": round(float(rate), 3),
+                "response_delay_ms": round(float(delay), 3),
+                "noise_level": round(self._noise, 4),
+                "viability": round(self._viability, 4),
+                "drift_score": drift,
+                "health_status": ("healthy" if self._viability > 0.5
+                                  else "degraded"),
+                "observation_ms": 120.0,
+            },
+            "artifacts": {"recording": {"channels": self.model.n,
+                                        "duration_ms": 120}},
+            "backend_ms": backend_ms,
+        }
+
+    def divergence(self, real_output, twin_output) -> float:
+        r = real_output if isinstance(real_output, dict) else {}
+        t = twin_output if isinstance(twin_output, dict) else {}
+        resp = 0.0 if bool(r.get("responded")) == bool(t.get("responded")) \
+            else 1.0
+        f_real = np.asarray(r.get("fingerprint", []), np.float64)
+        f_twin = np.asarray(t.get("fingerprint", []), np.float64)
+        if f_real.size and f_real.shape == f_twin.shape:
+            s_real, s_twin = float(f_real.sum()), float(f_twin.sum())
+            mass = abs(s_real - s_twin) / max(s_real, s_twin, 1.0)
+        else:
+            mass = 1.0
+        return float(min(1.0, 0.5 * resp + 0.5 * mass))
 
 
 class WetwareAdapter(SubstrateAdapter):
@@ -156,4 +225,6 @@ class WetwareAdapter(SubstrateAdapter):
     def make_twin(self) -> Optional[TwinState]:
         return TwinState(f"twin-{self.resource_id}", self.resource_id,
                          kind="behavioral",
-                         model={"n_neurons": self.twin.n, "tau": self.twin.tau})
+                         model={"n_neurons": self.twin.n, "tau": self.twin.tau},
+                         surrogate=WetwareBehavioralSurrogate(
+                             n_neurons=self.twin.n))

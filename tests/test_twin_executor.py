@@ -1,0 +1,224 @@
+"""Executable-twin unit suite: the shared confidence law, invalidation
+bookkeeping, speculation + retro-invalidation, queue-saturation fallback,
+and the roofline surrogate's predict-from-telemetry path."""
+import time
+
+import pytest
+
+from repro.core import (ControlPlaneScheduler, Orchestrator, TaskRequest,
+                        TwinState, TwinSyncManager)
+from repro.core.telemetry import TelemetryBus, TelemetryEvent
+from repro.substrates import MemristiveAdapter
+from repro.substrates.tpu_pod import RooflineSurrogate
+
+
+def _vector_task(**kw):
+    return TaskRequest(function="inference", input_modality="vector",
+                       output_modality="vector",
+                       payload=[0.2, 0.4, 0.1, 0.3], **kw)
+
+
+# ---------------------------------------------------------------------------
+# shared confidence law + invalidation reason (satellites 1 & 2)
+
+
+def _manager_with_twin(conf: float = 0.7) -> TwinSyncManager:
+    bus = TelemetryBus()
+    twins = TwinSyncManager(bus)
+    twins.register(TwinState("t", "r", confidence=conf))
+    return twins
+
+
+def test_mark_synced_and_result_event_share_one_confidence_law():
+    a, b = _manager_with_twin(), _manager_with_twin()
+    a.mark_synced("r", drift=0.3)
+    b._on_event(TelemetryEvent("r", "result", {"drift_score": 0.3}))
+    assert a.get("r").confidence == pytest.approx(b.get("r").confidence)
+    assert a.get("r").drift_estimate == b.get("r").drift_estimate == 0.3
+
+
+def test_drift_event_shares_the_same_law_too():
+    a, b = _manager_with_twin(), _manager_with_twin()
+    a.mark_synced("r", drift=0.5)
+    b._on_event(TelemetryEvent("r", "drift", {"drift_score": 0.5}))
+    assert a.get("r").confidence == pytest.approx(b.get("r").confidence)
+
+
+def test_invalidate_records_reason_and_surfaces_in_to_dict():
+    twins = _manager_with_twin()
+    twins.invalidate("r", "postcondition: missing telemetry")
+    tw = twins.get("r")
+    assert tw.confidence == 0.0
+    assert tw.invalidation_reason == "postcondition: missing telemetry"
+    assert tw.to_dict()["invalidation_reason"] == \
+        "postcondition: missing telemetry"
+    ok, why = tw.valid(None)
+    assert not ok and "postcondition: missing telemetry" in why
+
+
+def test_invalidate_without_reason_still_marks_invalid():
+    twins = _manager_with_twin()
+    twins.invalidate("r")
+    assert not twins.get("r").valid(None)[0]
+    assert twins.get("r").to_dict()["invalidation_reason"] == "invalidated"
+
+
+def test_passive_telemetry_cannot_clear_an_invalidation():
+    twins = _manager_with_twin()
+    twins.invalidate("r", "broken")
+    for _ in range(50):
+        twins._on_event(TelemetryEvent("r", "result", {"drift_score": 0.0}))
+    tw = twins.get("r")
+    assert tw.confidence > 0.5        # confidence rebuilt...
+    assert not tw.valid(None)[0]      # ...but validity stays pinned False
+    twins.mark_synced("r")            # explicit re-sync clears it
+    assert twins.get("r").valid(None)[0]
+
+
+def test_measured_agreement_clears_invalidation():
+    twins = _manager_with_twin()
+    twins.invalidate("r", "broken")
+    twins.observe_divergence("r", divergence=0.01, tolerance=0.25)
+    tw = twins.get("r")
+    assert tw.invalidation_reason == ""
+    # a beyond-tolerance measurement must NOT clear it
+    twins.invalidate("r", "broken again")
+    twins.observe_divergence("r", divergence=0.9, tolerance=0.25)
+    assert not twins.get("r").valid(None)[0]
+
+
+def test_per_task_min_confidence_overrides_default():
+    twins = _manager_with_twin(conf=0.45)
+    tw = twins.get("r")
+    assert tw.valid(None)[0]                         # default floor 0.3
+    assert not tw.valid(None, min_confidence=0.6)[0]
+    assert tw.valid(None, min_confidence=0.2)[0]
+
+
+def test_check_serve_is_atomic_snapshot():
+    twins = _manager_with_twin(conf=0.8)
+    tw, ok, why, conf = twins.check_serve("r")
+    assert ok and conf == pytest.approx(0.8)
+    twins.invalidate("r", "gone")
+    tw, ok, why, conf = twins.check_serve("r")
+    assert not ok and "gone" in why and conf == 0.0
+
+
+# ---------------------------------------------------------------------------
+# speculation: immediate twin answer, asynchronous confirmation
+
+
+def test_speculate_confirms_against_real_hardware():
+    orch = Orchestrator()
+    orch.register(MemristiveAdapter())
+    with ControlPlaneScheduler(orch, workers=2) as sched:
+        spec, fut = sched.submit_speculative(
+            _vector_task(twin_mode="speculate"))
+        assert spec is not None
+        assert spec.telemetry["served_by"] == "twin"
+        assert spec.telemetry["twin_mode"] == "speculate"
+        real, trace, verdict = fut.result(timeout=30)
+        assert real.status == "completed"
+        assert verdict["confirmed"] and not verdict["retro_invalidated"]
+        assert verdict["divergence"] <= 0.25
+    audit = orch.twin_exec.audit()
+    assert audit["speculations"] == 1
+    assert audit["speculations_confirmed"] == 1
+    assert audit["twin_serves_invalid"] == 0
+
+
+def test_speculation_mismatch_retro_invalidates_twin():
+    orch = Orchestrator()
+    orch.register(MemristiveAdapter())
+    rid = "memristive-local"
+    orch.twins.get(rid).surrogate.g = orch.twins.get(rid).surrogate.g + 10.0
+    with ControlPlaneScheduler(orch, workers=2) as sched:
+        spec, fut = sched.submit_speculative(
+            _vector_task(twin_mode="speculate"))
+        assert spec is not None
+        real, trace, verdict = fut.result(timeout=30)
+        assert real.status == "completed"
+        assert verdict["retro_invalidated"]
+        tw = orch.twins.get(rid)
+        assert tw.invalidation_reason.startswith("speculation mismatch")
+        assert not tw.valid(None)[0]
+        # a subsequent speculation refuses the invalidated twin and falls
+        # back to plain real execution
+        spec2, fut2 = sched.submit_speculative(
+            _vector_task(twin_mode="speculate"))
+        assert spec2 is None
+        res, _ = fut2.result(timeout=30)
+        assert res.status == "completed"
+    assert orch.twin_exec.audit()["retro_invalidated"] == 1
+    assert orch.twin_exec.audit()["twin_serves_invalid"] == 0
+
+
+# ---------------------------------------------------------------------------
+# queue-saturation fallback (proactive path)
+
+
+def test_saturated_queue_serves_opted_in_tasks_from_twin():
+    orch = Orchestrator(twin_fallback_queue_factor=1.0)
+    orch.register(MemristiveAdapter())
+    rid = "memristive-local"
+    # fake a deep waiting line: depth >= factor * max_concurrent (4)
+    orch.bus.adjust_queue_depth(rid, +8)
+    try:
+        res, trace = orch.submit(_vector_task(twin_mode="fallback"))
+        assert res.status == "completed"
+        assert trace.served_by == "twin"
+        assert "queue saturated" in res.telemetry["twin_serve_reason"]
+        # tasks without the opt-in take the normal (hardware) path
+        res, trace = orch.submit(_vector_task())
+        assert res.status == "completed" and trace.served_by == "substrate"
+    finally:
+        orch.bus.adjust_queue_depth(rid, -8)
+
+
+def test_deadline_lapsed_in_queue_serves_twin():
+    orch = Orchestrator()
+    orch.register(MemristiveAdapter())
+    # a task whose deadline is already in the past when the worker picks it
+    # up exercises the scheduler's saturation-endpoint twin funnel
+    with ControlPlaneScheduler(orch, workers=1) as sched:
+        fut = sched.submit_async(_vector_task(twin_mode="fallback"),
+                                 deadline_s=-1.0)
+        result, trace = fut.result(timeout=30)
+        assert result.status == "completed"
+        assert trace.served_by == "twin"
+        assert "deadline exceeded" in result.telemetry["twin_serve_reason"]
+        fut = sched.submit_async(_vector_task(), deadline_s=-1.0)
+        result, trace = fut.result(timeout=30)
+        assert result.status == "rejected"
+
+
+# ---------------------------------------------------------------------------
+# roofline surrogate (TPU pod twin) — predict-from-telemetry unit path
+
+
+def test_roofline_surrogate_predicts_from_observations():
+    sur = RooflineSurrogate({"step_time_lb_s": 0.05}, steps_per_invoke=3,
+                            batch=4, seq=64)
+    task = TaskRequest(function="train", input_modality="tensor_shards",
+                       output_modality="tensor_shards", payload={"steps": 3})
+    # cold: answers from the roofline lower bound
+    raw = sur.simulate(task)
+    assert raw["telemetry"]["step_ms"] == pytest.approx(50.0)
+    # after observing real telemetry the prediction tracks the median
+    sur.observe(task, {"output": {"step": 6, "loss": 2.5},
+                       "telemetry": {"step_ms": 48.0, "grad_norm": 1.0}})
+    raw = sur.simulate(task)
+    assert raw["output"]["step"] == 9
+    assert raw["telemetry"]["step_ms"] == pytest.approx(48.0)
+    div = sur.divergence({"step": 9, "loss": 2.49}, raw["output"])
+    assert div <= sur.tolerance
+
+
+def test_roofline_surrogate_not_ready_without_record_or_telemetry():
+    from repro.core import TwinNotReady
+
+    sur = RooflineSurrogate(None, steps_per_invoke=3, batch=4, seq=64)
+    with pytest.raises(TwinNotReady):
+        sur.simulate(TaskRequest(function="train",
+                                 input_modality="tensor_shards",
+                                 output_modality="tensor_shards"))

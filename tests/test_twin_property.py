@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) for the executable twin plane.
+
+Under ARBITRARY interleavings of mark_synced / invalidate / recalibrate /
+telemetry events / measured divergences / serve attempts:
+
+1. confidence stays in [0, 1] after every single operation;
+2. an ``invalidate`` never RAISES confidence, and pins ``valid()`` False
+   until an explicit re-sync (mark_synced / recalibrate) or a measured
+   within-tolerance comparison;
+3. every ``served_by: twin`` record cites a twin that was VALID at serve
+   time (``twin_serves_invalid`` stays 0 and every serve-log entry carries
+   ``valid_at_serve=True`` with confidence at/above the applicable floor).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TaskRequest, TwinExecutor, TwinState, TwinSyncManager
+from repro.core.telemetry import TelemetryBus, TelemetryEvent
+from repro.core.twin import TwinNotReady, TwinState as _TwinState
+from repro.core.twin_executor import TwinUnavailable
+
+
+class _StubSurrogate:
+    kind = "behavioral"
+    tolerance = 0.25
+
+    def simulate(self, task):
+        return {"output": {"v": 1.0},
+                "telemetry": {"observation_ms": 1.0}, "backend_ms": 0.0}
+
+    def observe(self, task, raw):
+        pass
+
+    def divergence(self, real_output, twin_output):
+        return 0.0
+
+
+twin_op = st.one_of(
+    st.tuples(st.just("mark"), st.floats(0.0, 1.0)),
+    st.tuples(st.just("invalidate"),
+              st.sampled_from(["postcondition", "speculation mismatch", ""])),
+    st.tuples(st.just("recalibrate"), st.none()),
+    st.tuples(st.just("result"), st.floats(0.0, 1.0)),
+    st.tuples(st.just("driftev"), st.floats(0.0, 1.0)),
+    st.tuples(st.just("diverge"), st.floats(0.0, 2.0)),
+    st.tuples(st.just("serve"), st.none()),
+)
+
+
+def _apply(twins: TwinSyncManager, executor: TwinExecutor, task: TaskRequest,
+           op, arg) -> None:
+    if op == "mark":
+        twins.mark_synced("r", drift=arg)
+    elif op == "invalidate":
+        twins.invalidate("r", arg)
+    elif op == "recalibrate":
+        twins.recalibrate("r")
+    elif op == "result":
+        twins._on_event(TelemetryEvent("r", "result", {"drift_score": arg}))
+    elif op == "driftev":
+        twins._on_event(TelemetryEvent("r", "drift", {"drift_score": arg}))
+    elif op == "diverge":
+        twins.observe_divergence("r", arg, _StubSurrogate.tolerance)
+    elif op == "serve":
+        try:
+            result = executor.serve(task, "r", "fallback")
+            assert result.telemetry["served_by"] == "twin"
+        except (TwinUnavailable, TwinNotReady):
+            pass
+
+
+@settings(max_examples=120, deadline=None)
+@given(ops=st.lists(twin_op, max_size=60),
+       start_conf=st.floats(0.0, 1.0))
+def test_twin_state_invariants_under_arbitrary_interleavings(ops, start_conf):
+    bus = TelemetryBus()
+    twins = TwinSyncManager(bus)
+    twins.register(TwinState("t", "r", confidence=start_conf,
+                             surrogate=_StubSurrogate()))
+    executor = TwinExecutor(twins, bus)
+    task = TaskRequest(function="f", input_modality="x", output_modality="x")
+
+    for op, arg in ops:
+        before = twins.get("r").confidence
+        _apply(twins, executor, task, op, arg)
+        tw = twins.get("r")
+        # (1) confidence bounded after EVERY operation
+        assert 0.0 <= tw.confidence <= 1.0
+        assert 0.0 <= tw.fidelity_score <= 1.0
+        if op == "invalidate":
+            # (2) invalidation never raises confidence and pins validity
+            assert tw.confidence <= before
+            assert tw.confidence == 0.0
+            ok, why = tw.valid(None)
+            assert not ok and "invalidated" in why
+
+    # (3) serve-validity invariant: every twin-served record cites a twin
+    # valid at serve time, with the confidence captured atomically
+    audit = executor.audit()
+    assert audit["twin_serves_invalid"] == 0
+    floor = _TwinState.DEFAULT_MIN_CONFIDENCE
+    for entry in executor.serve_log():
+        assert entry["valid_at_serve"] is True
+        assert entry["confidence_at_serve"] >= floor - 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(twin_op, max_size=40),
+       min_conf=st.floats(0.0, 1.0))
+def test_per_task_floor_respected_at_serve_time(ops, min_conf):
+    """Whatever the interleaving, a serve that succeeds under a per-task
+    confidence floor saw confidence >= that floor at the atomic check."""
+    bus = TelemetryBus()
+    twins = TwinSyncManager(bus)
+    twins.register(TwinState("t", "r", surrogate=_StubSurrogate()))
+    executor = TwinExecutor(twins, bus)
+    task = TaskRequest(function="f", input_modality="x", output_modality="x",
+                       twin_min_confidence=min_conf)
+    for op, arg in ops:
+        _apply(twins, executor, task, op, arg)
+    for entry in executor.serve_log():
+        assert entry["confidence_at_serve"] >= min_conf - 1e-9
+        assert entry["valid_at_serve"] is True
