@@ -8,6 +8,12 @@
 #   make test-twin         executable-twin suites: fidelity/parity,
 #                          executor (shadow/fallback/speculate), properties
 #   make twin-smoke        quick twin-fallback goodput trial + validity audit
+#   make test-gateway      wire-layer suites: protocol round-trips, gateway
+#                          endpoint/error-taxonomy e2e, federated planes
+#   make gateway-smoke     ~20s wire round-trip (discover→invoke→telemetry
+#                          on the mixed testbed) + 1 overhead trial
+#   make bench-gateway     local vs wire control-path overhead (p50/p99,
+#                          asserts median wire excess <= 5 ms)
 #   make bench-throughput  headline serial-vs-pooled scheduler benchmark
 #   make bench-recovery    resilience benchmark: goodput under faults with
 #                          vs without the HealthManager
@@ -18,8 +24,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast chaos-smoke test-twin twin-smoke bench \
-        bench-throughput bench-recovery bench-twin dev-deps
+.PHONY: test test-fast chaos-smoke test-twin twin-smoke test-gateway \
+        gateway-smoke bench bench-throughput bench-recovery bench-twin \
+        bench-gateway dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -36,6 +43,16 @@ test-twin:
 
 twin-smoke:
 	$(PYTHON) -m benchmarks.bench_twin --smoke
+
+test-gateway:
+	$(PYTHON) -m pytest -q tests/test_protocol.py tests/test_gateway.py \
+	    tests/test_federation.py
+
+gateway-smoke:
+	$(PYTHON) -m benchmarks.bench_gateway --smoke
+
+bench-gateway:
+	$(PYTHON) -m benchmarks.bench_gateway
 
 bench-throughput:
 	$(PYTHON) -m benchmarks.bench_throughput

@@ -1,0 +1,158 @@
+"""Wire-path control overhead: in-process plane vs gateway + client SDK.
+
+The paper's RQ3 result is "small local control-path overhead"; the
+protocol-first redesign must keep that true ACROSS the wire.  Same task,
+same substrate, two paths:
+
+- **local** — ``Orchestrator.execute`` called in-process (the PR 1-3 path);
+- **wire** — the identical orchestrator behind a ``ControlPlaneGateway``,
+  driven through ``ControlPlaneClient.invoke`` over loopback HTTP.
+
+Per call we record the CONTROL PATH cost — wall time minus the backend's
+own execution time (``backend_ms``) — so substrate variance cancels and the
+difference between the two medians is exactly what the wire adds: protocol
+encode/decode, one HTTP round-trip, scheduler hand-off.  Reported per
+trial: p50/p99 for both paths and the median wire excess; the acceptance
+bound asserts median excess <= 5 ms (3 committed trials in
+``results/bench_gateway.json``).
+
+    PYTHONPATH=src python -m benchmarks.bench_gateway [--smoke]
+
+``--smoke`` (make gateway-smoke, CI) runs a discover → invoke → telemetry
+round-trip against the standard mixed testbed plus one quick overhead
+trial, in well under 30 s.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Dict, List
+
+from benchmarks.common import csv_row, save
+
+RUNS = 80
+N_TRIALS = 3
+WIRE_EXCESS_BOUND_MS = 5.0
+
+TASK_KW = dict(function="inference", input_modality="vector",
+               output_modality="vector", payload=[0.2, 0.2, 0.2, 0.2],
+               required_telemetry=("execution_ms",),
+               backend_preference="memristive-local")
+
+
+def _pct(xs: List[float], p: float) -> float:
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(p * (len(xs) - 1)))]
+
+
+def _control_ms(invoke, runs: int) -> List[float]:
+    """Per-call control-path cost: wall − backend_ms."""
+    out = []
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        res, _ = invoke()
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        assert res.status == "completed", res.telemetry
+        out.append(wall_ms - res.timing_ms.get("backend_ms", 0.0))
+    return out
+
+
+def _trial(fast_service, runs: int) -> Dict:
+    from repro.core import Orchestrator, TaskRequest
+    from repro.gateway import ControlPlaneClient, ControlPlaneGateway
+    from repro.substrates import standard_testbed
+
+    orch = Orchestrator()
+    standard_testbed(orch, http_service=fast_service)
+    gw = ControlPlaneGateway(orch, plane="bench").start()
+    client = ControlPlaneClient(gw.url)
+    try:
+        # warm both paths (scheduler threads, HTTP keep-alive, jit-ish)
+        for _ in range(5):
+            orch.submit(TaskRequest(**TASK_KW))
+            client.invoke(TaskRequest(**TASK_KW))
+        local = _control_ms(lambda: orch.submit(TaskRequest(**TASK_KW)), runs)
+        wired = _control_ms(lambda: client.invoke(TaskRequest(**TASK_KW)),
+                            runs)
+    finally:
+        gw.stop()
+    return {
+        "runs": runs,
+        "local_p50_ms": _pct(local, 0.50), "local_p99_ms": _pct(local, 0.99),
+        "wire_p50_ms": _pct(wired, 0.50), "wire_p99_ms": _pct(wired, 0.99),
+        "wire_excess_p50_ms": _pct(wired, 0.50) - _pct(local, 0.50),
+        "local_mean_ms": statistics.fmean(local),
+        "wire_mean_ms": statistics.fmean(wired),
+    }
+
+
+def _smoke_roundtrip(fast_service) -> Dict:
+    """discover → invoke → telemetry against the standard mixed testbed,
+    over the wire; asserts each leg."""
+    from repro.core import Orchestrator, TaskRequest
+    from repro.gateway import ControlPlaneClient, ControlPlaneGateway
+    from repro.substrates import standard_testbed
+
+    orch = Orchestrator()
+    standard_testbed(orch, http_service=fast_service)
+    gw = ControlPlaneGateway(orch, plane="smoke").start()
+    client = ControlPlaneClient(gw.url)
+    try:
+        descs = client.discover()
+        assert len(descs) == len(orch.discover()) >= 5
+        cursor = client.telemetry(cursor=0)["next_cursor"]
+        res, trace = client.invoke(TaskRequest(**TASK_KW))
+        assert res.status == "completed" and trace.selected
+        tail = client.telemetry(cursor=cursor, timeout_s=5.0)
+        assert tail["events"], "invoke events must reach the telemetry cursor"
+        return {"resources": len(descs), "invoked_on": res.resource_id,
+                "telemetry_events": len(tail["events"])}
+    finally:
+        gw.stop()
+
+
+def run(fast_service, smoke: bool = False) -> list:
+    runs = 20 if smoke else RUNS
+    n_trials = 1 if smoke else N_TRIALS
+    roundtrip = _smoke_roundtrip(fast_service) if smoke else None
+
+    trials = [_trial(fast_service, runs) for _ in range(n_trials)]
+    excess = statistics.median(t["wire_excess_p50_ms"] for t in trials)
+    payload = {
+        "trials": trials,
+        "median_wire_excess_p50_ms": excess,
+        "bound_ms": WIRE_EXCESS_BOUND_MS,
+        "within_bound": excess <= WIRE_EXCESS_BOUND_MS,
+    }
+    if roundtrip is not None:
+        payload["smoke_roundtrip"] = roundtrip
+    save("bench_gateway_smoke" if smoke else "bench_gateway", payload)
+    assert excess <= WIRE_EXCESS_BOUND_MS, (
+        f"wire control path adds {excess:.3f} ms median "
+        f"(> {WIRE_EXCESS_BOUND_MS} ms bound)")
+    best = min(t["wire_excess_p50_ms"] for t in trials)
+    return [csv_row("gateway/wire_excess_p50", excess * 1e3,
+                    f"best={best:.3f}ms local_p50="
+                    f"{trials[0]['local_p50_ms']:.3f}ms wire_p50="
+                    f"{trials[0]['wire_p50_ms']:.3f}ms trials={n_trials}")]
+
+
+def main() -> None:
+    import argparse
+
+    from repro.substrates import FastService
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI round-trip + 1 overhead trial (<30s)")
+    args = ap.parse_args()
+    svc = FastService().start()
+    try:
+        for row in run(svc, smoke=args.smoke):
+            print(row, flush=True)
+    finally:
+        svc.stop()
+
+
+if __name__ == "__main__":
+    main()

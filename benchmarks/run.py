@@ -22,6 +22,10 @@ Paper artifact map:
                         under quarantine with twin-served fallback vs the
                         reject-only baseline (same fault schedule as
                         bench_recovery; zero-invalid-serves audited)
+    bench_gateway     — beyond-paper wire API: control-path overhead of the
+                        gateway + client SDK vs the in-process plane
+                        (reproduces the paper's "small control-path
+                        overhead" across a real protocol boundary)
 """
 import argparse
 import sys
@@ -30,10 +34,10 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-from benchmarks import (bench_cortical, bench_faults, bench_fleet, bench_http,
-                        bench_matcher, bench_overhead, bench_portability,
-                        bench_recovery, bench_roofline, bench_throughput,
-                        bench_twin)
+from benchmarks import (bench_cortical, bench_faults, bench_fleet,
+                        bench_gateway, bench_http, bench_matcher,
+                        bench_overhead, bench_portability, bench_recovery,
+                        bench_roofline, bench_throughput, bench_twin)
 
 BENCHES = {
     "portability": bench_portability.run,
@@ -47,6 +51,7 @@ BENCHES = {
     "throughput": bench_throughput.run,
     "recovery": bench_recovery.run,
     "twin": bench_twin.run,
+    "gateway": bench_gateway.run,
 }
 
 

@@ -1,11 +1,19 @@
 """Quickstart: the phys-MCP control plane in 60 seconds.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py             # in-process
+    PYTHONPATH=src python examples/quickstart.py --remote    # over the wire
 
 Registers the paper's five-backend test bed, then walks the two workflow
 styles from paper §IV-D: capability-driven (the matcher picks) and directed
 (the client names a backend; the control plane validates).
+
+``--remote`` runs the IDENTICAL flows against the same plane exposed
+through a :class:`ControlPlaneGateway`, driven by the
+:class:`ControlPlaneClient` SDK — same task objects, same result/trace
+types, one extra line of setup.  That symmetry is the protocol-first
+redesign's point.
 """
+import argparse
 import sys
 from pathlib import Path
 
@@ -15,13 +23,9 @@ from repro.core import Orchestrator, TaskRequest
 from repro.substrates import FastService, standard_testbed
 
 
-def main():
-    svc = FastService().start()
-    orch = Orchestrator()
-    standard_testbed(orch, http_service=svc)
-
-    print("== discovery ==")
-    for desc in orch.discover():
+def run_flows(discover, submit, twin_state, label):
+    print(f"== discovery ({label}) ==")
+    for desc in discover():
         cap = desc.capability
         print(f"  {desc.resource_id:24s} class={desc.substrate_class:10s} "
               f"io={cap.input_signal.modality:>13s} "
@@ -29,7 +33,7 @@ def main():
               f"reset={','.join(cap.lifecycle.reset_modes)}")
 
     print("\n== capability-driven: fast vector inference ==")
-    res, trace = orch.submit(TaskRequest(
+    res, trace = submit(TaskRequest(
         function="inference", input_modality="vector",
         output_modality="vector", payload=[0.1, 0.2, 0.3, 0.4],
         required_telemetry=("execution_ms",)))
@@ -38,7 +42,7 @@ def main():
     print(f"  control overhead: {trace.control_overhead_ms:.3f} ms")
 
     print("\n== capability-driven: slow chemical assay ==")
-    res, _ = orch.submit(TaskRequest(
+    res, _ = submit(TaskRequest(
         function="assay", input_modality="concentration",
         output_modality="concentration",
         payload={"concentrations": [0.1, 0.7, 0.1, 0.1]},
@@ -48,7 +52,7 @@ def main():
           f"contamination={res.telemetry['contamination']}")
 
     print("\n== directed: externalized HTTP backend ==")
-    res, _ = orch.submit(TaskRequest(
+    res, _ = submit(TaskRequest(
         function="inference", input_modality="vector",
         output_modality="vector", backend_preference="fast-external",
         payload=[0.5, 0.5, 0.5, 0.5]))
@@ -56,7 +60,36 @@ def main():
 
     print("\n== twin plane ==")
     for rid in ("chemical-ode", "memristive-local"):
-        print(f"  {rid}: {orch.twins.get(rid).to_dict()}")
+        print(f"  {rid}: {twin_state(rid)}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--remote", action="store_true",
+                    help="drive the same plane through a gateway + client "
+                         "SDK (wire protocol v1) instead of in-process")
+    args = ap.parse_args()
+
+    svc = FastService().start()
+    orch = Orchestrator()
+    standard_testbed(orch, http_service=svc)
+
+    if args.remote:
+        from repro.gateway import ControlPlaneClient, ControlPlaneGateway
+
+        gw = ControlPlaneGateway(orch, plane="quickstart").start()
+        client = ControlPlaneClient(gw.url)
+        print(f"(control plane exposed at {gw.url}, "
+              "speaking protocol v1)\n")
+        try:
+            run_flows(client.discover, client.invoke, client.twin,
+                      label="over the wire")
+        finally:
+            gw.stop()
+    else:
+        run_flows(orch.discover, orch.submit,
+                  lambda rid: orch.twins.get(rid).to_dict(),
+                  label="in-process")
     svc.stop()
 
 

@@ -12,6 +12,8 @@ from repro.core.descriptors import (CapabilityDescriptor, Observability,  # noqa
                                     PolicyConstraints, ResourceDescriptor,
                                     SignalSpec, TimingSemantics,
                                     LifecycleSemantics, shared_key_ratio)
+from repro.core.errors import (ControlPlaneError, ErrorCode,  # noqa: F401
+                               WireError, classify_rejection)
 from repro.core.health import (BreakerState, BreakerTransition,  # noqa: F401
                                HealthManager, HealthThresholds,
                                LEGAL_BREAKER)
@@ -25,7 +27,8 @@ from repro.core.orchestrator import Orchestrator, OrchestrationTrace  # noqa: F4
 from repro.core.policy import PolicyManager  # noqa: F401
 from repro.core.scheduler import ControlPlaneScheduler, SchedulerClosed  # noqa: F401
 from repro.core.registry import CapabilityRegistry  # noqa: F401
-from repro.core.tasks import TaskRequest  # noqa: F401
+from repro.core.tasks import (TaskRequest, new_task_id,  # noqa: F401
+                              set_plane_namespace)
 from repro.core.telemetry import RuntimeSnapshot, TelemetryBus, TelemetryEvent  # noqa: F401
 from repro.core.twin import (RecordReplaySurrogate, TwinNotReady,  # noqa: F401
                              TwinState, TwinSurrogate, TwinSyncManager,

@@ -14,11 +14,33 @@ setup and supervision — not passive documentation.  ``to_dict()`` produces
 the wire form whose *shared-key ratio* across heterogeneous backends is the
 paper's RQ1 portability metric (1.0 in the paper; reproduced in
 ``benchmarks/bench_portability.py``).
+
+Descriptor portability is round-trip-faithful: every spec has a
+``from_dict`` constructor and ``to_dict → from_dict → to_dict`` is an
+identity (property-tested in ``tests/test_protocol.py``), so a descriptor
+discovered over the wire is indistinguishable from one built in-process —
+the matcher, policy manager and contracts all consume it unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Tuple
+
+
+def _tup(v) -> Tuple:
+    """Wire lists come back as tuples (descriptor dataclasses are frozen
+    and hashable; ``dataclasses.asdict`` serializes tuples as lists)."""
+    return tuple(v) if v is not None else ()
+
+
+def known_fields(cls, d: Dict) -> Dict:
+    """Drop unknown keys before dataclass construction: additive fields
+    from a newer MINOR protocol version must be ignored, not crash a
+    ``from_dict``/``from_wire`` (the wire compatibility policy in
+    ``repro.gateway.protocol``).  Shared by every wire constructor."""
+    names = {f.name for f in dataclasses.fields(cls)}
+    return {k: v for k, v in d.items() if k in names}
+
 
 # signal modalities used by the reference backends (paper §VI)
 MODALITIES = (
@@ -47,6 +69,12 @@ class SignalSpec:
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
 
+    @classmethod
+    def from_dict(cls, d: Dict) -> "SignalSpec":
+        d = known_fields(cls, d)
+        d["admissible_range"] = tuple(d.get("admissible_range", (0.0, 1.0)))
+        return cls(**d)
+
 
 @dataclasses.dataclass(frozen=True)
 class TimingSemantics:
@@ -61,6 +89,10 @@ class TimingSemantics:
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "TimingSemantics":
+        return cls(**known_fields(cls, d))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +110,13 @@ class LifecycleSemantics:
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
 
+    @classmethod
+    def from_dict(cls, d: Dict) -> "LifecycleSemantics":
+        d = known_fields(cls, d)
+        d["reset_modes"] = _tup(d.get("reset_modes", ("soft",)))
+        d["recovery_modes"] = _tup(d.get("recovery_modes"))
+        return cls(**d)
+
 
 @dataclasses.dataclass(frozen=True)
 class Observability:
@@ -90,6 +129,13 @@ class Observability:
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Observability":
+        return cls(output_channels=_tup(d.get("output_channels")),
+                   telemetry_fields=_tup(d.get("telemetry_fields")),
+                   drift_indicators=_tup(d.get("drift_indicators")),
+                   twin_linked_fields=_tup(d.get("twin_linked_fields")))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +151,12 @@ class PolicyConstraints:
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "PolicyConstraints":
+        d = known_fields(cls, d)
+        d["authorized_tenants"] = _tup(d.get("authorized_tenants", ("*",)))
+        return cls(**d)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +186,22 @@ class CapabilityDescriptor:
             "energy_proxy_mj": self.energy_proxy_mj,
         }
 
+    @classmethod
+    def from_dict(cls, d: Dict) -> "CapabilityDescriptor":
+        return cls(
+            functions=_tup(d.get("functions")),
+            input_signal=SignalSpec.from_dict(d["input_signal"]),
+            output_signal=SignalSpec.from_dict(d["output_signal"]),
+            timing=TimingSemantics.from_dict(d["timing"]),
+            lifecycle=LifecycleSemantics.from_dict(d["lifecycle"]),
+            programmability=d["programmability"],
+            observability=Observability.from_dict(d["observability"]),
+            policy=PolicyConstraints.from_dict(d["policy"]),
+            supports_repeated_invocation=d.get("supports_repeated_invocation",
+                                               True),
+            energy_proxy_mj=d.get("energy_proxy_mj"),
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class ResourceDescriptor:
@@ -155,6 +223,18 @@ class ResourceDescriptor:
             "capability": self.capability.to_dict(),
             "description": self.description,
         }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ResourceDescriptor":
+        return cls(
+            resource_id=d["resource_id"],
+            substrate_class=d["substrate_class"],
+            adapter_type=d["adapter_type"],
+            location=d["location"],
+            twin_binding=d.get("twin_binding"),
+            capability=CapabilityDescriptor.from_dict(d["capability"]),
+            description=d.get("description", ""),
+        )
 
 
 def shared_key_ratio(dicts: List[Dict]) -> float:

@@ -1,0 +1,125 @@
+"""Structured control-plane error taxonomy (wire protocol v1).
+
+Before the protocol-first redesign every rejection was an ad-hoc prose
+string ("concurrency limit", "circuit open (quarantined): ...").  Prose is
+fine for humans but useless for clients programming against the plane: a
+remote caller needs to distinguish "this task can never match" from "the
+fleet is saturated, retry later" from "the breaker is open, back off".
+
+:class:`ErrorCode` is the closed set of machine-readable outcomes every
+control-plane rejection maps onto; the in-process path (``Orchestrator``),
+the wire path (``repro.gateway``) and the federated path
+(``RemotePlaneAdapter``) all speak it, so a rejection classified on an edge
+plane survives two hops to a cloud client unchanged.
+
+Prose reasons are NOT replaced — every :class:`ControlPlaneError` and every
+rejected ``InvocationResult`` still carries the human-readable reason
+(including e.g. a twin's recorded ``invalidation_reason``); the code rides
+alongside it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Optional
+
+
+class ErrorCode(str, enum.Enum):
+    """Closed taxonomy of structured control-plane failure outcomes."""
+
+    #: no admissible backend for this task shape (modality/function mismatch)
+    NO_MATCH = "NO_MATCH"
+    #: policy manager refused: supervision, tenancy, safety bounds
+    POLICY_DENIED = "POLICY_DENIED"
+    #: circuit breaker open / probation refused (resource quarantined)
+    BREAKER_OPEN = "BREAKER_OPEN"
+    #: concurrency slots exhausted / queue backpressure
+    QUEUE_SATURATED = "QUEUE_SATURATED"
+    #: deadline lapsed (while queued, or admission blocked past the budget)
+    DEADLINE = "DEADLINE"
+    #: twin validity constraint failed (invalidated / stale / low confidence)
+    TWIN_INVALID = "TWIN_INVALID"
+    #: every fallback attempt failed (prepare/invoke/postcondition errors)
+    FALLBACK_EXHAUSTED = "FALLBACK_EXHAUSTED"
+    #: named resource does not exist on this plane
+    NOT_FOUND = "NOT_FOUND"
+    #: malformed request / unsupported protocol version
+    BAD_REQUEST = "BAD_REQUEST"
+    #: remote plane unreachable (federation transport failure)
+    PLANE_UNAVAILABLE = "PLANE_UNAVAILABLE"
+    #: unexpected server-side failure
+    INTERNAL = "INTERNAL"
+
+
+#: substring → code classification table for legacy prose reasons, most
+#: specific first (an aggregated multi-candidate reason may contain several
+#: patterns; the first hit wins, so e.g. a fleet whose only blocker is an
+#: open breaker classifies BREAKER_OPEN, not NO_MATCH)
+_CLASSIFIERS = (
+    (ErrorCode.TWIN_INVALID, ("twin invalidated", "twin stale",
+                              "twin confidence", "twin fallback unavailable",
+                              "no twin bound")),
+    (ErrorCode.BREAKER_OPEN, ("circuit open", "quarantined", "probation")),
+    (ErrorCode.DEADLINE, ("deadline exceeded", "deadline lapsed")),
+    (ErrorCode.QUEUE_SATURATED, ("concurrency limit", "queue saturated")),
+    (ErrorCode.POLICY_DENIED, ("supervision", "not authorized",
+                               "exceeds safety bound")),
+    (ErrorCode.FALLBACK_EXHAUSTED, ("fallback attempts exhausted",
+                                    "prepare failure", "invoke failure",
+                                    "postcondition")),
+    (ErrorCode.NOT_FOUND, ("resource unregistered", "no such resource")),
+)
+
+
+def classify_rejection(reason: Optional[str]) -> ErrorCode:
+    """Map a prose rejection reason onto the structured taxonomy.
+
+    New code passes codes explicitly; this classifier keeps every legacy
+    reason string (matcher admissibility prose, aggregated multi-candidate
+    rejections) wire-classifiable without rewriting each producer.
+    """
+    if not reason:
+        return ErrorCode.INTERNAL
+    low = reason.lower()
+    for code, needles in _CLASSIFIERS:
+        if any(n in low for n in needles):
+            return code
+    return ErrorCode.NO_MATCH
+
+
+@dataclasses.dataclass
+class WireError:
+    """Structured error as it crosses the wire: code + prose + detail."""
+
+    code: ErrorCode
+    message: str
+    detail: Dict = dataclasses.field(default_factory=dict)
+
+    def to_wire(self) -> Dict:
+        return {"code": self.code.value, "message": self.message,
+                "detail": dict(self.detail)}
+
+    @classmethod
+    def from_wire(cls, d: Dict) -> "WireError":
+        try:
+            code = ErrorCode(d.get("code", "INTERNAL"))
+        except ValueError:
+            code = ErrorCode.INTERNAL
+        return cls(code, d.get("message", ""), dict(d.get("detail") or {}))
+
+
+class ControlPlaneError(RuntimeError):
+    """Raised by protocol-aware surfaces (gateway client, federation
+    adapter) when the plane rejects a request; carries the structured code
+    and any detail (e.g. a twin's ``invalidation_reason``)."""
+
+    def __init__(self, code: ErrorCode, message: str,
+                 detail: Optional[Dict] = None):
+        super().__init__(message)
+        self.code = code
+        self.message = message
+        self.detail = dict(detail or {})
+
+    @classmethod
+    def from_wire_error(cls, err: WireError) -> "ControlPlaneError":
+        return cls(err.code, err.message, err.detail)

@@ -21,6 +21,7 @@ from typing import Any, Dict, Optional
 
 from repro.core.contracts import SessionContracts, contracts_from_descriptor
 from repro.core.descriptors import ResourceDescriptor
+from repro.core.errors import ErrorCode, classify_rejection
 from repro.core.lifecycle import LifecycleManager, LifecycleState
 from repro.core.tasks import TaskRequest
 from repro.core.telemetry import TelemetryBus, TelemetryEvent
@@ -63,6 +64,29 @@ class InvocationResult:
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
+
+    # -- wire forms -----------------------------------------------------------
+    def to_wire(self) -> Dict:
+        """Faithful serialization; identical to ``to_dict`` today but kept
+        distinct so the wire shape can evolve independently of logging."""
+        return self.to_dict()
+
+    @classmethod
+    def from_wire(cls, d: Dict) -> "InvocationResult":
+        from repro.core.descriptors import known_fields
+
+        return cls(**known_fields(cls, d))
+
+    @property
+    def error_code(self) -> Optional[str]:
+        """Structured taxonomy code for non-completed results (None when
+        completed)."""
+        code = self.telemetry.get("error_code") if self.telemetry else None
+        if code is None and self.status in ("rejected", "failed",
+                                            "invalidated"):
+            reason = (self.telemetry or {}).get("reason", "")
+            code = classify_rejection(reason).value
+        return code
 
 
 class InvocationError(RuntimeError):
@@ -193,8 +217,15 @@ class InvocationManager:
             telemetry, status=result.status, backend_ms=result.timing_ms["backend_ms"])))
         return result
 
-    def rejected(self, task: TaskRequest, reason: str) -> InvocationResult:
+    def rejected(self, task: TaskRequest, reason: str,
+                 code: Optional[ErrorCode] = None) -> InvocationResult:
+        """Terminal rejection carrying BOTH the prose reason and the
+        structured taxonomy code (classified from the reason when the
+        caller doesn't know it)."""
+        if code is None:
+            code = classify_rejection(reason)
         return InvocationResult(
             task_id=task.task_id, resource_id="", status="rejected",
-            output=None, telemetry={"reason": reason}, artifacts={},
-            timing_ms={}, contracts={}, session_id="")
+            output=None,
+            telemetry={"reason": reason, "error_code": code.value},
+            artifacts={}, timing_ms={}, contracts={}, session_id="")

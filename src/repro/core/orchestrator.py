@@ -29,6 +29,7 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.descriptors import ResourceDescriptor
+from repro.core.errors import ErrorCode, classify_rejection
 from repro.core.health import HealthManager
 from repro.core.invocation import (InvocationError, InvocationManager,
                                    InvocationResult)
@@ -59,6 +60,9 @@ class OrchestrationTrace:
     selected: Optional[str] = None
     fallback_used: bool = False
     rejected_reason: Optional[str] = None
+    #: structured taxonomy code matching ``rejected_reason`` (wire protocol
+    #: v1); None while the task has not been rejected
+    error_code: Optional[str] = None
     control_overhead_ms: float = 0.0
     queue_wait_ms: float = 0.0
     #: provenance: "substrate" (real hardware) or "twin" (served by an
@@ -79,6 +83,16 @@ class OrchestrationTrace:
     def record_attempt(self, entry: Dict) -> Dict:
         self.attempts.append(entry)
         return entry
+
+    # -- wire forms -----------------------------------------------------------
+    def to_wire(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_wire(cls, d: Dict) -> "OrchestrationTrace":
+        from repro.core.descriptors import known_fields
+
+        return cls(**known_fields(cls, d))
 
 
 class Orchestrator:
@@ -279,13 +293,21 @@ class Orchestrator:
         return served
 
     def _reject_or_twin(self, task: TaskRequest, trace: OrchestrationTrace,
-                        reason: str
+                        reason: str, code: Optional[ErrorCode] = None
                         ) -> Tuple[InvocationResult, OrchestrationTrace]:
         """Terminal rejection funnel: tasks that opted in (twin_mode
         "fallback" — an explicit opt-in, honored even when substrate
         fallback is disallowed) are served by a VALID twin instead of
         rejected; twin refusal reasons (staleness, invalidation, missing
-        telemetry) are appended to the rejection message."""
+        telemetry) are appended to the rejection message.
+
+        ``code`` is the structured taxonomy outcome; classified from the
+        prose reason when the caller doesn't pass one.  The code reflects
+        the ORIGINAL rejection cause even when twin refusals are appended
+        (a breaker-open task whose twin also refused is still
+        BREAKER_OPEN on the wire)."""
+        if code is None:
+            code = classify_rejection(reason)
         if task.twin_mode == "fallback":
             served, refusals = self.twin_exec.serve_fallback(
                 task, self.matcher, reason)
@@ -295,7 +317,8 @@ class Orchestrator:
             reason = (reason + "; twin fallback unavailable: "
                       + "; ".join(refusals))
         trace.rejected_reason = reason
-        return self.invocations.rejected(task, reason), trace
+        trace.error_code = code.value
+        return self.invocations.rejected(task, reason, code=code), trace
 
     def _acquire_timeout(self, task: TaskRequest,
                          deadline: Optional[float]) -> float:

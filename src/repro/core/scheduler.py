@@ -27,6 +27,7 @@ import time
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.core.errors import ErrorCode
 from repro.core.invocation import InvocationResult
 from repro.core.orchestrator import Orchestrator, OrchestrationTrace
 from repro.core.tasks import TaskRequest
@@ -256,7 +257,8 @@ class ControlPlaneScheduler:
                     try:
                         result, trace = self.orchestrator._reject_or_twin(
                             task, OrchestrationTrace(task.task_id),
-                            "deadline exceeded while queued")
+                            "deadline exceeded while queued",
+                            code=ErrorCode.DEADLINE)
                     except BaseException as e:  # noqa: BLE001 — via future
                         fut.set_exception(e)
                         self._account(None, enqueued)

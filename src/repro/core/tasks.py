@@ -3,14 +3,57 @@
 A task is expressed in substrate-aware terms (paper §VII-B): modality,
 latency target, required telemetry fields, acceptable twin age, supervision
 availability, an optional direct backend preference, and a fallback policy.
+
+Wire fidelity: ``to_wire()`` is the FAITHFUL serialization the gateway
+transports (payload included — a remote plane cannot execute a redacted
+task); ``summary()`` is the redacting form for logs and traces (payload
+replaced by a placeholder).  ``to_dict()`` stays an alias of ``summary()``
+so existing log/trace consumers keep their redaction.
+
+Task-id namespacing: ids are minted per *plane*.  With a single module
+counter, a client plane and a gateway plane running in different processes
+would both mint ``task-00001`` and collide the moment one's tasks reach the
+other over the wire.  Every id therefore embeds a plane namespace (default:
+a process-derived token; override with :func:`set_plane_namespace` for
+readable logs), and ``from_wire`` preserves the originating plane's id so a
+task keeps one identity across a federation hop.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 from typing import Any, Dict, Optional, Tuple
 
 _ids = itertools.count(1)
+#: plane namespace embedded in minted task ids: pid (debuggable) + a random
+#: token (collision-resistant where pids recycle or collide mod the pid
+#: space).  Minted LAZILY and re-minted after fork — a pre-fork import must
+#: not hand every worker the same namespace.
+_plane_ns: Optional[str] = None
+_ns_pid: Optional[int] = None
+
+
+def _namespace() -> str:
+    global _plane_ns, _ns_pid
+    if _plane_ns is None or _ns_pid != os.getpid():
+        _plane_ns = f"{os.getpid() % 0xFFFF:04x}{os.urandom(2).hex()}"
+        _ns_pid = os.getpid()
+    return _plane_ns
+
+
+def set_plane_namespace(namespace: Optional[str]) -> Optional[str]:
+    """Set this process/plane's task-id namespace (returns the previous
+    one for restore; ``None`` reverts to the auto-minted default).  Purely
+    cosmetic beyond uniqueness — ids become ``task-<namespace>-NNNNN``."""
+    global _plane_ns, _ns_pid
+    prev, _plane_ns = _plane_ns, namespace
+    _ns_pid = os.getpid()
+    return prev
+
+
+def new_task_id() -> str:
+    return f"task-{_namespace()}-{next(_ids):05d}"
 
 
 @dataclasses.dataclass
@@ -36,8 +79,7 @@ class TaskRequest:
     #: (None = TwinState.DEFAULT_MIN_CONFIDENCE)
     twin_min_confidence: Optional[float] = None
     metadata: Dict[str, Any] = dataclasses.field(default_factory=dict)
-    task_id: str = dataclasses.field(
-        default_factory=lambda: f"task-{next(_ids):05d}")
+    task_id: str = dataclasses.field(default_factory=new_task_id)
 
     def clone(self, **overrides) -> "TaskRequest":
         """Copy with field overrides and an UN-ALIASED metadata dict.
@@ -51,7 +93,33 @@ class TaskRequest:
             overrides["metadata"] = dict(self.metadata)
         return dataclasses.replace(self, **overrides)
 
-    def to_dict(self) -> Dict:
+    # -- wire forms -----------------------------------------------------------
+    def to_wire(self) -> Dict:
+        """FAITHFUL serialization (payload included) for transport to a
+        remote plane; ``from_wire`` round-trips it exactly."""
         d = dataclasses.asdict(self)
+        d["required_telemetry"] = list(self.required_telemetry)
+        return d
+
+    @classmethod
+    def from_wire(cls, d: Dict) -> "TaskRequest":
+        """Reconstruct a task from its wire form, PRESERVING the
+        originating plane's ``task_id`` (a task keeps one identity across a
+        federation hop; no id is re-minted)."""
+        from repro.core.descriptors import known_fields
+
+        d = known_fields(cls, d)
+        d["required_telemetry"] = tuple(d.get("required_telemetry") or ())
+        d["metadata"] = dict(d.get("metadata") or {})
+        return cls(**d)
+
+    def summary(self) -> Dict:
+        """Redacting form for logs/traces: payload is replaced by a
+        placeholder (payloads may be large or sensitive)."""
+        d = self.to_wire()
         d["payload"] = None if self.payload is None else "<payload>"
         return d
+
+    def to_dict(self) -> Dict:
+        """Alias of :meth:`summary` — the historical (redacting) shape."""
+        return self.summary()

@@ -77,6 +77,16 @@ class TelemetryBus:
         with self._lock:
             self._subs.append(fn)
 
+    def unsubscribe(self, fn: Callable[[TelemetryEvent], None]) -> None:
+        """Detach a subscriber (no-op if absent) — consumers with a shorter
+        lifetime than the bus (e.g. a gateway's telemetry log) must detach
+        on close or they leak into every future emit."""
+        with self._lock:
+            try:
+                self._subs.remove(fn)
+            except ValueError:
+                pass
+
     def emit(self, event: TelemetryEvent) -> None:
         with self._lock:
             self._history[event.resource_id].append(event)

@@ -1,0 +1,16 @@
+"""phys-MCP wire layer: versioned protocol, gateway server, client SDK.
+
+- :mod:`repro.gateway.protocol` — protocol v1: envelopes, faithful wire
+  types, structured error taxonomy (re-exported from ``repro.core.errors``).
+- :mod:`repro.gateway.server` — :class:`ControlPlaneGateway`, the threaded
+  HTTP server exposing one control plane.
+- :mod:`repro.gateway.client` — :class:`ControlPlaneClient`, the typed SDK.
+
+Federation (a whole edge plane as one substrate of a cloud plane) lives in
+:class:`repro.substrates.remote_plane.RemotePlaneAdapter`.
+"""
+from repro.gateway.protocol import (PROTOCOL_VERSION, ProtocolError,  # noqa: F401
+                                    check_version)
+from repro.gateway.server import (ControlPlaneGateway,  # noqa: F401
+                                  TelemetryCursorLog)
+from repro.gateway.client import ControlPlaneClient, GatewayError  # noqa: F401

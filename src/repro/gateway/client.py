@@ -1,0 +1,207 @@
+"""ControlPlaneClient: typed SDK over the phys-MCP wire protocol.
+
+The client gives remote callers the SAME types the in-process API returns —
+``discover()`` yields real :class:`ResourceDescriptor` objects (rebuilt
+through ``from_dict``, which is the descriptor-portability claim made
+executable), ``invoke()`` returns the familiar ``(InvocationResult,
+OrchestrationTrace)`` pair — so code written against an ``Orchestrator``
+ports to a remote plane by swapping the object it calls.
+
+Failures raise :class:`GatewayError` carrying the structured taxonomy code
+plus the server's detail (full trace, twin ``invalidation_reason``), never
+a bare HTTP error.
+"""
+from __future__ import annotations
+
+import http.client
+import socket
+import threading
+import time
+import urllib.parse
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.descriptors import ResourceDescriptor
+from repro.core.errors import ControlPlaneError, ErrorCode
+from repro.core.invocation import InvocationResult
+from repro.core.orchestrator import OrchestrationTrace
+from repro.core.tasks import TaskRequest
+from repro.gateway import protocol as wire
+
+
+class GatewayError(ControlPlaneError):
+    """A wire request failed; ``code``/``message``/``detail`` mirror the
+    server's structured error (``detail`` may carry the full trace and a
+    twin's ``invalidation_reason``)."""
+
+    @property
+    def trace(self) -> Optional[OrchestrationTrace]:
+        t = self.detail.get("trace")
+        return wire.trace_from_wire(t) if t else None
+
+    @property
+    def invalidation_reason(self) -> Optional[str]:
+        return self.detail.get("invalidation_reason")
+
+
+class ControlPlaneClient:
+    """One remote control plane, addressed by gateway URL."""
+
+    def __init__(self, url: str, timeout_s: float = 30.0):
+        self.url = url.rstrip("/")
+        parsed = urllib.parse.urlparse(self.url)
+        self._host = parsed.hostname or "127.0.0.1"
+        self._port = parsed.port or 80
+        self.timeout_s = timeout_s
+        # persistent keep-alive connection per calling thread: control-plane
+        # messages are small, so connection setup would dominate the wire
+        # control path (http.client connections are not thread-safe)
+        self._local = threading.local()
+
+    # -- transport ------------------------------------------------------------
+    def _conn(self, timeout_s: float) -> http.client.HTTPConnection:
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            conn = http.client.HTTPConnection(self._host, self._port,
+                                              timeout=timeout_s)
+            self._local.conn = conn
+        else:
+            conn.timeout = timeout_s
+            if conn.sock is not None:
+                conn.sock.settimeout(timeout_s)
+        return conn
+
+    def _drop_conn(self) -> None:
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            conn.close()
+        self._local.conn = None
+
+    def _call(self, method: str, path: str,
+              envelope: Optional[Dict] = None,
+              timeout_s: Optional[float] = None) -> Dict:
+        data = wire.dumps(envelope) if envelope is not None else None
+        headers = {"Content-Type": "application/json"}
+        payload = None
+        # one retry on a STALE keep-alive connection (the server idle-closed
+        # between calls), but only when a re-send cannot double-execute:
+        # send-phase failures (the request provably never left), or a
+        # RemoteDisconnected on an idempotent GET.  A POST that was already
+        # sent is NEVER retried — the server may be executing that task on
+        # physical hardware — and a timeout awaiting a slow response is a
+        # timeout, not a license to re-send.
+        for attempt in (0, 1):
+            conn = self._conn(timeout_s or self.timeout_s)
+            fresh = conn.sock is None
+            sent = False
+            try:
+                conn.request(method, path, body=data, headers=headers)
+                sent = True
+                resp = conn.getresponse()
+                payload = wire.loads(resp.read())
+                break
+            except (http.client.HTTPException, ConnectionError,
+                    socket.timeout, TimeoutError, OSError) as e:
+                self._drop_conn()
+                retriable = (not sent) or (
+                    method == "GET"
+                    and isinstance(e, http.client.RemoteDisconnected))
+                if fresh or attempt == 1 or not retriable:
+                    raise GatewayError(
+                        ErrorCode.PLANE_UNAVAILABLE,
+                        f"control plane at {self.url} unreachable: "
+                        f"{e!r}") from e
+        try:
+            return wire.parse_response(payload)
+        except ControlPlaneError as e:
+            raise GatewayError(e.code, e.message, e.detail) from None
+
+    @staticmethod
+    def _qs(params: Dict) -> str:
+        q = {k: v for k, v in params.items() if v is not None}
+        return f"?{urllib.parse.urlencode(q)}" if q else ""
+
+    # -- read surface ---------------------------------------------------------
+    def health(self) -> Dict:
+        return self._call("GET", "/v1/health")
+
+    def discover(self, **filters) -> List[ResourceDescriptor]:
+        body = self._call("GET", f"/v1/discover{self._qs(filters)}")
+        return [wire.descriptor_from_wire(d) for d in body["descriptors"]]
+
+    def describe(self, resource_id: str) -> Dict:
+        body = self._call("GET", f"/v1/describe/{resource_id}")
+        body["descriptor"] = wire.descriptor_from_wire(body["descriptor"])
+        return body
+
+    def twin(self, resource_id: str) -> Dict:
+        return self._call("GET", f"/v1/twin/{resource_id}")["twin"]
+
+    def telemetry(self, cursor: int = 0, timeout_s: float = 0.0,
+                  resource: Optional[str] = None,
+                  limit: Optional[int] = None) -> Dict:
+        """Long-poll the plane's telemetry log: returns ``{events,
+        next_cursor, dropped}``; pass ``next_cursor`` back to resume."""
+        qs = self._qs({"cursor": cursor, "timeout_s": timeout_s,
+                       "resource": resource, "limit": limit})
+        return self._call("GET", f"/v1/telemetry{qs}",
+                          timeout_s=self.timeout_s + timeout_s)
+
+    # -- execution ------------------------------------------------------------
+    @staticmethod
+    def _outcome(body: Dict) -> Tuple[InvocationResult, OrchestrationTrace]:
+        return (wire.result_from_wire(body["result"]),
+                wire.trace_from_wire(body["trace"]))
+
+    def invoke(self, task: TaskRequest,
+               deadline_s: Optional[float] = None
+               ) -> Tuple[InvocationResult, OrchestrationTrace]:
+        """Synchronous remote execution; same contract as
+        ``Orchestrator.submit`` (rejections raise :class:`GatewayError`
+        with the taxonomy code + trace instead of returning)."""
+        envelope = wire.request_envelope(
+            "invoke", {"task": wire.task_to_wire(task),
+                       "deadline_s": deadline_s})
+        timeout = self.timeout_s + (deadline_s or 0.0)
+        return self._outcome(
+            self._call("POST", "/v1/invoke", envelope, timeout_s=timeout))
+
+    def submit(self, task: TaskRequest,
+               deadline_s: Optional[float] = None) -> str:
+        """Async submission; returns a ticket for :meth:`poll` /
+        :meth:`result`."""
+        envelope = wire.request_envelope(
+            "submit", {"task": wire.task_to_wire(task),
+                       "deadline_s": deadline_s})
+        return self._call("POST", "/v1/submit", envelope)["ticket"]
+
+    def submit_many(self, tasks: Sequence[TaskRequest],
+                    deadline_s: Optional[float] = None) -> List[str]:
+        envelope = wire.request_envelope(
+            "submit_many", {"tasks": [wire.task_to_wire(t) for t in tasks],
+                            "deadline_s": deadline_s})
+        return self._call("POST", "/v1/submit_many", envelope)["tickets"]
+
+    def poll(self, ticket: str, wait_s: float = 0.0
+             ) -> Optional[Tuple[InvocationResult, OrchestrationTrace]]:
+        """One poll round: None while pending, the outcome once resolved
+        (rejections raise, same as :meth:`invoke`)."""
+        qs = self._qs({"wait_s": wait_s or None})
+        body = self._call("GET", f"/v1/poll/{ticket}{qs}",
+                          timeout_s=self.timeout_s + wait_s)
+        if body.get("state") == "pending":
+            return None
+        return self._outcome(body)
+
+    def result(self, ticket: str, timeout_s: float = 60.0
+               ) -> Tuple[InvocationResult, OrchestrationTrace]:
+        """Await a ticket via bounded long-poll rounds."""
+        deadline = time.monotonic() + timeout_s
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise GatewayError(ErrorCode.DEADLINE,
+                                   f"ticket {ticket} still pending after "
+                                   f"{timeout_s}s")
+            out = self.poll(ticket, wait_s=min(remaining, 5.0))
+            if out is not None:
+                return out

@@ -1,0 +1,229 @@
+"""phys-MCP wire protocol v1: versioned envelopes + faithful wire types.
+
+This module is the contract between a control plane and anything that talks
+to it across a process boundary: the :class:`~repro.gateway.server.
+ControlPlaneGateway` HTTP server, the :class:`~repro.gateway.client.
+ControlPlaneClient` SDK, and the federation adapter
+(:class:`~repro.substrates.remote_plane.RemotePlaneAdapter`).
+
+Design rules:
+
+- **Versioned** — every envelope carries ``protocol_version``; a plane
+  refuses versions it does not speak with ``BAD_REQUEST`` instead of
+  mis-parsing them.  Policy: additive body fields are a MINOR bump (old
+  clients ignore them), removed/renamed fields or changed semantics are a
+  MAJOR bump (the server refuses mismatched majors).
+- **Faithful** — ``to_wire``/``from_wire`` round-trip exactly:
+  ``TaskRequest`` keeps its payload and task id, descriptors rebuild all
+  five nested specs, results/traces/snapshots survive the hop unchanged.
+  The redacting forms (``TaskRequest.summary``) never cross the wire.
+- **Structured errors** — failures travel as
+  :class:`~repro.core.errors.WireError` (code from the closed
+  :class:`~repro.core.errors.ErrorCode` taxonomy + prose + detail), never
+  as bare strings, so a client can program against outcomes.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+# re-exported: the taxonomy lives in repro.core so the in-process control
+# plane can consume it without importing the gateway layer
+from repro.core.errors import (ControlPlaneError, ErrorCode,  # noqa: F401
+                               WireError, classify_rejection)
+from repro.core.descriptors import ResourceDescriptor
+from repro.core.invocation import InvocationResult
+from repro.core.orchestrator import OrchestrationTrace
+from repro.core.tasks import TaskRequest
+from repro.core.telemetry import RuntimeSnapshot
+
+#: current protocol version (MAJOR.MINOR); see module docstring for policy
+PROTOCOL_VERSION = "1.0"
+#: majors this implementation can parse
+SUPPORTED_MAJORS = ("1",)
+
+
+class ProtocolError(ControlPlaneError):
+    """Malformed envelope / unsupported version (maps to BAD_REQUEST)."""
+
+    def __init__(self, message: str, detail: Optional[Dict] = None):
+        super().__init__(ErrorCode.BAD_REQUEST, message, detail)
+
+
+def check_version(version: Optional[str]) -> None:
+    if not version or version.split(".")[0] not in SUPPORTED_MAJORS:
+        raise ProtocolError(
+            f"unsupported protocol version {version!r} "
+            f"(speaking {PROTOCOL_VERSION})",
+            {"protocol_version": PROTOCOL_VERSION})
+
+
+# ---------------------------------------------------------------------------
+# envelopes
+
+
+def request_envelope(kind: str, body: Dict) -> Dict:
+    return {"protocol_version": PROTOCOL_VERSION, "kind": kind, "body": body}
+
+
+def ok_envelope(kind: str, body: Dict) -> Dict:
+    return {"protocol_version": PROTOCOL_VERSION, "kind": kind, "ok": True,
+            "body": body}
+
+
+def error_envelope(kind: str, error: WireError) -> Dict:
+    return {"protocol_version": PROTOCOL_VERSION, "kind": kind, "ok": False,
+            "error": error.to_wire()}
+
+
+def parse_request(envelope: Dict, expect_kind: Optional[str] = None) -> Dict:
+    """Validate an incoming request envelope; returns its body."""
+    if not isinstance(envelope, dict):
+        raise ProtocolError("request envelope must be a JSON object")
+    check_version(envelope.get("protocol_version"))
+    if expect_kind is not None and envelope.get("kind") != expect_kind:
+        raise ProtocolError(
+            f"expected kind {expect_kind!r}, got {envelope.get('kind')!r}")
+    body = envelope.get("body")
+    if not isinstance(body, dict):
+        raise ProtocolError("request envelope has no body object")
+    return body
+
+
+def parse_response(envelope: Dict) -> Dict:
+    """Validate a response envelope; returns the body or raises the
+    transported :class:`ControlPlaneError`."""
+    if not isinstance(envelope, dict):
+        raise ProtocolError("response envelope must be a JSON object")
+    check_version(envelope.get("protocol_version"))
+    if not envelope.get("ok", False):
+        err = WireError.from_wire(envelope.get("error") or {})
+        raise ControlPlaneError.from_wire_error(err)
+    return envelope.get("body") or {}
+
+
+# ---------------------------------------------------------------------------
+# wire converters (thin, named indirection so protocol evolution has one
+# place to live; the faithful implementations sit on the types themselves)
+
+
+def task_to_wire(task: TaskRequest) -> Dict:
+    return task.to_wire()
+
+
+def task_from_wire(d: Dict) -> TaskRequest:
+    return TaskRequest.from_wire(d)
+
+
+def descriptor_to_wire(desc: ResourceDescriptor) -> Dict:
+    return desc.to_dict()
+
+
+def descriptor_from_wire(d: Dict) -> ResourceDescriptor:
+    return ResourceDescriptor.from_dict(d)
+
+
+def result_to_wire(result: InvocationResult) -> Dict:
+    return result.to_wire()
+
+
+def result_from_wire(d: Dict) -> InvocationResult:
+    return InvocationResult.from_wire(d)
+
+
+def trace_to_wire(trace: OrchestrationTrace) -> Dict:
+    return trace.to_wire()
+
+
+def trace_from_wire(d: Dict) -> OrchestrationTrace:
+    return OrchestrationTrace.from_wire(d)
+
+
+def snapshot_to_wire(snap: RuntimeSnapshot) -> Dict:
+    return snap.to_dict()
+
+
+def snapshot_from_wire(d: Dict) -> RuntimeSnapshot:
+    from repro.core.descriptors import known_fields
+
+    return RuntimeSnapshot(**known_fields(RuntimeSnapshot, d))
+
+
+def rejection_to_error(result: InvocationResult,
+                       trace: Optional[OrchestrationTrace] = None
+                       ) -> WireError:
+    """Build the structured wire error for a non-completed result: taxonomy
+    code + prose reason + the full trace (and any twin invalidation detail)
+    so remote clients lose nothing the in-process caller would see."""
+    reason = (result.telemetry or {}).get("reason", f"status {result.status}")
+    code_s = result.error_code or classify_rejection(reason).value
+    detail: Dict[str, Any] = {"status": result.status,
+                              "task_id": result.task_id}
+    if trace is not None:
+        detail["trace"] = trace_to_wire(trace)
+    if "twin invalidated: " in reason:
+        # surface the recorded invalidation cause as its own field so
+        # clients need not parse prose (PR 3's invalidation_reason)
+        detail["invalidation_reason"] = (
+            reason.split("twin invalidated: ", 1)[1].split(";")[0])
+    return WireError(ErrorCode(code_s), reason, detail)
+
+
+# ---------------------------------------------------------------------------
+# JSON helpers — adapters return numpy arrays/scalars in outputs; the wire
+# must not care
+
+
+def _json_default(o):
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    if isinstance(o, (np.floating, np.integer, np.bool_)):
+        return o.item()
+    if isinstance(o, (set, frozenset, tuple)):
+        return list(o)
+    # NO str() fallback: silently stringifying an unknown object (a bytes
+    # payload, a custom class) would make the remote plane execute on
+    # corrupted input; refusing loudly keeps to_wire faithful
+    raise TypeError(f"{type(o).__name__} is not wire-serializable")
+
+
+def dumps(obj: Dict) -> bytes:
+    try:
+        return json.dumps(obj, default=_json_default).encode()
+    except (TypeError, ValueError) as e:
+        raise ProtocolError(f"value not wire-serializable: {e}") from e
+
+
+def loads(data: bytes) -> Dict:
+    try:
+        return json.loads(data or b"{}")
+    except json.JSONDecodeError as e:
+        raise ProtocolError(f"invalid JSON: {e}") from e
+
+
+#: HTTP status per taxonomy code (the envelope's error.code stays the
+#: source of truth; the status is a transport courtesy)
+HTTP_STATUS: Dict[ErrorCode, int] = {
+    ErrorCode.NO_MATCH: 409,
+    ErrorCode.POLICY_DENIED: 403,
+    ErrorCode.BREAKER_OPEN: 503,
+    ErrorCode.QUEUE_SATURATED: 503,
+    ErrorCode.DEADLINE: 504,
+    ErrorCode.TWIN_INVALID: 409,
+    ErrorCode.FALLBACK_EXHAUSTED: 502,
+    ErrorCode.NOT_FOUND: 404,
+    ErrorCode.BAD_REQUEST: 400,
+    ErrorCode.PLANE_UNAVAILABLE: 503,
+    ErrorCode.INTERNAL: 500,
+}
+
+
+def http_status(code: ErrorCode) -> int:
+    return HTTP_STATUS.get(code, 500)
+
+
+def split_path(path: str) -> Tuple[str, ...]:
+    """``/v1/describe/mem-a?x=1`` → ("v1", "describe", "mem-a")."""
+    return tuple(p for p in path.split("?")[0].split("/") if p)

@@ -1,0 +1,492 @@
+"""ControlPlaneGateway: the phys-MCP control plane behind a wire API.
+
+Exposes an :class:`~repro.core.orchestrator.Orchestrator` (plus a
+:class:`~repro.core.scheduler.ControlPlaneScheduler` worker pool for the
+async paths) over loopback-style HTTP, using the same threaded
+``ThreadingHTTPServer`` idiom as ``repro.substrates.http_fast.FastService``.
+Every capability that was previously reachable only as an in-process Python
+call — discover, describe, invoke, batched/async submission, telemetry,
+health, twin state — becomes a versioned protocol-v1 endpoint:
+
+========  ======================  =============================================
+method    path                    semantics
+========  ======================  =============================================
+GET       /v1/health              plane health: snapshots, breakers, scheduler
+GET       /v1/discover            capability discovery (query-param filters)
+GET       /v1/describe/<rid>      one resource: descriptor + snapshot + twin
+GET       /v1/twin/<rid>          twin-plane state for one resource
+POST      /v1/invoke              synchronous submit → (result, trace)
+POST      /v1/submit              async submit → ticket (scheduler future)
+POST      /v1/submit_many         batched async submit → tickets
+GET       /v1/poll/<ticket>       poll/await an async ticket
+GET       /v1/telemetry           long-poll cursor over the TelemetryBus
+========  ======================  =============================================
+
+Rejections travel as structured :class:`~repro.core.errors.WireError`
+envelopes (taxonomy code + prose + full trace in ``detail``), never as bare
+strings — see ``repro.gateway.protocol``.
+"""
+from __future__ import annotations
+
+import itertools
+import socket
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, TimeoutError as FutureTimeout
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, List, Optional, Tuple
+from urllib.parse import parse_qs, urlparse
+
+from repro.core.errors import ControlPlaneError, ErrorCode, WireError
+from repro.core.orchestrator import Orchestrator
+from repro.core.scheduler import ControlPlaneScheduler, SchedulerClosed
+from repro.core.telemetry import TelemetryEvent
+from repro.gateway import protocol as wire
+
+_ticket_ids = itertools.count(1)
+
+
+class TelemetryCursorLog:
+    """Cursor-addressable view of the TelemetryBus for remote subscribers.
+
+    The in-process bus pushes to callables; a wire client can't hold a
+    callable across HTTP, so the gateway appends every event to a bounded
+    sequence-numbered log and clients long-poll ``read(cursor)`` — each
+    response carries ``next_cursor``, so a client resumes exactly where it
+    left off (missed events are only possible after falling more than
+    ``capacity`` events behind, which the response makes visible via
+    ``dropped``)."""
+
+    def __init__(self, bus, capacity: int = 4096):
+        self.capacity = capacity
+        self._bus = bus
+        # deque(maxlen): O(1) append+evict on the bus emit path (a full
+        # list would re-copy capacity entries on every event once full)
+        self._events: "deque[Tuple[int, Dict]]" = deque(maxlen=capacity)
+        self._next_seq = 1
+        self._closed = False
+        self._cond = threading.Condition()
+        bus.subscribe(self._on_event)
+
+    def close(self) -> None:
+        """Detach from the bus and release blocked long-polls (the bus —
+        and its plane — outlive this gateway's wire frontend)."""
+        self._bus.unsubscribe(self._on_event)
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    def _on_event(self, ev: TelemetryEvent) -> None:
+        entry = {"resource_id": ev.resource_id, "kind": ev.kind,
+                 "fields": dict(ev.fields), "timestamp": ev.timestamp}
+        with self._cond:
+            if self._closed:
+                return
+            entry["seq"] = self._next_seq
+            self._events.append((self._next_seq, entry))
+            self._next_seq += 1
+            self._cond.notify_all()
+
+    def read(self, cursor: int, timeout_s: float = 0.0, limit: int = 256,
+             resource: Optional[str] = None) -> Dict:
+        """Events with seq > cursor (optionally filtered by resource);
+        blocks up to ``timeout_s`` when none MATCH yet (long-poll).
+        Filtered-out events are consumed silently — they advance the
+        returned cursor but never cut the wait short, so a filtered
+        long-poll on a busy plane stays a long-poll instead of degenerating
+        into a tight request loop."""
+        deadline = time.monotonic() + max(0.0, timeout_s)
+        with self._cond:
+            while True:
+                dropped = 0
+                if self._events and self._events[0][0] > cursor + 1:
+                    dropped = self._events[0][0] - cursor - 1
+                newer = [e for seq, e in self._events if seq > cursor
+                         and (resource is None
+                              or e["resource_id"] == resource)]
+                if newer:
+                    batch = newer[:limit]
+                    tail = self._next_seq - 1
+                    return {
+                        "events": batch,
+                        # consumed through the last returned match, plus any
+                        # trailing filtered-out events when the batch is
+                        # complete (so the next poll skips them)
+                        "next_cursor": (batch[-1]["seq"] if len(batch)
+                                        < len(newer) else max(batch[-1]["seq"],
+                                                              tail)),
+                        "dropped": dropped,
+                    }
+                # nothing matches: everything past the cursor (if anything)
+                # was filtered out — consume it and keep waiting
+                cursor = max(cursor, self._next_seq - 1)
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or self._closed:
+                    return {"events": [], "next_cursor": cursor,
+                            "dropped": dropped}
+                self._cond.wait(timeout=remaining)
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    # loopback latency hygiene: fully buffer the response (headers + body
+    # leave in one segment) and disable Nagle so small control-plane
+    # messages are not held hostage to delayed ACKs — together worth
+    # several ms per call on the wire control path (bench_gateway)
+    wbufsize = -1
+    disable_nagle_algorithm = True
+
+    # -- plumbing -------------------------------------------------------------
+    @property
+    def gateway(self) -> "ControlPlaneGateway":
+        return self.server.gateway
+
+    def _send(self, status: int, envelope: Dict) -> None:
+        body = wire.dumps(envelope)
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _send_ok(self, kind: str, body: Dict) -> None:
+        self._send(200, wire.ok_envelope(kind, body))
+
+    def _send_error(self, kind: str, err: WireError) -> None:
+        self._send(wire.http_status(err.code), wire.error_envelope(kind, err))
+
+    def _read_body(self, expect_kind: str) -> Dict:
+        length = int(self.headers.get("Content-Length", 0))
+        envelope = wire.loads(self.rfile.read(length))
+        return wire.parse_request(envelope, expect_kind=expect_kind)
+
+    def _dispatch(self, kind: str, fn) -> None:
+        try:
+            fn()
+        except ControlPlaneError as e:
+            self._send_error(kind, WireError(e.code, e.message, e.detail))
+        except (BrokenPipeError, ConnectionResetError):
+            pass                       # client went away mid-response
+        except Exception as e:         # noqa: BLE001 — wire boundary
+            self._send_error(kind, WireError(ErrorCode.INTERNAL, repr(e)))
+
+    def log_message(self, *args):  # quiet
+        pass
+
+    # -- routing --------------------------------------------------------------
+    def do_GET(self):
+        parts = wire.split_path(self.path)
+        q = {k: v[-1] for k, v in
+             parse_qs(urlparse(self.path).query).items()}
+        if parts[:1] != ("v1",):
+            return self._send_error("error", WireError(
+                ErrorCode.NOT_FOUND, f"unknown path {self.path!r} "
+                                     "(protocol v1 lives under /v1/)"))
+        route = parts[1] if len(parts) > 1 else ""
+        arg = parts[2] if len(parts) > 2 else None
+        gw = self.gateway
+        if route == "health":
+            self._dispatch("health", lambda: self._send_ok(
+                "health", gw.health_body()))
+        elif route == "discover":
+            self._dispatch("discover", lambda: self._send_ok(
+                "discover", gw.discover_body(q)))
+        elif route == "describe" and arg:
+            self._dispatch("describe", lambda: self._send_ok(
+                "describe", gw.describe_body(arg)))
+        elif route == "twin" and arg:
+            self._dispatch("twin", lambda: self._send_ok(
+                "twin", gw.twin_body(arg)))
+        elif route == "poll" and arg:
+            self._dispatch("poll", lambda: gw.poll_into(self, arg, q))
+        elif route == "telemetry":
+            self._dispatch("telemetry", lambda: self._send_ok(
+                "telemetry", gw.telemetry_body(q)))
+        else:
+            self._send_error("error", WireError(
+                ErrorCode.NOT_FOUND, f"unknown route {self.path!r}"))
+
+    def do_POST(self):
+        parts = wire.split_path(self.path)
+        route = parts[1] if len(parts) > 1 and parts[0] == "v1" else ""
+        gw = self.gateway
+        if route == "invoke":
+            self._dispatch("invoke", lambda: gw.invoke_into(
+                self, self._read_body("invoke")))
+        elif route == "submit":
+            self._dispatch("submit", lambda: self._send_ok(
+                "submit", gw.submit_body(self._read_body("submit"))))
+        elif route == "submit_many":
+            self._dispatch("submit_many", lambda: self._send_ok(
+                "submit_many",
+                gw.submit_many_body(self._read_body("submit_many"))))
+        else:
+            self._send_error("error", WireError(
+                ErrorCode.NOT_FOUND, f"unknown route {self.path!r}"))
+
+
+class _GatewayServer(ThreadingHTTPServer):
+    """ThreadingHTTPServer that tracks accepted connections so ``stop()``
+    can sever live keep-alive clients: ``shutdown()`` only stops the accept
+    loop, and a handler thread parked on a persistent connection would keep
+    answering a "dead" plane — breaking the federation failure semantics
+    (a killed edge gateway must LOOK killed to its cloud parent)."""
+
+    daemon_threads = True
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self._conns: set = set()
+        self._conns_lock = threading.Lock()
+
+    def get_request(self):
+        request, addr = super().get_request()
+        with self._conns_lock:
+            self._conns.add(request)
+        return request, addr
+
+    def shutdown_request(self, request):
+        with self._conns_lock:
+            self._conns.discard(request)
+        super().shutdown_request(request)
+
+    def close_all_connections(self) -> None:
+        with self._conns_lock:
+            conns = list(self._conns)
+            self._conns.clear()
+        for s in conns:
+            try:
+                s.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                s.close()
+            except OSError:
+                pass
+
+
+class ControlPlaneGateway:
+    """Threaded HTTP front-end over one control plane (one Orchestrator +
+    one scheduler worker pool + one telemetry cursor log).
+
+        gw = ControlPlaneGateway(orch, plane="edge").start()
+        ... ControlPlaneClient(gw.url) ...
+        gw.stop()
+
+    A gateway OWNS its scheduler unless one is passed in; ``stop()`` shuts
+    down what it owns and leaves the orchestrator itself alone (planes
+    outlive their wire frontends)."""
+
+    def __init__(self, orchestrator: Orchestrator, port: int = 0,
+                 plane: str = "plane", workers: int = 8,
+                 scheduler: Optional[ControlPlaneScheduler] = None):
+        self.orchestrator = orchestrator
+        self.plane = plane
+        self._owns_scheduler = scheduler is None
+        self.scheduler = scheduler or ControlPlaneScheduler(
+            orchestrator, workers=workers)
+        self.telemetry_log = TelemetryCursorLog(orchestrator.bus)
+        self._tickets: Dict[str, Future] = {}
+        self._tickets_lock = threading.Lock()
+        self._started_at = time.time()
+        self.server = _GatewayServer(("127.0.0.1", port), _Handler)
+        self.server.gateway = self
+        self.port = self.server.server_address[1]
+        self._thread = threading.Thread(target=self.server.serve_forever,
+                                        daemon=True,
+                                        name=f"phys-mcp-gateway-{self.plane}")
+
+    # -- lifecycle ------------------------------------------------------------
+    def start(self) -> "ControlPlaneGateway":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self.server.shutdown()
+        self.server.close_all_connections()
+        self.server.server_close()
+        self.telemetry_log.close()
+        if self._owns_scheduler:
+            self.scheduler.shutdown(wait=False)
+
+    @property
+    def url(self) -> str:
+        return f"http://127.0.0.1:{self.port}"
+
+    # -- endpoint bodies ------------------------------------------------------
+    def health_body(self) -> Dict:
+        orch = self.orchestrator
+        resources = {}
+        for desc in orch.registry.all():
+            snap = orch.bus.snapshot(desc.resource_id)
+            resources[desc.resource_id] = (
+                wire.snapshot_to_wire(snap) if snap is not None else None)
+        breakers = None
+        if orch.health is not None and hasattr(orch.health, "status"):
+            try:
+                breakers = orch.health.status()
+            except Exception:                              # noqa: BLE001
+                breakers = None
+        return {
+            "plane": self.plane,
+            "uptime_s": round(time.time() - self._started_at, 3),
+            "resources": resources,
+            "breakers": breakers,
+            "scheduler": {"pending": self.scheduler.pending},
+        }
+
+    def discover_body(self, q: Dict[str, str]) -> Dict:
+        filters = {k: q[k] for k in ("function", "input_modality",
+                                     "output_modality", "latency_regime",
+                                     "substrate_class") if k in q}
+        if "repeated" in q:
+            filters["repeated"] = q["repeated"].lower() in ("1", "true")
+        descs = self.orchestrator.discover(**filters)
+        return {"descriptors": [wire.descriptor_to_wire(d) for d in descs]}
+
+    def _descriptor_or_404(self, rid: str):
+        desc = self.orchestrator.registry.get(rid)
+        if desc is None:
+            raise ControlPlaneError(ErrorCode.NOT_FOUND,
+                                    f"no such resource {rid!r}")
+        return desc
+
+    def describe_body(self, rid: str) -> Dict:
+        desc = self._descriptor_or_404(rid)
+        snap = self.orchestrator.bus.snapshot(rid)
+        twin = self.orchestrator.twins.get(rid)
+        return {
+            "descriptor": wire.descriptor_to_wire(desc),
+            "snapshot": wire.snapshot_to_wire(snap) if snap else None,
+            "twin": twin.to_dict() if twin is not None else None,
+        }
+
+    def twin_body(self, rid: str) -> Dict:
+        self._descriptor_or_404(rid)
+        twin = self.orchestrator.twins.get(rid)
+        if twin is None:
+            raise ControlPlaneError(ErrorCode.NOT_FOUND,
+                                    f"resource {rid!r} has no twin binding")
+        return {"twin": twin.to_dict()}
+
+    @staticmethod
+    def _q_num(q: Dict[str, str], key: str, default, cast):
+        """Numeric query param or a structured BAD_REQUEST (a typo'd
+        cursor must not surface as INTERNAL)."""
+        try:
+            return cast(q.get(key, default))
+        except (TypeError, ValueError):
+            raise wire.ProtocolError(
+                f"query param {key!r} must be a number, got {q.get(key)!r}")
+
+    def telemetry_body(self, q: Dict[str, str]) -> Dict:
+        cursor = self._q_num(q, "cursor", 0, int)
+        timeout_s = min(self._q_num(q, "timeout_s", 0.0, float), 30.0)
+        limit = max(1, min(self._q_num(q, "limit", 256, int), 1024))
+        return self.telemetry_log.read(cursor, timeout_s=timeout_s,
+                                       limit=limit,
+                                       resource=q.get("resource"))
+
+    # -- execution ------------------------------------------------------------
+    #: resolved tickets retained for polling before eviction (FIFO)
+    MAX_TICKETS = 1024
+
+    def _submit(self, body: Dict) -> Future:
+        try:
+            task = wire.task_from_wire(body.get("task") or {})
+        except (TypeError, ValueError, KeyError) as e:
+            # a task body the dataclass refuses is the CLIENT's error, not a
+            # retryable server fault
+            raise wire.ProtocolError(f"malformed task body: {e!r}")
+        deadline_s = body.get("deadline_s")
+        try:
+            return self.scheduler.submit_async(task, deadline_s=deadline_s)
+        except SchedulerClosed as e:
+            raise ControlPlaneError(ErrorCode.PLANE_UNAVAILABLE, str(e))
+
+    @staticmethod
+    def _respond_outcome(handler: _Handler, kind: str, result, trace) -> None:
+        """Completed results ride an ok envelope; anything else becomes the
+        structured error envelope carrying code + trace."""
+        if result.status == "completed":
+            handler._send_ok(kind, {
+                "result": wire.result_to_wire(result),
+                "trace": wire.trace_to_wire(trace),
+            })
+        else:
+            handler._send_error(kind, wire.rejection_to_error(result, trace))
+
+    def invoke_into(self, handler: _Handler, body: Dict) -> None:
+        result, trace = self._submit(body).result()
+        self._respond_outcome(handler, "invoke", result, trace)
+
+    def _store_ticket(self, fut: Future) -> str:
+        ticket = f"ticket-{next(_ticket_ids):06d}"
+        with self._tickets_lock:
+            self._tickets[ticket] = fut
+            # bound the store: evict the OLDEST RESOLVED tickets first (a
+            # never-polled resolved future would otherwise retain its full
+            # result forever); pending futures are only evicted when the
+            # store is flooded with them
+            while len(self._tickets) > self.MAX_TICKETS:
+                victim = next((t for t, f in self._tickets.items()
+                               if f.done()), None)
+                if victim is None:
+                    victim = next(iter(self._tickets))
+                del self._tickets[victim]
+        return ticket
+
+    def submit_body(self, body: Dict) -> Dict:
+        return {"ticket": self._store_ticket(self._submit(body))}
+
+    def submit_many_body(self, body: Dict) -> Dict:
+        tasks = body.get("tasks")
+        if not isinstance(tasks, list):
+            raise wire.ProtocolError("submit_many body needs a tasks list")
+        deadline_s = body.get("deadline_s")
+        # validate the WHOLE batch before queueing any of it: a malformed
+        # task mid-list must not leave earlier tasks running on hardware
+        # with their tickets never returned to the client
+        parsed = []
+        for i, t in enumerate(tasks):
+            try:
+                parsed.append(wire.task_from_wire(t or {}))
+            except (TypeError, ValueError, KeyError) as e:
+                raise wire.ProtocolError(
+                    f"malformed task at index {i}: {e!r}")
+        tickets = []
+        for task in parsed:
+            try:
+                fut = self.scheduler.submit_async(task,
+                                                  deadline_s=deadline_s)
+            except SchedulerClosed as e:
+                raise ControlPlaneError(ErrorCode.PLANE_UNAVAILABLE, str(e))
+            tickets.append(self._store_ticket(fut))
+        return {"tickets": tickets}
+
+    def poll_into(self, handler: _Handler, ticket: str,
+                  q: Dict[str, str]) -> None:
+        with self._tickets_lock:
+            fut = self._tickets.get(ticket)
+        if fut is None:
+            raise ControlPlaneError(ErrorCode.NOT_FOUND,
+                                    f"unknown ticket {ticket!r}")
+        wait_s = min(self._q_num(q, "wait_s", 0.0, float), 30.0)
+        try:
+            result, trace = fut.result(timeout=wait_s if wait_s > 0 else 0.001)
+        except FutureTimeout:
+            handler._send_ok("poll", {"state": "pending", "ticket": ticket})
+            return
+        except BaseException:
+            # exception-resolved future: release the ticket (every re-poll
+            # would re-raise forever) and surface the error once
+            with self._tickets_lock:
+                self._tickets.pop(ticket, None)
+            raise
+        # deliver-once, but only release AFTER the response bytes went out:
+        # a client that disconnects mid-response can re-poll and still get
+        # its result (a popped-early ticket would lose a completed task)
+        self._respond_outcome(handler, "poll", result, trace)
+        with self._tickets_lock:
+            self._tickets.pop(ticket, None)

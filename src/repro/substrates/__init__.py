@@ -6,6 +6,8 @@ from repro.substrates.cortical import (CLClient, CLSimulator,  # noqa: F401
 from repro.substrates.http_fast import FastService, HTTPFastAdapter  # noqa: F401
 from repro.substrates.memristive import (CrossbarMirrorSurrogate,  # noqa: F401
                                          MemristiveAdapter)
+from repro.substrates.remote_plane import (RemotePlaneAdapter,  # noqa: F401
+                                           federate, federate_all)
 from repro.substrates.tpu_pod import (RooflineSurrogate,  # noqa: F401
                                       TpuPodSubstrate)
 from repro.substrates.wetware import (WetwareAdapter,  # noqa: F401

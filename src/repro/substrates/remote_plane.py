@@ -1,0 +1,303 @@
+"""Federated control planes: a whole remote plane as ONE substrate.
+
+:class:`RemotePlaneAdapter` closes the paper's edge→fog→cloud loop: an
+entire edge gateway (with however many physical substrates behind it)
+registers into a parent — typically cloud — orchestrator as a single
+:class:`~repro.substrates.base.SubstrateAdapter`.  Because it is just an
+adapter, EVERYTHING the parent control plane knows composes transparently
+across the boundary:
+
+- **matching** — the adapter's descriptor aggregates the edge plane's
+  resources (union of functions, summed concurrency, fastest timing) for
+  one modality profile, so Eq. 1 ranks the remote plane against local
+  hardware like any other candidate;
+- **circuit breakers** — a dead or flapping edge gateway fails invocations,
+  which feed the parent's HealthManager exactly like substrate faults: the
+  plane is quarantined, probed, and re-admitted as one unit;
+- **twin fallback** — ``make_twin()`` attaches a record/replay surrogate
+  that learns from every result crossing back over the wire, so when the
+  edge plane is quarantined, opted-in traffic is served from the parent's
+  twin of the *plane* (mirroring remote health through result telemetry:
+  drift scores in forwarded telemetry drive the shared confidence law).
+
+Tracing stays complete across the hop: the edge plane's own
+``OrchestrationTrace`` (which resource it picked, its control overhead) is
+carried back verbatim in the invocation artifacts as ``remote_trace``, and
+the forwarded task KEEPS its task id — one task, one identity, two planes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.descriptors import (CapabilityDescriptor, LifecycleSemantics,
+                                    Observability, PolicyConstraints,
+                                    ResourceDescriptor, SignalSpec,
+                                    TimingSemantics)
+from repro.core.errors import ControlPlaneError, ErrorCode
+from repro.core.telemetry import RuntimeSnapshot
+from repro.core.twin import RecordReplaySurrogate, TwinState
+from repro.gateway.client import ControlPlaneClient
+from repro.substrates.base import SubstrateAdapter
+
+#: wire round-trip margin added to the advertised expected latency so the
+#: parent matcher's T term accounts for the extra hop
+TRANSPORT_MARGIN_MS = 5.0
+
+_REGIME_ORDER = {"sub_ms": 0, "fast_ms": 1, "slow_seconds": 2}
+
+
+class RemotePlaneAdapter(SubstrateAdapter):
+    """One remote control plane, adapted into a parent plane's fleet.
+
+    ``modality`` selects which (input, output) modality profile of the
+    remote fleet this adapter advertises (a plane with both vector and
+    concentration resources federates as one adapter per profile; see
+    :func:`federate_all`).  Default: the profile with the most remote
+    resources behind it.
+    """
+
+    #: remote execution bound for tasks carrying no latency budget: the
+    #: deadline is FORWARDED so the remote scheduler abandons queued work
+    #: past it, keeping both planes' view of "this task is over" aligned
+    #: (an unbounded forward would time out client-side while the edge
+    #: keeps executing — and the parent's fallback would double-execute)
+    DEFAULT_INVOKE_DEADLINE_S = 120.0
+
+    def __init__(self, client_or_url, resource_id: Optional[str] = None,
+                 plane: Optional[str] = None,
+                 modality: Optional[Tuple[str, str]] = None,
+                 fleet: Optional[List[ResourceDescriptor]] = None,
+                 invoke_deadline_s: float = DEFAULT_INVOKE_DEADLINE_S):
+        super().__init__()
+        self.invoke_deadline_s = invoke_deadline_s
+        self.client = (client_or_url
+                       if isinstance(client_or_url, ControlPlaneClient)
+                       else ControlPlaneClient(client_or_url))
+        if plane is None or fleet is None:
+            # fail fast: the plane must be up at federation time; callers
+            # federating several profiles of one plane pass the already-
+            # fetched fleet + plane name to skip repeat round-trips
+            health = self.client.health()
+            plane = plane or health.get("plane", "remote")
+            fleet = fleet if fleet is not None else self.client.discover()
+        self.plane = plane
+        self.resource_id = resource_id or f"plane-{self.plane}"
+        self._remote_descs = list(fleet)
+        if not self._remote_descs:
+            raise ControlPlaneError(ErrorCode.NO_MATCH,
+                                    "remote plane exposes no resources")
+        self.modality = modality or self._dominant_modality()
+        if not self._profile():
+            raise ControlPlaneError(
+                ErrorCode.NO_MATCH,
+                f"remote plane {self.plane!r} has no "
+                f"{self.modality[0]}->{self.modality[1]} resources")
+        self.last_transport_ms = 0.0
+        self.last_remote_resource: Optional[str] = None
+
+    # -- descriptor aggregation ----------------------------------------------
+    def _profile(self) -> List[ResourceDescriptor]:
+        return [d for d in self._remote_descs
+                if (d.capability.input_signal.modality,
+                    d.capability.output_signal.modality) == self.modality]
+
+    def _dominant_modality(self) -> Tuple[str, str]:
+        """Most-populated (input, output) modality pair, ties broken
+        lexicographically so the default profile is deterministic whatever
+        order the remote plane registered its fleet.  Planes with several
+        profiles usually want ``federate_all`` (every profile) or an
+        explicit ``modality=`` instead of this default."""
+        counts: Dict[Tuple[str, str], int] = {}
+        for d in self._remote_descs:
+            key = (d.capability.input_signal.modality,
+                   d.capability.output_signal.modality)
+            counts[key] = counts.get(key, 0) + 1
+        return min(counts, key=lambda k: (-counts[k], k))
+
+    def descriptor(self) -> ResourceDescriptor:
+        """Aggregate the remote profile into one capability: the plane can
+        do the UNION of what its members do, absorb the SUM of their
+        concurrency, and answer as fast as its FASTEST member (plus a wire
+        margin) — the remote matcher handles per-member placement."""
+        members = self._profile()
+        caps = [d.capability for d in members]
+        functions = tuple(sorted({f for c in caps for f in c.functions}))
+        telemetry = tuple(sorted({f for c in caps
+                                  for f in c.observability.telemetry_fields}))
+        drift = tuple(sorted({f for c in caps
+                              for f in c.observability.drift_indicators}))
+        fastest = min(caps, key=lambda c: c.timing.expected_latency_ms)
+        regime = min((c.timing.latency_regime for c in caps),
+                     key=lambda r: _REGIME_ORDER.get(r, 1))
+        lo = min(c.input_signal.admissible_range[0] for c in caps)
+        hi = max(c.input_signal.admissible_range[1] for c in caps)
+        out_lo = min(c.output_signal.admissible_range[0] for c in caps)
+        out_hi = max(c.output_signal.admissible_range[1] for c in caps)
+        cap = CapabilityDescriptor(
+            functions=functions,
+            input_signal=SignalSpec(self.modality[0],
+                                    fastest.input_signal.encoding, (lo, hi)),
+            output_signal=SignalSpec(self.modality[1],
+                                     fastest.output_signal.encoding,
+                                     (out_lo, out_hi)),
+            timing=TimingSemantics(
+                regime,
+                fastest.timing.expected_latency_ms + TRANSPORT_MARGIN_MS,
+                observation_window_ms=max(c.timing.observation_window_ms
+                                          for c in caps),
+                freshness_ms=min(c.timing.freshness_ms for c in caps)),
+            # lifecycle belongs to the remote plane's members; crossing the
+            # boundary the only affordance is reconnecting to the gateway
+            lifecycle=LifecycleSemantics(warmup_ms=0.0, resetable=True,
+                                         reset_modes=("reconnect",),
+                                         recovery_modes=("reconnect",)),
+            programmability="configurable",
+            observability=Observability(
+                output_channels=("remote",),
+                telemetry_fields=telemetry + ("transport_ms",
+                                              "remote_resource_id"),
+                drift_indicators=drift,
+                twin_linked_fields=drift),
+            # per-member policy (supervision, tenancy, safety) is enforced
+            # by the remote plane itself on every forwarded task
+            policy=PolicyConstraints(
+                exclusive=False,
+                max_concurrent=sum(max(1, c.policy.max_concurrent)
+                                   for c in caps)),
+            supports_repeated_invocation=any(c.supports_repeated_invocation
+                                             for c in caps),
+            energy_proxy_mj=fastest.energy_proxy_mj,
+        )
+        location = members[0].location if members else "edge"
+        return ResourceDescriptor(
+            resource_id=self.resource_id,
+            substrate_class="federated_plane",
+            adapter_type="http", location=location,
+            twin_binding=f"twin-{self.resource_id}", capability=cap,
+            description=f"federated control plane '{self.plane}' "
+                        f"({len(members)} member substrates, "
+                        f"modality {self.modality[0]}->{self.modality[1]})")
+
+    # -- data-plane surface ---------------------------------------------------
+    def prepare(self, session) -> None:
+        # no liveness round-trip here: invoke() on a dead plane fails fast
+        # with the same GatewayError one line later, and a per-session
+        # health check would double the wire RTTs on the federated hot path
+        self._check_prepare_fault()
+
+    def invoke(self, session) -> Dict:
+        # strip placement directives that only meant something on THIS
+        # plane: the remote matcher owns placement among its members, and
+        # twin decisions stay with the parent (a silently twin-served
+        # federated result would corrupt the parent's provenance accounting)
+        task = session.task.clone(backend_preference=None, twin_mode=None)
+        t0 = time.perf_counter()
+        result, remote_trace = self.client.invoke(
+            task, deadline_s=(task.latency_budget_ms / 1e3
+                              if task.latency_budget_ms
+                              else self.invoke_deadline_s))
+        rtt_ms = (time.perf_counter() - t0) * 1e3
+        backend_ms = float(result.timing_ms.get("backend_ms", 0.0))
+        self.last_transport_ms = max(
+            0.0, rtt_ms - result.timing_ms.get("total_ms", backend_ms))
+        self.last_remote_resource = result.resource_id
+        telemetry = dict(result.telemetry)
+        telemetry.update({
+            "remote_resource_id": result.resource_id,
+            "remote_plane": self.plane,
+            "remote_control_overhead_ms": round(
+                remote_trace.control_overhead_ms, 4),
+            "transport_ms": round(self.last_transport_ms, 4),
+            "observation_ms": telemetry.get("observation_ms", rtt_ms),
+        })
+        telemetry = self._apply_telemetry_faults(telemetry)
+        artifacts = dict(result.artifacts)
+        # the complete cross-boundary trace: the remote plane's own
+        # placement record rides home with the result
+        artifacts["remote_trace"] = remote_trace.to_wire()
+        artifacts["remote_session_id"] = result.session_id
+        return {
+            "output": result.output,
+            "telemetry": telemetry,
+            "artifacts": artifacts,
+            "backend_ms": backend_ms,
+            "rtt_ms": rtt_ms,
+            "needs_reset": False,
+        }
+
+    def reset(self, mode: str = "reconnect") -> None:
+        """Re-arm after a breaker reopen.  Nothing to do on this side: the
+        client reconnects lazily on the next request, and the parent's
+        aggregate descriptor is fixed at federation time — tracking remote
+        fleet changes live is the ROADMAP "descriptor change feed" item,
+        and a refresh here would be invisible to the parent registry
+        anyway (it never re-reads ``descriptor()``)."""
+
+    def snapshot(self) -> Optional[RuntimeSnapshot]:
+        """Aggregate remote health: worst member status, max drift, summed
+        queue depth; an unreachable plane reports failed/down (which the
+        parent matcher treats as inadmissible even before the breaker
+        trips)."""
+        try:
+            health = self.client.health()
+        except Exception:                                  # noqa: BLE001
+            return RuntimeSnapshot(self.resource_id, health_status="failed",
+                                   readiness="down", drift_score=1.0)
+        worst, drift, depth = "healthy", 0.0, 0
+        rank = {"healthy": 0, "degraded": 1, "failed": 2}
+        for snap in (health.get("resources") or {}).values():
+            if not snap:
+                continue
+            if rank.get(snap.get("health_status"), 0) > rank[worst]:
+                worst = snap["health_status"]
+            drift = max(drift, float(snap.get("drift_score", 0.0)))
+            depth += int(snap.get("queue_depth", 0))
+        return RuntimeSnapshot(self.resource_id, health_status=worst,
+                               drift_score=round(drift, 4),
+                               queue_depth=depth,
+                               extra={"plane": self.plane})
+
+    def make_twin(self) -> Optional[TwinState]:
+        """Record/replay twin OF THE PLANE: learns from every forwarded
+        result, mirrors remote health through the forwarded drift scores
+        (the shared confidence law consumes them from result telemetry),
+        and serves opted-in traffic when the plane is quarantined."""
+        return TwinState(f"twin-{self.resource_id}", self.resource_id,
+                         kind="record",
+                         model={"plane": self.plane,
+                                "members": len(self._remote_descs)},
+                         surrogate=RecordReplaySurrogate(capacity=64))
+
+
+def federate(parent_orchestrator, client_or_url, **kw) -> RemotePlaneAdapter:
+    """Register one remote plane (its dominant modality profile) into a
+    parent orchestrator; returns the adapter."""
+    adapter = RemotePlaneAdapter(client_or_url, **kw)
+    parent_orchestrator.register(adapter)
+    return adapter
+
+
+def federate_all(parent_orchestrator, client_or_url,
+                 plane: Optional[str] = None) -> List[RemotePlaneAdapter]:
+    """Register EVERY modality profile of a remote plane, one adapter per
+    (input, output) modality pair — the full fleet federates.  One health
+    check + one discovery serve all profiles."""
+    client = (client_or_url if isinstance(client_or_url, ControlPlaneClient)
+              else ControlPlaneClient(client_or_url))
+    plane = plane or client.health().get("plane", "remote")
+    fleet = client.discover()
+    if not fleet:
+        raise ControlPlaneError(ErrorCode.NO_MATCH,
+                                "remote plane exposes no resources")
+    profiles = sorted({(d.capability.input_signal.modality,
+                        d.capability.output_signal.modality) for d in fleet})
+    adapters = []
+    for pair in profiles:
+        adapter = RemotePlaneAdapter(
+            client, plane=plane, modality=pair, fleet=fleet,
+            resource_id=f"plane-{plane}-{pair[0]}-{pair[1]}")
+        parent_orchestrator.register(adapter)
+        adapters.append(adapter)
+    return adapters

@@ -1,0 +1,201 @@
+"""Federated planes: an edge gateway as one substrate of a cloud plane.
+
+The acceptance demo for the protocol-first redesign: an edge control plane
+with two physical substrates sits behind a ControlPlaneGateway; a cloud
+orchestrator registers that whole plane as ONE RemotePlaneAdapter.  Tasks
+submitted to the cloud execute on edge hardware with a complete
+OrchestrationTrace across the boundary; killing the edge gateway
+mid-stream trips the cloud-side circuit breaker, and opted-in traffic is
+served from the cloud's twin of the plane with zero invalid serves.
+"""
+import time
+
+import pytest
+
+from repro.core import (ControlPlaneScheduler, ErrorCode, Orchestrator,
+                        TaskRequest)
+from repro.core.health import BreakerState
+from repro.gateway import ControlPlaneGateway
+from repro.substrates import (ChemicalAdapter, MemristiveAdapter,
+                              RemotePlaneAdapter, federate, federate_all)
+
+EDGE_SUBSTRATES = ("edge-crossbar-a", "edge-crossbar-b")
+
+
+@pytest.fixture()
+def edge_plane():
+    orch = Orchestrator()
+    for rid in EDGE_SUBSTRATES:
+        orch.register(MemristiveAdapter(rid))
+    gw = ControlPlaneGateway(orch, plane="edge").start()
+    try:
+        yield orch, gw
+    finally:
+        gw.stop()
+
+
+def _cloud(consecutive_failures_to_open: int = 2) -> Orchestrator:
+    return Orchestrator(health=dict(
+        cooldown_s=30.0,               # stays OPEN for the whole test
+        thresholds={"consecutive_failures_to_open":
+                    consecutive_failures_to_open}))
+
+
+def _vector_task(**kw):
+    return TaskRequest(function="inference", input_modality="vector",
+                       output_modality="vector", payload=[0.1, 0.2, 0.3, 0.4],
+                       **kw)
+
+
+def test_descriptor_aggregates_edge_fleet(edge_plane):
+    _, gw = edge_plane
+    adapter = RemotePlaneAdapter(gw.url)
+    desc = adapter.descriptor()
+    assert desc.resource_id == "plane-edge"
+    assert desc.substrate_class == "federated_plane"
+    assert desc.adapter_type == "http"
+    cap = desc.capability
+    assert set(cap.functions) == {"inference", "mvm"}      # union
+    assert cap.policy.max_concurrent == 8                  # 4 + 4, summed
+    assert "transport_ms" in cap.observability.telemetry_fields
+    assert "drift_score" in cap.observability.drift_indicators
+    # advertised latency carries the wire margin on top of the fastest member
+    assert cap.timing.expected_latency_ms > 2.0
+
+
+def test_cloud_task_executes_on_edge_with_complete_trace(edge_plane):
+    _, gw = edge_plane
+    cloud = _cloud()
+    adapter = federate(cloud, gw.url)
+    task = _vector_task(required_telemetry=("execution_ms",))
+    res, trace = cloud.submit(task)
+    assert res.status == "completed"
+    # cloud-side trace: the plane was the selected "substrate"
+    assert trace.selected == adapter.resource_id
+    assert res.resource_id == adapter.resource_id
+    # the task kept ONE identity across the hop
+    remote_trace = res.artifacts["remote_trace"]
+    assert remote_trace["task_id"] == task.task_id
+    # edge-side trace rides home complete: placement + overhead + attempts
+    assert remote_trace["selected"] in EDGE_SUBSTRATES
+    assert remote_trace["attempts"]
+    assert remote_trace["control_overhead_ms"] > 0.0
+    assert res.telemetry["remote_resource_id"] in EDGE_SUBSTRATES
+    assert res.telemetry["remote_plane"] == "edge"
+    assert res.telemetry["transport_ms"] >= 0.0
+    assert res.artifacts["remote_session_id"].startswith("session-")
+
+
+def test_edge_members_share_load_through_one_adapter(edge_plane):
+    _, gw = edge_plane
+    cloud = _cloud()
+    federate(cloud, gw.url)
+    placed = set()
+    for _ in range(12):
+        res, _ = cloud.submit(_vector_task())
+        assert res.status == "completed"
+        placed.add(res.telemetry["remote_resource_id"])
+    # the REMOTE matcher owns member placement; over a dozen tasks the
+    # edge plane exercises its fleet (both crossbars are equivalent, so
+    # at least one serves — drift steering may concentrate load)
+    assert placed <= set(EDGE_SUBSTRATES) and placed
+
+
+def test_gateway_kill_trips_breaker_and_twin_serves(edge_plane):
+    """The federation acceptance demo, mid-stream through the scheduler."""
+    _, gw = edge_plane
+    cloud = _cloud(consecutive_failures_to_open=2)
+    adapter = federate(cloud, gw.url)
+    rid = adapter.resource_id
+    with ControlPlaneScheduler(cloud, workers=4) as sched:
+        # phase 1: healthy stream — twin learns from every forwarded result
+        warm = sched.submit_many([_vector_task() for _ in range(6)])
+        assert all(r.status == "completed" for r, _ in warm)
+        assert all(t.served_by == "substrate" for _, t in warm)
+        twin = cloud.twins.get(rid)
+        assert twin is not None and twin.observations >= 6
+
+        # phase 2: the edge gateway dies mid-stream
+        gw.stop()
+        outcomes = sched.submit_many(
+            [_vector_task(twin_mode="fallback") for _ in range(10)])
+
+        # the cloud-side breaker quarantined the whole plane
+        assert cloud.health.state(rid) is BreakerState.OPEN
+        # opted-in traffic kept completing, served by the plane's twin
+        twin_served = [(r, t) for r, t in outcomes if t.served_by == "twin"]
+        assert twin_served, "twin must serve while the plane is quarantined"
+        assert all(r.status == "completed" for r, _ in outcomes)
+        for r, t in twin_served:
+            assert r.telemetry["served_by"] == "twin"
+            assert r.telemetry["twin_id"] == f"twin-{rid}"
+            assert t.twin_confidence is not None
+        # ZERO serves from invalid twins (PR 3 invariant, across planes)
+        audit = cloud.twin_exec.audit()
+        assert audit["twin_serves_invalid"] == 0
+        assert audit["twin_serves"] >= len(twin_served)
+
+        # phase 3: tasks that did NOT opt in reject with a structured code
+        res, trace = sched.submit_async(_vector_task()).result()
+        assert res.status == "rejected"
+        assert trace.error_code in (ErrorCode.BREAKER_OPEN.value,
+                                    ErrorCode.NO_MATCH.value,
+                                    ErrorCode.FALLBACK_EXHAUSTED.value)
+
+
+def test_empty_modality_profile_rejects_structured(edge_plane):
+    from repro.core import ControlPlaneError, ErrorCode
+
+    _, gw = edge_plane
+    with pytest.raises(ControlPlaneError) as ei:
+        RemotePlaneAdapter(gw.url, modality=("spikes", "spikes"))
+    assert ei.value.code is ErrorCode.NO_MATCH
+
+
+def test_unreachable_plane_snapshot_reports_down(edge_plane):
+    _, gw = edge_plane
+    adapter = RemotePlaneAdapter(gw.url)
+    snap = adapter.snapshot()
+    assert snap.health_status == "healthy"
+    gw.stop()
+    snap = adapter.snapshot()
+    assert snap.health_status == "failed" and snap.readiness == "down"
+
+
+def test_federate_all_registers_every_modality_profile():
+    edge = Orchestrator()
+    edge.register(MemristiveAdapter("edge-crossbar"))
+    edge.register(ChemicalAdapter())
+    gw = ControlPlaneGateway(edge, plane="lab").start()
+    cloud = Orchestrator()
+    try:
+        adapters = federate_all(cloud, gw.url)
+        assert len(adapters) == 2      # vector->vector + conc->conc profiles
+        rids = {a.resource_id for a in adapters}
+        assert rids == {"plane-lab-vector-vector",
+                        "plane-lab-concentration-concentration"}
+        # the chemical profile is reachable through its own plane adapter
+        res, trace = cloud.submit(TaskRequest(
+            function="assay", input_modality="concentration",
+            output_modality="concentration",
+            payload={"concentrations": [0.1, 0.7, 0.1, 0.1]},
+            required_telemetry=("convergence_ms",)))
+        assert res.status == "completed"
+        assert trace.selected == "plane-lab-concentration-concentration"
+        assert res.telemetry["remote_resource_id"] == "chemical-ode"
+    finally:
+        gw.stop()
+
+
+def test_forwarded_task_strips_plane_local_directives(edge_plane):
+    """backend_preference names a CLOUD resource; forwarding it verbatim
+    would make the edge matcher reject — the adapter must strip it (and
+    twin_mode, which the parent owns)."""
+    _, gw = edge_plane
+    cloud = _cloud()
+    adapter = federate(cloud, gw.url)
+    res, _ = cloud.submit(_vector_task(
+        backend_preference=adapter.resource_id, twin_mode="fallback"))
+    assert res.status == "completed"
+    assert res.telemetry["remote_resource_id"] in EDGE_SUBSTRATES
+    assert res.telemetry.get("served_by") != "twin"

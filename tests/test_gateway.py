@@ -1,0 +1,328 @@
+"""ControlPlaneGateway + ControlPlaneClient end-to-end.
+
+Covers the full endpoint table (discover/describe/invoke/submit/poll/
+submit_many/telemetry/health/twin) against the standard mixed testbed, and
+— the satellite requirement — produces EVERY structured error code through
+a real end-to-end request: breaker-open via fault injection, queue
+saturation via a starved scheduler, deadline via a lapsed queue wait,
+twin-invalid via an explicit ``invalidate()`` whose recorded reason must
+reach the client exception.
+"""
+import time
+
+import pytest
+
+from repro.core import ErrorCode, Orchestrator, TaskRequest
+from repro.core.faults import inject_invoke_failure
+from repro.core.health import BreakerState
+from repro.gateway import (ControlPlaneClient, ControlPlaneGateway,
+                           GatewayError)
+from repro.substrates import MemristiveAdapter, standard_testbed
+
+
+@pytest.fixture()
+def plane(fast_service):
+    orch = Orchestrator()
+    standard_testbed(orch, http_service=fast_service)
+    gw = ControlPlaneGateway(orch, plane="test").start()
+    try:
+        yield orch, gw, ControlPlaneClient(gw.url)
+    finally:
+        gw.stop()
+
+
+def _vector_task(**kw):
+    return TaskRequest(function="inference", input_modality="vector",
+                       output_modality="vector", payload=[0.1, 0.2, 0.3, 0.4],
+                       **kw)
+
+
+# ---------------------------------------------------------------------------
+# read surface
+
+
+def test_discover_matches_local_registry(plane):
+    orch, _, client = plane
+    remote = {d.resource_id: d for d in client.discover()}
+    local = {d.resource_id: d for d in orch.discover()}
+    assert remote == local          # faithful from_dict reconstruction
+    fast = client.discover(latency_regime="fast_ms", input_modality="vector")
+    assert {d.resource_id for d in fast} == \
+        {d.resource_id for d in orch.discover(latency_regime="fast_ms",
+                                              input_modality="vector")}
+
+
+def test_describe_and_twin_and_health(plane):
+    orch, _, client = plane
+    body = client.describe("memristive-local")
+    assert body["descriptor"] == orch.registry.get("memristive-local")
+    assert body["twin"]["twin_id"] == "twin-memristive-local"
+    assert body["snapshot"]["resource_id"] == "memristive-local"
+    twin = client.twin("chemical-ode")
+    assert twin["kind"] == "ode" and twin["executable"]
+    health = client.health()
+    assert health["plane"] == "test"
+    assert set(health["resources"]) == {d.resource_id
+                                        for d in orch.discover()}
+    with pytest.raises(GatewayError) as ei:
+        client.describe("no-such-resource")
+    assert ei.value.code is ErrorCode.NOT_FOUND
+
+
+# ---------------------------------------------------------------------------
+# execution surface
+
+
+def test_invoke_sync_round_trip(plane):
+    orch, _, client = plane
+    res, trace = client.invoke(_vector_task(
+        required_telemetry=("execution_ms",)))
+    assert res.status == "completed"
+    assert res.resource_id in ("memristive-local", "fast-external")
+    assert trace.selected == res.resource_id
+    assert trace.control_overhead_ms > 0.0
+    assert res.telemetry["execution_ms"] >= 0.0
+
+
+def test_submit_poll_and_submit_many(plane):
+    _, _, client = plane
+    ticket = client.submit(_vector_task())
+    res, trace = client.result(ticket, timeout_s=15)
+    assert res.status == "completed"
+    tickets = client.submit_many([_vector_task() for _ in range(4)])
+    assert len(tickets) == len(set(tickets)) == 4
+    for t in tickets:
+        res, _ = client.result(t, timeout_s=15)
+        assert res.status == "completed"
+    with pytest.raises(GatewayError) as ei:
+        client.poll("ticket-999999")
+    assert ei.value.code is ErrorCode.NOT_FOUND
+
+
+def test_poll_is_deliver_once(plane):
+    _, _, client = plane
+    ticket = client.submit(_vector_task())
+    res, _ = client.result(ticket, timeout_s=15)
+    assert res.status == "completed"
+    with pytest.raises(GatewayError) as ei:
+        client.poll(ticket)
+    assert ei.value.code is ErrorCode.NOT_FOUND
+
+
+def test_malformed_task_is_bad_request_not_internal(plane):
+    _, _, client = plane
+    from repro.gateway import protocol as wire
+    envelope = wire.request_envelope("invoke", {"task": {"payload": [1]}})
+    with pytest.raises(GatewayError) as ei:
+        client._call("POST", "/v1/invoke", envelope)
+    assert ei.value.code is ErrorCode.BAD_REQUEST
+
+
+def test_submit_many_rejects_whole_batch_on_malformed_task(plane):
+    """A malformed task mid-batch must queue NOTHING: earlier tasks
+    running with unreturned tickets would double-execute on retry."""
+    _, gw, client = plane
+    from repro.gateway import protocol as wire
+    good = _vector_task().to_wire()
+    envelope = wire.request_envelope(
+        "submit_many", {"tasks": [good, {"bogus_only": True}]})
+    before = gw.scheduler.stats()["done"] + gw.scheduler.pending
+    with pytest.raises(GatewayError) as ei:
+        client._call("POST", "/v1/submit_many", envelope)
+    assert ei.value.code is ErrorCode.BAD_REQUEST
+    assert "index 1" in ei.value.message
+    assert gw.scheduler.stats()["done"] + gw.scheduler.pending == before
+
+
+def test_telemetry_limit_zero_is_safe(plane):
+    _, _, client = plane
+    client.invoke(_vector_task())
+    out = client.telemetry(cursor=0, limit=0)     # clamped to 1, not a 500
+    assert len(out["events"]) == 1
+    with pytest.raises(GatewayError) as ei:
+        client._call("GET", "/v1/telemetry?cursor=notanumber")
+    assert ei.value.code is ErrorCode.BAD_REQUEST
+
+
+def test_filtered_long_poll_waits_through_other_traffic(plane):
+    """Events from OTHER resources must not cut a filtered long-poll
+    short; they are consumed silently (cursor advances past them)."""
+    import threading
+
+    _, _, client = plane
+    cursor = client.telemetry(cursor=0)["next_cursor"]
+    noise = threading.Thread(
+        target=lambda: [client.invoke(_vector_task()) for _ in range(3)])
+    t0 = time.perf_counter()
+    noise.start()
+    out = client.telemetry(cursor=cursor, resource="no-such-resource",
+                           timeout_s=1.0)
+    elapsed = time.perf_counter() - t0
+    noise.join()
+    assert out["events"] == []
+    assert elapsed >= 0.9, "filtered poll returned early on foreign events"
+    assert out["next_cursor"] >= cursor
+
+
+def test_telemetry_long_poll_cursor(plane):
+    _, _, client = plane
+    first = client.telemetry(cursor=0)
+    cursor = first["next_cursor"]
+    # nothing new yet: a short long-poll returns empty at the same cursor
+    again = client.telemetry(cursor=cursor, timeout_s=0.2)
+    assert again["events"] == [] and again["next_cursor"] == cursor
+    client.invoke(_vector_task())
+    tail = client.telemetry(cursor=cursor, timeout_s=5.0)
+    assert tail["events"], "invocation events must reach the cursor log"
+    assert all(e["seq"] > cursor for e in tail["events"])
+    kinds = {e["kind"] for e in tail["events"]}
+    assert "result" in kinds or "lifecycle" in kinds
+    # resource filter
+    only = client.telemetry(cursor=0, resource="memristive-local")
+    assert all(e["resource_id"] == "memristive-local"
+               for e in only["events"])
+
+
+# ---------------------------------------------------------------------------
+# error taxonomy, end to end
+
+
+def test_no_match_code(plane):
+    _, _, client = plane
+    with pytest.raises(GatewayError) as ei:
+        client.invoke(TaskRequest(function="no-such-function",
+                                  input_modality="vector",
+                                  output_modality="vector"))
+    assert ei.value.code is ErrorCode.NO_MATCH
+    assert ei.value.trace is not None
+    assert ei.value.trace.error_code == ErrorCode.NO_MATCH.value
+
+
+def test_policy_denied_code(plane):
+    _, _, client = plane
+    with pytest.raises(GatewayError) as ei:
+        client.invoke(TaskRequest(
+            function="stimulus_response", input_modality="spikes",
+            output_modality="spikes", supervision_available=False,
+            backend_preference="wetware-synthetic"))
+    assert ei.value.code is ErrorCode.POLICY_DENIED
+    assert "supervision" in ei.value.message
+
+
+def test_breaker_open_code_via_chaos_injector(plane):
+    orch, _, client = plane
+    injector = inject_invoke_failure("memristive-local")
+    injector.apply(orch)
+    try:
+        # drive failures until the breaker opens (consecutive-failure trip)
+        for _ in range(10):
+            try:
+                client.invoke(_vector_task(
+                    backend_preference="memristive-local",
+                    allow_fallback=False))
+            except GatewayError:
+                pass
+            if orch.health.state("memristive-local") is BreakerState.OPEN:
+                break
+        assert orch.health.state("memristive-local") is BreakerState.OPEN
+        with pytest.raises(GatewayError) as ei:
+            client.invoke(_vector_task(
+                backend_preference="memristive-local", allow_fallback=False))
+        assert ei.value.code is ErrorCode.BREAKER_OPEN
+        assert "quarantined" in ei.value.message
+    finally:
+        injector.clear(orch)
+
+
+def test_queue_saturated_code_via_full_scheduler(fast_service):
+    """A directed, no-fallback task against a substrate whose only slot is
+    held must reject QUEUE_SATURATED once its patience lapses."""
+    import dataclasses
+    import threading
+
+    class NarrowSlow(MemristiveAdapter):
+        def descriptor(self):
+            desc = super().descriptor()
+            cap = dataclasses.replace(
+                desc.capability,
+                policy=dataclasses.replace(desc.capability.policy,
+                                           max_concurrent=1))
+            return dataclasses.replace(desc, capability=cap)
+
+        def invoke(self, session):
+            time.sleep(0.5)
+            return super().invoke(session)
+
+    orch = Orchestrator(health=False)
+    orch.register(NarrowSlow("narrow-slow"))
+    gw = ControlPlaneGateway(orch, plane="narrow").start()
+    client = ControlPlaneClient(gw.url)
+    try:
+        blocker = threading.Thread(
+            target=lambda: client.invoke(_vector_task(
+                backend_preference="narrow-slow")))
+        blocker.start()
+        time.sleep(0.15)               # let the blocker take the only slot
+        with pytest.raises(GatewayError) as ei:
+            client.invoke(_vector_task(backend_preference="narrow-slow",
+                                       allow_fallback=False,
+                                       latency_budget_ms=100.0))
+        assert ei.value.code is ErrorCode.QUEUE_SATURATED
+        blocker.join()
+    finally:
+        gw.stop()
+
+
+def test_deadline_code_via_lapsed_queue_wait(plane):
+    _, _, client = plane
+    ticket = client.submit(_vector_task(), deadline_s=0.0)
+    with pytest.raises(GatewayError) as ei:
+        client.result(ticket, timeout_s=15)
+    assert ei.value.code is ErrorCode.DEADLINE
+    assert "deadline exceeded while queued" in ei.value.message
+
+
+def test_twin_invalid_code_carries_invalidation_reason(plane):
+    orch, _, client = plane
+    orch.twins.invalidate("memristive-local",
+                          "postcondition: missing drift_score")
+    try:
+        with pytest.raises(GatewayError) as ei:
+            client.invoke(_vector_task(
+                backend_preference="memristive-local",
+                allow_fallback=False, twin_min_confidence=0.5))
+        assert ei.value.code is ErrorCode.TWIN_INVALID
+        # PR 3's recorded invalidation reason must reach the remote client
+        assert ei.value.invalidation_reason == \
+            "postcondition: missing drift_score"
+    finally:
+        orch.twins.recalibrate("memristive-local")
+
+
+def test_bad_request_code_on_wrong_version(plane):
+    import urllib.request
+
+    _, gw, _ = plane
+    from repro.gateway import protocol as wire
+    env = wire.request_envelope("invoke", {"task": {}})
+    env["protocol_version"] = "9.0"
+    req = urllib.request.Request(f"{gw.url}/v1/invoke", data=wire.dumps(env),
+                                 headers={"Content-Type": "application/json"})
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req, timeout=5)
+    envelope = wire.loads(ei.value.read())
+    assert envelope["ok"] is False
+    assert envelope["error"]["code"] == ErrorCode.BAD_REQUEST.value
+    assert ei.value.code == 400
+
+
+def test_plane_unavailable_code_after_stop(fast_service):
+    orch = Orchestrator()
+    standard_testbed(orch, http_service=fast_service)
+    gw = ControlPlaneGateway(orch, plane="dying").start()
+    client = ControlPlaneClient(gw.url, timeout_s=2.0)
+    assert client.health()["plane"] == "dying"
+    gw.stop()
+    with pytest.raises(GatewayError) as ei:
+        client.health()
+    assert ei.value.code is ErrorCode.PLANE_UNAVAILABLE

@@ -1,0 +1,332 @@
+"""Wire protocol v1: faithful round-trips, error taxonomy, envelopes.
+
+The descriptor round-trip property (``to_dict → from_dict → to_dict``
+identity over generated descriptors) is the executable form of the paper's
+descriptor-portability claim, independent of any gateway being up.
+"""
+import pytest
+
+from repro.core import (ControlPlaneError, ErrorCode, InvocationResult,
+                        TaskRequest, WireError, classify_rejection,
+                        new_task_id, set_plane_namespace)
+from repro.core.descriptors import (CapabilityDescriptor, LifecycleSemantics,
+                                    Observability, PolicyConstraints,
+                                    ResourceDescriptor, SignalSpec,
+                                    TimingSemantics)
+from repro.core.orchestrator import OrchestrationTrace
+from repro.core.telemetry import RuntimeSnapshot
+from repro.gateway import protocol as wire
+from repro.substrates import (ChemicalAdapter, CorticalLabsAdapter,
+                              MemristiveAdapter, WetwareAdapter)
+
+
+# ---------------------------------------------------------------------------
+# TaskRequest wire fidelity (satellite: to_dict used to discard the payload)
+
+
+def test_task_to_wire_keeps_payload():
+    t = TaskRequest(function="inference", input_modality="vector",
+                    output_modality="vector", payload=[0.1, 0.2],
+                    required_telemetry=("execution_ms",),
+                    metadata={"k": "v"})
+    w = t.to_wire()
+    assert w["payload"] == [0.1, 0.2]
+    back = TaskRequest.from_wire(w)
+    assert back == t
+    assert back.task_id == t.task_id           # identity survives the hop
+    assert back.required_telemetry == ("execution_ms",)
+
+
+def test_task_summary_redacts_payload_and_to_dict_aliases_it():
+    t = TaskRequest(function="inference", input_modality="vector",
+                    output_modality="vector", payload=[0.1, 0.2])
+    assert t.summary()["payload"] == "<payload>"
+    assert t.to_dict() == t.summary()
+    none = TaskRequest(function="f", input_modality="a", output_modality="b")
+    assert none.summary()["payload"] is None
+
+
+def test_task_from_wire_ignores_unknown_fields():
+    t = TaskRequest(function="f", input_modality="a", output_modality="b")
+    w = t.to_wire()
+    w["future_field_from_v1_1"] = {"x": 1}     # additive minor-version field
+    assert TaskRequest.from_wire(w) == t
+
+
+def test_descriptor_from_dict_ignores_unknown_fields():
+    """Additive MINOR-version fields in ANY nested spec must be skipped,
+    not crash reconstruction (the protocol compatibility policy)."""
+    desc = MemristiveAdapter().descriptor()
+    d = desc.to_dict()
+    d["new_top_level"] = 1
+    d["capability"]["new_cap_field"] = 2
+    for spec in ("input_signal", "timing", "lifecycle", "observability",
+                 "policy"):
+        d["capability"][spec]["new_spec_field"] = 3
+    assert ResourceDescriptor.from_dict(d) == desc
+
+
+def test_unserializable_payload_is_refused_loudly():
+    """A payload the wire cannot carry faithfully must error, never be
+    silently stringified into junk the remote plane executes on."""
+    from repro.gateway.protocol import ProtocolError
+    t = TaskRequest(function="f", input_modality="a", output_modality="b",
+                    payload=b"\x01\x02")
+    with pytest.raises(ProtocolError):
+        wire.dumps(wire.request_envelope("invoke",
+                                         {"task": t.to_wire()}))
+
+
+def test_task_ids_are_plane_namespaced():
+    prev = set_plane_namespace("edge")
+    try:
+        a = new_task_id()
+        set_plane_namespace("cloud")
+        b = new_task_id()
+        assert a.startswith("task-edge-")
+        assert b.startswith("task-cloud-")
+        assert a.split("-")[-1] != b.split("-")[-1] or a != b
+        assert TaskRequest(function="f", input_modality="a",
+                           output_modality="b").task_id.startswith("task-cloud-")
+    finally:
+        set_plane_namespace(prev)
+
+
+# ---------------------------------------------------------------------------
+# descriptor round-trips — concrete adapters first
+
+
+@pytest.mark.parametrize("adapter_cls", [ChemicalAdapter, WetwareAdapter,
+                                         MemristiveAdapter,
+                                         CorticalLabsAdapter])
+def test_adapter_descriptor_roundtrip(adapter_cls):
+    desc = adapter_cls().descriptor()
+    d = desc.to_dict()
+    back = ResourceDescriptor.from_dict(d)
+    assert back == desc
+    assert back.to_dict() == d
+
+
+def test_nested_spec_roundtrips():
+    sig = SignalSpec("vector", "float32", (-1.0, 1.0), sampling_hz=10.0,
+                     transduction="dac")
+    assert SignalSpec.from_dict(sig.to_dict()) == sig
+    tim = TimingSemantics("fast_ms", 2.0, 5.0, trigger_mode="stream")
+    assert TimingSemantics.from_dict(tim.to_dict()) == tim
+    lc = LifecycleSemantics(warmup_ms=2.0, reset_modes=("soft", "hard"),
+                            recovery_modes=("flush",),
+                            calibration_interval_s=60.0)
+    assert LifecycleSemantics.from_dict(lc.to_dict()) == lc
+    obs = Observability(("ch",), ("f1", "f2"), ("d",), ("t",))
+    assert Observability.from_dict(obs.to_dict()) == obs
+    pol = PolicyConstraints(exclusive=False, max_concurrent=4,
+                            authorized_tenants=("a", "b"), biosafety_level=2)
+    assert PolicyConstraints.from_dict(pol.to_dict()) == pol
+
+
+# ---------------------------------------------------------------------------
+# descriptor round-trip PROPERTY (hypothesis-generated descriptors) — the
+# rest of the module must still run when hypothesis is absent
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _names = st.text(alphabet="abcdefghijklmnopqrstuvwxyz_", min_size=1,
+                     max_size=12)
+    _floats = st.floats(0.0, 1e6, allow_nan=False, allow_infinity=False)
+    _opt_floats = st.none() | _floats
+    _str_tuples = st.tuples() | st.lists(_names, max_size=4).map(tuple)
+
+    _signals = st.builds(
+        SignalSpec, modality=_names, encoding=_names,
+        admissible_range=st.tuples(st.floats(-1e6, 0.0, allow_nan=False),
+                                   st.floats(0.0, 1e6, allow_nan=False)),
+        sampling_hz=_opt_floats, transduction=st.none() | _names)
+
+    _timings = st.builds(
+        TimingSemantics,
+        latency_regime=st.sampled_from(("slow_seconds", "fast_ms", "sub_ms")),
+        expected_latency_ms=_floats, observation_window_ms=_floats,
+        min_stabilization_ms=_floats,
+        trigger_mode=st.sampled_from(("request", "stream", "event")),
+        freshness_ms=_floats)
+
+    _lifecycles = st.builds(
+        LifecycleSemantics, warmup_ms=_floats, resetable=st.booleans(),
+        reset_modes=_str_tuples, reset_cost_ms=_floats,
+        calibration_interval_s=_opt_floats, recovery_modes=_str_tuples,
+        cooldown_ms=_floats)
+
+    _observabilities = st.builds(
+        Observability, output_channels=_str_tuples,
+        telemetry_fields=_str_tuples, drift_indicators=_str_tuples,
+        twin_linked_fields=_str_tuples)
+
+    _policies = st.builds(
+        PolicyConstraints, exclusive=st.booleans(),
+        requires_supervision=st.booleans(), max_stimulation=_opt_floats,
+        max_concurrent=st.integers(1, 64),
+        authorized_tenants=st.just(("*",)) | _str_tuples,
+        biosafety_level=st.integers(0, 4))
+
+    _capabilities = st.builds(
+        CapabilityDescriptor, functions=_str_tuples, input_signal=_signals,
+        output_signal=_signals, timing=_timings, lifecycle=_lifecycles,
+        programmability=st.sampled_from(("fixed", "configurable", "tunable",
+                                         "in_situ_adaptive")),
+        observability=_observabilities, policy=_policies,
+        supports_repeated_invocation=st.booleans(),
+        energy_proxy_mj=_opt_floats)
+
+    _descriptors = st.builds(
+        ResourceDescriptor, resource_id=_names, substrate_class=_names,
+        adapter_type=st.sampled_from(("in_process", "http", "external_api")),
+        location=st.sampled_from(("extreme_edge", "edge", "fog", "cloud",
+                                  "lab")),
+        twin_binding=st.none() | _names, capability=_capabilities,
+        description=_names)
+
+    @settings(max_examples=60, deadline=None)
+    @given(desc=_descriptors)
+    def test_descriptor_wire_roundtrip_property(desc):
+        """to_dict → from_dict → to_dict is an identity, and the rebuilt
+        descriptor equals the original (frozen dataclass equality)."""
+        d = desc.to_dict()
+        back = ResourceDescriptor.from_dict(d)
+        assert back == desc
+        assert back.to_dict() == d
+        # the wire form must actually be JSON-transportable
+        assert ResourceDescriptor.from_dict(wire.loads(wire.dumps(d))) == desc
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_descriptor_wire_roundtrip_property():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# result / trace / snapshot round-trips
+
+
+def test_result_and_trace_roundtrip():
+    res = InvocationResult(task_id="task-x-00001", resource_id="r",
+                           status="completed", output={"vector": [1.0, 2.0]},
+                           telemetry={"execution_ms": 1.2}, artifacts={},
+                           timing_ms={"backend_ms": 1.0, "total_ms": 2.0},
+                           contracts={}, session_id="session-00001")
+    assert InvocationResult.from_wire(res.to_wire()) == res
+    trace = OrchestrationTrace("task-x-00001")
+    trace.record_attempt({"resource": "r", "score": 1.0, "terms": {}})
+    trace.selected = "r"
+    trace.error_code = None
+    back = OrchestrationTrace.from_wire(trace.to_wire())
+    assert back == trace
+
+
+def test_snapshot_roundtrip():
+    snap = RuntimeSnapshot("r", health_status="degraded", drift_score=0.2,
+                           queue_depth=3)
+    back = wire.snapshot_from_wire(wire.snapshot_to_wire(snap))
+    assert (back.resource_id, back.health_status, back.drift_score,
+            back.queue_depth) == ("r", "degraded", 0.2, 3)
+
+
+# ---------------------------------------------------------------------------
+# error taxonomy
+
+
+@pytest.mark.parametrize("reason,code", [
+    ("no acceptable backend candidate: r=input modality mismatch",
+     ErrorCode.NO_MATCH),
+    ("circuit open (quarantined): 3 consecutive failures",
+     ErrorCode.BREAKER_OPEN),
+    ("probation trickle budget exhausted", ErrorCode.BREAKER_OPEN),
+    ("concurrency limit", ErrorCode.QUEUE_SATURATED),
+    ("queue saturated (depth 9 >= 3)", ErrorCode.QUEUE_SATURATED),
+    ("deadline exceeded while queued", ErrorCode.DEADLINE),
+    ("twin invalidated: postcondition: missing drift", ErrorCode.TWIN_INVALID),
+    ("twin stale (99ms > 10ms)", ErrorCode.TWIN_INVALID),
+    ("twin confidence 0.10 < 0.3", ErrorCode.TWIN_INVALID),
+    ("substrate requires human supervision; task declares none available",
+     ErrorCode.POLICY_DENIED),
+    ("tenant 'x' not authorized", ErrorCode.POLICY_DENIED),
+    ("fallback attempts exhausted", ErrorCode.FALLBACK_EXHAUSTED),
+    ("prepare failure: injected preparation failure",
+     ErrorCode.FALLBACK_EXHAUSTED),
+    ("resource unregistered", ErrorCode.NOT_FOUND),
+])
+def test_classify_rejection(reason, code):
+    assert classify_rejection(reason) is code
+
+
+def test_wire_error_roundtrip():
+    err = WireError(ErrorCode.BREAKER_OPEN, "quarantined",
+                    {"trace": {"task_id": "t"}})
+    back = WireError.from_wire(wire.loads(wire.dumps(err.to_wire())))
+    assert back.code is ErrorCode.BREAKER_OPEN
+    assert back.message == "quarantined"
+    assert back.detail["trace"] == {"task_id": "t"}
+    assert WireError.from_wire({"code": "NOT_A_CODE"}).code is \
+        ErrorCode.INTERNAL
+
+
+def test_rejection_to_error_extracts_invalidation_reason():
+    res = InvocationResult(
+        task_id="t", resource_id="", status="rejected", output=None,
+        telemetry={"reason": "twin invalidated: speculation mismatch: "
+                             "divergence 0.9 > tolerance 0.25",
+                   "error_code": "TWIN_INVALID"},
+        artifacts={}, timing_ms={}, contracts={}, session_id="")
+    err = wire.rejection_to_error(res, OrchestrationTrace("t"))
+    assert err.code is ErrorCode.TWIN_INVALID
+    assert err.detail["invalidation_reason"].startswith(
+        "speculation mismatch")
+    assert err.detail["trace"]["task_id"] == "t"
+
+
+# ---------------------------------------------------------------------------
+# envelopes + versioning
+
+
+def test_envelope_roundtrip_and_version_policy():
+    env = wire.request_envelope("invoke", {"task": {}})
+    assert env["protocol_version"] == wire.PROTOCOL_VERSION
+    assert wire.parse_request(env, expect_kind="invoke") == {"task": {}}
+    with pytest.raises(wire.ProtocolError):
+        wire.parse_request(dict(env, protocol_version="9.0"))
+    with pytest.raises(wire.ProtocolError):
+        wire.parse_request(dict(env, kind="discover"), expect_kind="invoke")
+    # minor version drift within the same major parses fine
+    wire.parse_request(dict(env, protocol_version="1.7"),
+                       expect_kind="invoke")
+
+
+def test_parse_response_raises_structured_error():
+    env = wire.error_envelope("invoke", WireError(
+        ErrorCode.QUEUE_SATURATED, "full", {"retry_after_s": 1}))
+    with pytest.raises(ControlPlaneError) as ei:
+        wire.parse_response(env)
+    assert ei.value.code is ErrorCode.QUEUE_SATURATED
+    assert ei.value.detail["retry_after_s"] == 1
+    ok = wire.ok_envelope("invoke", {"x": 1})
+    assert wire.parse_response(ok) == {"x": 1}
+
+
+def test_http_status_mapping_is_total():
+    for code in ErrorCode:
+        assert 400 <= wire.http_status(code) <= 599
+
+
+def test_rejected_result_carries_error_code():
+    from repro.core import Orchestrator
+    orch = Orchestrator()
+    res, trace = orch.submit(TaskRequest(
+        function="inference", input_modality="vector",
+        output_modality="vector"))
+    assert res.status == "rejected"
+    assert res.telemetry["error_code"] == ErrorCode.NO_MATCH.value
+    assert trace.error_code == ErrorCode.NO_MATCH.value
+    assert res.error_code == ErrorCode.NO_MATCH.value
