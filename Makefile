@@ -9,11 +9,18 @@
 #                          executor (shadow/fallback/speculate), properties
 #   make twin-smoke        quick twin-fallback goodput trial + validity audit
 #   make test-gateway      wire-layer suites: protocol round-trips, gateway
-#                          endpoint/error-taxonomy e2e, federated planes
+#                          endpoint/error-taxonomy e2e, federated planes,
+#                          streaming telemetry, multi-hop topology
 #   make gateway-smoke     ~20s wire round-trip (discover→invoke→telemetry
 #                          on the mixed testbed) + 1 overhead trial
+#   make hierarchy-smoke   ~60s 3-tier drill: 4-plane chain per-hop cost,
+#                          stream-vs-poll fan-in, kill-the-middle-plane
+#                          breaker + twin-fallback verification
 #   make bench-gateway     local vs wire control-path overhead (p50/p99,
 #                          asserts median wire excess <= 5 ms)
+#   make bench-hierarchy   multi-hop chain + streaming fan-in benchmark
+#                          (per-hop added latency <= single-hop margin,
+#                          >= 2x fewer requests than cursor polling)
 #   make bench-throughput  headline serial-vs-pooled scheduler benchmark
 #   make bench-recovery    resilience benchmark: goodput under faults with
 #                          vs without the HealthManager
@@ -25,8 +32,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast chaos-smoke test-twin twin-smoke test-gateway \
-        gateway-smoke bench bench-throughput bench-recovery bench-twin \
-        bench-gateway dev-deps
+        gateway-smoke hierarchy-smoke bench bench-throughput bench-recovery \
+        bench-twin bench-gateway bench-hierarchy dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -46,13 +53,19 @@ twin-smoke:
 
 test-gateway:
 	$(PYTHON) -m pytest -q tests/test_protocol.py tests/test_gateway.py \
-	    tests/test_federation.py
+	    tests/test_federation.py tests/test_stream.py tests/test_topology.py
 
 gateway-smoke:
 	$(PYTHON) -m benchmarks.bench_gateway --smoke
 
+hierarchy-smoke:
+	$(PYTHON) -m benchmarks.bench_hierarchy --smoke
+
 bench-gateway:
 	$(PYTHON) -m benchmarks.bench_gateway
+
+bench-hierarchy:
+	$(PYTHON) -m benchmarks.bench_hierarchy
 
 bench-throughput:
 	$(PYTHON) -m benchmarks.bench_throughput

@@ -26,6 +26,11 @@ Paper artifact map:
                         gateway + client SDK vs the in-process plane
                         (reproduces the paper's "small control-path
                         overhead" across a real protocol boundary)
+    bench_hierarchy   — beyond-paper multi-hop federation: per-hop added
+                        control latency on a device→edge→fog→cloud chain
+                        (vs the single-hop wire margin) and streaming
+                        telemetry fan-in vs the N-cursor polling baseline
+                        (request count + zero-loss by sequence numbers)
 """
 import argparse
 import sys
@@ -35,9 +40,10 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import (bench_cortical, bench_faults, bench_fleet,
-                        bench_gateway, bench_http, bench_matcher,
-                        bench_overhead, bench_portability, bench_recovery,
-                        bench_roofline, bench_throughput, bench_twin)
+                        bench_gateway, bench_hierarchy, bench_http,
+                        bench_matcher, bench_overhead, bench_portability,
+                        bench_recovery, bench_roofline, bench_throughput,
+                        bench_twin)
 
 BENCHES = {
     "portability": bench_portability.run,
@@ -52,6 +58,7 @@ BENCHES = {
     "recovery": bench_recovery.run,
     "twin": bench_twin.run,
     "gateway": bench_gateway.run,
+    "hierarchy": bench_hierarchy.run,
 }
 
 

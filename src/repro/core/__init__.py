@@ -30,6 +30,9 @@ from repro.core.registry import CapabilityRegistry  # noqa: F401
 from repro.core.tasks import (TaskRequest, new_task_id,  # noqa: F401
                               set_plane_namespace)
 from repro.core.telemetry import RuntimeSnapshot, TelemetryBus, TelemetryEvent  # noqa: F401
+from repro.core.topology import (DEFAULT_HOP_BUDGET, HOP_WIRE_MARGIN_MS,  # noqa: F401
+                                 PlaneTopology, budget_admissible,
+                                 forward_task, remaining_budget_ms)
 from repro.core.twin import (RecordReplaySurrogate, TwinNotReady,  # noqa: F401
                              TwinState, TwinSurrogate, TwinSyncManager,
                              output_divergence)

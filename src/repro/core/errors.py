@@ -47,6 +47,10 @@ class ErrorCode(str, enum.Enum):
     BAD_REQUEST = "BAD_REQUEST"
     #: remote plane unreachable (federation transport failure)
     PLANE_UNAVAILABLE = "PLANE_UNAVAILABLE"
+    #: federating this plane would make it transitively reach itself
+    FEDERATION_CYCLE = "FEDERATION_CYCLE"
+    #: missing/unknown wire credentials (gateway requires per-plane keys)
+    UNAUTHORIZED = "UNAUTHORIZED"
     #: unexpected server-side failure
     INTERNAL = "INTERNAL"
 
@@ -60,7 +64,9 @@ _CLASSIFIERS = (
                               "twin confidence", "twin fallback unavailable",
                               "no twin bound")),
     (ErrorCode.BREAKER_OPEN, ("circuit open", "quarantined", "probation")),
-    (ErrorCode.DEADLINE, ("deadline exceeded", "deadline lapsed")),
+    (ErrorCode.DEADLINE, ("deadline exceeded", "deadline lapsed",
+                          "hop budget", "deadline budget")),
+    (ErrorCode.FEDERATION_CYCLE, ("federation cycle", "would create a cycle")),
     (ErrorCode.QUEUE_SATURATED, ("concurrency limit", "queue saturated")),
     (ErrorCode.POLICY_DENIED, ("supervision", "not authorized",
                                "exceeds safety bound")),

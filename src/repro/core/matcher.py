@@ -39,6 +39,7 @@ from repro.core.registry import CapabilityRegistry
 from repro.core.policy import PolicyManager
 from repro.core.tasks import TaskRequest
 from repro.core.telemetry import TelemetryBus
+from repro.core.topology import budget_admissible
 from repro.core.twin import TwinSyncManager
 
 _LOCALITY_SCORE = {"extreme_edge": 1.0, "edge": 0.9, "device/edge": 0.9,
@@ -148,6 +149,16 @@ class Matcher:
 
     def _runtime_admissible(self, desc: ResourceDescriptor, task: TaskRequest
                             ) -> Tuple[bool, str]:
+        if desc.substrate_class == "federated_plane":
+            # multi-hop budget gate: a task whose hop budget is spent or
+            # whose remaining deadline budget cannot absorb another wire
+            # hop must stay on local hardware; refusing placement here is
+            # what surfaces as a structured DEADLINE when no local
+            # candidate exists.  Not cached: budgets vary per task instance
+            # (decremented each hop), not per task shape.
+            ok, why = budget_admissible(task)
+            if not ok:
+                return False, why
         pol = self.policy.admit(desc, task)
         if not pol:
             return False, pol.reason

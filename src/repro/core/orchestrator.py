@@ -38,7 +38,8 @@ from repro.core.matcher import Candidate, Matcher
 from repro.core.policy import PolicyManager
 from repro.core.registry import CapabilityRegistry
 from repro.core.tasks import TaskRequest
-from repro.core.telemetry import TelemetryBus
+from repro.core.telemetry import TelemetryBus, TelemetryEvent
+from repro.core.topology import PlaneTopology
 from repro.core.twin import TwinSyncManager
 from repro.core.twin_executor import TwinExecutor
 
@@ -112,9 +113,18 @@ class Orchestrator:
                  acquire_timeout_s: float = DEFAULT_ACQUIRE_TIMEOUT_S,
                  health=True,
                  twin_fallback_queue_factor: Optional[float]
-                 = TWIN_FALLBACK_QUEUE_FACTOR):
+                 = TWIN_FALLBACK_QUEUE_FACTOR,
+                 plane: str = "plane"):
         self.registry = registry or CapabilityRegistry()
         self.bus = TelemetryBus()
+        # plane identity + federation graph (multi-hop cycle detection);
+        # the gateway serves it at /v1/topology and renames it to its plane
+        self.topology = PlaneTopology(plane)
+        # descriptor change feed: every register/unregister surfaces as a
+        # first-class "registry" telemetry event (epoch + wire descriptor),
+        # so parent planes following this plane's stream track fleet
+        # membership live instead of re-fetching on breaker reopen
+        self.registry.subscribe(self._on_fleet_change)
         self.twins = TwinSyncManager(self.bus)
         self.twin_exec = TwinExecutor(self.twins, self.bus)
         self.twin_fallback_queue_factor = twin_fallback_queue_factor
@@ -134,6 +144,14 @@ class Orchestrator:
                                             health=self.health)
         self.invocations = InvocationManager(self.registry, self.lifecycle,
                                              self.bus)
+
+    def _on_fleet_change(self, action: str, desc, epoch: int) -> None:
+        self.bus.emit(TelemetryEvent(desc.resource_id, "registry", {
+            "action": action,
+            "epoch": epoch,
+            "plane_id": self.topology.plane_id,
+            "descriptor": desc.to_dict(),
+        }))
 
     def _reopen_resource(self, rid: str) -> bool:
         """Recover-on-reopen hook for the health manager: re-arm a substrate
@@ -189,6 +207,23 @@ class Orchestrator:
         task's latency budget (or the orchestrator default) applies.
         """
         trace = OrchestrationTrace(task.task_id)
+        # multi-hop budget floor: a task whose end-to-end deadline budget
+        # was fully consumed in transit (or that arrived with a negative
+        # hop budget — a buggy or hostile forwarder) terminates here with
+        # the structured DEADLINE outcome instead of burning substrate time
+        if task.hop_budget is not None and task.hop_budget < 0:
+            return self._reject_or_twin(
+                task, trace, f"hop budget exhausted in transit "
+                f"(route {list(task.route)})", code=ErrorCode.DEADLINE)
+        if task.deadline_budget_ms is not None and task.deadline_budget_ms <= 0:
+            return self._reject_or_twin(
+                task, trace, f"deadline budget exhausted in transit "
+                f"({task.deadline_budget_ms:.1f}ms remaining after "
+                f"{len(task.route)} hops)", code=ErrorCode.DEADLINE)
+        if deadline is None and task.deadline_budget_ms is not None:
+            # a forwarded task's remaining end-to-end budget bounds local
+            # admission exactly like a client latency budget would
+            deadline = time.monotonic() + task.deadline_budget_ms / 1e3
         if deadline is None and task.latency_budget_ms is not None:
             # pin the budget to a fixed deadline once, so repeated fallback
             # attempts share it instead of each getting a fresh full budget
@@ -212,6 +247,16 @@ class Orchestrator:
                 reason = ("no acceptable backend candidate: "
                           + "; ".join(f"{r}={why}"
                                       for r, why in reasons.items()))
+                # keep the cause of the LAST attempt in the rejection: a
+                # candidate that was tried and failed is admissible, so its
+                # failure (e.g. a downstream plane's structured DEADLINE)
+                # would otherwise vanish from the reason — and from the
+                # wire classification
+                last_failure = next(
+                    (a.get("failure") for a in reversed(trace.attempts)
+                     if a.get("failure")), None)
+                if last_failure:
+                    reason += f"; last attempt: {last_failure}"
                 trace.add_control_ms((time.perf_counter() - t_rej) * 1e3)
                 return self._reject_or_twin(task, trace, reason)
             rid = cand.resource_id
@@ -459,3 +504,15 @@ class Orchestrator:
         if snap is not None:
             self.bus.update_snapshot(snap)
         return desc
+
+    def unregister(self, resource_id: str) -> None:
+        """Remove a resource from the fleet (the registry listener pushes
+        the change onto the bus as a ``registry`` event — parent planes
+        following the stream see the membership change live)."""
+        adapter = self.registry.adapter(resource_id)
+        self.registry.unregister(resource_id)
+        if adapter is not None and hasattr(adapter, "close"):
+            try:
+                adapter.close()
+            except Exception:                              # noqa: BLE001
+                pass

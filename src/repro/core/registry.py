@@ -8,6 +8,12 @@ The registry is thread-safe and versioned: ``epoch`` increments on every
 register/unregister, so the matcher can cache per-task admissibility and
 static scoring work across many concurrent tasks and invalidate the cache
 exactly when the fleet composition changes.
+
+Fleet-change listeners: ``subscribe`` registers a callback invoked (outside
+the lock) as ``fn(action, desc, epoch)`` on every register/unregister.  The
+orchestrator forwards these onto the TelemetryBus as ``registry`` events —
+the descriptor change feed parent planes follow over the telemetry stream
+to track a child fleet live instead of re-fetching descriptors.
 """
 from __future__ import annotations
 
@@ -21,6 +27,7 @@ class CapabilityRegistry:
     def __init__(self):
         self._resources: Dict[str, ResourceDescriptor] = {}
         self._adapters: Dict[str, object] = {}
+        self._listeners: List[Callable[[str, ResourceDescriptor, int], None]] = []
         self._epoch = 0
         self._lock = threading.RLock()
 
@@ -30,17 +37,36 @@ class CapabilityRegistry:
         with self._lock:
             return self._epoch
 
+    def subscribe(self, fn: Callable[[str, ResourceDescriptor, int], None]
+                  ) -> None:
+        """Fleet-change listener: ``fn(action, desc, epoch)`` with action in
+        {"register", "unregister"}; called outside the registry lock."""
+        with self._lock:
+            self._listeners.append(fn)
+
+    def _notify(self, action: str, desc: ResourceDescriptor,
+                epoch: int) -> None:
+        with self._lock:
+            listeners = list(self._listeners)
+        for fn in listeners:
+            fn(action, desc, epoch)
+
     def register(self, desc: ResourceDescriptor, adapter) -> None:
         with self._lock:
             self._resources[desc.resource_id] = desc
             self._adapters[desc.resource_id] = adapter
             self._epoch += 1
+            epoch = self._epoch
+        self._notify("register", desc, epoch)
 
     def unregister(self, resource_id: str) -> None:
         with self._lock:
-            self._resources.pop(resource_id, None)
+            desc = self._resources.pop(resource_id, None)
             self._adapters.pop(resource_id, None)
             self._epoch += 1
+            epoch = self._epoch
+        if desc is not None:
+            self._notify("unregister", desc, epoch)
 
     def get(self, resource_id: str) -> Optional[ResourceDescriptor]:
         with self._lock:

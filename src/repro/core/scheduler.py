@@ -24,6 +24,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -77,6 +78,10 @@ class ControlPlaneScheduler:
         self._status_counts: Dict[str, int] = {}
         self._per_resource: Dict[str, int] = {}
         self._latencies_ms: List[float] = []
+        # recent completion timestamps: the observed DRAIN RATE for
+        # retry_after_s (end-to-end latencies include queue wait, which
+        # would inflate a backoff hint exactly when the queue is busy)
+        self._done_times: "deque[float]" = deque(maxlen=32)
         self._first_enqueue: Optional[float] = None
         self._last_done: Optional[float] = None
 
@@ -291,6 +296,7 @@ class ControlPlaneScheduler:
                 self._per_resource[result.resource_id] = \
                     self._per_resource.get(result.resource_id, 0) + 1
             self._latencies_ms.append((now - enqueued) * 1e3)
+            self._done_times.append(now)
             self._last_done = now
 
     # -- observability --------------------------------------------------------
@@ -326,3 +332,28 @@ class ControlPlaneScheduler:
     def pending(self) -> int:
         with self._lock:
             return self._pending
+
+    #: retry_after_s clamps: never tell a client "retry immediately" into a
+    #: saturated queue, never park it for more than this many seconds
+    MIN_RETRY_AFTER_S = 0.05
+    MAX_RETRY_AFTER_S = 5.0
+
+    def retry_after_s(self) -> float:
+        """Informed-backoff hint for QUEUE_SATURATED rejections: how long
+        until this plane has likely worked off its current backlog, from
+        the OBSERVED recent drain rate (completions per second across the
+        worker pool — enqueue-to-resolve latencies would double-count the
+        queue wait the backlog already represents).  Clamped so clients
+        neither hammer nor stall."""
+        with self._lock:
+            backlog = self._pending
+        with self._stats_lock:
+            times = list(self._done_times)
+        if len(times) >= 2 and times[-1] > times[0]:
+            drain_per_s = (len(times) - 1) / (times[-1] - times[0])
+            est = backlog / drain_per_s
+        else:
+            # no drain history yet: assume fast tasks, stay near the floor
+            est = backlog * 0.01
+        return round(min(self.MAX_RETRY_AFTER_S,
+                         max(self.MIN_RETRY_AFTER_S, est)), 3)

@@ -78,6 +78,15 @@ class TaskRequest:
     #: per-task override of the twin validity confidence floor
     #: (None = TwinState.DEFAULT_MIN_CONFIDENCE)
     twin_min_confidence: Optional[float] = None
+    #: multi-hop federation budgets (repro.core.topology): how many more
+    #: plane-to-plane forwards this task may take (None = never forwarded;
+    #: the first forward stamps the default), and the remaining end-to-end
+    #: deadline budget in ms, decremented by a wire margin per hop (None =
+    #: seeded from latency_budget_ms at the first forward, or unbounded)
+    hop_budget: Optional[int] = None
+    deadline_budget_ms: Optional[float] = None
+    #: plane ids this task was forwarded through, origin first
+    route: Tuple[str, ...] = ()
     metadata: Dict[str, Any] = dataclasses.field(default_factory=dict)
     task_id: str = dataclasses.field(default_factory=new_task_id)
 
@@ -99,6 +108,7 @@ class TaskRequest:
         remote plane; ``from_wire`` round-trips it exactly."""
         d = dataclasses.asdict(self)
         d["required_telemetry"] = list(self.required_telemetry)
+        d["route"] = list(self.route)
         return d
 
     @classmethod
@@ -110,6 +120,7 @@ class TaskRequest:
 
         d = known_fields(cls, d)
         d["required_telemetry"] = tuple(d.get("required_telemetry") or ())
+        d["route"] = tuple(d.get("route") or ())
         d["metadata"] = dict(d.get("metadata") or {})
         return cls(**d)
 

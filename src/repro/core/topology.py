@@ -1,0 +1,175 @@
+"""Plane topology: identity, federation graph, and multi-hop budgets.
+
+PR 4's federation was a single hop (edge → cloud); the paper frames
+phys-MCP as the control plane of a *multi-tier* edge-cloud continuum, so
+planes must chain (device → edge → fog → cloud) without two failure modes
+ad-hoc single-hop code never had to face:
+
+- **cycles** — a plane transitively re-registering itself (A federates B,
+  B federates C, someone federates A into C) would forward tasks in a loop
+  forever.  Every plane therefore carries a stable :class:`PlaneIdentity`
+  (``plane_id``), every gateway exposes its transitive *reachable set* of
+  plane ids (``GET /v1/topology``), and federation refuses with
+  ``FEDERATION_CYCLE`` whenever the registering parent already appears in
+  the child's reachable set.
+- **unbounded forwarding** — substrate latency envelopes must be respected
+  end-to-end (Momeni et al.), which a per-plane deadline cannot guarantee
+  once tasks hop: each forward decrements a ``hop_budget`` and subtracts a
+  wire margin from ``deadline_budget_ms``; a plane whose remaining budget
+  cannot absorb another hop keeps the task local or rejects it with the
+  structured ``DEADLINE`` code.
+
+Both budgets live on :class:`~repro.core.tasks.TaskRequest` (additive
+MINOR protocol fields), so they survive the wire unchanged and every plane
+along the chain enforces them with the same code paths — the matcher
+refuses to *place* a budget-exhausted task on a federated plane, which is
+strictly earlier (and cheaper) than the remote side rejecting it.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, FrozenSet, Iterable, Optional, Tuple
+
+from repro.core.errors import ControlPlaneError, ErrorCode
+from repro.core.tasks import TaskRequest
+
+#: wire margin (ms) subtracted from a task's remaining deadline budget per
+#: forwarding hop — matches the transport margin the federated descriptor
+#: advertises, so the budget math and the matcher's T term agree
+HOP_WIRE_MARGIN_MS = 5.0
+
+#: hop budget stamped onto a task at its FIRST forward when the client did
+#: not set one: deep enough for any sane tier chain, finite so a
+#: mis-configured topology can never forward forever
+DEFAULT_HOP_BUDGET = 8
+
+
+def new_plane_id(name: str = "plane") -> str:
+    """Stable-for-the-process, globally-unique plane identity.  The name
+    prefix keeps logs readable; the token keeps two planes that picked the
+    same name (every test calls one "edge") distinct."""
+    return f"{name}-{os.getpid() % 0xFFFF:04x}{os.urandom(3).hex()}"
+
+
+class PlaneTopology:
+    """One plane's view of the federation graph: its own identity plus the
+    transitive reachable set of every child plane federated into it.
+
+    Thread-safe; owned by the :class:`~repro.core.orchestrator.Orchestrator`
+    and shared with the gateway (which serves it at ``/v1/topology``) and
+    with :class:`~repro.substrates.remote_plane.RemotePlaneAdapter` (which
+    checks cycles against it before registering a child).
+    """
+
+    def __init__(self, name: str = "plane", plane_id: Optional[str] = None):
+        self.name = name
+        self.plane_id = plane_id or new_plane_id(name)
+        self._children: Dict[str, FrozenSet[str]] = {}
+        self._lock = threading.Lock()
+
+    def set_name(self, name: str) -> None:
+        """Adopt a human-readable name (the gateway's ``plane=``) without
+        re-minting the identity."""
+        self.name = name
+
+    # -- federation graph -----------------------------------------------------
+    def reachable(self) -> FrozenSet[str]:
+        """Every plane id a task submitted here could be forwarded to:
+        this plane plus the transitive closure of its federated children."""
+        with self._lock:
+            out = {self.plane_id}
+            for child_set in self._children.values():
+                out |= child_set
+            return frozenset(out)
+
+    def add_child(self, child_plane_id: str,
+                  child_reachable: Iterable[str]) -> None:
+        """Record a federated child plane.  Refuses with
+        ``FEDERATION_CYCLE`` when this plane is already reachable *through*
+        the child — registering it would let a forwarded task come home."""
+        reach = frozenset(child_reachable) | {child_plane_id}
+        if self.plane_id in reach:
+            raise ControlPlaneError(
+                ErrorCode.FEDERATION_CYCLE,
+                f"federating plane {child_plane_id!r} into "
+                f"{self.plane_id!r} would create a cycle (this plane is "
+                f"reachable through it)",
+                {"plane_id": self.plane_id,
+                 "child_plane_id": child_plane_id,
+                 "child_reachable": sorted(reach)})
+        with self._lock:
+            self._children[child_plane_id] = reach
+
+    def remove_child(self, child_plane_id: str) -> None:
+        with self._lock:
+            self._children.pop(child_plane_id, None)
+
+    def children(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(sorted(self._children))
+
+    def to_dict(self) -> Dict:
+        return {"plane_id": self.plane_id, "name": self.name,
+                "children": list(self.children()),
+                "reachable": sorted(self.reachable())}
+
+
+# ---------------------------------------------------------------------------
+# multi-hop budgets
+
+
+def remaining_budget_ms(task: TaskRequest) -> Optional[float]:
+    """The task's remaining end-to-end deadline budget: the explicit
+    ``deadline_budget_ms`` once any hop has stamped one, else the client's
+    original latency budget (which SEEDS the hop budget at the first
+    forward), else None (unbounded)."""
+    if task.deadline_budget_ms is not None:
+        return task.deadline_budget_ms
+    return task.latency_budget_ms
+
+
+def budget_admissible(task: TaskRequest,
+                      margin_ms: float = HOP_WIRE_MARGIN_MS
+                      ) -> Tuple[bool, str]:
+    """May this task absorb ONE more federation hop?  Consulted by the
+    matcher for ``federated_plane`` candidates — refusing placement here is
+    what turns budget exhaustion into a structured ``DEADLINE`` rejection
+    instead of a remote-side timeout."""
+    if task.hop_budget is not None and task.hop_budget <= 0:
+        return False, "hop budget exhausted (0 hops remaining)"
+    budget = remaining_budget_ms(task)
+    if budget is not None and budget <= margin_ms:
+        return False, (f"deadline budget {budget:.1f}ms cannot absorb "
+                       f"another hop (wire margin {margin_ms:.1f}ms)")
+    return True, "ok"
+
+
+def forward_task(task: TaskRequest, via_plane_id: str,
+                 margin_ms: float = HOP_WIRE_MARGIN_MS,
+                 default_hop_budget: int = DEFAULT_HOP_BUDGET) -> TaskRequest:
+    """The wire form of one federation hop: decrement the hop budget
+    (stamping the default on a task that never carried one), subtract the
+    wire margin from the remaining deadline budget, and append the
+    forwarding plane to the route.
+
+    Raises ``DEADLINE`` when either budget is exhausted — callers normally
+    never see this (the matcher refuses placement first via
+    :func:`budget_admissible`); it is the defense line for directed tasks
+    that bypass ranking.
+    """
+    ok, why = budget_admissible(task, margin_ms)
+    if not ok:
+        raise ControlPlaneError(
+            ErrorCode.DEADLINE,
+            f"cannot forward task {task.task_id}: {why}",
+            {"task_id": task.task_id, "route": list(task.route),
+             "via": via_plane_id})
+    hops = (task.hop_budget if task.hop_budget is not None
+            else default_hop_budget)
+    budget = remaining_budget_ms(task)
+    return task.clone(
+        hop_budget=hops - 1,
+        deadline_budget_ms=(budget - margin_ms if budget is not None
+                            else None),
+        route=task.route + (via_plane_id,))

@@ -14,3 +14,6 @@ from repro.gateway.protocol import (PROTOCOL_VERSION, ProtocolError,  # noqa: F4
 from repro.gateway.server import (ControlPlaneGateway,  # noqa: F401
                                   TelemetryCursorLog)
 from repro.gateway.client import ControlPlaneClient, GatewayError  # noqa: F401
+from repro.gateway.stream import (SEVERITIES, StreamClosed,  # noqa: F401
+                                  StreamFilter, TelemetryStream,
+                                  event_severity)

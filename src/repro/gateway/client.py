@@ -10,15 +10,25 @@ ports to a remote plane by swapping the object it calls.
 Failures raise :class:`GatewayError` carrying the structured taxonomy code
 plus the server's detail (full trace, twin ``invalidation_reason``), never
 a bare HTTP error.
+
+Backpressure: ``QUEUE_SATURATED`` rejections carry the plane's live
+``retry_after_s`` hint; :meth:`ControlPlaneClient.invoke` honors it with
+jittered backoff (bounded by the task's own deadline budget) instead of
+hammering a saturated plane.  Auth: construct with ``api_key=`` to send
+``Authorization: Bearer`` on every request (keyed gateways refuse
+credential-less planes with ``UNAUTHORIZED``).  Streaming:
+:meth:`ControlPlaneClient.stream` opens one server-push subscription
+(``/v1/stream``) that replaces a whole polling-cursor loop.
 """
 from __future__ import annotations
 
 import http.client
+import random
 import socket
 import threading
 import time
 import urllib.parse
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.descriptors import ResourceDescriptor
 from repro.core.errors import ControlPlaneError, ErrorCode
@@ -26,6 +36,7 @@ from repro.core.invocation import InvocationResult
 from repro.core.orchestrator import OrchestrationTrace
 from repro.core.tasks import TaskRequest
 from repro.gateway import protocol as wire
+from repro.gateway.stream import StreamFilter, TelemetryStream
 
 
 class GatewayError(ControlPlaneError):
@@ -46,12 +57,14 @@ class GatewayError(ControlPlaneError):
 class ControlPlaneClient:
     """One remote control plane, addressed by gateway URL."""
 
-    def __init__(self, url: str, timeout_s: float = 30.0):
+    def __init__(self, url: str, timeout_s: float = 30.0,
+                 api_key: Optional[str] = None):
         self.url = url.rstrip("/")
         parsed = urllib.parse.urlparse(self.url)
         self._host = parsed.hostname or "127.0.0.1"
         self._port = parsed.port or 80
         self.timeout_s = timeout_s
+        self.api_key = api_key
         # persistent keep-alive connection per calling thread: control-plane
         # messages are small, so connection setup would dominate the wire
         # control path (http.client connections are not thread-safe)
@@ -80,7 +93,7 @@ class ControlPlaneClient:
               envelope: Optional[Dict] = None,
               timeout_s: Optional[float] = None) -> Dict:
         data = wire.dumps(envelope) if envelope is not None else None
-        headers = {"Content-Type": "application/json"}
+        headers = self._headers()
         payload = None
         # one retry on a STALE keep-alive connection (the server idle-closed
         # between calls), but only when a re-send cannot double-execute:
@@ -115,6 +128,12 @@ class ControlPlaneClient:
         except ControlPlaneError as e:
             raise GatewayError(e.code, e.message, e.detail) from None
 
+    def _headers(self) -> Dict[str, str]:
+        headers = {"Content-Type": "application/json"}
+        if self.api_key is not None:
+            headers["Authorization"] = f"Bearer {self.api_key}"
+        return headers
+
     @staticmethod
     def _qs(params: Dict) -> str:
         q = {k: v for k, v in params.items() if v is not None}
@@ -123,6 +142,12 @@ class ControlPlaneClient:
     # -- read surface ---------------------------------------------------------
     def health(self) -> Dict:
         return self._call("GET", "/v1/health")
+
+    def topology(self) -> Dict:
+        """Plane identity + federation reachability: ``{plane, plane_id,
+        children, reachable, registry_epoch, resources}``.  Federation uses
+        this for cycle detection before registering a child plane."""
+        return self._call("GET", "/v1/topology")
 
     def discover(self, **filters) -> List[ResourceDescriptor]:
         body = self._call("GET", f"/v1/discover{self._qs(filters)}")
@@ -146,24 +171,110 @@ class ControlPlaneClient:
         return self._call("GET", f"/v1/telemetry{qs}",
                           timeout_s=self.timeout_s + timeout_s)
 
+    def stream(self, cursor: Optional[int] = None,
+               resources: Optional[Iterable[str]] = None,
+               kinds: Optional[Iterable[str]] = None,
+               min_severity: str = "debug",
+               heartbeat_s: float = 10.0,
+               max_s: Optional[float] = None,
+               include_control: bool = False) -> TelemetryStream:
+        """Open ONE server-push telemetry subscription (``/v1/stream``) —
+        the streaming replacement for a :meth:`telemetry` polling loop.
+
+        Returns a :class:`~repro.gateway.stream.TelemetryStream` iterator
+        of event dicts; events carry the same ``seq`` as the cursor
+        endpoint, so zero-loss delivery is auditable and a broken stream
+        resumes from ``stream.cursor``.  ``cursor=None`` (default) follows
+        only NEW events; pass an explicit cursor to backfill from the ring.
+
+        The subscription holds a dedicated connection (the per-thread
+        keep-alive pool is never blocked by it).  The socket read timeout
+        is tied to the heartbeat interval, so a silently-dead plane
+        surfaces as a broken stream within ~3 heartbeats.
+        """
+        filt = StreamFilter(
+            resources=frozenset(resources) if resources else None,
+            kinds=frozenset(kinds) if kinds else None,
+            min_severity=min_severity)
+        params: Dict = dict(filt.to_query())
+        if cursor is not None:
+            params["cursor"] = cursor
+        params["heartbeat_s"] = heartbeat_s
+        if max_s is not None:
+            params["max_s"] = max_s
+        conn = http.client.HTTPConnection(
+            self._host, self._port, timeout=max(heartbeat_s * 3.0, 5.0))
+        try:
+            conn.request("GET", f"/v1/stream{self._qs(params)}",
+                         headers=self._headers())
+            resp = conn.getresponse()
+            if resp.status != 200:
+                payload = wire.loads(resp.read())
+                conn.close()
+                wire.parse_response(payload)   # raises the transported error
+                raise GatewayError(ErrorCode.INTERNAL,
+                                   f"stream refused with HTTP {resp.status}")
+        except (http.client.HTTPException, ConnectionError, socket.timeout,
+                TimeoutError, OSError) as e:
+            conn.close()
+            raise GatewayError(
+                ErrorCode.PLANE_UNAVAILABLE,
+                f"control plane at {self.url} unreachable: {e!r}") from e
+        except ControlPlaneError as e:
+            raise GatewayError(e.code, e.message, e.detail) from None
+        return TelemetryStream(conn, resp, include_control=include_control)
+
     # -- execution ------------------------------------------------------------
     @staticmethod
     def _outcome(body: Dict) -> Tuple[InvocationResult, OrchestrationTrace]:
         return (wire.result_from_wire(body["result"]),
                 wire.trace_from_wire(body["trace"]))
 
+    #: saturation retries before giving up (per invoke call)
+    BACKPRESSURE_RETRIES = 2
+
     def invoke(self, task: TaskRequest,
-               deadline_s: Optional[float] = None
+               deadline_s: Optional[float] = None,
+               backpressure_retries: Optional[int] = None
                ) -> Tuple[InvocationResult, OrchestrationTrace]:
         """Synchronous remote execution; same contract as
         ``Orchestrator.submit`` (rejections raise :class:`GatewayError`
-        with the taxonomy code + trace instead of returning)."""
+        with the taxonomy code + trace instead of returning).
+
+        ``QUEUE_SATURATED`` rejections carrying the plane's
+        ``retry_after_s`` hint are retried with jittered backoff — a
+        saturated rejection means the task never ran, so a re-send cannot
+        double-execute.  Retries stop when the hint would overrun the
+        task's own deadline budget (``deadline_s``, else the task's
+        latency budget), so backoff never turns a saturation error into a
+        silent deadline miss.  ``backpressure_retries=0`` disables."""
         envelope = wire.request_envelope(
             "invoke", {"task": wire.task_to_wire(task),
                        "deadline_s": deadline_s})
         timeout = self.timeout_s + (deadline_s or 0.0)
-        return self._outcome(
-            self._call("POST", "/v1/invoke", envelope, timeout_s=timeout))
+        retries = (self.BACKPRESSURE_RETRIES if backpressure_retries is None
+                   else backpressure_retries)
+        budget_s = deadline_s if deadline_s is not None else (
+            task.latency_budget_ms / 1e3
+            if task.latency_budget_ms is not None else None)
+        give_up_at = (time.monotonic() + budget_s) if budget_s is not None \
+            else None
+        attempt = 0
+        while True:
+            try:
+                return self._outcome(self._call("POST", "/v1/invoke",
+                                                envelope, timeout_s=timeout))
+            except GatewayError as e:
+                hint = e.detail.get("retry_after_s")
+                if (e.code is not ErrorCode.QUEUE_SATURATED or hint is None
+                        or attempt >= retries):
+                    raise
+                delay = float(hint) * (0.5 + random.random())  # 0.5x–1.5x
+                if give_up_at is not None \
+                        and time.monotonic() + delay > give_up_at:
+                    raise              # honoring the hint would blow budget
+                attempt += 1
+                time.sleep(delay)
 
     def submit(self, task: TaskRequest,
                deadline_s: Optional[float] = None) -> str:

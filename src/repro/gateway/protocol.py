@@ -39,8 +39,13 @@ from repro.core.orchestrator import OrchestrationTrace
 from repro.core.tasks import TaskRequest
 from repro.core.telemetry import RuntimeSnapshot
 
-#: current protocol version (MAJOR.MINOR); see module docstring for policy
-PROTOCOL_VERSION = "1.0"
+#: current protocol version (MAJOR.MINOR); see module docstring for policy.
+#: 1.1 (MINOR, additive): ``plane_id`` on envelopes, multi-hop task budget
+#: fields (``hop_budget``/``deadline_budget_ms``/``route``), the
+#: ``/v1/stream`` + ``/v1/topology`` endpoints, ``retry_after_s`` backoff
+#: hints on QUEUE_SATURATED errors, and per-event ``severity`` — 1.0 peers
+#: ignore all of it and keep working.
+PROTOCOL_VERSION = "1.1"
 #: majors this implementation can parse
 SUPPORTED_MAJORS = ("1",)
 
@@ -64,18 +69,30 @@ def check_version(version: Optional[str]) -> None:
 # envelopes
 
 
-def request_envelope(kind: str, body: Dict) -> Dict:
-    return {"protocol_version": PROTOCOL_VERSION, "kind": kind, "body": body}
+def request_envelope(kind: str, body: Dict,
+                     plane_id: Optional[str] = None) -> Dict:
+    env = {"protocol_version": PROTOCOL_VERSION, "kind": kind, "body": body}
+    if plane_id is not None:
+        env["plane_id"] = plane_id
+    return env
 
 
-def ok_envelope(kind: str, body: Dict) -> Dict:
-    return {"protocol_version": PROTOCOL_VERSION, "kind": kind, "ok": True,
-            "body": body}
+def ok_envelope(kind: str, body: Dict,
+                plane_id: Optional[str] = None) -> Dict:
+    env = {"protocol_version": PROTOCOL_VERSION, "kind": kind, "ok": True,
+           "body": body}
+    if plane_id is not None:
+        env["plane_id"] = plane_id
+    return env
 
 
-def error_envelope(kind: str, error: WireError) -> Dict:
-    return {"protocol_version": PROTOCOL_VERSION, "kind": kind, "ok": False,
-            "error": error.to_wire()}
+def error_envelope(kind: str, error: WireError,
+                   plane_id: Optional[str] = None) -> Dict:
+    env = {"protocol_version": PROTOCOL_VERSION, "kind": kind, "ok": False,
+           "error": error.to_wire()}
+    if plane_id is not None:
+        env["plane_id"] = plane_id
+    return env
 
 
 def parse_request(envelope: Dict, expect_kind: Optional[str] = None) -> Dict:
@@ -216,6 +233,8 @@ HTTP_STATUS: Dict[ErrorCode, int] = {
     ErrorCode.NOT_FOUND: 404,
     ErrorCode.BAD_REQUEST: 400,
     ErrorCode.PLANE_UNAVAILABLE: 503,
+    ErrorCode.FEDERATION_CYCLE: 409,
+    ErrorCode.UNAUTHORIZED: 401,
     ErrorCode.INTERNAL: 500,
 }
 

@@ -20,11 +20,24 @@ POST      /v1/submit              async submit → ticket (scheduler future)
 POST      /v1/submit_many         batched async submit → tickets
 GET       /v1/poll/<ticket>       poll/await an async ticket
 GET       /v1/telemetry           long-poll cursor over the TelemetryBus
+GET       /v1/stream              server-push telemetry subscription
+                                  (chunked ndjson, per-subscription filters
+                                  — see ``repro.gateway.stream``)
+GET       /v1/topology            plane identity + federation reachability
 ========  ======================  =============================================
 
 Rejections travel as structured :class:`~repro.core.errors.WireError`
 envelopes (taxonomy code + prose + full trace in ``detail``), never as bare
-strings — see ``repro.gateway.protocol``.
+strings — see ``repro.gateway.protocol``.  ``QUEUE_SATURATED`` rejections
+additionally carry a ``retry_after_s`` backoff hint derived from live
+scheduler stats, so remote clients back off informed instead of hammering.
+
+Wire auth (optional): constructing the gateway with ``api_keys={key:
+tenant}`` requires every request to carry ``Authorization: Bearer <key>``;
+unknown or missing credentials get a structured ``UNAUTHORIZED`` envelope,
+and the authenticated tenant OVERRIDES the task's wire ``tenant`` field —
+policy's ``authorized_tenants`` then constrains what each plane credential
+may touch, instead of trusting whatever tenant the client typed.
 """
 from __future__ import annotations
 
@@ -43,6 +56,7 @@ from repro.core.orchestrator import Orchestrator
 from repro.core.scheduler import ControlPlaneScheduler, SchedulerClosed
 from repro.core.telemetry import TelemetryEvent
 from repro.gateway import protocol as wire
+from repro.gateway import stream as streaming
 
 _ticket_ids = itertools.count(1)
 
@@ -56,7 +70,13 @@ class TelemetryCursorLog:
     response carries ``next_cursor``, so a client resumes exactly where it
     left off (missed events are only possible after falling more than
     ``capacity`` events behind, which the response makes visible via
-    ``dropped``)."""
+    ``dropped``).
+
+    The ring bounds gateway memory whatever a poller does: a slow or dead
+    subscriber costs at most ``capacity`` retained entries, never unbounded
+    growth.  Lifetime evictions are counted (``dropped_events`` in every
+    response), so a client can tell "nothing happened" apart from "events
+    existed but aged out of the ring before anyone read them"."""
 
     def __init__(self, bus, capacity: int = 4096):
         self.capacity = capacity
@@ -65,6 +85,7 @@ class TelemetryCursorLog:
         # list would re-copy capacity entries on every event once full)
         self._events: "deque[Tuple[int, Dict]]" = deque(maxlen=capacity)
         self._next_seq = 1
+        self._dropped_events = 0        # lifetime ring evictions
         self._closed = False
         self._cond = threading.Condition()
         bus.subscribe(self._on_event)
@@ -79,23 +100,43 @@ class TelemetryCursorLog:
 
     def _on_event(self, ev: TelemetryEvent) -> None:
         entry = {"resource_id": ev.resource_id, "kind": ev.kind,
-                 "fields": dict(ev.fields), "timestamp": ev.timestamp}
+                 "fields": dict(ev.fields), "timestamp": ev.timestamp,
+                 "severity": streaming.event_severity(ev.kind, ev.fields)}
         with self._cond:
             if self._closed:
                 return
             entry["seq"] = self._next_seq
+            if len(self._events) == self.capacity:
+                self._dropped_events += 1      # deque evicts on append
             self._events.append((self._next_seq, entry))
             self._next_seq += 1
             self._cond.notify_all()
 
+    @property
+    def closed(self) -> bool:
+        with self._cond:
+            return self._closed
+
+    def tail(self) -> int:
+        """Seq of the newest event (a subscription starting here sees only
+        what happens next)."""
+        with self._cond:
+            return self._next_seq - 1
+
+    def dropped_events(self) -> int:
+        with self._cond:
+            return self._dropped_events
+
     def read(self, cursor: int, timeout_s: float = 0.0, limit: int = 256,
-             resource: Optional[str] = None) -> Dict:
-        """Events with seq > cursor (optionally filtered by resource);
-        blocks up to ``timeout_s`` when none MATCH yet (long-poll).
-        Filtered-out events are consumed silently — they advance the
-        returned cursor but never cut the wait short, so a filtered
-        long-poll on a busy plane stays a long-poll instead of degenerating
-        into a tight request loop."""
+             resource: Optional[str] = None,
+             match: Optional["streaming.EntryPredicate"] = None) -> Dict:
+        """Events with seq > cursor (optionally filtered by resource and/or
+        an entry predicate — stream subscriptions pass their
+        :class:`~repro.gateway.stream.StreamFilter` here); blocks up to
+        ``timeout_s`` when none MATCH yet (long-poll).  Filtered-out events
+        are consumed silently — they advance the returned cursor but never
+        cut the wait short, so a filtered long-poll on a busy plane stays a
+        long-poll instead of degenerating into a tight request loop."""
         deadline = time.monotonic() + max(0.0, timeout_s)
         with self._cond:
             while True:
@@ -104,7 +145,8 @@ class TelemetryCursorLog:
                     dropped = self._events[0][0] - cursor - 1
                 newer = [e for seq, e in self._events if seq > cursor
                          and (resource is None
-                              or e["resource_id"] == resource)]
+                              or e["resource_id"] == resource)
+                         and (match is None or match(e))]
                 if newer:
                     batch = newer[:limit]
                     tail = self._next_seq - 1
@@ -117,6 +159,8 @@ class TelemetryCursorLog:
                                         < len(newer) else max(batch[-1]["seq"],
                                                               tail)),
                         "dropped": dropped,
+                        "dropped_events": self._dropped_events,
+                        "closed": self._closed,
                     }
                 # nothing matches: everything past the cursor (if anything)
                 # was filtered out — consume it and keep waiting
@@ -124,7 +168,9 @@ class TelemetryCursorLog:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0 or self._closed:
                     return {"events": [], "next_cursor": cursor,
-                            "dropped": dropped}
+                            "dropped": dropped,
+                            "dropped_events": self._dropped_events,
+                            "closed": self._closed}
                 self._cond.wait(timeout=remaining)
 
 
@@ -151,10 +197,13 @@ class _Handler(BaseHTTPRequestHandler):
         self.wfile.write(body)
 
     def _send_ok(self, kind: str, body: Dict) -> None:
-        self._send(200, wire.ok_envelope(kind, body))
+        self._send(200, wire.ok_envelope(kind, body,
+                                         plane_id=self.gateway.plane_id))
 
     def _send_error(self, kind: str, err: WireError) -> None:
-        self._send(wire.http_status(err.code), wire.error_envelope(kind, err))
+        self._send(wire.http_status(err.code),
+                   wire.error_envelope(kind, err,
+                                       plane_id=self.gateway.plane_id))
 
     def _read_body(self, expect_kind: str) -> Dict:
         length = int(self.headers.get("Content-Length", 0))
@@ -163,6 +212,9 @@ class _Handler(BaseHTTPRequestHandler):
 
     def _dispatch(self, kind: str, fn) -> None:
         try:
+            # wire auth runs before ANY route logic; the mapped tenant (or
+            # None on an open gateway) is what task submission trusts
+            self.tenant = self.gateway.authenticate(self.headers)
             fn()
         except ControlPlaneError as e:
             self._send_error(kind, WireError(e.code, e.message, e.detail))
@@ -173,6 +225,22 @@ class _Handler(BaseHTTPRequestHandler):
 
     def log_message(self, *args):  # quiet
         pass
+
+    def handle_one_request(self):
+        # severed keep-alive/stream connections (gateway stop, subscriber
+        # gone) must not traceback out of the handler thread on the
+        # response flush
+        try:
+            super().handle_one_request()
+        except (BrokenPipeError, ConnectionResetError):
+            self.close_connection = True
+
+    def finish(self):
+        # ... nor on the final buffer close
+        try:
+            super().finish()
+        except (BrokenPipeError, ConnectionResetError, OSError):
+            pass
 
     # -- routing --------------------------------------------------------------
     def do_GET(self):
@@ -203,6 +271,11 @@ class _Handler(BaseHTTPRequestHandler):
         elif route == "telemetry":
             self._dispatch("telemetry", lambda: self._send_ok(
                 "telemetry", gw.telemetry_body(q)))
+        elif route == "stream":
+            self._dispatch("stream", lambda: gw.stream_into(self, q))
+        elif route == "topology":
+            self._dispatch("topology", lambda: self._send_ok(
+                "topology", gw.topology_body()))
         else:
             self._send_error("error", WireError(
                 ErrorCode.NOT_FOUND, f"unknown route {self.path!r}"))
@@ -213,14 +286,16 @@ class _Handler(BaseHTTPRequestHandler):
         gw = self.gateway
         if route == "invoke":
             self._dispatch("invoke", lambda: gw.invoke_into(
-                self, self._read_body("invoke")))
+                self, self._read_body("invoke"), tenant=self.tenant))
         elif route == "submit":
             self._dispatch("submit", lambda: self._send_ok(
-                "submit", gw.submit_body(self._read_body("submit"))))
+                "submit", gw.submit_body(self._read_body("submit"),
+                                         tenant=self.tenant)))
         elif route == "submit_many":
             self._dispatch("submit_many", lambda: self._send_ok(
                 "submit_many",
-                gw.submit_many_body(self._read_body("submit_many"))))
+                gw.submit_many_body(self._read_body("submit_many"),
+                                    tenant=self.tenant)))
         else:
             self._send_error("error", WireError(
                 ErrorCode.NOT_FOUND, f"unknown route {self.path!r}"))
@@ -280,13 +355,21 @@ class ControlPlaneGateway:
 
     def __init__(self, orchestrator: Orchestrator, port: int = 0,
                  plane: str = "plane", workers: int = 8,
-                 scheduler: Optional[ControlPlaneScheduler] = None):
+                 scheduler: Optional[ControlPlaneScheduler] = None,
+                 api_keys: Optional[Dict[str, str]] = None,
+                 telemetry_capacity: int = 4096):
         self.orchestrator = orchestrator
         self.plane = plane
+        # the gateway names the plane; the orchestrator owns its identity
+        self.topology = orchestrator.topology
+        self.topology.set_name(plane)
+        #: optional wire auth: api key -> tenant it authenticates as
+        self.api_keys = dict(api_keys) if api_keys else None
         self._owns_scheduler = scheduler is None
         self.scheduler = scheduler or ControlPlaneScheduler(
             orchestrator, workers=workers)
-        self.telemetry_log = TelemetryCursorLog(orchestrator.bus)
+        self.telemetry_log = TelemetryCursorLog(orchestrator.bus,
+                                                capacity=telemetry_capacity)
         self._tickets: Dict[str, Future] = {}
         self._tickets_lock = threading.Lock()
         self._started_at = time.time()
@@ -313,6 +396,29 @@ class ControlPlaneGateway:
     @property
     def url(self) -> str:
         return f"http://127.0.0.1:{self.port}"
+
+    @property
+    def plane_id(self) -> str:
+        return self.topology.plane_id
+
+    # -- wire auth ------------------------------------------------------------
+    def authenticate(self, headers) -> Optional[str]:
+        """Map the request's Bearer credential onto its tenant.  Open
+        gateway (no ``api_keys``): returns None, wire ``tenant`` field is
+        trusted as before.  Keyed gateway: missing/unknown credentials are
+        a structured ``UNAUTHORIZED`` refusal."""
+        if not self.api_keys:
+            return None
+        auth = headers.get("Authorization", "") or ""
+        if auth.startswith("Bearer "):
+            tenant = self.api_keys.get(auth[len("Bearer "):].strip())
+            if tenant is not None:
+                return tenant
+        raise ControlPlaneError(
+            ErrorCode.UNAUTHORIZED,
+            "missing or unknown plane credentials "
+            "(this gateway requires 'Authorization: Bearer <api-key>')",
+            {"plane": self.plane})
 
     # -- endpoint bodies ------------------------------------------------------
     def health_body(self) -> Dict:
@@ -384,41 +490,150 @@ class ControlPlaneGateway:
         cursor = self._q_num(q, "cursor", 0, int)
         timeout_s = min(self._q_num(q, "timeout_s", 0.0, float), 30.0)
         limit = max(1, min(self._q_num(q, "limit", 256, int), 1024))
-        return self.telemetry_log.read(cursor, timeout_s=timeout_s,
-                                       limit=limit,
-                                       resource=q.get("resource"))
+        try:
+            filt = streaming.StreamFilter.from_query(q)
+        except ValueError as e:
+            raise wire.ProtocolError(str(e))
+        body = self.telemetry_log.read(
+            cursor, timeout_s=timeout_s, limit=limit,
+            resource=q.get("resource"), match=filt.matches)
+        body.pop("closed", None)      # stream-loop detail, not wire surface
+        return body
+
+    def topology_body(self) -> Dict:
+        body = self.topology.to_dict()
+        body["plane"] = self.plane
+        body["registry_epoch"] = self.orchestrator.registry.epoch
+        body["resources"] = len(self.orchestrator.registry.all())
+        return body
+
+    # -- streaming subscriptions ----------------------------------------------
+    #: heartbeat interval bounds (s): floor keeps idle subscriptions cheap,
+    #: ceiling bounds how long a silently-dead plane can look alive
+    MIN_HEARTBEAT_S, MAX_HEARTBEAT_S = 0.2, 30.0
+
+    def stream_into(self, handler: _Handler, q: Dict[str, str]) -> None:
+        """One server-push subscription: chunked ndjson over the open
+        response.  Events come from the same sequence-numbered ring the
+        cursor endpoint reads, so seq-gaplessness (zero lost events) and
+        resume-by-cursor hold across both transports.  The loop runs until
+        the client disconnects, the gateway stops, or ``max_s`` lapses."""
+        try:
+            filt = streaming.StreamFilter.from_query(q)
+        except ValueError as e:
+            raise wire.ProtocolError(str(e))
+        cursor = self._q_num(q, "cursor", self.telemetry_log.tail(), int)
+        heartbeat_s = min(max(self._q_num(q, "heartbeat_s", 10.0, float),
+                              self.MIN_HEARTBEAT_S), self.MAX_HEARTBEAT_S)
+        max_s = self._q_num(q, "max_s", 0.0, float)
+        deadline = (time.monotonic() + max_s) if max_s > 0 else None
+        # a streamed connection never goes back into keep-alive rotation:
+        # if the loop exits abnormally the framing state is undefined
+        handler.close_connection = True
+        handler.send_response(200)
+        handler.send_header("Content-Type", "application/x-ndjson")
+        handler.send_header("Cache-Control", "no-cache")
+        handler.send_header("Transfer-Encoding", "chunked")
+        handler.end_headers()
+        w = handler.wfile
+        try:
+            streaming.write_chunk(w, streaming.control_line(
+                "hello", plane_id=self.plane_id, plane=self.plane,
+                cursor=cursor, protocol_version=wire.PROTOCOL_VERSION,
+                registry_epoch=self.orchestrator.registry.epoch))
+            if cursor == 0:
+                # change-feed baseline: a from-the-beginning subscriber gets
+                # the CURRENT fleet — synthetic register events plus each
+                # member's stored health snapshot (seq 0 — they are state,
+                # not history; the ring cannot serve this because resources
+                # typically register before any gateway exists).  Baseline +
+                # live updates = a consistent feed with no re-fetch.
+                epoch = self.orchestrator.registry.epoch
+                for desc in self.orchestrator.registry.all():
+                    entry = {"resource_id": desc.resource_id,
+                             "kind": "registry", "seq": 0,
+                             "timestamp": time.time(), "severity": "info",
+                             "fields": {"action": "register", "epoch": epoch,
+                                        "plane_id": self.plane_id,
+                                        "descriptor": desc.to_dict(),
+                                        "baseline": True}}
+                    if filt.matches(entry):
+                        streaming.write_chunk(w, streaming.event_line(entry))
+                    snap = self.orchestrator.bus.snapshot(desc.resource_id)
+                    if snap is None:
+                        continue
+                    fields = dict(snap.to_dict(), baseline=True)
+                    entry = {"resource_id": desc.resource_id,
+                             "kind": "health", "seq": 0,
+                             "timestamp": time.time(),
+                             "severity": streaming.event_severity("health",
+                                                                  fields),
+                             "fields": fields}
+                    if filt.matches(entry):
+                        streaming.write_chunk(w, streaming.event_line(entry))
+            while True:
+                timeout = heartbeat_s
+                if deadline is not None:
+                    timeout = min(timeout, max(0.0,
+                                               deadline - time.monotonic()))
+                out = self.telemetry_log.read(
+                    cursor, timeout_s=timeout, limit=256, match=filt.matches)
+                cursor = out["next_cursor"]
+                for entry in out["events"]:
+                    streaming.write_chunk(w, streaming.event_line(entry))
+                if out["closed"] or (deadline is not None
+                                     and time.monotonic() >= deadline):
+                    streaming.write_chunk(w, streaming.control_line(
+                        "end", cursor=cursor,
+                        dropped_events=out["dropped_events"]))
+                    streaming.end_chunks(w)
+                    return
+                if not out["events"]:
+                    streaming.write_chunk(w, streaming.control_line(
+                        "heartbeat", cursor=cursor,
+                        dropped_events=out["dropped_events"]))
+        except (BrokenPipeError, ConnectionResetError, OSError):
+            pass                       # subscriber went away; nothing to do
 
     # -- execution ------------------------------------------------------------
     #: resolved tickets retained for polling before eviction (FIFO)
     MAX_TICKETS = 1024
 
-    def _submit(self, body: Dict) -> Future:
+    def _submit(self, body: Dict, tenant: Optional[str] = None) -> Future:
         try:
             task = wire.task_from_wire(body.get("task") or {})
         except (TypeError, ValueError, KeyError) as e:
             # a task body the dataclass refuses is the CLIENT's error, not a
             # retryable server fault
             raise wire.ProtocolError(f"malformed task body: {e!r}")
+        if tenant is not None and task.tenant != tenant:
+            # authenticated identity beats whatever tenant the wire claimed
+            task = task.clone(tenant=tenant)
         deadline_s = body.get("deadline_s")
         try:
             return self.scheduler.submit_async(task, deadline_s=deadline_s)
         except SchedulerClosed as e:
             raise ControlPlaneError(ErrorCode.PLANE_UNAVAILABLE, str(e))
 
-    @staticmethod
-    def _respond_outcome(handler: _Handler, kind: str, result, trace) -> None:
+    def _respond_outcome(self, handler: _Handler, kind: str,
+                         result, trace) -> None:
         """Completed results ride an ok envelope; anything else becomes the
-        structured error envelope carrying code + trace."""
+        structured error envelope carrying code + trace (saturation errors
+        additionally carry the live ``retry_after_s`` backoff hint)."""
         if result.status == "completed":
             handler._send_ok(kind, {
                 "result": wire.result_to_wire(result),
                 "trace": wire.trace_to_wire(trace),
             })
         else:
-            handler._send_error(kind, wire.rejection_to_error(result, trace))
+            err = wire.rejection_to_error(result, trace)
+            if err.code is ErrorCode.QUEUE_SATURATED:
+                err.detail["retry_after_s"] = self.scheduler.retry_after_s()
+            handler._send_error(kind, err)
 
-    def invoke_into(self, handler: _Handler, body: Dict) -> None:
-        result, trace = self._submit(body).result()
+    def invoke_into(self, handler: _Handler, body: Dict,
+                    tenant: Optional[str] = None) -> None:
+        result, trace = self._submit(body, tenant=tenant).result()
         self._respond_outcome(handler, "invoke", result, trace)
 
     def _store_ticket(self, fut: Future) -> str:
@@ -437,10 +652,12 @@ class ControlPlaneGateway:
                 del self._tickets[victim]
         return ticket
 
-    def submit_body(self, body: Dict) -> Dict:
-        return {"ticket": self._store_ticket(self._submit(body))}
+    def submit_body(self, body: Dict, tenant: Optional[str] = None) -> Dict:
+        return {"ticket": self._store_ticket(self._submit(body,
+                                                          tenant=tenant))}
 
-    def submit_many_body(self, body: Dict) -> Dict:
+    def submit_many_body(self, body: Dict,
+                         tenant: Optional[str] = None) -> Dict:
         tasks = body.get("tasks")
         if not isinstance(tasks, list):
             raise wire.ProtocolError("submit_many body needs a tasks list")
@@ -455,6 +672,9 @@ class ControlPlaneGateway:
             except (TypeError, ValueError, KeyError) as e:
                 raise wire.ProtocolError(
                     f"malformed task at index {i}: {e!r}")
+        if tenant is not None:
+            parsed = [t if t.tenant == tenant else t.clone(tenant=tenant)
+                      for t in parsed]
         tickets = []
         for task in parsed:
             try:

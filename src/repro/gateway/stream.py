@@ -1,0 +1,262 @@
+"""Streaming telemetry: server-push subscriptions over chunked HTTP.
+
+The long-poll cursor (``GET /v1/telemetry``) is correct but chatty: a
+parent plane following N children burns N polling cursors, each costing a
+request per poll round even when nothing happened.  ``GET /v1/stream``
+replaces that with ONE long-lived chunked-HTTP response per subscription:
+the gateway pushes newline-delimited JSON events (ndjson) as they happen,
+each carrying the same monotonically-increasing ``seq`` as the cursor log —
+so delivery is loss-auditable (gapless seq = zero lost events) and a broken
+stream resumes exactly where it stopped by passing the last seq back as
+``cursor``.
+
+Per-subscription filters select what crosses the wire:
+
+==============  =============================================================
+query param     semantics
+==============  =============================================================
+resources       comma-separated resource ids (default: all)
+kinds           comma-separated event kinds — result, health, lifecycle,
+                breaker, registry, drift, twin_shadow, twin_serve,
+                twin_speculation (default: all)
+min_severity    debug | info | warning | error (default: debug = everything)
+cursor          seq to resume after (default: now — only new events)
+heartbeat_s     idle heartbeat interval (bounded 0.2–30 s, default 10)
+==============  =============================================================
+
+Severity is derived per event (:func:`event_severity`): breaker openings
+and failed health snapshots are ``error``, degradations / drift / rejected
+results are ``warning``, routine results and registry changes are ``info``,
+lifecycle chatter is ``debug`` — so a cloud plane can follow a whole child
+fleet at ``min_severity=warning`` and receive almost nothing until
+something is actually wrong.
+
+Control lines (``{"stream": "hello" | "heartbeat" | "end", ...}``) frame
+the event flow: ``hello`` carries the plane identity and starting cursor,
+heartbeats prove liveness through idle stretches, ``end`` announces an
+orderly close (a vanished connection with no ``end`` means the plane died).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Dict, FrozenSet, Optional
+
+from repro.gateway.protocol import dumps as wire_dumps
+
+#: severity ladder, least to most severe
+SEVERITIES = ("debug", "info", "warning", "error")
+_RANK = {s: i for i, s in enumerate(SEVERITIES)}
+
+
+def severity_rank(severity: str) -> int:
+    """Rank of a severity label (unknown labels rank as ``info``)."""
+    return _RANK.get(severity, _RANK["info"])
+
+
+def event_severity(kind: str, fields: Dict) -> str:
+    """Derive one event's severity from its kind + payload.  Keep in sync
+    with the module-docstring table (it is the wire contract)."""
+    if kind == "lifecycle":
+        return "debug"
+    if kind == "breaker":
+        to = fields.get("to")
+        if to == "open":
+            return "error"
+        if to in ("degraded", "probation"):
+            return "warning"
+        return "info"
+    if kind == "health":
+        if (fields.get("health_status") == "failed"
+                or fields.get("readiness") == "down"):
+            return "error"
+        if fields.get("health_status") == "degraded":
+            return "warning"
+        return "info"
+    if kind == "drift":
+        return "warning"
+    if kind == "result":
+        return "info" if fields.get("status") == "completed" else "warning"
+    if kind == "twin_serve":
+        # a twin serving means real hardware was NOT: worth noticing
+        return "warning"
+    return "info"
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamFilter:
+    """Per-subscription event filter: resource ids, kinds, min severity.
+    ``None`` fields pass everything; an empty set would pass nothing and is
+    normalized to None at parse time."""
+
+    resources: Optional[FrozenSet[str]] = None
+    kinds: Optional[FrozenSet[str]] = None
+    min_severity: str = "debug"
+
+    def matches(self, entry: Dict) -> bool:
+        if self.resources is not None \
+                and entry.get("resource_id") not in self.resources:
+            return False
+        if self.kinds is not None and entry.get("kind") not in self.kinds:
+            return False
+        return severity_rank(entry.get("severity", "info")) \
+            >= _RANK[self.min_severity]
+
+    # -- wire forms -----------------------------------------------------------
+    @staticmethod
+    def _split(raw: Optional[str]) -> Optional[FrozenSet[str]]:
+        if not raw:
+            return None
+        vals = frozenset(v.strip() for v in raw.split(",") if v.strip())
+        return vals or None
+
+    @classmethod
+    def from_query(cls, q: Dict[str, str]) -> "StreamFilter":
+        sev = (q.get("min_severity") or "debug").strip().lower()
+        if sev not in _RANK:
+            raise ValueError(
+                f"min_severity must be one of {SEVERITIES}, got {sev!r}")
+        return cls(resources=cls._split(q.get("resources")),
+                   kinds=cls._split(q.get("kinds")),
+                   min_severity=sev)
+
+    def to_query(self) -> Dict[str, str]:
+        q: Dict[str, str] = {}
+        if self.resources is not None:
+            q["resources"] = ",".join(sorted(self.resources))
+        if self.kinds is not None:
+            q["kinds"] = ",".join(sorted(self.kinds))
+        if self.min_severity != "debug":
+            q["min_severity"] = self.min_severity
+        return q
+
+
+# ---------------------------------------------------------------------------
+# chunked-HTTP framing (server side)
+
+
+def write_chunk(wfile, payload: bytes) -> None:
+    """One HTTP/1.1 chunk, flushed immediately — a subscriber must see an
+    event the moment it is written, not when a buffer fills."""
+    wfile.write(f"{len(payload):X}\r\n".encode("ascii"))
+    wfile.write(payload)
+    wfile.write(b"\r\n")
+    wfile.flush()
+
+
+def end_chunks(wfile) -> None:
+    wfile.write(b"0\r\n\r\n")
+    wfile.flush()
+
+
+def control_line(kind: str, **fields) -> bytes:
+    return wire_dumps({"stream": kind, **fields}) + b"\n"
+
+
+def event_line(entry: Dict) -> bytes:
+    # protocol.dumps, not bare json.dumps: event fields may carry numpy
+    # scalars/arrays (result telemetry) that the wire encoder normalizes
+    return wire_dumps(entry) + b"\n"
+
+
+# ---------------------------------------------------------------------------
+# subscription reader (client side)
+
+
+class StreamClosed(Exception):
+    """The stream ended — orderly (``end`` control line seen) or not."""
+
+    def __init__(self, message: str, orderly: bool):
+        super().__init__(message)
+        self.orderly = orderly
+
+
+class TelemetryStream:
+    """Iterator over one ``/v1/stream`` subscription.
+
+    Yields event dicts (each carrying ``seq``, ``kind``, ``resource_id``,
+    ``fields``, ``severity``); heartbeats are consumed silently (they
+    update :attr:`cursor` so a resume never replays) unless
+    ``include_control=True``.  ``cursor`` always holds the resume point —
+    pass it to a new subscription after a disconnect and no event is lost
+    or duplicated (the gateway's ring is the only bound).
+
+    Context-manager friendly; :meth:`close` severs the connection (the
+    server handler notices on its next write).
+    """
+
+    def __init__(self, conn, response, include_control: bool = False):
+        self._conn = conn
+        self._resp = response
+        self.include_control = include_control
+        self.cursor: int = 0
+        self.plane_id: Optional[str] = None
+        self.closed = False
+        self.orderly_end = False
+
+    def __enter__(self) -> "TelemetryStream":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        if not self.closed:
+            self.closed = True
+            try:
+                self._conn.close()
+            except OSError:
+                pass
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Dict:
+        while True:
+            if self.closed:
+                raise StopIteration
+            try:
+                line = self._resp.readline()
+            except Exception as e:                         # noqa: BLE001
+                self.close()
+                raise StreamClosed(f"stream broken: {e!r}", orderly=False)
+            if not line:
+                self.close()
+                if self.orderly_end:
+                    raise StopIteration
+                raise StreamClosed("stream connection lost", orderly=False)
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError:
+                continue                  # torn line mid-close; skip
+            ctl = obj.get("stream")
+            if ctl is not None:
+                if "cursor" in obj:
+                    self.cursor = max(self.cursor, int(obj["cursor"]))
+                if "plane_id" in obj:
+                    self.plane_id = obj["plane_id"]
+                if ctl == "end":
+                    self.orderly_end = True
+                    self.close()
+                    raise StopIteration
+                if self.include_control:
+                    return obj
+                continue
+            self.cursor = max(self.cursor, int(obj.get("seq", 0)))
+            return obj
+
+    def events(self, limit: Optional[int] = None):
+        """Bounded convenience iterator: up to ``limit`` events."""
+        n = 0
+        for ev in self:
+            yield ev
+            n += 1
+            if limit is not None and n >= limit:
+                return
+
+
+#: type of the server-side per-entry filter hook the cursor log accepts
+EntryPredicate = Callable[[Dict], bool]

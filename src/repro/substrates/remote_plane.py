@@ -24,10 +24,32 @@ Tracing stays complete across the hop: the edge plane's own
 ``OrchestrationTrace`` (which resource it picked, its control overhead) is
 carried back verbatim in the invocation artifacts as ``remote_trace``, and
 the forwarded task KEEPS its task id — one task, one identity, two planes.
+
+Multi-hop (device → edge → fog → cloud): adapters CHAIN — a fog plane
+federates an edge plane which federates a device plane — under three
+topology-layer guarantees (``repro.core.topology``):
+
+- **cycle refusal** — ``federate()`` checks the child's transitive
+  reachable set (``GET /v1/topology``) against the parent's identity and
+  refuses with ``FEDERATION_CYCLE`` before registering;
+- **hop budgets** — every forward decrements ``task.hop_budget`` and
+  subtracts a wire margin from ``task.deadline_budget_ms``; the parent
+  matcher refuses to place a budget-exhausted task on a federated plane
+  (surfacing as a structured ``DEADLINE``), and the adapter re-checks as a
+  defense line for directed tasks;
+- **streaming follower** — ``attach()`` (called by ``federate``) starts
+  ONE server-push subscription (``/v1/stream``) per child plane replacing
+  the per-call health polling: member health snapshots feed a cached
+  aggregate, stream loss pushes a ``failed`` snapshot into the parent bus
+  (tripping the parent breaker immediately, no poll-interval lag), and
+  registry change-feed events re-aggregate the federated descriptor live —
+  fleet membership tracks without ever re-fetching ``discover()``.
 """
 from __future__ import annotations
 
 import dataclasses
+import random
+import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -36,14 +58,19 @@ from repro.core.descriptors import (CapabilityDescriptor, LifecycleSemantics,
                                     ResourceDescriptor, SignalSpec,
                                     TimingSemantics)
 from repro.core.errors import ControlPlaneError, ErrorCode
+from repro.core.invocation import InvocationError
 from repro.core.telemetry import RuntimeSnapshot
+from repro.core.topology import (HOP_WIRE_MARGIN_MS, forward_task,
+                                 remaining_budget_ms)
 from repro.core.twin import RecordReplaySurrogate, TwinState
 from repro.gateway.client import ControlPlaneClient
+from repro.gateway.stream import StreamClosed
 from repro.substrates.base import SubstrateAdapter
 
 #: wire round-trip margin added to the advertised expected latency so the
-#: parent matcher's T term accounts for the extra hop
-TRANSPORT_MARGIN_MS = 5.0
+#: parent matcher's T term accounts for the extra hop; equals the per-hop
+#: deadline-budget decrement so the matcher and the budget math agree
+TRANSPORT_MARGIN_MS = HOP_WIRE_MARGIN_MS
 
 _REGIME_ORDER = {"sub_ms": 0, "fast_ms": 1, "slow_seconds": 2}
 
@@ -69,8 +96,18 @@ class RemotePlaneAdapter(SubstrateAdapter):
                  plane: Optional[str] = None,
                  modality: Optional[Tuple[str, str]] = None,
                  fleet: Optional[List[ResourceDescriptor]] = None,
-                 invoke_deadline_s: float = DEFAULT_INVOKE_DEADLINE_S):
+                 invoke_deadline_s: float = DEFAULT_INVOKE_DEADLINE_S,
+                 topology: Optional[Dict] = None):
         super().__init__()
+        # -- streaming follower state (attach() starts it); initialized
+        # first because descriptor aggregation below reads under the lock
+        self._parent = None                    # parent Orchestrator
+        self._fleet_lock = threading.Lock()
+        self._member_snaps: Dict[str, Dict] = {}
+        self._stream_ok = False
+        self._stream_stop: Optional[threading.Event] = None
+        self._stream_thread: Optional[threading.Thread] = None
+        self._stream_connects = 0
         self.invoke_deadline_s = invoke_deadline_s
         self.client = (client_or_url
                        if isinstance(client_or_url, ControlPlaneClient)
@@ -82,6 +119,13 @@ class RemotePlaneAdapter(SubstrateAdapter):
             health = self.client.health()
             plane = plane or health.get("plane", "remote")
             fleet = fleet if fleet is not None else self.client.discover()
+        if topology is None:
+            topology = self.client.topology()
+        #: the child plane's identity + transitive reachable set (cycle
+        #: detection happens in federate(), against the parent's topology)
+        self.child_plane_id: str = topology["plane_id"]
+        self.child_reachable = frozenset(topology.get("reachable")
+                                         or (self.child_plane_id,))
         self.plane = plane
         self.resource_id = resource_id or f"plane-{self.plane}"
         self._remote_descs = list(fleet)
@@ -99,7 +143,9 @@ class RemotePlaneAdapter(SubstrateAdapter):
 
     # -- descriptor aggregation ----------------------------------------------
     def _profile(self) -> List[ResourceDescriptor]:
-        return [d for d in self._remote_descs
+        with self._fleet_lock:
+            descs = list(self._remote_descs)
+        return [d for d in descs
                 if (d.capability.input_signal.modality,
                     d.capability.output_signal.modality) == self.modality]
 
@@ -110,7 +156,9 @@ class RemotePlaneAdapter(SubstrateAdapter):
         profiles usually want ``federate_all`` (every profile) or an
         explicit ``modality=`` instead of this default."""
         counts: Dict[Tuple[str, str], int] = {}
-        for d in self._remote_descs:
+        with self._fleet_lock:
+            descs = list(self._remote_descs)
+        for d in descs:
             key = (d.capability.input_signal.modality,
                    d.capability.output_signal.modality)
             counts[key] = counts.get(key, 0) + 1
@@ -193,10 +241,21 @@ class RemotePlaneAdapter(SubstrateAdapter):
         # twin decisions stay with the parent (a silently twin-served
         # federated result would corrupt the parent's provenance accounting)
         task = session.task.clone(backend_preference=None, twin_mode=None)
+        # one federation hop: decrement the hop budget (stamping the
+        # default on first forward), subtract the wire margin from the
+        # remaining deadline budget, append this plane to the route.  The
+        # parent matcher normally refuses exhausted tasks before they get
+        # here; this is the defense line for directed placements.
+        via = (self._parent.topology.plane_id if self._parent is not None
+               else self.resource_id)
+        try:
+            task = forward_task(task, via, margin_ms=TRANSPORT_MARGIN_MS)
+        except ControlPlaneError as e:
+            raise InvocationError("invoke", e.message)
+        remaining_ms = remaining_budget_ms(task)
         t0 = time.perf_counter()
         result, remote_trace = self.client.invoke(
-            task, deadline_s=(task.latency_budget_ms / 1e3
-                              if task.latency_budget_ms
+            task, deadline_s=(remaining_ms / 1e3 if remaining_ms is not None
                               else self.invoke_deadline_s))
         rtt_ms = (time.perf_counter() - t0) * 1e3
         backend_ms = float(result.timing_ms.get("backend_ms", 0.0))
@@ -207,6 +266,10 @@ class RemotePlaneAdapter(SubstrateAdapter):
         telemetry.update({
             "remote_resource_id": result.resource_id,
             "remote_plane": self.plane,
+            # deeper hops know the FULL route (their forwarded task carries
+            # ours as a prefix); only stamp our own view when this was the
+            # final hop
+            "hop_route": telemetry.get("hop_route") or list(task.route),
             "remote_control_overhead_ms": round(
                 remote_trace.control_overhead_ms, 4),
             "transport_ms": round(self.last_transport_ms, 4),
@@ -229,35 +292,56 @@ class RemotePlaneAdapter(SubstrateAdapter):
 
     def reset(self, mode: str = "reconnect") -> None:
         """Re-arm after a breaker reopen.  Nothing to do on this side: the
-        client reconnects lazily on the next request, and the parent's
-        aggregate descriptor is fixed at federation time — tracking remote
-        fleet changes live is the ROADMAP "descriptor change feed" item,
-        and a refresh here would be invisible to the parent registry
-        anyway (it never re-reads ``descriptor()``)."""
+        client reconnects lazily on the next request, and the streaming
+        follower (if attached) reconnects on its own backoff schedule —
+        fleet changes arrive over the descriptor change feed, so no
+        re-fetch happens here either."""
+
+    def _aggregate(self, member_snaps: Dict[str, Dict]) -> RuntimeSnapshot:
+        """Fold member snapshots into the plane's aggregate.  The child's
+        own matcher routes around sick members, so the plane FAILS only
+        when every member has (one failed crossbar among healthy peers
+        degrades the plane, it does not quarantine it), serves at its
+        healthiest member's drift, and absorbs the summed backlog."""
+        statuses, drifts, depth = [], [], 0
+        for snap in member_snaps.values():
+            if not snap:
+                continue
+            statuses.append(snap.get("health_status", "healthy"))
+            drifts.append(float(snap.get("drift_score", 0.0)))
+            depth += int(snap.get("queue_depth", 0))
+        if statuses and all(s == "failed" for s in statuses):
+            health = "failed"
+        elif any(s != "healthy" for s in statuses):
+            health = "degraded"
+        else:
+            health = "healthy"
+        return RuntimeSnapshot(self.resource_id, health_status=health,
+                               drift_score=round(min(drifts, default=0.0), 4),
+                               queue_depth=depth,
+                               extra={"plane": self.plane,
+                                      "members": len(statuses)})
 
     def snapshot(self) -> Optional[RuntimeSnapshot]:
-        """Aggregate remote health: worst member status, max drift, summed
-        queue depth; an unreachable plane reports failed/down (which the
-        parent matcher treats as inadmissible even before the breaker
-        trips)."""
+        """Aggregate remote health.  With the streaming follower attached
+        this is WIRE-FREE: the cache is fed by pushed member snapshots, and
+        a broken stream reports failed/down (which the parent matcher
+        treats as inadmissible even before the breaker trips).  Unattached
+        adapters keep the one-shot HTTP aggregation."""
+        if self._stream_thread is not None:
+            with self._fleet_lock:
+                ok, snaps = self._stream_ok, dict(self._member_snaps)
+            if not ok:
+                return RuntimeSnapshot(self.resource_id,
+                                       health_status="failed",
+                                       readiness="down", drift_score=1.0)
+            return self._aggregate(snaps)
         try:
             health = self.client.health()
         except Exception:                                  # noqa: BLE001
             return RuntimeSnapshot(self.resource_id, health_status="failed",
                                    readiness="down", drift_score=1.0)
-        worst, drift, depth = "healthy", 0.0, 0
-        rank = {"healthy": 0, "degraded": 1, "failed": 2}
-        for snap in (health.get("resources") or {}).values():
-            if not snap:
-                continue
-            if rank.get(snap.get("health_status"), 0) > rank[worst]:
-                worst = snap["health_status"]
-            drift = max(drift, float(snap.get("drift_score", 0.0)))
-            depth += int(snap.get("queue_depth", 0))
-        return RuntimeSnapshot(self.resource_id, health_status=worst,
-                               drift_score=round(drift, 4),
-                               queue_depth=depth,
-                               extra={"plane": self.plane})
+        return self._aggregate(health.get("resources") or {})
 
     def make_twin(self) -> Optional[TwinState]:
         """Record/replay twin OF THE PLANE: learns from every forwarded
@@ -270,20 +354,168 @@ class RemotePlaneAdapter(SubstrateAdapter):
                                 "members": len(self._remote_descs)},
                          surrogate=RecordReplaySurrogate(capacity=64))
 
+    # -- streaming follower ---------------------------------------------------
+    #: reconnect backoff bounds (seconds); jittered so a fleet of parents
+    #: does not stampede a recovering child
+    STREAM_BACKOFF_MIN_S, STREAM_BACKOFF_MAX_S = 0.2, 2.0
+    #: follower heartbeat interval — bounds dead-plane detection latency
+    STREAM_HEARTBEAT_S = 1.0
+    #: ignore replayed health/breaker ring events older than this before
+    #: the (re)connect: history must not re-trip a recovered breaker
+    STREAM_STALE_S = 2.0
+
+    def attach(self, parent_orchestrator) -> "RemotePlaneAdapter":
+        """Wire this adapter into its parent plane: remember the parent
+        (route stamping, registry re-aggregation, bus access) and start the
+        streaming follower.  Called by :func:`federate`; idempotent."""
+        self._parent = parent_orchestrator
+        if self._stream_thread is None:
+            self._stream_stop = threading.Event()
+            self._stream_thread = threading.Thread(
+                target=self._follow, daemon=True,
+                name=f"phys-mcp-follow-{self.resource_id}")
+            self._stream_thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop the streaming follower (parent keeps whatever state it has
+        already learned)."""
+        if self._stream_stop is not None:
+            self._stream_stop.set()
+        thread, self._stream_thread = self._stream_thread, None
+        if thread is not None and thread is not threading.current_thread():
+            thread.join(timeout=5.0)
+
+    def _mark_down(self) -> None:
+        with self._fleet_lock:
+            self._stream_ok = False
+        if self._parent is not None:
+            # the failed snapshot is what trips the parent breaker the
+            # moment the stream breaks — no poll interval in the loop
+            self._parent.bus.update_snapshot(RuntimeSnapshot(
+                self.resource_id, health_status="failed", readiness="down",
+                drift_score=1.0, extra={"plane": self.plane,
+                                        "stream": "lost"}))
+
+    def _follow(self) -> None:
+        """Follower loop: one server-push subscription per child plane.
+        cursor=0 requests the synthetic registry baseline (current fleet),
+        then live events; health/breaker ring replays older than the
+        connect are discarded so history cannot re-trip a breaker."""
+        stop = self._stream_stop
+        backoff = self.STREAM_BACKOFF_MIN_S
+        while not stop.is_set():
+            stream = None
+            try:
+                stream = self.client.stream(
+                    cursor=0, kinds=("registry", "health", "breaker"),
+                    heartbeat_s=self.STREAM_HEARTBEAT_S)
+                connected_at = time.time()
+                with self._fleet_lock:
+                    self._stream_ok = True
+                    self._stream_connects += 1
+                backoff = self.STREAM_BACKOFF_MIN_S
+                if self._parent is not None:
+                    # plane reachable again; member health streams in live
+                    self._parent.bus.update_snapshot(self._aggregate(
+                        dict(self._member_snaps)))
+                for entry in stream:
+                    if stop.is_set():
+                        return
+                    self._on_stream_event(entry, connected_at)
+                # orderly end (max_s or gateway close): treat as loss and
+                # resubscribe — the plane may still be alive
+            except (StreamClosed, ControlPlaneError, OSError):
+                pass
+            finally:
+                if stream is not None:
+                    stream.close()
+            if stop.is_set():
+                return
+            self._mark_down()
+            stop.wait(backoff * (0.5 + random.random()))
+            backoff = min(self.STREAM_BACKOFF_MAX_S, backoff * 2)
+
+    def _on_stream_event(self, entry: Dict, connected_at: float) -> None:
+        kind = entry.get("kind")
+        stale = entry.get("timestamp", connected_at) \
+            < connected_at - self.STREAM_STALE_S
+        if kind == "registry" and not stale:
+            self._apply_registry_event(entry)
+        elif kind == "health" and not stale:
+            fields = dict(entry.get("fields") or {})
+            with self._fleet_lock:
+                self._member_snaps[entry["resource_id"]] = fields
+                snaps = dict(self._member_snaps)
+            if self._parent is not None:
+                self._parent.bus.update_snapshot(self._aggregate(snaps))
+        # breaker transitions of members need no parent-side action: the
+        # child's own matcher routes around them, and member snapshots
+        # already carry the resulting health
+
+    def _apply_registry_event(self, entry: Dict) -> None:
+        """Descriptor change feed: keep the remote fleet view — and the
+        parent's aggregated descriptor — current without any re-fetch."""
+        fields = entry.get("fields") or {}
+        try:
+            desc = ResourceDescriptor.from_dict(fields.get("descriptor")
+                                                or {})
+        except (TypeError, ValueError, KeyError):
+            return
+        with self._fleet_lock:
+            before = [d for d in self._remote_descs
+                      if d.resource_id != desc.resource_id]
+            if fields.get("action") == "unregister":
+                changed = len(before) != len(self._remote_descs)
+                self._remote_descs = before
+                # drop the member's cached health with it: a ghost entry
+                # would skew the aggregate forever (stale degraded status,
+                # or diluting the all-members-failed check)
+                self._member_snaps.pop(desc.resource_id, None)
+                snaps = dict(self._member_snaps)
+            else:
+                changed = True
+                self._remote_descs = before + [desc]
+                snaps = None
+        if snaps is not None and self._parent is not None:
+            self._parent.bus.update_snapshot(self._aggregate(snaps))
+        profile_member = (desc.capability.input_signal.modality,
+                          desc.capability.output_signal.modality) \
+            == self.modality
+        if not (changed and profile_member and self._parent is not None):
+            return
+        registry = self._parent.registry
+        if self._profile():
+            # re-aggregate in place: same resource_id + adapter, fresh
+            # capability union (epoch bump invalidates matcher caches)
+            registry.register(self.descriptor(), self)
+        elif registry.get(self.resource_id) is not None:
+            # last member of this profile left: the plane no longer serves
+            # this modality — withdraw until the feed re-adds a member
+            registry.unregister(self.resource_id)
+
 
 def federate(parent_orchestrator, client_or_url, **kw) -> RemotePlaneAdapter:
     """Register one remote plane (its dominant modality profile) into a
-    parent orchestrator; returns the adapter."""
+    parent orchestrator; returns the (attached) adapter.
+
+    Refuses with ``FEDERATION_CYCLE`` when the parent is already reachable
+    THROUGH the child — a plane transitively re-registering itself would
+    forward tasks in a loop."""
     adapter = RemotePlaneAdapter(client_or_url, **kw)
+    parent_orchestrator.topology.add_child(adapter.child_plane_id,
+                                           adapter.child_reachable)
     parent_orchestrator.register(adapter)
-    return adapter
+    return adapter.attach(parent_orchestrator)
 
 
 def federate_all(parent_orchestrator, client_or_url,
                  plane: Optional[str] = None) -> List[RemotePlaneAdapter]:
     """Register EVERY modality profile of a remote plane, one adapter per
     (input, output) modality pair — the full fleet federates.  One health
-    check + one discovery serve all profiles."""
+    check + one discovery + one topology fetch serve all profiles (each
+    profile adapter runs its own follower subscription, filtered to the
+    same child plane)."""
     client = (client_or_url if isinstance(client_or_url, ControlPlaneClient)
               else ControlPlaneClient(client_or_url))
     plane = plane or client.health().get("plane", "remote")
@@ -291,13 +523,18 @@ def federate_all(parent_orchestrator, client_or_url,
     if not fleet:
         raise ControlPlaneError(ErrorCode.NO_MATCH,
                                 "remote plane exposes no resources")
+    topology = client.topology()
+    parent_orchestrator.topology.add_child(
+        topology["plane_id"],
+        topology.get("reachable") or (topology["plane_id"],))
     profiles = sorted({(d.capability.input_signal.modality,
                         d.capability.output_signal.modality) for d in fleet})
     adapters = []
     for pair in profiles:
         adapter = RemotePlaneAdapter(
             client, plane=plane, modality=pair, fleet=fleet,
+            topology=topology,
             resource_id=f"plane-{plane}-{pair[0]}-{pair[1]}")
         parent_orchestrator.register(adapter)
-        adapters.append(adapter)
+        adapters.append(adapter.attach(parent_orchestrator))
     return adapters

@@ -1,0 +1,356 @@
+"""Streaming telemetry: subscriptions, filters, loss accounting, auth.
+
+Covers the ``/v1/stream`` endpoint (chunked ndjson server push): filter
+correctness under CONCURRENT publishers, zero-loss delivery verified by
+sequence numbers, resume-by-cursor, severity filtering, the bounded cursor
+log's ``dropped_events`` counter, wire auth (``UNAUTHORIZED`` + tenant
+override), and the client's honored ``retry_after_s`` backpressure hints.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import ErrorCode, Orchestrator, TaskRequest
+from repro.core.errors import WireError
+from repro.gateway import (ControlPlaneClient, ControlPlaneGateway,
+                           GatewayError, StreamFilter, event_severity)
+from repro.substrates import MemristiveAdapter
+
+RIDS = ("xbar-a", "xbar-b", "xbar-c")
+
+
+@pytest.fixture()
+def plane():
+    orch = Orchestrator()
+    for rid in RIDS:
+        orch.register(MemristiveAdapter(rid))
+    gw = ControlPlaneGateway(orch, plane="streamy").start()
+    try:
+        yield orch, gw, ControlPlaneClient(gw.url)
+    finally:
+        gw.stop()
+
+
+def _task(rid=None, **kw):
+    return TaskRequest(function="inference", input_modality="vector",
+                       output_modality="vector", payload=[0.1, 0.2, 0.3, 0.4],
+                       backend_preference=rid, **kw)
+
+
+# ---------------------------------------------------------------------------
+# filters
+
+
+def test_severity_model():
+    assert event_severity("lifecycle", {}) == "debug"
+    assert event_severity("result", {"status": "completed"}) == "info"
+    assert event_severity("result", {"status": "rejected"}) == "warning"
+    assert event_severity("breaker", {"to": "open"}) == "error"
+    assert event_severity("breaker", {"to": "healthy"}) == "info"
+    assert event_severity("health", {"health_status": "failed"}) == "error"
+    assert event_severity("health", {"health_status": "healthy"}) == "info"
+    assert event_severity("registry", {"action": "register"}) == "info"
+
+
+def test_stream_filter_parse_and_match():
+    filt = StreamFilter.from_query({"resources": "a,b", "kinds": "result",
+                                    "min_severity": "warning"})
+    assert filt.matches({"resource_id": "a", "kind": "result",
+                         "severity": "error"})
+    assert not filt.matches({"resource_id": "c", "kind": "result",
+                             "severity": "error"})
+    assert not filt.matches({"resource_id": "a", "kind": "health",
+                             "severity": "error"})
+    assert not filt.matches({"resource_id": "a", "kind": "result",
+                             "severity": "info"})
+    with pytest.raises(ValueError):
+        StreamFilter.from_query({"min_severity": "loud"})
+
+
+def test_bad_min_severity_is_wire_bad_request(plane):
+    _, _, client = plane
+    with pytest.raises(GatewayError) as ei:
+        client.telemetry(cursor=0)  # sanity: endpoint works
+        client._call("GET", "/v1/stream?min_severity=loud")
+    assert ei.value.code is ErrorCode.BAD_REQUEST
+
+
+# ---------------------------------------------------------------------------
+# subscriptions under concurrent publishers
+
+
+def test_filtered_stream_under_concurrent_publishers(plane):
+    """Three publisher threads hammer three different substrates; a
+    subscription filtered to ONE resource must deliver exactly that
+    resource's completed results — no foreign events, no losses."""
+    _, _, client = plane
+    n_each = 8
+    stream = client.stream(resources={"xbar-a"}, kinds={"result"},
+                           heartbeat_s=0.5)
+    publishers = [
+        threading.Thread(target=lambda r=rid: [
+            ControlPlaneClient(client.url).invoke(_task(r))
+            for _ in range(n_each)])
+        for rid in RIDS
+    ]
+    for t in publishers:
+        t.start()
+    got = list(stream.events(limit=n_each))
+    for t in publishers:
+        t.join()
+    stream.close()
+    assert len(got) == n_each
+    assert all(e["resource_id"] == "xbar-a" for e in got)
+    assert all(e["kind"] == "result" for e in got)
+    # seq strictly increases (the stream never re-delivers or reorders)
+    seqs = [e["seq"] for e in got]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+
+
+def test_unfiltered_stream_is_gapless_by_seq(plane):
+    """With no filter, the delivered seq run must be contiguous — the
+    zero-lost-events guarantee the hierarchy benchmark asserts."""
+    _, _, client = plane
+    stream = client.stream(heartbeat_s=0.5)
+    worker = threading.Thread(
+        target=lambda: [client.invoke(_task()) for _ in range(5)])
+    worker.start()
+    got = list(stream.events(limit=10))
+    worker.join()
+    stream.close()
+    # synthetic registry-baseline entries ride seq 0 (state, not history)
+    seqs = [e["seq"] for e in got if e["seq"] > 0]
+    assert seqs == list(range(seqs[0], seqs[0] + len(seqs)))
+
+
+def test_stream_resume_by_cursor_no_loss_no_duplicates(plane):
+    _, _, client = plane
+    client.invoke(_task())
+    s1 = client.stream(cursor=0, kinds={"result"}, heartbeat_s=0.5)
+    first = next(iter(s1))
+    cursor = s1.cursor
+    s1.close()
+    client.invoke(_task())
+    s2 = client.stream(cursor=cursor, kinds={"result"}, heartbeat_s=0.5)
+    second = next(iter(s2))
+    s2.close()
+    assert second["seq"] > first["seq"]
+    assert second["seq"] > cursor
+
+
+def test_stream_hello_carries_plane_identity(plane):
+    orch, gw, client = plane
+    stream = client.stream(heartbeat_s=0.5, max_s=0.2)
+    # drain until orderly end; hello populated plane_id on first line
+    for _ in stream:
+        pass
+    assert stream.plane_id == orch.topology.plane_id == gw.plane_id
+    assert stream.orderly_end
+
+
+def test_min_severity_stream_skips_routine_traffic(plane):
+    orch, _, client = plane
+    stream = client.stream(min_severity="error", heartbeat_s=0.3,
+                           include_control=True)
+    client.invoke(_task())                     # routine: info + debug only
+    from repro.core import RuntimeSnapshot
+    orch.bus.update_snapshot(RuntimeSnapshot("xbar-b",
+                                             health_status="failed"))
+    got = []
+    for obj in stream:
+        if obj.get("stream"):                  # heartbeat/hello
+            continue
+        got.append(obj)
+        break
+    stream.close()
+    assert got and got[0]["resource_id"] == "xbar-b"
+    assert got[0]["severity"] == "error"
+
+
+def test_registry_baseline_on_cursor_zero(plane):
+    """A cursor=0 change-feed subscription receives the CURRENT fleet as
+    synthetic register events before live updates."""
+    orch, _, client = plane
+    stream = client.stream(cursor=0, kinds={"registry"}, heartbeat_s=0.5)
+    baseline = [e for e in stream.events(limit=len(RIDS))]
+    assert {e["resource_id"] for e in baseline} == set(RIDS)
+    assert all(e["fields"].get("baseline") for e in baseline)
+    orch.unregister("xbar-c")
+    live = next(iter(stream))
+    stream.close()
+    assert live["resource_id"] == "xbar-c"
+    assert live["fields"]["action"] == "unregister"
+    assert not live["fields"].get("baseline")
+
+
+# ---------------------------------------------------------------------------
+# bounded cursor log
+
+
+def test_cursor_log_bounded_with_dropped_events_counter():
+    orch = Orchestrator()
+    orch.register(MemristiveAdapter("tiny"))
+    gw = ControlPlaneGateway(orch, plane="tiny", telemetry_capacity=8)
+    gw.start()
+    client = ControlPlaneClient(gw.url)
+    try:
+        for _ in range(6):                     # >8 events, nobody reading
+            client.invoke(_task("tiny"))
+        out = client.telemetry(cursor=0)
+        assert len(out["events"]) <= 8
+        assert out["dropped_events"] > 0       # lifetime evictions surfaced
+        assert out["dropped"] > 0              # this cursor missed some
+    finally:
+        gw.stop()
+
+
+# ---------------------------------------------------------------------------
+# wire auth
+
+
+class TenantBound(MemristiveAdapter):
+    """Crossbar whose policy only authorizes tenant-a."""
+
+    def descriptor(self):
+        import dataclasses
+
+        desc = super().descriptor()
+        cap = dataclasses.replace(
+            desc.capability,
+            policy=dataclasses.replace(desc.capability.policy,
+                                       authorized_tenants=("tenant-a",)))
+        return dataclasses.replace(desc, capability=cap)
+
+
+@pytest.fixture()
+def keyed_plane():
+    orch = Orchestrator()
+    orch.register(TenantBound("bound-xbar"))
+    gw = ControlPlaneGateway(orch, plane="keyed",
+                             api_keys={"key-a": "tenant-a",
+                                       "key-b": "tenant-b"}).start()
+    try:
+        yield orch, gw
+    finally:
+        gw.stop()
+
+
+def test_unauthenticated_request_gets_unauthorized(keyed_plane):
+    _, gw = keyed_plane
+    for client in (ControlPlaneClient(gw.url),
+                   ControlPlaneClient(gw.url, api_key="wrong")):
+        with pytest.raises(GatewayError) as ei:
+            client.discover()
+        assert ei.value.code is ErrorCode.UNAUTHORIZED
+        with pytest.raises(GatewayError) as ei:
+            client.invoke(_task("bound-xbar"))
+        assert ei.value.code is ErrorCode.UNAUTHORIZED
+
+
+def test_authenticated_tenant_overrides_wire_tenant(keyed_plane):
+    """The task CLAIMS tenant-a, but the credential maps to tenant-b: the
+    gateway must bind the authenticated identity, so policy refuses — the
+    wire tenant field is no longer trusted."""
+    _, gw = keyed_plane
+    spoofer = ControlPlaneClient(gw.url, api_key="key-b")
+    with pytest.raises(GatewayError) as ei:
+        spoofer.invoke(_task("bound-xbar", tenant="tenant-a",
+                             allow_fallback=False))
+    assert ei.value.code is ErrorCode.POLICY_DENIED
+    # the rightful credential passes, whatever the wire field says
+    owner = ControlPlaneClient(gw.url, api_key="key-a")
+    res, _ = owner.invoke(_task("bound-xbar", tenant="someone-else"))
+    assert res.status == "completed"
+
+
+def test_streaming_requires_auth_on_keyed_plane(keyed_plane):
+    _, gw = keyed_plane
+    with pytest.raises(GatewayError) as ei:
+        ControlPlaneClient(gw.url).stream()
+    assert ei.value.code is ErrorCode.UNAUTHORIZED
+    stream = ControlPlaneClient(gw.url, api_key="key-a").stream(
+        heartbeat_s=0.3, max_s=0.1)
+    for _ in stream:
+        pass
+    assert stream.orderly_end
+
+
+# ---------------------------------------------------------------------------
+# backpressure: retry_after_s hints, honored
+
+
+def test_queue_saturated_carries_retry_after_hint(plane):
+    """Synthetic saturation: the error detail must carry a positive
+    retry_after_s derived from scheduler stats."""
+    _, gw, client = plane
+    orig = gw.invoke_into
+    fired = []
+
+    def saturated_once(handler, body, tenant=None):
+        if not fired:
+            fired.append(1)
+            err = WireError(ErrorCode.QUEUE_SATURATED,
+                            "queue saturated (synthetic)",
+                            {"retry_after_s": gw.scheduler.retry_after_s()})
+            handler._send_error("invoke", err)
+            return
+        return orig(handler, body, tenant=tenant)
+
+    gw.invoke_into = saturated_once
+    try:
+        with pytest.raises(GatewayError) as ei:
+            client.invoke(_task(), backpressure_retries=0)
+        assert ei.value.code is ErrorCode.QUEUE_SATURATED
+        assert ei.value.detail["retry_after_s"] > 0
+    finally:
+        gw.invoke_into = orig
+
+
+def test_client_honors_retry_after_with_jittered_backoff(plane):
+    """First response: QUEUE_SATURATED + hint.  The client must wait ~hint
+    (jittered) and retry — the second attempt completes."""
+    _, gw, client = plane
+    orig = gw.invoke_into
+    calls = []
+
+    def saturated_once(handler, body, tenant=None):
+        calls.append(time.perf_counter())
+        if len(calls) == 1:
+            handler._send_error("invoke", WireError(
+                ErrorCode.QUEUE_SATURATED, "queue saturated (synthetic)",
+                {"retry_after_s": 0.08}))
+            return
+        return orig(handler, body, tenant=tenant)
+
+    gw.invoke_into = saturated_once
+    try:
+        res, _ = client.invoke(_task())
+        assert res.status == "completed"
+        assert len(calls) == 2
+        gap = calls[1] - calls[0]
+        assert gap >= 0.08 * 0.5                 # jitter floor honored
+    finally:
+        gw.invoke_into = orig
+
+
+def test_backoff_never_overruns_the_deadline_budget(plane):
+    """A huge hint with a small task budget must raise IMMEDIATELY (honoring
+    the hint would blow the deadline), not sleep through it."""
+    _, gw, client = plane
+    orig = gw.invoke_into
+
+    def always_saturated(handler, body, tenant=None):
+        handler._send_error("invoke", WireError(
+            ErrorCode.QUEUE_SATURATED, "queue saturated (synthetic)",
+            {"retry_after_s": 30.0}))
+
+    gw.invoke_into = always_saturated
+    try:
+        t0 = time.perf_counter()
+        with pytest.raises(GatewayError) as ei:
+            client.invoke(_task(latency_budget_ms=200.0))
+        assert ei.value.code is ErrorCode.QUEUE_SATURATED
+        assert time.perf_counter() - t0 < 5.0
+    finally:
+        gw.invoke_into = orig

@@ -1,0 +1,315 @@
+"""Hierarchical federation: multi-hop chains, budgets, cycles, recovery.
+
+The acceptance demo for the topology refactor: a device → edge → fog →
+cloud chain of planes where
+
+- tasks forward end-to-end with one identity and a complete hop route;
+- ``hop_budget`` / ``deadline_budget_ms`` exhaustion rejects with the
+  structured ``DEADLINE`` code exactly at the hop the budget predicts;
+- federating a plane that can transitively reach its would-be parent is
+  refused with ``FEDERATION_CYCLE``;
+- killing a mid-chain plane trips the parent's breaker through the
+  telemetry STREAM (no polling-interval lag), opted-in traffic twin-serves
+  with zero invalid serves, and the descriptor change feed re-admits the
+  plane on recovery without any ``discover()`` re-fetch.
+"""
+import time
+
+import pytest
+
+from repro.core import (ControlPlaneError, ErrorCode, Orchestrator,
+                        PlaneTopology, TaskRequest, budget_admissible,
+                        forward_task)
+from repro.core.health import BreakerState
+from repro.core.topology import DEFAULT_HOP_BUDGET, HOP_WIRE_MARGIN_MS
+from repro.gateway import ControlPlaneGateway
+from repro.substrates import MemristiveAdapter, federate
+
+
+def _task(**kw):
+    return TaskRequest(function="inference", input_modality="vector",
+                       output_modality="vector", payload=[0.1, 0.2, 0.3, 0.4],
+                       **kw)
+
+
+# ---------------------------------------------------------------------------
+# topology unit layer
+
+
+def test_reachable_is_transitive_closure():
+    top = PlaneTopology("cloud")
+    top.add_child("fog-1", {"fog-1", "edge-1", "device-1"})
+    top.add_child("lab-1", {"lab-1"})
+    assert top.reachable() == {top.plane_id, "fog-1", "edge-1", "device-1",
+                               "lab-1"}
+
+
+def test_direct_cycle_refused():
+    top = PlaneTopology("cloud")
+    with pytest.raises(ControlPlaneError) as ei:
+        top.add_child("child-x", {"child-x", top.plane_id})
+    assert ei.value.code is ErrorCode.FEDERATION_CYCLE
+
+
+def test_transitive_cycle_refused():
+    """A reaches B reaches C; registering A into C must refuse."""
+    a, b, c = PlaneTopology("a"), PlaneTopology("b"), PlaneTopology("c")
+    b.add_child(c.plane_id, c.reachable())
+    a.add_child(b.plane_id, b.reachable())
+    with pytest.raises(ControlPlaneError) as ei:
+        c.add_child(a.plane_id, a.reachable())
+    assert ei.value.code is ErrorCode.FEDERATION_CYCLE
+
+
+def test_forward_task_budget_math():
+    t = _task(latency_budget_ms=20.0)
+    fwd = forward_task(t, "plane-x")
+    # first forward seeds the default hop budget and converts the latency
+    # budget into an explicit decremented deadline budget
+    assert fwd.hop_budget == DEFAULT_HOP_BUDGET - 1
+    assert fwd.deadline_budget_ms == 20.0 - HOP_WIRE_MARGIN_MS
+    assert fwd.route == ("plane-x",)
+    assert fwd.task_id == t.task_id          # one identity across hops
+    fwd2 = forward_task(fwd, "plane-y")
+    assert fwd2.hop_budget == DEFAULT_HOP_BUDGET - 2
+    assert fwd2.deadline_budget_ms == 20.0 - 2 * HOP_WIRE_MARGIN_MS
+    assert fwd2.route == ("plane-x", "plane-y")
+
+
+def test_forward_task_refuses_exhausted_budgets():
+    with pytest.raises(ControlPlaneError) as ei:
+        forward_task(_task(hop_budget=0), "plane-x")
+    assert ei.value.code is ErrorCode.DEADLINE
+    with pytest.raises(ControlPlaneError) as ei:
+        forward_task(_task(deadline_budget_ms=HOP_WIRE_MARGIN_MS), "plane-x")
+    assert ei.value.code is ErrorCode.DEADLINE
+
+
+def test_budget_admissible_unbudgeted_task_passes():
+    ok, _ = budget_admissible(_task())
+    assert ok
+    ok, why = budget_admissible(_task(hop_budget=0))
+    assert not ok and "hop budget" in why
+
+
+def test_wire_round_trip_preserves_budgets():
+    t = _task(hop_budget=3, deadline_budget_ms=42.5,
+              route=("plane-a", "plane-b"))
+    back = TaskRequest.from_wire(t.to_wire())
+    assert back.hop_budget == 3
+    assert back.deadline_budget_ms == 42.5
+    assert back.route == ("plane-a", "plane-b")
+
+
+# ---------------------------------------------------------------------------
+# the 4-plane chain
+
+
+@pytest.fixture()
+def chain():
+    """device → edge → fog → cloud; yields (planes, gateways, adapters)."""
+    planes, gateways, adapters = {}, {}, {}
+    planes["device"] = Orchestrator()
+    planes["device"].register(MemristiveAdapter("device-xbar"))
+    gateways["device"] = ControlPlaneGateway(planes["device"],
+                                             plane="device").start()
+    for child, parent in (("device", "edge"), ("edge", "fog"),
+                          ("fog", "cloud")):
+        planes[parent] = Orchestrator(health=dict(
+            cooldown_s=0.4,
+            thresholds={"consecutive_failures_to_open": 2}))
+        adapters[parent] = federate(planes[parent], gateways[child].url)
+        if parent != "cloud":
+            gateways[parent] = ControlPlaneGateway(planes[parent],
+                                                   plane=parent).start()
+    try:
+        yield planes, gateways, adapters
+    finally:
+        for gw in gateways.values():
+            gw.stop()
+        for a in adapters.values():
+            a.close()
+
+
+def test_chain_forwards_end_to_end(chain):
+    planes, _, adapters = chain
+    task = _task(required_telemetry=("execution_ms",))
+    res, trace = planes["cloud"].submit(task)
+    assert res.status == "completed"
+    assert trace.selected == adapters["cloud"].resource_id
+    # the task reached the device plane's physical substrate
+    assert res.telemetry["remote_resource_id"] == adapters["fog"].resource_id
+    route = res.telemetry["hop_route"]
+    assert route == [planes["cloud"].topology.plane_id,
+                     planes["fog"].topology.plane_id,
+                     planes["edge"].topology.plane_id]
+    # identity survives all three hops: the innermost trace names our task
+    assert res.artifacts["remote_trace"]["task_id"] == task.task_id
+
+
+@pytest.mark.parametrize("hops,expect", [(0, "rejected"), (1, "rejected"),
+                                         (2, "rejected"), (3, "completed")])
+def test_hop_budget_exhausts_exactly_where_predicted(chain, hops, expect):
+    """Reaching the device substrate needs exactly 3 forwards; any smaller
+    hop budget must reject with the structured DEADLINE code."""
+    planes, _, _ = chain
+    res, trace = planes["cloud"].submit(_task(hop_budget=hops))
+    assert res.status == expect
+    if expect == "rejected":
+        assert trace.error_code == ErrorCode.DEADLINE.value
+
+
+def test_deadline_budget_exhausts_exactly_where_predicted(chain):
+    """Each hop costs HOP_WIRE_MARGIN_MS of deadline budget and a plane
+    refuses to forward once the remaining budget is <= one margin, so the
+    minimum completing budget is 3 margins + epsilon."""
+    planes, _, _ = chain
+    short = 3 * HOP_WIRE_MARGIN_MS          # absorbs only 2 hops
+    res, trace = planes["cloud"].submit(_task(deadline_budget_ms=short))
+    assert res.status == "rejected"
+    assert trace.error_code == ErrorCode.DEADLINE.value
+    enough = 3 * HOP_WIRE_MARGIN_MS + 200.0
+    res, _ = planes["cloud"].submit(_task(deadline_budget_ms=enough))
+    assert res.status == "completed"
+
+
+def test_federation_cycle_refused_end_to_end(chain):
+    """The fog plane transitively reaches edge and device; registering it
+    back into the DEVICE plane would let forwarded tasks come home."""
+    planes, gateways, _ = chain
+    with pytest.raises(ControlPlaneError) as ei:
+        federate(planes["device"], gateways["fog"].url)
+    assert ei.value.code is ErrorCode.FEDERATION_CYCLE
+    # the refused child never made it into the registry
+    assert all("plane-fog" not in d.resource_id
+               for d in planes["device"].registry.all())
+
+
+def test_self_federation_refused():
+    orch = Orchestrator()
+    orch.register(MemristiveAdapter("self-xbar"))
+    gw = ControlPlaneGateway(orch, plane="selfie").start()
+    try:
+        with pytest.raises(ControlPlaneError) as ei:
+            federate(orch, gw.url)
+        assert ei.value.code is ErrorCode.FEDERATION_CYCLE
+    finally:
+        gw.stop()
+
+
+# ---------------------------------------------------------------------------
+# mid-chain failure + stream-driven recovery
+
+
+def _await(predicate, timeout_s: float, interval_s: float = 0.02) -> bool:
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval_s)
+    return False
+
+
+def test_mid_chain_kill_trips_breaker_via_stream_and_feed_readmits():
+    """Kill the EDGE plane of a device→edge→fog chain: the fog-side breaker
+    must open from the broken stream (within ~2 heartbeats — no long-poll
+    lag), opted-in traffic twin-serves with zero invalid serves, and after
+    the edge gateway returns ON THE SAME PORT the change feed re-admits the
+    plane without any discover() re-fetch."""
+    device = Orchestrator()
+    device.register(MemristiveAdapter("device-xbar"))
+    gw_device = ControlPlaneGateway(device, plane="device").start()
+    edge = Orchestrator()
+    a_edge = federate(edge, gw_device.url)
+    gw_edge = ControlPlaneGateway(edge, plane="edge").start()
+    edge_port = gw_edge.port
+    fog = Orchestrator(health=dict(
+        cooldown_s=0.3, thresholds={"consecutive_failures_to_open": 2}))
+    a_fog = federate(fog, gw_edge.url)
+    rid = a_fog.resource_id
+    gw_edge2 = None
+    try:
+        # warm the fog-side twin of the edge plane
+        for _ in range(6):
+            res, _ = fog.submit(_task(twin_mode="shadow"))
+            assert res.status == "completed"
+        discovers = []
+        a_fog.client.discover = lambda *a, **kw: discovers.append(1)  # spy
+
+        # -- kill the mid-chain plane ------------------------------------
+        t_kill = time.monotonic()
+        gw_edge.stop()
+        assert _await(lambda: fog.health.state(rid) is BreakerState.OPEN,
+                      timeout_s=4.0), "breaker must trip via the stream"
+        trip_s = time.monotonic() - t_kill
+        # stream detection, not poll-interval luck: well under the old
+        # long-poll worst case and within ~2 follower heartbeats + margin
+        assert trip_s < 4.0
+
+        # opted-in traffic twin-serves while the plane is quarantined
+        served = []
+        for _ in range(6):
+            res, trace = fog.submit(_task(twin_mode="fallback"))
+            assert res.status == "completed"
+            if trace.served_by == "twin":
+                served.append(res)
+        assert served, "twin must serve while the plane is down"
+        audit = fog.twin_exec.audit()
+        assert audit["twin_serves_invalid"] == 0
+
+        # -- recovery: same port, same orchestrator ----------------------
+        gw_edge2 = ControlPlaneGateway(edge, port=edge_port,
+                                       plane="edge").start()
+        assert _await(lambda: a_fog._stream_connects >= 2, timeout_s=6.0), \
+            "follower must resubscribe to the recovered plane"
+        # breaker walks open → probation → healthy on real forwarded work
+        deadline = time.monotonic() + 10.0
+        reai = None
+        while time.monotonic() < deadline:
+            res, trace = fog.submit(_task())
+            if res.status == "completed" and trace.served_by == "substrate":
+                reai = res
+                break
+            time.sleep(0.1)
+        assert reai is not None, "plane must be re-admitted after recovery"
+        # edge placed it on ITS device-plane adapter: real hardware again
+        assert reai.telemetry["remote_resource_id"] == a_edge.resource_id
+        # the re-admission used the change feed + stream, never a re-fetch
+        assert discovers == []
+    finally:
+        for gw in (gw_device, gw_edge2):
+            if gw is not None:
+                gw.stop()
+        a_edge.close()
+        a_fog.close()
+
+
+def test_descriptor_change_feed_reaggregates_parent_view():
+    """Registering/unregistering a member on the child plane must reshape
+    the parent's aggregated descriptor live, without re-federation."""
+    child = Orchestrator()
+    child.register(MemristiveAdapter("xbar-a"))
+    gw = ControlPlaneGateway(child, plane="lab").start()
+    parent = Orchestrator()
+    adapter = federate(parent, gw.url)
+    rid = adapter.resource_id
+    try:
+        assert parent.registry.get(rid).capability.policy.max_concurrent == 4
+        epoch0 = parent.registry.epoch
+        child.register(MemristiveAdapter("xbar-b"))     # fleet grows
+        assert _await(
+            lambda: parent.registry.get(rid) is not None
+            and parent.registry.get(rid).capability.policy.max_concurrent == 8,
+            timeout_s=4.0), "parent aggregate must absorb the new member"
+        assert parent.registry.epoch > epoch0
+        child.unregister("xbar-b")                      # fleet shrinks
+        assert _await(
+            lambda: parent.registry.get(rid).capability.policy.max_concurrent
+            == 4, timeout_s=4.0), "parent aggregate must drop the member"
+        # tasks still route end-to-end through the updated aggregate
+        res, _ = parent.submit(_task())
+        assert res.status == "completed"
+        assert res.telemetry["remote_resource_id"] == "xbar-a"
+    finally:
+        gw.stop()
+        adapter.close()
