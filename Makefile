@@ -8,16 +8,22 @@
 #   make test-twin         executable-twin suites: fidelity/parity,
 #                          executor (shadow/fallback/speculate), properties
 #   make twin-smoke        quick twin-fallback goodput trial + validity audit
-#   make test-gateway      wire-layer suites: protocol round-trips, gateway
-#                          endpoint/error-taxonomy e2e, federated planes,
-#                          streaming telemetry, multi-hop topology
+#   make test-gateway      wire-layer suites: protocol round-trips (both
+#                          codecs), gateway endpoint/error-taxonomy e2e,
+#                          federated planes, streaming telemetry,
+#                          multi-hop topology, coalesced wire path
 #   make gateway-smoke     ~20s wire round-trip (discover→invoke→telemetry
-#                          on the mixed testbed) + 1 overhead trial
+#                          on the mixed testbed) + 1 overhead trial per
+#                          codec, asserting the p50 wire-excess budget
+#   make bench-gateway-smoke  alias for gateway-smoke (budget-asserting
+#                          quick trial, for CI)
 #   make hierarchy-smoke   ~60s 3-tier drill: 4-plane chain per-hop cost,
 #                          stream-vs-poll fan-in, kill-the-middle-plane
 #                          breaker + twin-fallback verification
-#   make bench-gateway     local vs wire control-path overhead (p50/p99,
-#                          asserts median wire excess <= 5 ms)
+#   make bench-gateway     local vs wire control-path overhead per codec
+#                          (asserts median wire excess p50 <= 1 ms) + the
+#                          connection-churn capacity sweep (async gateway
+#                          must sustain >= 10x the threaded baseline)
 #   make bench-hierarchy   multi-hop chain + streaming fan-in benchmark
 #                          (per-hop added latency <= single-hop margin,
 #                          >= 2x fewer requests than cursor polling)
@@ -32,8 +38,9 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast chaos-smoke test-twin twin-smoke test-gateway \
-        gateway-smoke hierarchy-smoke bench bench-throughput bench-recovery \
-        bench-twin bench-gateway bench-hierarchy dev-deps
+        gateway-smoke bench-gateway-smoke hierarchy-smoke bench \
+        bench-throughput bench-recovery bench-twin bench-gateway \
+        bench-hierarchy dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -52,11 +59,14 @@ twin-smoke:
 	$(PYTHON) -m benchmarks.bench_twin --smoke
 
 test-gateway:
-	$(PYTHON) -m pytest -q tests/test_protocol.py tests/test_gateway.py \
-	    tests/test_federation.py tests/test_stream.py tests/test_topology.py
+	$(PYTHON) -m pytest -q tests/test_protocol.py tests/test_codec.py \
+	    tests/test_gateway.py tests/test_federation.py tests/test_stream.py \
+	    tests/test_topology.py tests/test_wirepath.py
 
 gateway-smoke:
 	$(PYTHON) -m benchmarks.bench_gateway --smoke
+
+bench-gateway-smoke: gateway-smoke
 
 hierarchy-smoke:
 	$(PYTHON) -m benchmarks.bench_hierarchy --smoke

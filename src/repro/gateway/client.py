@@ -11,6 +11,26 @@ Failures raise :class:`GatewayError` carrying the structured taxonomy code
 plus the server's detail (full trace, twin ``invalidation_reason``), never
 a bare HTTP error.
 
+Wire codec (v1.2): construct with ``codec="binary"`` to negotiate the
+compact binary envelope framing (``application/x-physmcp``) on both
+directions — ``Content-Type`` names the request codec, ``Accept`` asks for
+the response codec, and the default JSON client is byte-identical to v1.1
+on the wire.
+
+Transport: one keep-alive connection per calling thread, with
+``TCP_NODELAY`` set (small control frames must not sit in Nagle buffers)
+and a bounded LRU pool — connections owned by exited threads are reaped
+and the pool never exceeds ``MAX_POOLED_CONNS`` sockets however many
+threads churn through the client.
+
+Coalescing (v1.2): :meth:`ControlPlaneClient.submit_coalesced` and
+:meth:`ControlPlaneClient.invoke_coalesced` route through a transparent
+micro-batching buffer — concurrent submitters share one
+``/v1/submit_coalesced`` frame (group commit: whatever accumulates while
+the previous flush is on the wire rides the next one), and their
+completion waits share one ``/v1/poll_coalesced`` long-poll, so N
+concurrent federated forwards cost ~2 round-trips instead of 2N.
+
 Backpressure: ``QUEUE_SATURATED`` rejections carry the plane's live
 ``retry_after_s`` hint; :meth:`ControlPlaneClient.invoke` honors it with
 jittered backoff (bounded by the task's own deadline budget) instead of
@@ -28,10 +48,12 @@ import socket
 import threading
 import time
 import urllib.parse
+from collections import OrderedDict
+from concurrent.futures import Future, TimeoutError as FutureTimeout
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.descriptors import ResourceDescriptor
-from repro.core.errors import ControlPlaneError, ErrorCode
+from repro.core.errors import ControlPlaneError, ErrorCode, WireError
 from repro.core.invocation import InvocationResult
 from repro.core.orchestrator import OrchestrationTrace
 from repro.core.tasks import TaskRequest
@@ -54,46 +76,404 @@ class GatewayError(ControlPlaneError):
         return self.detail.get("invalidation_reason")
 
 
+class _NoDelayHTTPConnection(http.client.HTTPConnection):
+    """Keep-alive connection with Nagle disabled, used for the chunked
+    ``/v1/stream`` subscription (a long-lived connection where
+    http.client's incremental chunked decoding earns its keep)."""
+
+    #: set by the client around request/response so the pool reaper never
+    #: closes a connection out from under a call in progress
+    in_flight = False
+
+    def connect(self):
+        super().connect()
+        try:
+            self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass
+
+
+class _WireConn:
+    """Minimal keep-alive HTTP/1.1 connection for control frames.
+
+    Replaces http.client on the request/response hot path: one ``sendall``
+    per request (head + body pre-joined), one buffered read loop for the
+    response, no intermediate response object.  A sub-millisecond wire
+    budget leaves no room for http.client's per-call parsing machinery
+    (~0.3 ms on loopback).  Nagle is disabled — control frames are small,
+    and the server side already sets TCP_NODELAY on every accepted socket.
+    """
+
+    __slots__ = ("host", "port", "timeout", "sock", "_rbuf", "in_flight")
+
+    def __init__(self, host: str, port: int, timeout: float):
+        self.host = host
+        self.port = port
+        self.timeout = timeout
+        self.sock: Optional[socket.socket] = None
+        self._rbuf = b""
+        self.in_flight = False
+
+    def connect(self) -> None:
+        self.sock = socket.create_connection((self.host, self.port),
+                                             timeout=self.timeout)
+        try:
+            self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass
+        self._rbuf = b""
+
+    def close(self) -> None:
+        sock, self.sock = self.sock, None
+        self._rbuf = b""
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def request(self, method: str, path: str, body: Optional[bytes],
+                headers: Dict[str, str]) -> None:
+        body = body or b""
+        # work on a local ref: a concurrent close() nulls self.sock, and
+        # that must surface as a retriable OSError, not an AttributeError
+        sock = self.sock
+        if sock is None:
+            self.connect()
+            sock = self.sock
+            if sock is None:
+                raise ConnectionError("connection closed while connecting")
+        else:
+            sock.settimeout(self.timeout)
+        head = (f"{method} {path} HTTP/1.1\r\n"
+                f"Host: {self.host}:{self.port}\r\n"
+                f"Content-Length: {len(body)}\r\n"
+                + "".join(f"{k}: {v}\r\n" for k, v in headers.items())
+                ).encode("latin-1")
+        sock.sendall(head + b"\r\n" + body)
+
+    def getresponse(self) -> Tuple[int, Dict[str, str], bytes]:
+        """Read one response: ``(status, lowercase headers, body)``.
+
+        EOF before a complete response raises ``RemoteDisconnected`` so
+        the caller's stale-keep-alive retry logic applies unchanged."""
+        sock = self.sock
+        if sock is None:
+            raise http.client.RemoteDisconnected("connection closed")
+        buf = self._rbuf
+        while b"\r\n\r\n" not in buf:
+            chunk = sock.recv(65536)
+            if not chunk:
+                self.close()
+                raise http.client.RemoteDisconnected(
+                    "server closed connection before a complete response")
+            buf += chunk
+        head, _, rest = buf.partition(b"\r\n\r\n")
+        lines = head.split(b"\r\n")
+        try:
+            status = int(lines[0].split(None, 2)[1])
+        except (IndexError, ValueError):
+            self.close()
+            raise http.client.BadStatusLine(
+                lines[0].decode("latin-1", "replace")) from None
+        hdrs: Dict[str, str] = {}
+        for line in lines[1:]:
+            key, _, value = line.partition(b":")
+            hdrs[key.strip().lower().decode("latin-1")] = \
+                value.strip().decode("latin-1")
+        if "chunked" in hdrs.get("transfer-encoding", "").lower():
+            # only /v1/stream chunks, and that rides _NoDelayHTTPConnection
+            self.close()
+            raise http.client.HTTPException(
+                "unexpected chunked response on the control path")
+        length = int(hdrs.get("content-length") or 0)
+        while len(rest) < length:
+            chunk = sock.recv(65536)
+            if not chunk:
+                self.close()
+                raise http.client.RemoteDisconnected(
+                    "connection lost mid-response")
+            rest += chunk
+        body, self._rbuf = rest[:length], rest[length:]
+        if hdrs.get("connection", "").lower() == "close":
+            self.close()
+        return status, hdrs, body
+
+
+class _Coalescer:
+    """Transparent micro-batching submit buffer (group commit).
+
+    Callers enqueue ``(task, deadline_s)`` and get a Future resolving to a
+    ticket.  One flusher thread drains the buffer into
+    ``/v1/submit_coalesced`` frames: the FIRST entry flushes immediately
+    (an idle buffer adds no latency), and everything that arrives while a
+    flush is on the wire rides the next frame — natural batching whose
+    delay is bounded by one wire round-trip, plus an optional ``linger_s``
+    for callers that prefer fuller frames.  A frame never exceeds
+    ``MAX_BATCH`` entries, and entries carrying an explicit deadline skip
+    the linger entirely (deadline pressure flushes).  Outcomes are
+    per-entry: one stranger's malformed task fails only its own Future."""
+
+    MAX_BATCH = 32
+
+    def __init__(self, client: "ControlPlaneClient", linger_s: float = 0.0):
+        self._client = client
+        self.linger_s = max(0.0, linger_s)
+        self._cond = threading.Condition()
+        self._buf: List[Tuple[Dict, "Future[str]"]] = []
+        self._thread: Optional[threading.Thread] = None
+        self._closed = False
+        #: lifetime counters — the batching-ratio observability the
+        #: benchmarks and federation tests read
+        self.flushes = 0
+        self.entries = 0
+
+    def enqueue(self, task: TaskRequest,
+                deadline_s: Optional[float] = None) -> "Future[str]":
+        fut: "Future[str]" = Future()
+        entry = {"task": wire.task_to_wire(task)}
+        if deadline_s is not None:
+            entry["deadline_s"] = deadline_s
+        with self._cond:
+            if self._closed:
+                raise GatewayError(ErrorCode.PLANE_UNAVAILABLE,
+                                   "client closed")
+            self._buf.append((entry, fut))
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(
+                    target=self._run, daemon=True,
+                    name="phys-mcp-client-coalescer")
+                self._thread.start()
+            self._cond.notify()
+        return fut
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while not self._buf and not self._closed:
+                    self._cond.wait()
+                if self._closed and not self._buf:
+                    return
+                if self.linger_s > 0 and len(self._buf) < self.MAX_BATCH \
+                        and not any("deadline_s" in e for e, _ in self._buf):
+                    self._cond.wait(self.linger_s)
+                batch = self._buf[:self.MAX_BATCH]
+                del self._buf[:self.MAX_BATCH]
+            self._flush(batch)
+
+    def _flush(self, batch: List[Tuple[Dict, "Future[str]"]]) -> None:
+        self.flushes += 1
+        self.entries += len(batch)
+        envelope = wire.request_envelope(
+            "submit_coalesced", {"entries": [e for e, _ in batch]})
+        try:
+            body = self._client._call("POST", "/v1/submit_coalesced",
+                                      envelope)
+            outcomes = body["outcomes"]
+            if len(outcomes) != len(batch):
+                raise GatewayError(
+                    ErrorCode.INTERNAL,
+                    f"coalesced submit returned {len(outcomes)} outcomes "
+                    f"for {len(batch)} entries")
+        except Exception as e:                             # noqa: BLE001
+            for _, fut in batch:
+                if not fut.done():
+                    fut.set_exception(e)
+            return
+        for (_, fut), out in zip(batch, outcomes):
+            if fut.done():
+                continue
+            if "ticket" in out:
+                fut.set_result(out["ticket"])
+            else:
+                err = WireError.from_wire(out.get("error") or {})
+                fut.set_exception(GatewayError(err.code, err.message,
+                                               err.detail))
+
+
+class _ResultMux:
+    """Shared completion waiter over ``/v1/poll_coalesced``: every thread
+    blocked in :meth:`ControlPlaneClient.invoke_coalesced` parks a Future
+    here, and ONE poller thread carries all outstanding tickets in a
+    single long-poll frame per round — N concurrent waiters cost one wire
+    round-trip per completion wave, not N polling loops."""
+
+    POLL_ROUND_S = 5.0
+
+    def __init__(self, client: "ControlPlaneClient"):
+        self._client = client
+        self._lock = threading.Lock()
+        self._waiting: Dict[str, Future] = {}
+        self._thread: Optional[threading.Thread] = None
+
+    def register(self, ticket: str) -> Future:
+        fut: Future = Future()
+        with self._lock:
+            self._waiting[ticket] = fut
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(
+                    target=self._run, daemon=True,
+                    name="phys-mcp-client-resultmux")
+                self._thread.start()
+        return fut
+
+    def forget(self, ticket: str) -> None:
+        with self._lock:
+            self._waiting.pop(ticket, None)
+
+    def _run(self) -> None:
+        while True:
+            # exit decision and registration share one lock: either this
+            # pass sees a fresh ticket, or register() sees the cleared
+            # thread slot and starts a successor — never neither
+            with self._lock:
+                tickets = [t for t, f in self._waiting.items()
+                           if not f.done()]
+                if not tickets:
+                    self._thread = None
+                    return
+            try:
+                outcomes = self._client.poll_coalesced(
+                    tickets, wait_s=self.POLL_ROUND_S)
+            except Exception as e:                         # noqa: BLE001
+                # the plane itself is unreachable: fail every waiter —
+                # they own retry policy, not this loop
+                with self._lock:
+                    failed = [self._waiting.pop(t) for t in tickets
+                              if t in self._waiting]
+                for fut in failed:
+                    if not fut.done():
+                        fut.set_exception(e)
+                continue
+            for out in outcomes:
+                if out.get("state") == "pending":
+                    continue
+                with self._lock:
+                    fut = self._waiting.pop(out.get("ticket"), None)
+                if fut is not None and not fut.done():
+                    fut.set_result(out)
+
+
 class ControlPlaneClient:
-    """One remote control plane, addressed by gateway URL."""
+    """One remote control plane, addressed by gateway URL.
+
+    ``codec="binary"`` negotiates the compact v1.2 envelope framing both
+    ways; the default ``"json"`` client is wire-identical to v1.1.
+    ``coalesce_linger_s`` tunes the micro-batching buffer (0 = flush
+    immediately, rely on group commit for batching)."""
+
+    #: most keep-alive sockets the per-thread pool retains; LRU beyond
+    #: this is closed (its owner transparently reconnects on next use)
+    MAX_POOLED_CONNS = 32
 
     def __init__(self, url: str, timeout_s: float = 30.0,
-                 api_key: Optional[str] = None):
+                 api_key: Optional[str] = None, codec: str = "json",
+                 coalesce_linger_s: float = 0.0):
+        if codec not in ("json", "binary"):
+            raise ValueError(f"codec must be 'json' or 'binary', not "
+                             f"{codec!r}")
         self.url = url.rstrip("/")
         parsed = urllib.parse.urlparse(self.url)
         self._host = parsed.hostname or "127.0.0.1"
         self._port = parsed.port or 80
         self.timeout_s = timeout_s
         self.api_key = api_key
+        self.codec = codec
+        self._binary = codec == "binary"
         # persistent keep-alive connection per calling thread: control-plane
         # messages are small, so connection setup would dominate the wire
-        # control path (http.client connections are not thread-safe)
-        self._local = threading.local()
+        # control path (connections are not thread-safe).  The pool is
+        # keyed by thread ident, LRU-ordered, and bounded: dead owners are
+        # reaped on every lookup, live victims just lose their socket (the
+        # conn reconnects transparently on next use).
+        self._pool: "OrderedDict[int, Tuple[threading.Thread, _WireConn]]" = OrderedDict()  # noqa: E501
+        self._pool_lock = threading.Lock()
+        self._coalescer = _Coalescer(self, linger_s=coalesce_linger_s)
+        self._mux = _ResultMux(self)
 
     # -- transport ------------------------------------------------------------
-    def _conn(self, timeout_s: float) -> http.client.HTTPConnection:
-        conn = getattr(self._local, "conn", None)
-        if conn is None:
-            conn = http.client.HTTPConnection(self._host, self._port,
-                                              timeout=timeout_s)
-            self._local.conn = conn
-        else:
-            conn.timeout = timeout_s
-            if conn.sock is not None:
-                conn.sock.settimeout(timeout_s)
+    def _conn(self, timeout_s: float) -> _WireConn:
+        ident = threading.get_ident()
+        with self._pool_lock:
+            entry = self._pool.get(ident)
+            if entry is None:
+                conn = _WireConn(self._host, self._port, timeout_s)
+                self._pool[ident] = (threading.current_thread(), conn)
+            else:
+                conn = entry[1]
+                current = threading.current_thread()
+                if entry[0] is not current:
+                    # the OS recycled a dead thread's ident: re-own the
+                    # slot (else a reap sees a "dead owner" and closes the
+                    # conn mid-call) and drop the inherited socket rather
+                    # than trust another thread's leftover wire state
+                    conn.close()
+                    self._pool[ident] = (current, conn)
+                self._pool.move_to_end(ident)
+                conn.timeout = timeout_s
+            self._reap_locked(ident)
         return conn
 
+    def _reap_locked(self, current_ident: int) -> None:
+        """Close connections whose owning thread exited, then LRU-evict
+        down to the cap (skipping the caller's and any in-flight conns —
+        closing those mid-request would turn pool hygiene into spurious
+        PLANE_UNAVAILABLE errors)."""
+        dead = [i for i, (t, _) in self._pool.items()
+                if i != current_ident and not t.is_alive()]
+        for i in dead:
+            _, conn = self._pool.pop(i)
+            try:
+                conn.close()
+            except Exception:                              # noqa: BLE001
+                pass
+        while len(self._pool) > self.MAX_POOLED_CONNS:
+            victim = next((i for i, (_, c) in self._pool.items()
+                           if i != current_ident and not c.in_flight), None)
+            if victim is None:
+                break
+            _, conn = self._pool.pop(victim)
+            try:
+                conn.close()
+            except Exception:                              # noqa: BLE001
+                pass
+
     def _drop_conn(self) -> None:
-        conn = getattr(self._local, "conn", None)
-        if conn is not None:
-            conn.close()
-        self._local.conn = None
+        with self._pool_lock:
+            entry = self._pool.pop(threading.get_ident(), None)
+        if entry is not None:
+            try:
+                entry[1].close()
+            except Exception:                              # noqa: BLE001
+                pass
+
+    def close(self) -> None:
+        """Release pooled sockets and background coalescing threads.  The
+        client keeps working after close (new connections are created on
+        demand); this just returns resources eagerly."""
+        self._coalescer.close()
+        with self._pool_lock:
+            entries = list(self._pool.values())
+            self._pool.clear()
+        for _, conn in entries:
+            try:
+                conn.close()
+            except Exception:                              # noqa: BLE001
+                pass
 
     def _call(self, method: str, path: str,
               envelope: Optional[Dict] = None,
               timeout_s: Optional[float] = None) -> Dict:
-        data = wire.dumps(envelope) if envelope is not None else None
-        headers = self._headers()
+        if envelope is not None:
+            data, ctype = wire.encode_envelope(envelope, self._binary)
+        else:
+            data, ctype = None, None
+        headers = self._headers(ctype)
         payload = None
         # one retry on a STALE keep-alive connection (the server idle-closed
         # between calls), but only when a re-send cannot double-execute:
@@ -106,11 +486,12 @@ class ControlPlaneClient:
             conn = self._conn(timeout_s or self.timeout_s)
             fresh = conn.sock is None
             sent = False
+            conn.in_flight = True
             try:
-                conn.request(method, path, body=data, headers=headers)
+                conn.request(method, path, data, headers)
                 sent = True
-                resp = conn.getresponse()
-                payload = wire.loads(resp.read())
+                _status, rhdrs, raw = conn.getresponse()
+                payload = wire.decode_envelope(raw, rhdrs.get("content-type"))
                 break
             except (http.client.HTTPException, ConnectionError,
                     socket.timeout, TimeoutError, OSError) as e:
@@ -123,13 +504,21 @@ class ControlPlaneClient:
                         ErrorCode.PLANE_UNAVAILABLE,
                         f"control plane at {self.url} unreachable: "
                         f"{e!r}") from e
+            finally:
+                conn.in_flight = False
         try:
             return wire.parse_response(payload)
         except ControlPlaneError as e:
             raise GatewayError(e.code, e.message, e.detail) from None
 
-    def _headers(self) -> Dict[str, str]:
-        headers = {"Content-Type": "application/json"}
+    def _headers(self, content_type: Optional[str] = None) -> Dict[str, str]:
+        headers = {
+            "Content-Type": content_type or wire.JSON_CONTENT_TYPE,
+            # response codec negotiation is per-request: the server answers
+            # JSON unless this explicitly asks for the binary framing
+            "Accept": (wire.BINARY_CONTENT_TYPE if self._binary
+                       else wire.JSON_CONTENT_TYPE),
+        }
         if self.api_key is not None:
             headers["Authorization"] = f"Bearer {self.api_key}"
         return headers
@@ -202,14 +591,15 @@ class ControlPlaneClient:
         params["heartbeat_s"] = heartbeat_s
         if max_s is not None:
             params["max_s"] = max_s
-        conn = http.client.HTTPConnection(
+        conn = _NoDelayHTTPConnection(
             self._host, self._port, timeout=max(heartbeat_s * 3.0, 5.0))
         try:
             conn.request("GET", f"/v1/stream{self._qs(params)}",
                          headers=self._headers())
             resp = conn.getresponse()
             if resp.status != 200:
-                payload = wire.loads(resp.read())
+                payload = wire.decode_envelope(
+                    resp.read(), resp.getheader("Content-Type"))
                 conn.close()
                 wire.parse_response(payload)   # raises the transported error
                 raise GatewayError(ErrorCode.INTERNAL,
@@ -233,6 +623,30 @@ class ControlPlaneClient:
     #: saturation retries before giving up (per invoke call)
     BACKPRESSURE_RETRIES = 2
 
+    @staticmethod
+    def _budget_deadline(task: TaskRequest,
+                         deadline_s: Optional[float]) -> Optional[float]:
+        budget_s = deadline_s if deadline_s is not None else (
+            task.latency_budget_ms / 1e3
+            if task.latency_budget_ms is not None else None)
+        return (time.monotonic() + budget_s) if budget_s is not None else None
+
+    @staticmethod
+    def _backoff_delay(e: GatewayError, attempt: int, retries: int,
+                       give_up_at: Optional[float]) -> Optional[float]:
+        """Jittered QUEUE_SATURATED backoff, or None when the error should
+        propagate (not saturation, retries exhausted, or honoring the hint
+        would blow the task's own deadline budget)."""
+        hint = e.detail.get("retry_after_s")
+        if (e.code is not ErrorCode.QUEUE_SATURATED or hint is None
+                or attempt >= retries):
+            return None
+        delay = float(hint) * (0.5 + random.random())       # 0.5x–1.5x
+        if give_up_at is not None \
+                and time.monotonic() + delay > give_up_at:
+            return None                # honoring the hint would blow budget
+        return delay
+
     def invoke(self, task: TaskRequest,
                deadline_s: Optional[float] = None,
                backpressure_retries: Optional[int] = None
@@ -254,25 +668,16 @@ class ControlPlaneClient:
         timeout = self.timeout_s + (deadline_s or 0.0)
         retries = (self.BACKPRESSURE_RETRIES if backpressure_retries is None
                    else backpressure_retries)
-        budget_s = deadline_s if deadline_s is not None else (
-            task.latency_budget_ms / 1e3
-            if task.latency_budget_ms is not None else None)
-        give_up_at = (time.monotonic() + budget_s) if budget_s is not None \
-            else None
+        give_up_at = self._budget_deadline(task, deadline_s)
         attempt = 0
         while True:
             try:
                 return self._outcome(self._call("POST", "/v1/invoke",
                                                 envelope, timeout_s=timeout))
             except GatewayError as e:
-                hint = e.detail.get("retry_after_s")
-                if (e.code is not ErrorCode.QUEUE_SATURATED or hint is None
-                        or attempt >= retries):
+                delay = self._backoff_delay(e, attempt, retries, give_up_at)
+                if delay is None:
                     raise
-                delay = float(hint) * (0.5 + random.random())  # 0.5x–1.5x
-                if give_up_at is not None \
-                        and time.monotonic() + delay > give_up_at:
-                    raise              # honoring the hint would blow budget
                 attempt += 1
                 time.sleep(delay)
 
@@ -316,3 +721,71 @@ class ControlPlaneClient:
             out = self.poll(ticket, wait_s=min(remaining, 5.0))
             if out is not None:
                 return out
+
+    # -- coalesced execution (v1.2) -------------------------------------------
+    def submit_coalesced(self, task: TaskRequest,
+                         deadline_s: Optional[float] = None) -> str:
+        """Async submission through the micro-batching buffer: concurrent
+        callers share one ``/v1/submit_coalesced`` wire frame.  Returns a
+        ticket usable with :meth:`poll` / :meth:`result` /
+        :meth:`poll_coalesced` exactly like :meth:`submit`."""
+        fut = self._coalescer.enqueue(task, deadline_s)
+        try:
+            return fut.result(timeout=self.timeout_s + 30.0)
+        except (FutureTimeout, TimeoutError):
+            raise GatewayError(
+                ErrorCode.PLANE_UNAVAILABLE,
+                f"coalesced submit to {self.url} stalled") from None
+
+    def poll_coalesced(self, tickets: Sequence[str],
+                       wait_s: float = 0.0) -> List[Dict]:
+        """One wire round-trip reporting the state of N tickets.  Returns
+        index-aligned outcome dicts: ``{"ticket", "state": "pending"}`` or
+        ``{"ticket", "state": "done", "ok", "result"/"error", ...}`` —
+        resolved tickets are delivered-once, exactly like :meth:`poll`."""
+        envelope = wire.request_envelope(
+            "poll_coalesced", {"tickets": list(tickets), "wait_s": wait_s})
+        body = self._call("POST", "/v1/poll_coalesced", envelope,
+                          timeout_s=self.timeout_s + wait_s)
+        return body["outcomes"]
+
+    def _coalesced_result(self, out: Dict
+                          ) -> Tuple[InvocationResult, OrchestrationTrace]:
+        if out.get("ok"):
+            return self._outcome(out)
+        err = WireError.from_wire(out.get("error") or {})
+        raise GatewayError(err.code, err.message, err.detail)
+
+    def invoke_coalesced(self, task: TaskRequest,
+                         deadline_s: Optional[float] = None,
+                         backpressure_retries: Optional[int] = None
+                         ) -> Tuple[InvocationResult, OrchestrationTrace]:
+        """Same contract as :meth:`invoke`, but both wire legs are shared:
+        the submit rides the coalescing buffer and the completion wait
+        rides the client-wide :class:`_ResultMux` long-poll — N concurrent
+        federated forwards cost ~2 round-trips, not 2N.  Saturation backoff
+        behaves exactly like :meth:`invoke`."""
+        retries = (self.BACKPRESSURE_RETRIES if backpressure_retries is None
+                   else backpressure_retries)
+        give_up_at = self._budget_deadline(task, deadline_s)
+        wait_budget = self.timeout_s + (deadline_s or 0.0)
+        attempt = 0
+        while True:
+            try:
+                ticket = self.submit_coalesced(task, deadline_s)
+                fut = self._mux.register(ticket)
+                try:
+                    out = fut.result(timeout=wait_budget)
+                except (FutureTimeout, TimeoutError):
+                    self._mux.forget(ticket)
+                    raise GatewayError(
+                        ErrorCode.DEADLINE,
+                        f"ticket {ticket} still pending after "
+                        f"{wait_budget}s") from None
+                return self._coalesced_result(out)
+            except GatewayError as e:
+                delay = self._backoff_delay(e, attempt, retries, give_up_at)
+                if delay is None:
+                    raise
+                attempt += 1
+                time.sleep(delay)

@@ -25,6 +25,7 @@ Design rules:
 from __future__ import annotations
 
 import json
+import struct as _struct
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
@@ -45,7 +46,14 @@ from repro.core.telemetry import RuntimeSnapshot
 #: ``/v1/stream`` + ``/v1/topology`` endpoints, ``retry_after_s`` backoff
 #: hints on QUEUE_SATURATED errors, and per-event ``severity`` — 1.0 peers
 #: ignore all of it and keep working.
-PROTOCOL_VERSION = "1.1"
+#: 1.2 (MINOR, additive): the compact binary envelope codec
+#: (``application/x-physmcp``, negotiated per request via ``Content-Type``
+#: / ``Accept`` — JSON stays the default and the JSON wire form is
+#: byte-for-byte what 1.1 produced), plus the coalesced execution
+#: endpoints ``POST /v1/submit_coalesced`` (one round-trip carries N task
+#: submissions, per-entry outcomes) and ``POST /v1/poll_coalesced`` (one
+#: round-trip polls N tickets).  1.1 peers never see any of it.
+PROTOCOL_VERSION = "1.2"
 #: majors this implementation can parse
 SUPPORTED_MAJORS = ("1",)
 
@@ -218,6 +226,286 @@ def loads(data: bytes) -> Dict:
         return json.loads(data or b"{}")
     except json.JSONDecodeError as e:
         raise ProtocolError(f"invalid JSON: {e}") from e
+
+
+# ---------------------------------------------------------------------------
+# binary envelope codec (protocol 1.2): one length-prefixed frame per
+# envelope.  Purpose-built for the control path: dict keys from the fixed
+# field-tag table encode as 1-2 bytes instead of quoted strings, floats
+# travel as raw IEEE doubles instead of repr() text, and float vectors
+# (tensor payloads) ride as packed f64 arrays — no base64, no JSON
+# re-encode.  Decoding a frame yields EXACTLY what json.loads would have
+# yielded for the equivalent JSON body (property-tested), so every endpoint
+# is codec-agnostic: negotiation happens at the HTTP layer via
+# ``Content-Type`` (request body codec) and ``Accept`` (response codec).
+
+
+#: content type announcing/requesting the binary codec; anything else —
+#: including absence — means JSON, so 1.1 peers keep working unchanged
+BINARY_CONTENT_TYPE = "application/x-physmcp"
+JSON_CONTENT_TYPE = "application/json"
+
+_MAGIC = 0xA7          # first frame byte: never valid leading JSON
+_CODEC_VERSION = 1
+
+# value tags
+_T_NONE, _T_TRUE, _T_FALSE = 0x00, 0x01, 0x02
+_T_INT, _T_FLOAT = 0x03, 0x04
+_T_STR, _T_BYTES = 0x05, 0x06
+_T_LIST, _T_DICT = 0x07, 0x08
+_T_F64S = 0x09         # packed float64 array (pure-float lists)
+_T_IKEY = 0x0A         # interned string (field-tag table index)
+
+#: the field-tag intern table: common envelope/task/result/trace/snapshot
+#: keys encode as a varint index instead of a length-prefixed string.
+#: APPEND-ONLY — reordering or removing entries is a MAJOR protocol break
+#: (both ends index into this table by position).
+INTERNED_FIELDS = (
+    "protocol_version", "kind", "ok", "body", "error", "plane_id",
+    "code", "message", "detail", "task", "tasks", "deadline_s",
+    "task_id", "function", "input_modality", "output_modality", "payload",
+    "required_telemetry", "latency_budget_ms", "tenant", "priority",
+    "backend_preference", "allow_fallback", "twin_mode",
+    "twin_min_confidence", "supervision_available", "hop_budget",
+    "deadline_budget_ms", "route", "metadata",
+    "result", "trace", "status", "resource_id", "session_id", "output",
+    "telemetry", "artifacts", "timing_ms", "backend_ms", "total_ms",
+    "queue_wait_ms", "error_code", "served_by", "twin_confidence",
+    "selected", "attempts", "control_overhead_ms", "matched", "rejected",
+    "ticket", "tickets", "entries", "outcomes", "state", "wait_s",
+    "events", "next_cursor", "dropped", "dropped_events", "seq",
+    "timestamp", "severity", "fields", "health_status", "drift_score",
+    "queue_depth", "readiness", "extra", "execution_ms", "observation_ms",
+    "descriptors", "descriptor", "snapshot", "twin", "retry_after_s",
+)
+_INTERN_IDS = {s: i for i, s in enumerate(INTERNED_FIELDS)}
+
+
+def _uvarint(out: bytearray, n: int) -> None:
+    while True:
+        b = n & 0x7F
+        n >>= 7
+        if n:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return
+
+
+def _json_key(k) -> str:
+    """Binary dicts mirror json.dumps key coercion so both codecs decode
+    to identical objects (JSON object keys are always strings)."""
+    if isinstance(k, str):
+        return k
+    if k is True:
+        return "true"
+    if k is False:
+        return "false"
+    if k is None:
+        return "null"
+    if isinstance(k, (int, float)):
+        return json.dumps(k)
+    raise TypeError(f"{type(k).__name__} is not a wire-serializable key")
+
+
+def _enc(out: bytearray, o) -> None:
+    if o is None:
+        out.append(_T_NONE)
+    elif o is True:
+        out.append(_T_TRUE)
+    elif o is False:
+        out.append(_T_FALSE)
+    elif isinstance(o, int) and not isinstance(o, bool):
+        out.append(_T_INT)
+        # zigzag, arbitrary precision: small magnitudes stay small
+        _uvarint(out, o << 1 if o >= 0 else ((-o) << 1) - 1)
+    elif isinstance(o, float):
+        out.append(_T_FLOAT)
+        out += _pack_d(o)
+    elif isinstance(o, str):
+        idx = _INTERN_IDS.get(o)
+        if idx is not None:
+            out.append(_T_IKEY)
+            _uvarint(out, idx)
+        else:
+            raw = o.encode("utf-8")
+            out.append(_T_STR)
+            _uvarint(out, len(raw))
+            out += raw
+    elif isinstance(o, (bytes, bytearray, memoryview)):
+        raw = bytes(o)
+        out.append(_T_BYTES)
+        _uvarint(out, len(raw))
+        out += raw
+    elif isinstance(o, dict):
+        out.append(_T_DICT)
+        _uvarint(out, len(o))
+        for k, v in o.items():
+            _enc(out, _json_key(k))
+            _enc(out, v)
+    elif isinstance(o, np.ndarray):
+        if o.ndim == 1 and np.issubdtype(o.dtype, np.floating):
+            out.append(_T_F64S)
+            _uvarint(out, o.shape[0])
+            out += o.astype("<f8", copy=False).tobytes()
+        else:
+            _enc(out, o.tolist())
+    elif isinstance(o, (np.floating, np.integer, np.bool_)):
+        _enc(out, o.item())
+    elif isinstance(o, (list, tuple, set, frozenset)):
+        items = list(o)
+        if items and all(type(x) is float for x in items):
+            # the tensor fast path: payload vectors as raw packed doubles
+            out.append(_T_F64S)
+            _uvarint(out, len(items))
+            out += _pack_ds(items)
+        else:
+            out.append(_T_LIST)
+            _uvarint(out, len(items))
+            for x in items:
+                _enc(out, x)
+    else:
+        # same refusal as the JSON encoder: silent stringification would
+        # make the remote plane execute on corrupted input
+        raise TypeError(f"{type(o).__name__} is not wire-serializable")
+
+
+_pack_d = _struct.Struct("<d").pack
+
+
+def _pack_ds(xs) -> bytes:
+    return _struct.pack(f"<{len(xs)}d", *xs)
+
+
+class _Reader:
+    __slots__ = ("data", "pos", "end")
+
+    def __init__(self, data: bytes, pos: int, end: int):
+        self.data, self.pos, self.end = data, pos, end
+
+    def take(self, n: int) -> bytes:
+        if self.pos + n > self.end:
+            raise ProtocolError("binary frame truncated")
+        out = self.data[self.pos:self.pos + n]
+        self.pos += n
+        return out
+
+    def uvarint(self) -> int:
+        shift, n = 0, 0
+        while True:
+            if self.pos >= self.end:
+                raise ProtocolError("binary frame truncated in varint")
+            if shift > 70:
+                raise ProtocolError("binary varint overflow")
+            b = self.data[self.pos]
+            self.pos += 1
+            n |= (b & 0x7F) << shift
+            if not b & 0x80:
+                return n
+            shift += 7
+
+
+def _dec(r: _Reader):
+    tag = r.take(1)[0]
+    if tag == _T_NONE:
+        return None
+    if tag == _T_TRUE:
+        return True
+    if tag == _T_FALSE:
+        return False
+    if tag == _T_INT:
+        z = r.uvarint()
+        return (z >> 1) ^ -(z & 1)
+    if tag == _T_FLOAT:
+        return _struct.unpack("<d", r.take(8))[0]
+    if tag == _T_STR:
+        try:
+            return r.take(r.uvarint()).decode("utf-8")
+        except UnicodeDecodeError as e:
+            raise ProtocolError(f"binary frame has invalid utf-8: {e}")
+    if tag == _T_BYTES:
+        return r.take(r.uvarint())
+    if tag == _T_LIST:
+        return [_dec(r) for _ in range(r.uvarint())]
+    if tag == _T_DICT:
+        out = {}
+        for _ in range(r.uvarint()):
+            k = _dec(r)
+            if not isinstance(k, str):
+                raise ProtocolError("binary dict key must be a string")
+            out[k] = _dec(r)
+        return out
+    if tag == _T_F64S:
+        n = r.uvarint()
+        return list(_struct.unpack(f"<{n}d", r.take(8 * n)))
+    if tag == _T_IKEY:
+        idx = r.uvarint()
+        if idx >= len(INTERNED_FIELDS):
+            raise ProtocolError(f"unknown interned field tag {idx} "
+                                "(speaking a newer minor?)")
+        return INTERNED_FIELDS[idx]
+    raise ProtocolError(f"unknown binary tag 0x{tag:02x}")
+
+
+def dumps_binary(obj: Dict) -> bytes:
+    """One binary envelope frame: magic + codec version + varint length +
+    tagged value tree."""
+    body = bytearray()
+    try:
+        _enc(body, obj)
+    except (TypeError, ValueError) as e:
+        raise ProtocolError(f"value not wire-serializable: {e}") from e
+    frame = bytearray((_MAGIC, _CODEC_VERSION))
+    _uvarint(frame, len(body))
+    frame += body
+    return bytes(frame)
+
+
+def loads_binary(data: bytes) -> Dict:
+    data = bytes(data or b"")
+    if len(data) < 3 or data[0] != _MAGIC:
+        raise ProtocolError("not a binary envelope frame (bad magic)")
+    if data[1] != _CODEC_VERSION:
+        raise ProtocolError(f"unsupported binary codec version {data[1]}")
+    r = _Reader(data, 2, len(data))
+    length = r.uvarint()
+    if r.pos + length != len(data):
+        raise ProtocolError(
+            f"binary frame length mismatch (prefix says {length}, "
+            f"got {len(data) - r.pos})")
+    r.end = r.pos + length
+    obj = _dec(r)
+    if r.pos != r.end:
+        raise ProtocolError("binary frame has trailing bytes")
+    return obj
+
+
+def is_binary(data: bytes) -> bool:
+    """Sniff a request/response body: binary frames always lead with the
+    magic byte, which can never start JSON."""
+    return bool(data) and data[0] == _MAGIC
+
+
+def wants_binary(header_value: Optional[str]) -> bool:
+    """Content negotiation: does a ``Content-Type``/``Accept`` header value
+    ask for the binary codec?"""
+    return bool(header_value) and BINARY_CONTENT_TYPE in header_value
+
+
+def encode_envelope(envelope: Dict, binary: bool) -> Tuple[bytes, str]:
+    """Encode one envelope for the negotiated codec → (body, content-type)."""
+    if binary:
+        return dumps_binary(envelope), BINARY_CONTENT_TYPE
+    return dumps(envelope), JSON_CONTENT_TYPE
+
+
+def decode_envelope(data: bytes, content_type: Optional[str] = None) -> Dict:
+    """Decode a request/response body by declared content type, falling
+    back to frame sniffing (a misdeclared frame should fail loudly in the
+    codec, not silently mis-parse)."""
+    if wants_binary(content_type) or is_binary(data):
+        return loads_binary(data)
+    return loads(data)
 
 
 #: HTTP status per taxonomy code (the envelope's error.code stays the

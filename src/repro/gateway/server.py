@@ -2,11 +2,10 @@
 
 Exposes an :class:`~repro.core.orchestrator.Orchestrator` (plus a
 :class:`~repro.core.scheduler.ControlPlaneScheduler` worker pool for the
-async paths) over loopback-style HTTP, using the same threaded
-``ThreadingHTTPServer`` idiom as ``repro.substrates.http_fast.FastService``.
-Every capability that was previously reachable only as an in-process Python
-call — discover, describe, invoke, batched/async submission, telemetry,
-health, twin state — becomes a versioned protocol-v1 endpoint:
+async paths) over loopback-style HTTP.  Every capability that was
+previously reachable only as an in-process Python call — discover,
+describe, invoke, batched/async submission, telemetry, health, twin state
+— becomes a versioned protocol-v1 endpoint:
 
 ========  ======================  =============================================
 method    path                    semantics
@@ -17,7 +16,9 @@ GET       /v1/describe/<rid>      one resource: descriptor + snapshot + twin
 GET       /v1/twin/<rid>          twin-plane state for one resource
 POST      /v1/invoke              synchronous submit → (result, trace)
 POST      /v1/submit              async submit → ticket (scheduler future)
-POST      /v1/submit_many         batched async submit → tickets
+POST      /v1/submit_many         batched async submit → tickets (atomic)
+POST      /v1/submit_coalesced    batched submit, per-entry outcomes (v1.2)
+POST      /v1/poll_coalesced      batched ticket poll, one round-trip (v1.2)
 GET       /v1/poll/<ticket>       poll/await an async ticket
 GET       /v1/telemetry           long-poll cursor over the TelemetryBus
 GET       /v1/stream              server-push telemetry subscription
@@ -25,6 +26,22 @@ GET       /v1/stream              server-push telemetry subscription
                                   — see ``repro.gateway.stream``)
 GET       /v1/topology            plane identity + federation reachability
 ========  ======================  =============================================
+
+**Wire path (v1.2):** the server is a single-threaded ``selectors`` event
+loop — non-blocking accept/read/write, connection multiplexing, and
+per-connection write buffers — so one process sustains thousands of
+concurrent keep-alive clients instead of one OS thread each.  The loop
+thread only ever parses requests and moves bytes; endpoint handlers either
+answer inline (the read surface) or register completion callbacks
+(invoke/poll ride scheduler futures, telemetry long-polls ride cursor-log
+listeners, ``/v1/stream`` gets a dedicated writer thread that enqueues
+chunks through the loop).  Each request's responder is claim-once, so a
+future callback and its timeout timer can race without double-sending.
+
+Envelopes are content-negotiated per request: ``Content-Type`` selects the
+request codec, ``Accept`` the response codec — JSON (protocol v1.1
+unchanged on the wire) or the compact binary framing from
+``repro.gateway.protocol`` (``application/x-physmcp``).
 
 Rejections travel as structured :class:`~repro.core.errors.WireError`
 envelopes (taxonomy code + prose + full trace in ``detail``), never as bare
@@ -41,14 +58,16 @@ may touch, instead of trusting whatever tenant the client typed.
 """
 from __future__ import annotations
 
+import heapq
 import itertools
+import selectors
 import socket
 import threading
 import time
 from collections import deque
-from concurrent.futures import Future, TimeoutError as FutureTimeout
-from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Dict, List, Optional, Tuple
+from concurrent.futures import Future
+from http.client import responses as _REASONS
+from typing import Callable, Dict, List, Optional, Tuple
 from urllib.parse import parse_qs, urlparse
 
 from repro.core.errors import ControlPlaneError, ErrorCode, WireError
@@ -76,7 +95,12 @@ class TelemetryCursorLog:
     subscriber costs at most ``capacity`` retained entries, never unbounded
     growth.  Lifetime evictions are counted (``dropped_events`` in every
     response), so a client can tell "nothing happened" apart from "events
-    existed but aged out of the ring before anyone read them"."""
+    existed but aged out of the ring before anyone read them".
+
+    Two wait styles: blocking ``read(cursor, timeout_s=...)`` for caller
+    threads (stream subscriptions), and ``add_listener`` for the event-loop
+    server's parked long-polls — listeners are poked once per append (and
+    once on close) WITHOUT anyone holding a thread on the wait."""
 
     def __init__(self, bus, capacity: int = 4096):
         self.capacity = capacity
@@ -88,6 +112,7 @@ class TelemetryCursorLog:
         self._dropped_events = 0        # lifetime ring evictions
         self._closed = False
         self._cond = threading.Condition()
+        self._listeners: List[Callable[[], None]] = []
         bus.subscribe(self._on_event)
 
     def close(self) -> None:
@@ -97,6 +122,26 @@ class TelemetryCursorLog:
         with self._cond:
             self._closed = True
             self._cond.notify_all()
+            listeners = list(self._listeners)
+        for cb in listeners:            # outside the lock: they re-enter read
+            try:
+                cb()
+            except Exception:                              # noqa: BLE001
+                pass
+
+    def add_listener(self, cb: Callable[[], None]) -> None:
+        """Register a no-argument callable poked after every append (and on
+        close).  Callbacks run on the EMITTING thread, outside the log lock
+        — they may call ``read`` but must not block."""
+        with self._cond:
+            self._listeners.append(cb)
+
+    def remove_listener(self, cb: Callable[[], None]) -> None:
+        with self._cond:
+            try:
+                self._listeners.remove(cb)
+            except ValueError:
+                pass
 
     def _on_event(self, ev: TelemetryEvent) -> None:
         entry = {"resource_id": ev.resource_id, "kind": ev.kind,
@@ -111,6 +156,12 @@ class TelemetryCursorLog:
             self._events.append((self._next_seq, entry))
             self._next_seq += 1
             self._cond.notify_all()
+            listeners = list(self._listeners)
+        for cb in listeners:
+            try:
+                cb()
+            except Exception:                              # noqa: BLE001
+                pass
 
     @property
     def closed(self) -> bool:
@@ -174,27 +225,139 @@ class TelemetryCursorLog:
                 self._cond.wait(timeout=remaining)
 
 
-class _Handler(BaseHTTPRequestHandler):
-    protocol_version = "HTTP/1.1"
-    # loopback latency hygiene: fully buffer the response (headers + body
-    # leave in one segment) and disable Nagle so small control-plane
-    # messages are not held hostage to delayed ACKs — together worth
-    # several ms per call on the wire control path (bench_gateway)
-    wbufsize = -1
-    disable_nagle_algorithm = True
+# ---------------------------------------------------------------------------
+# event-loop wire server
 
-    # -- plumbing -------------------------------------------------------------
+
+class _Headers(dict):
+    """Header map with case-insensitive get (stored lower-cased)."""
+
+    def get(self, key, default=None):                      # noqa: D102
+        return dict.get(self, key.lower(), default)
+
+
+def _parse_head(raw: bytes) -> Tuple[str, str, str, _Headers]:
+    """``(method, path, version, headers)`` from a raw request head, or
+    ``ValueError`` on anything that isn't a plain HTTP/1.x request."""
+    lines = raw.split(b"\r\n")
+    try:
+        method, path, version = lines[0].decode("latin-1").split(" ", 2)
+    except (UnicodeDecodeError, ValueError):
+        raise ValueError("malformed request line")
+    if not version.startswith("HTTP/1."):
+        raise ValueError(f"unsupported protocol {version!r}")
+    headers = _Headers()
+    for line in lines[1:]:
+        if not line:
+            continue
+        name, sep, value = line.partition(b":")
+        if not sep:
+            raise ValueError("malformed header line")
+        headers[name.decode("latin-1").strip().lower()] = \
+            value.decode("latin-1").strip()
+    return method, path, version, headers
+
+
+class _Conn:
+    """Per-connection state owned by the loop thread: read buffer + parser
+    position, pending write buffer, and the response-ordering flag that
+    pauses request parsing while an earlier response is still owed."""
+
+    __slots__ = ("sock", "fd", "rbuf", "wbuf", "events", "closed",
+                 "close_after_write", "awaiting_response", "streaming",
+                 "in_process", "head", "body_len", "lock")
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.fd = sock.fileno()
+        #: serialises the off-loop direct-send fast path against close —
+        #: without it a worker could write into a recycled fd
+        self.lock = threading.Lock()
+        self.rbuf = bytearray()
+        self.wbuf = bytearray()
+        self.events = selectors.EVENT_READ
+        self.closed = False
+        self.close_after_write = False
+        #: a parsed request whose response hasn't been sent yet — further
+        #: pipelined bytes stay buffered so responses keep request order
+        self.awaiting_response = False
+        #: chunked push mode: the connection belongs to its stream thread
+        self.streaming = False
+        self.in_process = False
+        self.head: Optional[Tuple[str, str, _Headers, bool]] = None
+        self.body_len = 0
+
+
+class _StreamWriter:
+    """File-like facade handed to ``stream_into``: ``write`` enqueues bytes
+    on the owning connection through the loop (thread-safe) and raises
+    ``BrokenPipeError`` once the subscriber is gone, which is how the
+    stream thread learns to exit."""
+
+    def __init__(self, loop: "_WireLoop", conn: _Conn):
+        self._loop = loop
+        self._conn = conn
+
+    def write(self, data) -> int:
+        if self._conn.closed or not self._loop.running:
+            raise BrokenPipeError("stream subscriber gone")
+        self._loop.send(self._conn, bytes(data))
+        return len(data)
+
+    def flush(self) -> None:
+        pass
+
+
+class _Responder:
+    """One request's response channel: claim-once send of a single
+    envelope, or promotion to a chunked push stream.
+
+    This object is what the gateway's ``*_into`` methods (and tests that
+    monkeypatch them) receive as ``handler`` — it keeps the old handler's
+    ``_send_ok`` / ``_send_error`` surface.  ``claim()`` is the arbiter
+    between racing completion paths (a future callback vs. its timeout
+    timer): exactly one caller wins and sends."""
+
+    def __init__(self, loop: "_WireLoop", conn: _Conn, headers: _Headers,
+                 keep_alive: bool):
+        self._loop = loop
+        self._conn = conn
+        self.headers = headers
+        self.keep_alive = keep_alive
+        #: response codec, negotiated per request via Accept
+        self.binary = wire.wants_binary(headers.get("accept"))
+        self.tenant: Optional[str] = None
+        self._lock = threading.Lock()
+        self._claimed = False
+        self._responded = False
+
     @property
     def gateway(self) -> "ControlPlaneGateway":
-        return self.server.gateway
+        return self._loop.gateway
 
+    def claim(self) -> bool:
+        """Reserve the right to respond; True exactly once."""
+        with self._lock:
+            if self._claimed:
+                return False
+            self._claimed = True
+            return True
+
+    # -- single-envelope responses -------------------------------------------
     def _send(self, status: int, envelope: Dict) -> None:
-        body = wire.dumps(envelope)
-        self.send_response(status)
-        self.send_header("Content-Type", "application/json")
-        self.send_header("Content-Length", str(len(body)))
-        self.end_headers()
-        self.wfile.write(body)
+        with self._lock:
+            if self._responded:
+                return
+            self._responded = True
+            self._claimed = True
+        body, ctype = wire.encode_envelope(envelope, self.binary)
+        head = (f"HTTP/1.1 {status} {_REASONS.get(status, '')}\r\n"
+                f"Content-Type: {ctype}\r\n"
+                f"Content-Length: {len(body)}\r\n"
+                f"Connection: {'keep-alive' if self.keep_alive else 'close'}"
+                "\r\n\r\n").encode("latin-1")
+        self._loop.finish_response(self._conn, head + body,
+                                   close_after=not self.keep_alive)
 
     def _send_ok(self, kind: str, body: Dict) -> None:
         self._send(200, wire.ok_envelope(kind, body,
@@ -205,144 +368,464 @@ class _Handler(BaseHTTPRequestHandler):
                    wire.error_envelope(kind, err,
                                        plane_id=self.gateway.plane_id))
 
-    def _read_body(self, expect_kind: str) -> Dict:
-        length = int(self.headers.get("Content-Length", 0))
-        envelope = wire.loads(self.rfile.read(length))
-        return wire.parse_request(envelope, expect_kind=expect_kind)
+    # -- chunked push streams -------------------------------------------------
+    def begin_stream(self, content_type: str = "application/x-ndjson"
+                     ) -> _StreamWriter:
+        """Send the stream response head and hand back the chunk writer.
+        A streamed connection never returns to keep-alive rotation."""
+        with self._lock:
+            if self._responded:
+                raise RuntimeError("response already sent")
+            self._responded = True
+            self._claimed = True
+        self.keep_alive = False
+        head = (f"HTTP/1.1 200 OK\r\n"
+                f"Content-Type: {content_type}\r\n"
+                "Cache-Control: no-cache\r\n"
+                "Transfer-Encoding: chunked\r\n"
+                "Connection: close\r\n\r\n").encode("latin-1")
+        self._loop.begin_stream(self._conn, head)
+        return _StreamWriter(self._loop, self._conn)
 
-    def _dispatch(self, kind: str, fn) -> None:
-        try:
-            # wire auth runs before ANY route logic; the mapped tenant (or
-            # None on an open gateway) is what task submission trusts
-            self.tenant = self.gateway.authenticate(self.headers)
-            fn()
-        except ControlPlaneError as e:
-            self._send_error(kind, WireError(e.code, e.message, e.detail))
-        except (BrokenPipeError, ConnectionResetError):
-            pass                       # client went away mid-response
-        except Exception as e:         # noqa: BLE001 — wire boundary
-            self._send_error(kind, WireError(ErrorCode.INTERNAL, repr(e)))
-
-    def log_message(self, *args):  # quiet
-        pass
-
-    def handle_one_request(self):
-        # severed keep-alive/stream connections (gateway stop, subscriber
-        # gone) must not traceback out of the handler thread on the
-        # response flush
-        try:
-            super().handle_one_request()
-        except (BrokenPipeError, ConnectionResetError):
-            self.close_connection = True
-
-    def finish(self):
-        # ... nor on the final buffer close
-        try:
-            super().finish()
-        except (BrokenPipeError, ConnectionResetError, OSError):
-            pass
-
-    # -- routing --------------------------------------------------------------
-    def do_GET(self):
-        parts = wire.split_path(self.path)
-        q = {k: v[-1] for k, v in
-             parse_qs(urlparse(self.path).query).items()}
-        if parts[:1] != ("v1",):
-            return self._send_error("error", WireError(
-                ErrorCode.NOT_FOUND, f"unknown path {self.path!r} "
-                                     "(protocol v1 lives under /v1/)"))
-        route = parts[1] if len(parts) > 1 else ""
-        arg = parts[2] if len(parts) > 2 else None
-        gw = self.gateway
-        if route == "health":
-            self._dispatch("health", lambda: self._send_ok(
-                "health", gw.health_body()))
-        elif route == "discover":
-            self._dispatch("discover", lambda: self._send_ok(
-                "discover", gw.discover_body(q)))
-        elif route == "describe" and arg:
-            self._dispatch("describe", lambda: self._send_ok(
-                "describe", gw.describe_body(arg)))
-        elif route == "twin" and arg:
-            self._dispatch("twin", lambda: self._send_ok(
-                "twin", gw.twin_body(arg)))
-        elif route == "poll" and arg:
-            self._dispatch("poll", lambda: gw.poll_into(self, arg, q))
-        elif route == "telemetry":
-            self._dispatch("telemetry", lambda: self._send_ok(
-                "telemetry", gw.telemetry_body(q)))
-        elif route == "stream":
-            self._dispatch("stream", lambda: gw.stream_into(self, q))
-        elif route == "topology":
-            self._dispatch("topology", lambda: self._send_ok(
-                "topology", gw.topology_body()))
-        else:
-            self._send_error("error", WireError(
-                ErrorCode.NOT_FOUND, f"unknown route {self.path!r}"))
-
-    def do_POST(self):
-        parts = wire.split_path(self.path)
-        route = parts[1] if len(parts) > 1 and parts[0] == "v1" else ""
-        gw = self.gateway
-        if route == "invoke":
-            self._dispatch("invoke", lambda: gw.invoke_into(
-                self, self._read_body("invoke"), tenant=self.tenant))
-        elif route == "submit":
-            self._dispatch("submit", lambda: self._send_ok(
-                "submit", gw.submit_body(self._read_body("submit"),
-                                         tenant=self.tenant)))
-        elif route == "submit_many":
-            self._dispatch("submit_many", lambda: self._send_ok(
-                "submit_many",
-                gw.submit_many_body(self._read_body("submit_many"),
-                                    tenant=self.tenant)))
-        else:
-            self._send_error("error", WireError(
-                ErrorCode.NOT_FOUND, f"unknown route {self.path!r}"))
+    def end_stream(self) -> None:
+        """Close the connection once buffered chunks have drained (the
+        terminal 0-chunk is written by ``streaming.end_chunks``)."""
+        self._loop.finish_stream(self._conn)
 
 
-class _GatewayServer(ThreadingHTTPServer):
-    """ThreadingHTTPServer that tracks accepted connections so ``stop()``
-    can sever live keep-alive clients: ``shutdown()`` only stops the accept
-    loop, and a handler thread parked on a persistent connection would keep
-    answering a "dead" plane — breaking the federation failure semantics
-    (a killed edge gateway must LOOK killed to its cloud parent)."""
+class _WireLoop:
+    """The selectors event loop: sole owner of every gateway socket.
 
-    daemon_threads = True
+    All socket reads, writes, and closes happen on the loop thread; other
+    threads (scheduler futures, stream writers, telemetry listeners, timer
+    users) hand work over via ``call_soon`` — a lock-guarded task queue plus
+    a socketpair wakeup — or schedule deferred work with ``call_later``
+    (timer heap, drives poll timeouts and long-poll expiry).  Per-connection
+    write buffers absorb what the kernel won't take immediately; the
+    selector's write interest is registered only while a buffer is
+    non-empty."""
 
-    def __init__(self, *args, **kw):
-        super().__init__(*args, **kw)
-        self._conns: set = set()
-        self._conns_lock = threading.Lock()
+    MAX_HEADER_BYTES = 65536
+    MAX_BODY_BYTES = 64 * 1024 * 1024
+    RECV_CHUNK = 1 << 18
 
-    def get_request(self):
-        request, addr = super().get_request()
-        with self._conns_lock:
-            self._conns.add(request)
-        return request, addr
+    def __init__(self, gateway: "ControlPlaneGateway", host: str, port: int,
+                 backlog: int = 512):
+        self.gateway = gateway
+        self.running = False
+        self._sel = selectors.DefaultSelector()
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        # the roadmap tests restart gateways on a fixed port; without
+        # REUSEADDR the lingering TIME_WAIT from the previous instance
+        # would make the rebind fail
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(backlog)
+        self._listener.setblocking(False)
+        self.address = self._listener.getsockname()
+        self._wake_r, self._wake_w = socket.socketpair()
+        self._wake_r.setblocking(False)
+        self._wake_w.setblocking(False)
+        self._sel.register(self._listener, selectors.EVENT_READ, "accept")
+        self._sel.register(self._wake_r, selectors.EVENT_READ, "wake")
+        self._tasks: "deque[Callable[[], None]]" = deque()
+        self._tasks_lock = threading.Lock()
+        self._timers: List[Tuple[float, int, Callable[[], None]]] = []
+        self._timer_seq = itertools.count()
+        self._conns: Dict[int, _Conn] = {}
+        self._thread: Optional[threading.Thread] = None
+        self._ident: Optional[int] = None
 
-    def shutdown_request(self, request):
-        with self._conns_lock:
-            self._conns.discard(request)
-        super().shutdown_request(request)
+    # -- lifecycle ------------------------------------------------------------
+    def start(self, name: str) -> None:
+        self.running = True
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=name)
+        self._thread.start()
 
-    def close_all_connections(self) -> None:
-        with self._conns_lock:
-            conns = list(self._conns)
-            self._conns.clear()
-        for s in conns:
-            try:
-                s.shutdown(socket.SHUT_RDWR)
-            except OSError:
-                pass
+    def stop(self) -> None:
+        self.running = False
+        if self._thread is None:
+            self._teardown()           # bound but never started
+            return
+        self._wakeup()
+        self._thread.join(timeout=10.0)
+
+    def _teardown(self) -> None:
+        for conn in list(self._conns.values()):
+            self._close_conn(conn)
+        for s in (self._listener, self._wake_r, self._wake_w):
             try:
                 s.close()
             except OSError:
                 pass
+        try:
+            self._sel.close()
+        except (OSError, RuntimeError):
+            pass
+
+    # -- thread-safe scheduling ----------------------------------------------
+    def _on_loop(self) -> bool:
+        return threading.get_ident() == self._ident
+
+    def _wakeup(self) -> None:
+        try:
+            self._wake_w.send(b"\x01")
+        except (BlockingIOError, OSError):
+            pass                       # already pending / already closed
+
+    def call_soon(self, fn: Callable[[], None]) -> None:
+        with self._tasks_lock:
+            self._tasks.append(fn)
+        if not self._on_loop():
+            self._wakeup()
+
+    def call_later(self, delay_s: float, fn: Callable[[], None]) -> None:
+        deadline = time.monotonic() + max(0.0, delay_s)
+
+        def arm() -> None:
+            heapq.heappush(self._timers,
+                           (deadline, next(self._timer_seq), fn))
+        if self._on_loop():
+            arm()
+        else:
+            self.call_soon(arm)
+
+    def _safe(self, fn: Callable[[], None]) -> None:
+        try:
+            fn()
+        except Exception:                                  # noqa: BLE001
+            pass                       # loop must survive any callback
+
+    # -- the loop -------------------------------------------------------------
+    def _run(self) -> None:
+        self._ident = threading.get_ident()
+        while self.running:
+            now = time.monotonic()
+            while self._timers and self._timers[0][0] <= now:
+                _, _, fn = heapq.heappop(self._timers)
+                self._safe(fn)
+            with self._tasks_lock:
+                has_tasks = bool(self._tasks)
+            if has_tasks:
+                timeout: Optional[float] = 0.0
+            elif self._timers:
+                timeout = max(0.0, self._timers[0][0] - time.monotonic())
+            else:
+                timeout = None
+            try:
+                events = self._sel.select(timeout)
+            except OSError:
+                continue
+            for key, mask in events:
+                data = key.data
+                if data == "accept":
+                    self._accept()
+                elif data == "wake":
+                    self._drain_wake()
+                else:
+                    if mask & selectors.EVENT_WRITE:
+                        self._on_writable(data)
+                    if mask & selectors.EVENT_READ and not data.closed:
+                        self._on_readable(data)
+            while True:
+                with self._tasks_lock:
+                    if not self._tasks:
+                        break
+                    fn = self._tasks.popleft()
+                self._safe(fn)
+        self._teardown()
+
+    def _drain_wake(self) -> None:
+        try:
+            while self._wake_r.recv(4096):
+                pass
+        except (BlockingIOError, OSError):
+            pass
+
+    # -- connections ----------------------------------------------------------
+    def _accept(self) -> None:
+        while True:
+            try:
+                sock, _addr = self._listener.accept()
+            except (BlockingIOError, OSError):
+                return
+            sock.setblocking(False)
+            try:
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            except OSError:
+                pass
+            conn = _Conn(sock)
+            self._conns[conn.fd] = conn
+            self._sel.register(sock, selectors.EVENT_READ, conn)
+
+    def _close_conn(self, conn: _Conn) -> None:
+        with conn.lock:
+            if conn.closed:
+                return
+            conn.closed = True
+            try:
+                self._sel.unregister(conn.sock)
+            except (KeyError, ValueError, OSError, RuntimeError):
+                pass
+            try:
+                conn.sock.close()
+            except OSError:
+                pass
+        self._conns.pop(conn.fd, None)
+
+    def _set_mask(self, conn: _Conn, mask: int) -> None:
+        if conn.closed or mask == conn.events:
+            return
+        try:
+            self._sel.modify(conn.sock, mask, conn)
+            conn.events = mask
+        except (KeyError, ValueError, OSError):
+            self._close_conn(conn)
+
+    # -- reads ---------------------------------------------------------------
+    def _on_readable(self, conn: _Conn) -> None:
+        try:
+            data = conn.sock.recv(self.RECV_CHUNK)
+        except (BlockingIOError, InterruptedError):
+            return
+        except OSError:
+            self._close_conn(conn)
+            return
+        if not data:
+            self._close_conn(conn)
+            return
+        conn.rbuf += data
+        self._process(conn)
+
+    def _process(self, conn: _Conn) -> None:
+        """Parse as many complete requests as the buffer holds.  Parsing
+        pauses while a response is owed (``awaiting_response``) so a
+        pipelining client still gets responses in request order, and stops
+        for good once the connection is promoted to a push stream."""
+        if conn.in_process:
+            return                     # re-entry via an inline response
+        conn.in_process = True
+        try:
+            while (not conn.closed and not conn.awaiting_response
+                   and not conn.streaming):
+                if conn.head is None:
+                    idx = conn.rbuf.find(b"\r\n\r\n")
+                    if idx < 0:
+                        if len(conn.rbuf) > self.MAX_HEADER_BYTES:
+                            self._reject_malformed(conn, 431)
+                        return
+                    raw = bytes(conn.rbuf[:idx])
+                    del conn.rbuf[:idx + 4]
+                    try:
+                        method, path, version, headers = _parse_head(raw)
+                        body_len = int(headers.get("content-length") or 0)
+                    except ValueError:
+                        self._reject_malformed(conn, 400)
+                        return
+                    if body_len < 0 or body_len > self.MAX_BODY_BYTES:
+                        self._reject_malformed(conn, 413)
+                        return
+                    conn_hdr = (headers.get("connection") or "").lower()
+                    keep_alive = ("keep-alive" in conn_hdr
+                                  if version == "HTTP/1.0"
+                                  else "close" not in conn_hdr)
+                    conn.head = (method, path, headers, keep_alive)
+                    conn.body_len = body_len
+                if len(conn.rbuf) < conn.body_len:
+                    return
+                body = bytes(conn.rbuf[:conn.body_len])
+                del conn.rbuf[:conn.body_len]
+                method, path, headers, keep_alive = conn.head
+                conn.head = None
+                conn.body_len = 0
+                conn.awaiting_response = True
+                responder = _Responder(self, conn, headers, keep_alive)
+                self.gateway.handle_request(responder, method, path,
+                                            headers, body)
+        finally:
+            conn.in_process = False
+
+    def _reject_malformed(self, conn: _Conn, status: int) -> None:
+        body = (b'{"ok": false, "error": {"code": "BAD_REQUEST", '
+                b'"message": "malformed HTTP request"}}')
+        head = (f"HTTP/1.1 {status} {_REASONS.get(status, '')}\r\n"
+                "Content-Type: application/json\r\n"
+                f"Content-Length: {len(body)}\r\n"
+                "Connection: close\r\n\r\n").encode("latin-1")
+        self._do_send(conn, head + body, close_after=True)
+
+    # -- writes ---------------------------------------------------------------
+    def send(self, conn: _Conn, data: bytes, close_after: bool = False
+             ) -> None:
+        """Thread-safe enqueue of raw bytes on a connection."""
+        if self._on_loop():
+            self._do_send(conn, data, close_after)
+        else:
+            self.call_soon(lambda: self._do_send(conn, data, close_after))
+
+    def _do_send(self, conn: _Conn, data: bytes, close_after: bool) -> None:
+        if conn.closed:
+            return
+        if close_after:
+            conn.close_after_write = True
+        if not conn.wbuf:
+            # optimistic inline send: the common case on loopback is that
+            # the kernel takes the whole response without a selector pass
+            try:
+                n = conn.sock.send(data)
+            except (BlockingIOError, InterruptedError):
+                n = 0
+            except OSError:
+                self._close_conn(conn)
+                return
+            if n < len(data):
+                conn.wbuf += data[n:]
+        else:
+            conn.wbuf += data
+        self._after_write(conn)
+
+    def _on_writable(self, conn: _Conn) -> None:
+        if conn.closed or not conn.wbuf:
+            self._after_write(conn)
+            return
+        try:
+            n = conn.sock.send(memoryview(conn.wbuf)[:self.RECV_CHUNK])
+        except (BlockingIOError, InterruptedError):
+            return
+        except OSError:
+            self._close_conn(conn)
+            return
+        del conn.wbuf[:n]
+        self._after_write(conn)
+
+    def _after_write(self, conn: _Conn) -> None:
+        if conn.closed:
+            return
+        if conn.wbuf:
+            self._set_mask(conn, selectors.EVENT_READ | selectors.EVENT_WRITE)
+        else:
+            self._set_mask(conn, selectors.EVENT_READ)
+            if conn.close_after_write:
+                self._close_conn(conn)
+
+    def finish_response(self, conn: _Conn, data: bytes,
+                        close_after: bool) -> None:
+        """Send a complete response and resume request parsing on the
+        connection (thread-safe; deferred responses land here from
+        scheduler worker threads)."""
+        if self._on_loop():
+            self._do_finish(conn, data, close_after)
+            return
+        # fast path: a worker thread sends the whole response itself,
+        # skipping a loop wakeup (and its GIL handoff).  Legal only while
+        # the conn is quiescent — awaiting_response parks reads, an empty
+        # wbuf means no write interest — and only for keep-alive responses
+        # (close_after needs loop-side mask/reap work anyway).
+        if not close_after:
+            with conn.lock:
+                if (not conn.closed and conn.awaiting_response
+                        and not conn.wbuf and not conn.streaming):
+                    try:
+                        n = conn.sock.send(data)
+                    except (BlockingIOError, InterruptedError):
+                        n = 0
+                    except OSError:
+                        n = len(data)   # dead conn; the loop reaps it
+                    if n == len(data):
+                        conn.awaiting_response = False
+                        if conn.rbuf:   # pipelined bytes parked meanwhile
+                            self.call_soon(
+                                lambda: conn.closed
+                                or conn.awaiting_response
+                                or self._process(conn))
+                        return
+                    data = data[n:]     # tail drains through the loop
+        self.call_soon(lambda: self._do_finish(conn, data, close_after))
+
+    def _do_finish(self, conn: _Conn, data: bytes, close_after: bool) -> None:
+        if conn.closed:
+            return
+        self._do_send(conn, data, close_after)
+        conn.awaiting_response = False
+        if not conn.closed and not conn.close_after_write:
+            self._process(conn)        # pipelined bytes may already be here
+
+    def begin_stream(self, conn: _Conn, head: bytes) -> None:
+        def promote() -> None:
+            if conn.closed:
+                return
+            conn.streaming = True
+            conn.awaiting_response = False
+            self._do_send(conn, head, close_after=False)
+        if self._on_loop():
+            promote()
+        else:
+            self.call_soon(promote)
+
+    def finish_stream(self, conn: _Conn) -> None:
+        def wind_down() -> None:
+            if conn.closed:
+                return
+            conn.close_after_write = True
+            self._after_write(conn)
+        if self._on_loop():
+            wind_down()
+        else:
+            self.call_soon(wind_down)
+
+
+class _TelemetryWaiter:
+    """A parked ``/v1/telemetry`` long-poll: holds no thread.  Registered
+    as a cursor-log listener and poked on every append; whoever first sees
+    matching events (a poke) or the deadline (a loop timer) claims the
+    responder and answers.  Non-matching events silently advance the
+    cursor, preserving the blocking read's filtered-long-poll contract."""
+
+    def __init__(self, gw: "ControlPlaneGateway", handler: _Responder,
+                 cursor: int, limit: int, resource: Optional[str], match):
+        self.gw = gw
+        self.handler = handler
+        self.cursor = cursor
+        self.limit = limit
+        self.resource = resource
+        self.match = match
+        self._lock = threading.Lock()
+        self._done = False
+
+    def _read(self) -> Dict:
+        return self.gw.telemetry_log.read(
+            self.cursor, timeout_s=0.0, limit=self.limit,
+            resource=self.resource, match=self.match)
+
+    def poke(self) -> None:
+        with self._lock:
+            if self._done:
+                return
+            out = self._read()
+            if not out["events"] and not out["closed"]:
+                self.cursor = out["next_cursor"]
+                return
+            self._done = True
+        self._finish(out)
+
+    def expire(self) -> None:
+        with self._lock:
+            if self._done:
+                return
+            self._done = True
+            out = self._read()
+        self._finish(out)
+
+    def _finish(self, out: Dict) -> None:
+        self.gw.telemetry_log.remove_listener(self.poke)
+        if self.handler.claim():
+            out.pop("closed", None)
+            self.handler._send_ok("telemetry", out)
 
 
 class ControlPlaneGateway:
-    """Threaded HTTP front-end over one control plane (one Orchestrator +
+    """Event-loop HTTP front-end over one control plane (one Orchestrator +
     one scheduler worker pool + one telemetry cursor log).
 
         gw = ControlPlaneGateway(orch, plane="edge").start()
@@ -351,7 +834,8 @@ class ControlPlaneGateway:
 
     A gateway OWNS its scheduler unless one is passed in; ``stop()`` shuts
     down what it owns and leaves the orchestrator itself alone (planes
-    outlive their wire frontends)."""
+    outlive their wire frontends).  ``workers`` keeps sizing the scheduler
+    pool — the wire layer itself no longer spends a thread per connection."""
 
     def __init__(self, orchestrator: Orchestrator, port: int = 0,
                  plane: str = "plane", workers: int = 8,
@@ -373,22 +857,19 @@ class ControlPlaneGateway:
         self._tickets: Dict[str, Future] = {}
         self._tickets_lock = threading.Lock()
         self._started_at = time.time()
-        self.server = _GatewayServer(("127.0.0.1", port), _Handler)
-        self.server.gateway = self
-        self.port = self.server.server_address[1]
-        self._thread = threading.Thread(target=self.server.serve_forever,
-                                        daemon=True,
-                                        name=f"phys-mcp-gateway-{self.plane}")
+        self._loop = _WireLoop(self, "127.0.0.1", port)
+        self.port = self._loop.address[1]
 
     # -- lifecycle ------------------------------------------------------------
     def start(self) -> "ControlPlaneGateway":
-        self._thread.start()
+        self._loop.start(name=f"phys-mcp-gateway-{self.plane}")
         return self
 
     def stop(self) -> None:
-        self.server.shutdown()
-        self.server.close_all_connections()
-        self.server.server_close()
+        # loop teardown severs every live keep-alive connection: a killed
+        # edge gateway must LOOK killed to its cloud parent (federation
+        # failure semantics)
+        self._loop.stop()
         self.telemetry_log.close()
         if self._owns_scheduler:
             self.scheduler.shutdown(wait=False)
@@ -419,6 +900,91 @@ class ControlPlaneGateway:
             "missing or unknown plane credentials "
             "(this gateway requires 'Authorization: Bearer <api-key>')",
             {"plane": self.plane})
+
+    # -- routing --------------------------------------------------------------
+    def handle_request(self, handler: _Responder, method: str, path: str,
+                       headers: _Headers, raw_body: bytes) -> None:
+        """Dispatch one parsed request.  Runs on the loop thread; endpoint
+        handlers either respond inline or park the responder on a future /
+        listener / timer and return immediately."""
+        parts = wire.split_path(path)
+        if parts[:1] != ("v1",):
+            return handler._send_error("error", WireError(
+                ErrorCode.NOT_FOUND, f"unknown path {path!r} "
+                                     "(protocol v1 lives under /v1/)"))
+        route = parts[1] if len(parts) > 1 else ""
+        arg = parts[2] if len(parts) > 2 else None
+        q = {k: v[-1] for k, v in parse_qs(urlparse(path).query).items()}
+        kind = route or "error"
+        try:
+            # wire auth runs before ANY route logic; the mapped tenant (or
+            # None on an open gateway) is what task submission trusts
+            handler.tenant = self.authenticate(headers)
+            if method == "GET":
+                self._route_get(handler, route, arg, q, path)
+            elif method == "POST":
+                self._route_post(handler, route, headers, raw_body, path)
+            else:
+                handler._send_error(kind, WireError(
+                    ErrorCode.NOT_FOUND, f"unsupported method {method!r}"))
+        except ControlPlaneError as e:
+            handler._send_error(kind, WireError(e.code, e.message, e.detail))
+        except Exception as e:         # noqa: BLE001 — wire boundary
+            handler._send_error(kind, WireError(ErrorCode.INTERNAL, repr(e)))
+
+    def _route_get(self, handler: _Responder, route: str,
+                   arg: Optional[str], q: Dict[str, str], path: str) -> None:
+        if route == "health":
+            handler._send_ok("health", self.health_body())
+        elif route == "discover":
+            handler._send_ok("discover", self.discover_body(q))
+        elif route == "describe" and arg:
+            handler._send_ok("describe", self.describe_body(arg))
+        elif route == "twin" and arg:
+            handler._send_ok("twin", self.twin_body(arg))
+        elif route == "poll" and arg:
+            self.poll_into(handler, arg, q)
+        elif route == "telemetry":
+            self.telemetry_into(handler, q)
+        elif route == "stream":
+            self._spawn_stream(handler, q)
+        elif route == "topology":
+            handler._send_ok("topology", self.topology_body())
+        else:
+            handler._send_error("error", WireError(
+                ErrorCode.NOT_FOUND, f"unknown route {path!r}"))
+
+    def _route_post(self, handler: _Responder, route: str, headers: _Headers,
+                    raw_body: bytes, path: str) -> None:
+        if route == "invoke":
+            self.invoke_into(handler,
+                             self._parse_body(headers, raw_body, "invoke"),
+                             tenant=handler.tenant)
+        elif route == "submit":
+            handler._send_ok("submit", self.submit_body(
+                self._parse_body(headers, raw_body, "submit"),
+                tenant=handler.tenant))
+        elif route == "submit_many":
+            handler._send_ok("submit_many", self.submit_many_body(
+                self._parse_body(headers, raw_body, "submit_many"),
+                tenant=handler.tenant))
+        elif route == "submit_coalesced":
+            handler._send_ok("submit_coalesced", self.submit_coalesced_body(
+                self._parse_body(headers, raw_body, "submit_coalesced"),
+                tenant=handler.tenant))
+        elif route == "poll_coalesced":
+            self.poll_coalesced_into(handler, self._parse_body(
+                headers, raw_body, "poll_coalesced"))
+        else:
+            handler._send_error("error", WireError(
+                ErrorCode.NOT_FOUND, f"unknown route {path!r}"))
+
+    @staticmethod
+    def _parse_body(headers: _Headers, raw: bytes, expect_kind: str) -> Dict:
+        """Decode the request envelope by its negotiated codec (Content-Type
+        header, magic-byte sniff as fallback) and validate it."""
+        envelope = wire.decode_envelope(raw, headers.get("content-type"))
+        return wire.parse_request(envelope, expect_kind=expect_kind)
 
     # -- endpoint bodies ------------------------------------------------------
     def health_body(self) -> Dict:
@@ -477,7 +1043,7 @@ class ControlPlaneGateway:
         return {"twin": twin.to_dict()}
 
     @staticmethod
-    def _q_num(q: Dict[str, str], key: str, default, cast):
+    def _q_num(q: Dict, key: str, default, cast):
         """Numeric query param or a structured BAD_REQUEST (a typo'd
         cursor must not surface as INTERNAL)."""
         try:
@@ -486,7 +1052,7 @@ class ControlPlaneGateway:
             raise wire.ProtocolError(
                 f"query param {key!r} must be a number, got {q.get(key)!r}")
 
-    def telemetry_body(self, q: Dict[str, str]) -> Dict:
+    def _telemetry_params(self, q: Dict[str, str]):
         cursor = self._q_num(q, "cursor", 0, int)
         timeout_s = min(self._q_num(q, "timeout_s", 0.0, float), 30.0)
         limit = max(1, min(self._q_num(q, "limit", 256, int), 1024))
@@ -494,11 +1060,32 @@ class ControlPlaneGateway:
             filt = streaming.StreamFilter.from_query(q)
         except ValueError as e:
             raise wire.ProtocolError(str(e))
+        return cursor, timeout_s, limit, q.get("resource"), filt
+
+    def telemetry_body(self, q: Dict[str, str]) -> Dict:
+        """Blocking read variant, kept for in-process callers; the wire
+        route uses :meth:`telemetry_into` so long-polls park instead of
+        holding the loop."""
+        cursor, timeout_s, limit, resource, filt = self._telemetry_params(q)
         body = self.telemetry_log.read(
             cursor, timeout_s=timeout_s, limit=limit,
-            resource=q.get("resource"), match=filt.matches)
-        body.pop("closed", None)      # stream-loop detail, not wire surface
+            resource=resource, match=filt.matches)
+        body.pop("closed", None)      # cursor-log detail, not wire surface
         return body
+
+    def telemetry_into(self, handler: _Responder, q: Dict[str, str]) -> None:
+        cursor, timeout_s, limit, resource, filt = self._telemetry_params(q)
+        out = self.telemetry_log.read(cursor, timeout_s=0.0, limit=limit,
+                                      resource=resource, match=filt.matches)
+        if out["events"] or timeout_s <= 0.0 or out["closed"]:
+            out.pop("closed", None)
+            handler._send_ok("telemetry", out)
+            return
+        waiter = _TelemetryWaiter(self, handler, out["next_cursor"], limit,
+                                  resource, filt.matches)
+        self.telemetry_log.add_listener(waiter.poke)
+        self._loop.call_later(timeout_s, waiter.expire)
+        waiter.poke()                  # event raced the registration?
 
     def topology_body(self) -> Dict:
         body = self.topology.to_dict()
@@ -512,7 +1099,27 @@ class ControlPlaneGateway:
     #: ceiling bounds how long a silently-dead plane can look alive
     MIN_HEARTBEAT_S, MAX_HEARTBEAT_S = 0.2, 30.0
 
-    def stream_into(self, handler: _Handler, q: Dict[str, str]) -> None:
+    def _spawn_stream(self, handler: _Responder, q: Dict[str, str]) -> None:
+        """Run the subscription loop on its own thread: it blocks on the
+        cursor log between events, which the loop thread must never do.
+        Chunk writes funnel back through the loop's thread-safe enqueue."""
+        threading.Thread(target=self._stream_entry, args=(handler, q),
+                         daemon=True,
+                         name=f"phys-mcp-stream-{self.plane}").start()
+
+    def _stream_entry(self, handler: _Responder, q: Dict[str, str]) -> None:
+        try:
+            self.stream_into(handler, q)
+        except ControlPlaneError as e:
+            handler._send_error("stream", WireError(e.code, e.message,
+                                                    e.detail))
+        except (BrokenPipeError, ConnectionResetError, OSError):
+            pass                       # subscriber went away; nothing to do
+        except Exception as e:         # noqa: BLE001 — wire boundary
+            handler._send_error("stream", WireError(ErrorCode.INTERNAL,
+                                                    repr(e)))
+
+    def stream_into(self, handler: _Responder, q: Dict[str, str]) -> None:
         """One server-push subscription: chunked ndjson over the open
         response.  Events come from the same sequence-numbered ring the
         cursor endpoint reads, so seq-gaplessness (zero lost events) and
@@ -527,15 +1134,7 @@ class ControlPlaneGateway:
                               self.MIN_HEARTBEAT_S), self.MAX_HEARTBEAT_S)
         max_s = self._q_num(q, "max_s", 0.0, float)
         deadline = (time.monotonic() + max_s) if max_s > 0 else None
-        # a streamed connection never goes back into keep-alive rotation:
-        # if the loop exits abnormally the framing state is undefined
-        handler.close_connection = True
-        handler.send_response(200)
-        handler.send_header("Content-Type", "application/x-ndjson")
-        handler.send_header("Cache-Control", "no-cache")
-        handler.send_header("Transfer-Encoding", "chunked")
-        handler.end_headers()
-        w = handler.wfile
+        w = handler.begin_stream("application/x-ndjson")
         try:
             streaming.write_chunk(w, streaming.control_line(
                 "hello", plane_id=self.plane_id, plane=self.plane,
@@ -587,6 +1186,7 @@ class ControlPlaneGateway:
                         "end", cursor=cursor,
                         dropped_events=out["dropped_events"]))
                     streaming.end_chunks(w)
+                    handler.end_stream()
                     return
                 if not out["events"]:
                     streaming.write_chunk(w, streaming.control_line(
@@ -615,7 +1215,18 @@ class ControlPlaneGateway:
         except SchedulerClosed as e:
             raise ControlPlaneError(ErrorCode.PLANE_UNAVAILABLE, str(e))
 
-    def _respond_outcome(self, handler: _Handler, kind: str,
+    def _outcome_wire(self, result, trace) -> Dict:
+        """One task outcome as coalesced-poll wire fields."""
+        if result.status == "completed":
+            return {"state": "done", "ok": True,
+                    "result": wire.result_to_wire(result),
+                    "trace": wire.trace_to_wire(trace)}
+        err = wire.rejection_to_error(result, trace)
+        if err.code is ErrorCode.QUEUE_SATURATED:
+            err.detail["retry_after_s"] = self.scheduler.retry_after_s()
+        return {"state": "done", "ok": False, "error": err.to_wire()}
+
+    def _respond_outcome(self, handler: _Responder, kind: str,
                          result, trace) -> None:
         """Completed results ride an ok envelope; anything else becomes the
         structured error envelope carrying code + trace (saturation errors
@@ -631,10 +1242,25 @@ class ControlPlaneGateway:
                 err.detail["retry_after_s"] = self.scheduler.retry_after_s()
             handler._send_error(kind, err)
 
-    def invoke_into(self, handler: _Handler, body: Dict,
+    def invoke_into(self, handler: _Responder, body: Dict,
                     tenant: Optional[str] = None) -> None:
-        result, trace = self._submit(body, tenant=tenant).result()
-        self._respond_outcome(handler, "invoke", result, trace)
+        """Synchronous-on-the-wire invoke: the response is deferred onto the
+        scheduler future's completion instead of parking a server thread."""
+        fut = self._submit(body, tenant=tenant)
+
+        def deliver(f: Future) -> None:
+            try:
+                try:
+                    result, trace = f.result()
+                except BaseException as e:                 # noqa: BLE001
+                    handler._send_error("invoke", WireError(
+                        ErrorCode.INTERNAL, repr(e)))
+                    return
+                self._respond_outcome(handler, "invoke", result, trace)
+            except Exception as e:     # noqa: BLE001 — wire boundary
+                handler._send_error("invoke", WireError(ErrorCode.INTERNAL,
+                                                        repr(e)))
+        fut.add_done_callback(deliver)
 
     def _store_ticket(self, fut: Future) -> str:
         ticket = f"ticket-{next(_ticket_ids):06d}"
@@ -685,7 +1311,42 @@ class ControlPlaneGateway:
             tickets.append(self._store_ticket(fut))
         return {"tickets": tickets}
 
-    def poll_into(self, handler: _Handler, ticket: str,
+    def submit_coalesced_body(self, body: Dict,
+                              tenant: Optional[str] = None) -> Dict:
+        """Batched submit with PER-ENTRY outcomes (v1.2).  Unlike
+        ``submit_many`` — whose all-or-nothing contract protects a single
+        caller's batch — a coalesced frame carries tasks micro-batched from
+        UNRELATED callers by the client SDK, so one malformed entry must
+        fail alone, not poison its co-batched strangers.  Each outcome is
+        either ``{"ticket": ...}`` or ``{"error": <wire error>}``, index-
+        aligned with ``entries``."""
+        entries = body.get("entries")
+        if not isinstance(entries, list) or not entries:
+            raise wire.ProtocolError(
+                "submit_coalesced body needs a non-empty entries list")
+        outcomes = []
+        for entry in entries:
+            entry = entry if isinstance(entry, dict) else {}
+            try:
+                task = wire.task_from_wire(entry.get("task") or {})
+            except (TypeError, ValueError, KeyError) as e:
+                outcomes.append({"error": WireError(
+                    ErrorCode.BAD_REQUEST,
+                    f"malformed task body: {e!r}").to_wire()})
+                continue
+            if tenant is not None and task.tenant != tenant:
+                task = task.clone(tenant=tenant)
+            try:
+                fut = self.scheduler.submit_async(
+                    task, deadline_s=entry.get("deadline_s"))
+            except SchedulerClosed as e:
+                outcomes.append({"error": WireError(
+                    ErrorCode.PLANE_UNAVAILABLE, str(e)).to_wire()})
+                continue
+            outcomes.append({"ticket": self._store_ticket(fut)})
+        return {"outcomes": outcomes}
+
+    def poll_into(self, handler: _Responder, ticket: str,
                   q: Dict[str, str]) -> None:
         with self._tickets_lock:
             fut = self._tickets.get(ticket)
@@ -693,20 +1354,101 @@ class ControlPlaneGateway:
             raise ControlPlaneError(ErrorCode.NOT_FOUND,
                                     f"unknown ticket {ticket!r}")
         wait_s = min(self._q_num(q, "wait_s", 0.0, float), 30.0)
-        try:
-            result, trace = fut.result(timeout=wait_s if wait_s > 0 else 0.001)
-        except FutureTimeout:
+
+        def deliver(f: Future) -> None:
+            if not handler.claim():
+                return                 # the timeout timer answered first
+            try:
+                try:
+                    result, trace = f.result()
+                except BaseException as e:                 # noqa: BLE001
+                    # exception-resolved future: release the ticket (every
+                    # re-poll would re-raise forever), surface the error once
+                    with self._tickets_lock:
+                        self._tickets.pop(ticket, None)
+                    handler._send_error("poll", WireError(ErrorCode.INTERNAL,
+                                                          repr(e)))
+                    return
+                # deliver-once: the claiming response releases the ticket
+                self._respond_outcome(handler, "poll", result, trace)
+                with self._tickets_lock:
+                    self._tickets.pop(ticket, None)
+            except Exception as e:     # noqa: BLE001 — wire boundary
+                handler._send_error("poll", WireError(ErrorCode.INTERNAL,
+                                                      repr(e)))
+
+        if fut.done():
+            deliver(fut)
+            return
+        if wait_s <= 0.0:
             handler._send_ok("poll", {"state": "pending", "ticket": ticket})
             return
-        except BaseException:
-            # exception-resolved future: release the ticket (every re-poll
-            # would re-raise forever) and surface the error once
-            with self._tickets_lock:
-                self._tickets.pop(ticket, None)
-            raise
-        # deliver-once, but only release AFTER the response bytes went out:
-        # a client that disconnects mid-response can re-poll and still get
-        # its result (a popped-early ticket would lose a completed task)
-        self._respond_outcome(handler, "poll", result, trace)
+
+        def on_timeout() -> None:
+            if handler.claim():
+                handler._send_ok("poll", {"state": "pending",
+                                          "ticket": ticket})
+        fut.add_done_callback(deliver)
+        self._loop.call_later(wait_s, on_timeout)
+
+    def poll_coalesced_into(self, handler: _Responder, body: Dict) -> None:
+        """Batched ticket poll (v1.2): one round-trip reports the state of
+        N tickets.  With ``wait_s`` and every known ticket still pending,
+        the response parks until the FIRST completion (or the deadline) and
+        then reports all states — resolved outcomes are delivered-once
+        exactly like ``poll``; unknown tickets get a per-entry NOT_FOUND
+        instead of failing the frame."""
+        tickets = body.get("tickets")
+        if (not isinstance(tickets, list) or not tickets
+                or not all(isinstance(t, str) for t in tickets)):
+            raise wire.ProtocolError(
+                "poll_coalesced body needs a non-empty tickets list")
+        wait_s = min(self._q_num(body, "wait_s", 0.0, float), 30.0)
         with self._tickets_lock:
-            self._tickets.pop(ticket, None)
+            futs = {t: self._tickets.get(t) for t in tickets}
+
+        def report() -> Dict:
+            outcomes = []
+            for t in tickets:
+                fut = futs.get(t)
+                if fut is None:
+                    outcomes.append({
+                        "ticket": t, "state": "done", "ok": False,
+                        "error": WireError(ErrorCode.NOT_FOUND,
+                                           f"unknown ticket {t!r}").to_wire(),
+                    })
+                elif not fut.done():
+                    outcomes.append({"ticket": t, "state": "pending"})
+                else:
+                    with self._tickets_lock:
+                        self._tickets.pop(t, None)
+                    try:
+                        result, trace = fut.result()
+                    except BaseException as e:             # noqa: BLE001
+                        outcomes.append({
+                            "ticket": t, "state": "done", "ok": False,
+                            "error": WireError(ErrorCode.INTERNAL,
+                                               repr(e)).to_wire()})
+                    else:
+                        outcomes.append(dict(self._outcome_wire(result,
+                                                                trace),
+                                             ticket=t))
+            return {"outcomes": outcomes}
+
+        live = [f for f in futs.values() if f is not None]
+        if (wait_s <= 0.0 or len(live) < len(futs)
+                or not live or any(f.done() for f in live)):
+            handler._send_ok("poll_coalesced", report())
+            return
+
+        def fire(_f: Optional[Future] = None) -> None:
+            if not handler.claim():
+                return
+            try:
+                handler._send_ok("poll_coalesced", report())
+            except Exception as e:     # noqa: BLE001 — wire boundary
+                handler._send_error("poll_coalesced",
+                                    WireError(ErrorCode.INTERNAL, repr(e)))
+        self._loop.call_later(wait_s, fire)
+        for f in live:
+            f.add_done_callback(fire)

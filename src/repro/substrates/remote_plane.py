@@ -37,13 +37,21 @@ topology-layer guarantees (``repro.core.topology``):
   matcher refuses to place a budget-exhausted task on a federated plane
   (surfacing as a structured ``DEADLINE``), and the adapter re-checks as a
   defense line for directed tasks;
-- **streaming follower** — ``attach()`` (called by ``federate``) starts
+- **streaming follower** — ``attach()`` (called by ``federate``) joins
   ONE server-push subscription (``/v1/stream``) per child plane replacing
   the per-call health polling: member health snapshots feed a cached
   aggregate, stream loss pushes a ``failed`` snapshot into the parent bus
   (tripping the parent breaker immediately, no poll-interval lag), and
   registry change-feed events re-aggregate the federated descriptor live —
-  fleet membership tracks without ever re-fetching ``discover()``.
+  fleet membership tracks without ever re-fetching ``discover()``.  The
+  subscription is SHARED: all profile adapters of the same (host, port)
+  child fan out of a single :class:`_PlaneStreamFollower`, so an N-profile
+  child costs one stream connection, not N.
+
+Forwarded execution rides the coalesced wire path (v1.2): ``invoke()``
+uses :meth:`ControlPlaneClient.invoke_coalesced`, so N concurrent
+federated forwards through one hop share ``/v1/submit_coalesced`` /
+``/v1/poll_coalesced`` frames instead of paying 2N round-trips.
 """
 from __future__ import annotations
 
@@ -73,6 +81,137 @@ from repro.substrates.base import SubstrateAdapter
 TRANSPORT_MARGIN_MS = HOP_WIRE_MARGIN_MS
 
 _REGIME_ORDER = {"sub_ms": 0, "fast_ms": 1, "slow_seconds": 2}
+
+
+class _PlaneStreamFollower:
+    """ONE ``/v1/stream`` subscription per child plane, fanned out to every
+    profile adapter federated from that plane.
+
+    ``federate_all`` registers one adapter per modality profile of the same
+    gateway; each used to hold its OWN subscription, so an N-profile child
+    cost N idle stream connections and shipped every event N times over the
+    wire.  Followers are refcounted per (host, port): ``acquire`` subscribes
+    an adapter (starting the loop thread on first use), ``release``
+    unsubscribes, and the loop stops — and the registry entry drops — with
+    the last adapter.  Per-adapter state (``_stream_ok``, connect counters,
+    member snapshot caches, parent registry entries) stays on the adapters;
+    the follower only owns the socket and the fan-out."""
+
+    _registry: Dict[Tuple[str, int], "_PlaneStreamFollower"] = {}
+    _registry_lock = threading.Lock()
+
+    def __init__(self, client: ControlPlaneClient,
+                 key: Tuple[str, int]) -> None:
+        self._client = client
+        self._key = key
+        self._lock = threading.Lock()
+        self._subscribers: List["RemotePlaneAdapter"] = []
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._connected = False
+        self._active = None          # live TelemetryStream, for interrupt
+
+    @classmethod
+    def acquire(cls, adapter: "RemotePlaneAdapter") -> "_PlaneStreamFollower":
+        key = (adapter.client._host, adapter.client._port)
+        with cls._registry_lock:
+            follower = cls._registry.get(key)
+            if follower is None or follower._stop.is_set():
+                follower = cls(adapter.client, key)
+                cls._registry[key] = follower
+            follower._subscribe(adapter)
+            return follower
+
+    def release(self, adapter: "RemotePlaneAdapter") -> None:
+        with self._lock:
+            try:
+                self._subscribers.remove(adapter)
+            except ValueError:
+                pass
+            if self._subscribers:
+                return
+        with type(self)._registry_lock:
+            if type(self)._registry.get(self._key) is self:
+                del type(self)._registry[self._key]
+        self._stop.set()
+        # interrupt a reader parked in the chunked stream: idle heartbeats
+        # are consumed inside the iterator without yielding, so the loop's
+        # stop check alone cannot wake it
+        with self._lock:
+            active = self._active
+        if active is not None:
+            try:
+                active.close()
+            except Exception:                              # noqa: BLE001
+                pass
+        thread = self._thread
+        if thread is not None and thread is not threading.current_thread():
+            thread.join(timeout=5.0)
+
+    def _subscribe(self, adapter: "RemotePlaneAdapter") -> None:
+        with self._lock:
+            if adapter not in self._subscribers:
+                self._subscribers.append(adapter)
+            connected = self._connected
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._run, daemon=True,
+                    name=f"phys-mcp-follow-{self._key[0]}:{self._key[1]}")
+                self._thread.start()
+        if connected:
+            # late-joining profile adapters see the live stream immediately
+            # (the connect fan-out may also reach them — the connect counter
+            # only ever undercounts if we skip, never breaks if we double)
+            adapter._on_follower_connect()
+
+    def _fanout(self) -> List["RemotePlaneAdapter"]:
+        with self._lock:
+            return list(self._subscribers)
+
+    def _run(self) -> None:
+        """Follower loop (one per child plane): cursor=0 requests the
+        synthetic registry baseline (current fleet), then live events;
+        every event goes to every subscribed profile adapter, which filter
+        by their own modality profile."""
+        stop = self._stop
+        backoff = RemotePlaneAdapter.STREAM_BACKOFF_MIN_S
+        while not stop.is_set():
+            stream = None
+            try:
+                stream = self._client.stream(
+                    cursor=0, kinds=("registry", "health", "breaker"),
+                    heartbeat_s=RemotePlaneAdapter.STREAM_HEARTBEAT_S)
+                connected_at = time.time()
+                with self._lock:
+                    self._connected = True
+                    self._active = stream
+                if stop.is_set():
+                    return
+                for adapter in self._fanout():
+                    adapter._on_follower_connect()
+                backoff = RemotePlaneAdapter.STREAM_BACKOFF_MIN_S
+                for entry in stream:
+                    if stop.is_set():
+                        return
+                    for adapter in self._fanout():
+                        adapter._on_stream_event(entry, connected_at)
+                # orderly end (max_s or gateway close): treat as loss and
+                # resubscribe — the plane may still be alive
+            except (StreamClosed, ControlPlaneError, OSError):
+                pass
+            finally:
+                with self._lock:
+                    self._connected = False
+                    self._active = None
+                if stream is not None:
+                    stream.close()
+            if stop.is_set():
+                return
+            for adapter in self._fanout():
+                adapter._mark_down()
+            stop.wait(backoff * (0.5 + random.random()))
+            backoff = min(RemotePlaneAdapter.STREAM_BACKOFF_MAX_S,
+                          backoff * 2)
 
 
 class RemotePlaneAdapter(SubstrateAdapter):
@@ -105,8 +244,7 @@ class RemotePlaneAdapter(SubstrateAdapter):
         self._fleet_lock = threading.Lock()
         self._member_snaps: Dict[str, Dict] = {}
         self._stream_ok = False
-        self._stream_stop: Optional[threading.Event] = None
-        self._stream_thread: Optional[threading.Thread] = None
+        self._follower: Optional[_PlaneStreamFollower] = None
         self._stream_connects = 0
         self.invoke_deadline_s = invoke_deadline_s
         self.client = (client_or_url
@@ -254,7 +392,10 @@ class RemotePlaneAdapter(SubstrateAdapter):
             raise InvocationError("invoke", e.message)
         remaining_ms = remaining_budget_ms(task)
         t0 = time.perf_counter()
-        result, remote_trace = self.client.invoke(
+        # coalesced wire path: concurrent forwards through this adapter (or
+        # any sibling sharing the client) ride shared submit/poll frames —
+        # per-hop wire cost amortises across in-flight tasks
+        result, remote_trace = self.client.invoke_coalesced(
             task, deadline_s=(remaining_ms / 1e3 if remaining_ms is not None
                               else self.invoke_deadline_s))
         rtt_ms = (time.perf_counter() - t0) * 1e3
@@ -328,7 +469,7 @@ class RemotePlaneAdapter(SubstrateAdapter):
         a broken stream reports failed/down (which the parent matcher
         treats as inadmissible even before the breaker trips).  Unattached
         adapters keep the one-shot HTTP aggregation."""
-        if self._stream_thread is not None:
+        if self._follower is not None:
             with self._fleet_lock:
                 ok, snaps = self._stream_ok, dict(self._member_snaps)
             if not ok:
@@ -366,25 +507,23 @@ class RemotePlaneAdapter(SubstrateAdapter):
 
     def attach(self, parent_orchestrator) -> "RemotePlaneAdapter":
         """Wire this adapter into its parent plane: remember the parent
-        (route stamping, registry re-aggregation, bus access) and start the
-        streaming follower.  Called by :func:`federate`; idempotent."""
+        (route stamping, registry re-aggregation, bus access) and join the
+        child plane's shared streaming follower (one ``/v1/stream``
+        subscription per (host, port), however many profile adapters ride
+        it).  Called by :func:`federate`; idempotent."""
         self._parent = parent_orchestrator
-        if self._stream_thread is None:
-            self._stream_stop = threading.Event()
-            self._stream_thread = threading.Thread(
-                target=self._follow, daemon=True,
-                name=f"phys-mcp-follow-{self.resource_id}")
-            self._stream_thread.start()
+        if self._follower is None:
+            self._follower = _PlaneStreamFollower.acquire(self)
         return self
 
     def close(self) -> None:
-        """Stop the streaming follower (parent keeps whatever state it has
-        already learned)."""
-        if self._stream_stop is not None:
-            self._stream_stop.set()
-        thread, self._stream_thread = self._stream_thread, None
-        if thread is not None and thread is not threading.current_thread():
-            thread.join(timeout=5.0)
+        """Detach from the shared streaming follower (the parent keeps
+        whatever state it has already learned).  The follower itself stops
+        with its LAST subscriber — sibling profile adapters of the same
+        child plane keep streaming."""
+        follower, self._follower = self._follower, None
+        if follower is not None:
+            follower.release(self)
 
     def _mark_down(self) -> None:
         with self._fleet_lock:
@@ -397,44 +536,17 @@ class RemotePlaneAdapter(SubstrateAdapter):
                 drift_score=1.0, extra={"plane": self.plane,
                                         "stream": "lost"}))
 
-    def _follow(self) -> None:
-        """Follower loop: one server-push subscription per child plane.
-        cursor=0 requests the synthetic registry baseline (current fleet),
-        then live events; health/breaker ring replays older than the
-        connect are discarded so history cannot re-trip a breaker."""
-        stop = self._stream_stop
-        backoff = self.STREAM_BACKOFF_MIN_S
-        while not stop.is_set():
-            stream = None
-            try:
-                stream = self.client.stream(
-                    cursor=0, kinds=("registry", "health", "breaker"),
-                    heartbeat_s=self.STREAM_HEARTBEAT_S)
-                connected_at = time.time()
-                with self._fleet_lock:
-                    self._stream_ok = True
-                    self._stream_connects += 1
-                backoff = self.STREAM_BACKOFF_MIN_S
-                if self._parent is not None:
-                    # plane reachable again; member health streams in live
-                    self._parent.bus.update_snapshot(self._aggregate(
-                        dict(self._member_snaps)))
-                for entry in stream:
-                    if stop.is_set():
-                        return
-                    self._on_stream_event(entry, connected_at)
-                # orderly end (max_s or gateway close): treat as loss and
-                # resubscribe — the plane may still be alive
-            except (StreamClosed, ControlPlaneError, OSError):
-                pass
-            finally:
-                if stream is not None:
-                    stream.close()
-            if stop.is_set():
-                return
-            self._mark_down()
-            stop.wait(backoff * (0.5 + random.random()))
-            backoff = min(self.STREAM_BACKOFF_MAX_S, backoff * 2)
+    def _on_follower_connect(self) -> None:
+        """Shared follower (re)connected: resume wire-free aggregation.
+        The connect counter makes reconnect behaviour observable (tests
+        assert the follower re-subscribed after a gateway restart)."""
+        with self._fleet_lock:
+            self._stream_ok = True
+            self._stream_connects += 1
+            snaps = dict(self._member_snaps)
+        if self._parent is not None:
+            # plane reachable again; member health streams in live
+            self._parent.bus.update_snapshot(self._aggregate(snaps))
 
     def _on_stream_event(self, entry: Dict, connected_at: float) -> None:
         kind = entry.get("kind")
@@ -513,9 +625,9 @@ def federate_all(parent_orchestrator, client_or_url,
                  plane: Optional[str] = None) -> List[RemotePlaneAdapter]:
     """Register EVERY modality profile of a remote plane, one adapter per
     (input, output) modality pair — the full fleet federates.  One health
-    check + one discovery + one topology fetch serve all profiles (each
-    profile adapter runs its own follower subscription, filtered to the
-    same child plane)."""
+    check + one discovery + one topology fetch serve all profiles, and all
+    profile adapters share ONE streaming-follower subscription to the
+    child plane (each filters fan-out events by its own modality)."""
     client = (client_or_url if isinstance(client_or_url, ControlPlaneClient)
               else ControlPlaneClient(client_or_url))
     plane = plane or client.health().get("plane", "remote")

@@ -1,0 +1,305 @@
+"""Binary envelope codec (protocol v1.2): round-trip fidelity + negotiation.
+
+The contract under test: for every JSON-serializable envelope, the binary
+frame decodes to EXACTLY what a JSON round-trip would produce (so the two
+codecs are interchangeable per request), and malformed frames fail as
+structured ``BAD_REQUEST`` — in-process as :class:`ProtocolError`, over the
+wire as an HTTP 400 carrying a well-formed error envelope in whichever
+codec the client asked for.
+
+Property tests run under hypothesis when it is installed; a deterministic
+seeded fuzz loop keeps the same coverage shape alive without it.
+"""
+import json
+import random
+import string
+
+import pytest
+
+from repro.core import ErrorCode, Orchestrator, TaskRequest, WireError
+from repro.gateway import ControlPlaneGateway, protocol as wire
+from repro.substrates import MemristiveAdapter
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                        # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def json_rt(obj):
+    """What the v1.1 JSON codec would deliver to the far side."""
+    return json.loads(wire.dumps(obj).decode("utf-8"))
+
+
+def binary_rt(obj):
+    return wire.loads_binary(wire.dumps_binary(obj))
+
+
+def assert_codecs_agree(envelope):
+    assert binary_rt(envelope) == json_rt(envelope)
+
+
+# ---------------------------------------------------------------------------
+# hand-rolled round trips: every frame type the v1.2 protocol emits
+
+
+SCALARS = [None, True, False, 0, 1, -1, 7, -128, 2**40, -(2**40),
+           2**70, -(2**70), 0.0, -0.0, 0.5, 3.1415926535, 1e-300, 1e300,
+           float("inf"), float("-inf"),
+           "", "x", "plane-edge", "naïve-ünïcode-∞", "a" * 5000,
+           # interned table entries used as VALUES must round-trip as strings
+           "kind", "protocol_version", "retry_after_s"]
+
+
+@pytest.mark.parametrize("value", SCALARS,
+                         ids=[repr(v)[:32] for v in SCALARS])
+def test_scalar_round_trip_matches_json(value):
+    assert_codecs_agree({"v": value})
+
+
+def test_nan_round_trips_as_nan():
+    out = binary_rt({"v": float("nan")})["v"]
+    assert out != out                           # NaN: only value ≠ itself
+
+
+def test_container_round_trips_match_json():
+    for env in [
+        {},
+        {"empty_list": [], "empty_dict": {}},
+        {"nested": {"a": [1, [2, [3, {"b": None}]]]}},
+        # tuple/list coercion must match json.dumps (tuples become lists)
+        {"route": ("edge", "fog", "cloud")},
+        # mixed list: NOT eligible for the packed-float fast path
+        {"mixed": [1, 2.5, "x", None, True]},
+        # pure-float list: the packed fast path must be invisible
+        {"payload": [0.1, 0.2, 0.3, 0.4]},
+        {"payload": [1.5] * 999},
+        # non-interned keys alongside interned ones
+        {"kind": "invoke", "custom_key_xyz": {"deeply": ["nested", 1.0]}},
+        # non-string dict keys follow json.dumps coercion rules
+        {"ints": {1: "a", 2: "b"}, "bools": {True: 1, False: 0},
+         "null": {None: "n"}},
+    ]:
+        assert_codecs_agree(env)
+
+
+def test_bytes_payloads_round_trip_raw():
+    """The whole point of the binary codec: no base64/JSON re-encode."""
+    blob = bytes(range(256)) * 4
+    frame = wire.dumps_binary({"payload": blob})
+    assert blob in frame                        # raw bytes, no re-encode
+    assert wire.loads_binary(frame)["payload"] == blob
+    # JSON cannot carry bytes: refusal (not silent stringification) there
+    with pytest.raises(wire.ProtocolError):
+        wire.dumps({"payload": blob})
+
+
+def test_numpy_payloads_round_trip():
+    np = pytest.importorskip("numpy")
+    vec = np.linspace(-1.0, 1.0, 64)
+    out = binary_rt({"payload": vec, "n": np.int64(3), "f": np.float32(0.5),
+                     "m": np.ones((2, 2))})
+    assert out["payload"] == pytest.approx(vec.tolist())
+    assert out["n"] == 3 and out["f"] == pytest.approx(0.5)
+    assert out["m"] == [[1.0, 1.0], [1.0, 1.0]]
+
+
+def test_real_envelopes_round_trip():
+    task = TaskRequest(function="inference", input_modality="vector",
+                       output_modality="vector", payload=[0.1, 0.2, 0.3],
+                       required_telemetry=("execution_ms",),
+                       metadata={"k": "v"}, latency_budget_ms=50.0)
+    for env in [
+        wire.request_envelope("invoke", {"task": task.to_wire(),
+                                         "deadline_s": 5.0}),
+        wire.request_envelope("submit_coalesced", {"entries": [
+            {"task": task.to_wire(), "deadline_s": 1.0},
+            {"task": task.to_wire()}]}),
+        wire.request_envelope("poll_coalesced",
+                              {"tickets": ["t-1", "t-2"], "wait_s": 0.5}),
+        wire.ok_envelope("health", {"plane": "edge", "resources": {}}),
+        wire.error_envelope("invoke",
+                            WireError(ErrorCode.QUEUE_SATURATED, "full",
+                                      detail={"retry_after_s": 0.25})),
+    ]:
+        assert_codecs_agree(env)
+        restored = TaskRequest.from_wire(
+            json_rt({"task": task.to_wire()})["task"])
+        assert restored == task
+
+
+def test_interned_fields_encode_compactly_and_are_append_only():
+    # an envelope of interned keys must beat its JSON encoding on size
+    env = wire.ok_envelope("poll", {"ticket": "t", "state": "done",
+                                    "ok": True})
+    assert len(wire.dumps_binary(env)) < len(wire.dumps(env))
+    # append-only contract: the v1.2 prefix is frozen forever
+    assert wire.INTERNED_FIELDS.index("protocol_version") == 0
+    assert len(set(wire.INTERNED_FIELDS)) == len(wire.INTERNED_FIELDS)
+
+
+def test_float_list_beats_json_size_on_tensor_payloads():
+    payload = [random.Random(7).uniform(-1, 1) for _ in range(256)]
+    env = {"payload": payload}
+    assert len(wire.dumps_binary(env)) < len(wire.dumps(env)) / 2
+
+
+# ---------------------------------------------------------------------------
+# malformed frames → structured ProtocolError (never a raw struct/KeyError)
+
+
+GOOD = wire.dumps_binary({"kind": "health", "ok": True, "n": [1.0, 2.0]})
+
+
+@pytest.mark.parametrize("frame", [
+    b"",                                        # empty
+    b"\x00",                                    # bad magic
+    bytes([0xA7]),                              # magic alone
+    bytes([0xA7, 99]) + GOOD[2:],               # unknown codec version
+    GOOD[:-1],                                  # truncated value tree
+    GOOD[:3],                                   # truncated after prefix
+    GOOD + b"\x00",                             # trailing bytes
+    bytes([0xA7, 1, 0x01, 0xFF]),               # length prefix overruns
+    bytes([0xA7, 1, 0x02, 0xFE, 0x00]),         # unknown value tag
+    bytes([0xA7, 1]) + b"\xff" * 11,            # varint overflow
+    bytes([0xA7, 1, 0x03, 0x0A, 0x80, 0x80]),   # interned index truncated
+    wire.dumps_binary({"k": "v"})[:2] + bytes([2, 0x0A, 0x7F]),  # bad intern
+    bytes([0xA7, 1, 0x05, 0x08, 0x02, 0x05,     # dict with non-str key
+           0x01, 0x00]),
+])
+def test_malformed_frames_raise_protocol_error(frame):
+    with pytest.raises(wire.ProtocolError):
+        wire.loads_binary(frame)
+
+
+def test_invalid_utf8_rejected():
+    bad = bytearray(wire.dumps_binary({"k": "ab"}))
+    assert bad[-2:] == b"ab"
+    bad[-2:] = b"\xff\xfe"
+    with pytest.raises(wire.ProtocolError):
+        wire.loads_binary(bytes(bad))
+
+
+def test_decode_envelope_sniffs_misdeclared_bodies():
+    env = {"kind": "health", "ok": True}
+    # binary frame declared as JSON: magic sniff routes to the binary codec
+    assert wire.decode_envelope(wire.dumps_binary(env), "application/json") \
+        == env
+    # JSON body declared binary: fails loudly in the binary codec
+    with pytest.raises(wire.ProtocolError):
+        wire.decode_envelope(wire.dumps(env), wire.BINARY_CONTENT_TYPE)
+
+
+def test_content_negotiation_helpers():
+    assert wire.wants_binary(wire.BINARY_CONTENT_TYPE)
+    assert wire.wants_binary("application/x-physmcp; q=1.0")
+    assert not wire.wants_binary("application/json")
+    assert not wire.wants_binary(None)
+    assert not wire.wants_binary("")
+    body, ctype = wire.encode_envelope({"kind": "health"}, binary=True)
+    assert ctype == wire.BINARY_CONTENT_TYPE and wire.is_binary(body)
+    body, ctype = wire.encode_envelope({"kind": "health"}, binary=False)
+    assert ctype == wire.JSON_CONTENT_TYPE and not wire.is_binary(body)
+
+
+# ---------------------------------------------------------------------------
+# malformed frame OVER THE WIRE → HTTP 400 with a structured error envelope
+
+
+def test_malformed_binary_frame_gets_structured_bad_request():
+    orch = Orchestrator()
+    orch.register(MemristiveAdapter("m-codec"))
+    gw = ControlPlaneGateway(orch, plane="codec-edge").start()
+    try:
+        import http.client
+        for accept, decoder in [
+                (wire.JSON_CONTENT_TYPE, wire.loads),
+                (wire.BINARY_CONTENT_TYPE, wire.loads_binary)]:
+            conn = http.client.HTTPConnection("127.0.0.1", gw.port,
+                                              timeout=5.0)
+            try:
+                conn.request("POST", "/v1/invoke", body=GOOD[:-3],
+                             headers={"Content-Type":
+                                      wire.BINARY_CONTENT_TYPE,
+                                      "Accept": accept})
+                resp = conn.getresponse()
+                payload = resp.read()
+                assert resp.status == 400
+                env = decoder(payload)
+                assert env["ok"] is False
+                assert env["error"]["code"] == "BAD_REQUEST"
+                assert env["protocol_version"] == wire.PROTOCOL_VERSION
+            finally:
+                conn.close()
+    finally:
+        gw.stop()
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis when available, seeded fuzz otherwise)
+
+
+def _strategies():
+    keys = st.one_of(st.sampled_from(wire.INTERNED_FIELDS),
+                     st.text(string.printable, max_size=12))
+    scalars = st.one_of(
+        st.none(), st.booleans(), st.integers(),
+        st.floats(allow_nan=False),
+        st.text(max_size=40))
+    return st.recursive(
+        scalars,
+        lambda children: st.one_of(
+            st.lists(children, max_size=6),
+            st.lists(st.floats(allow_nan=False), min_size=1, max_size=16),
+            st.dictionaries(keys, children, max_size=6)),
+        max_leaves=24)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(st.dictionaries(st.text(max_size=16), _strategies(), max_size=8))
+    def test_property_binary_json_equivalence(envelope):
+        assert_codecs_agree(envelope)
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.binary(max_size=200))
+    def test_property_arbitrary_bytes_never_crash_undeclared(frame):
+        """Fuzzed frames either decode or raise ProtocolError — never a
+        struct/Unicode/Key/IndexError leaking out of the codec."""
+        try:
+            wire.loads_binary(frame)
+        except wire.ProtocolError:
+            pass
+else:
+    def _random_value(rng, depth=0):
+        roll = rng.random()
+        if depth >= 3 or roll < 0.45:
+            return rng.choice([
+                None, True, False, rng.randint(-2**48, 2**48),
+                rng.uniform(-1e6, 1e6),
+                "".join(rng.choices(string.printable, k=rng.randint(0, 12))),
+                rng.choice(wire.INTERNED_FIELDS)])
+        if roll < 0.65:
+            return [rng.uniform(-1, 1) for _ in range(rng.randint(1, 12))]
+        if roll < 0.8:
+            return [_random_value(rng, depth + 1)
+                    for _ in range(rng.randint(0, 5))]
+        return {rng.choice(wire.INTERNED_FIELDS) if rng.random() < 0.5
+                else "k%d" % rng.randint(0, 99):
+                _random_value(rng, depth + 1)
+                for _ in range(rng.randint(0, 5))}
+
+    def test_property_binary_json_equivalence():
+        rng = random.Random(0xA7)
+        for _ in range(300):
+            assert_codecs_agree({"body": _random_value(rng)})
+
+    def test_property_arbitrary_bytes_never_crash_undeclared():
+        rng = random.Random(0xA7)
+        for _ in range(500):
+            frame = bytes([0xA7, 1]) + rng.randbytes(rng.randint(0, 60))
+            try:
+                wire.loads_binary(frame)
+            except wire.ProtocolError:
+                pass

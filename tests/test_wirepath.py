@@ -1,0 +1,334 @@
+"""Sub-millisecond wire path: coalescing, mixed codecs, shared followers.
+
+Integration coverage for the v1.2 wire-path rework on live gateways:
+
+- mixed-codec federation — a JSON parent hop and a binary child hop in one
+  device→edge→cloud chain, proving codec negotiation is per connection
+  (per request, in fact) and that federated forwards ride the coalesced
+  submit/poll endpoints;
+- the client's bounded per-thread connection pool — thread churn must not
+  leak sockets (dead owners reaped, LRU evicted beyond the cap);
+- coalesced execution end-to-end — group commit visibly batches concurrent
+  submitters, outcomes are per-entry, resolved tickets deliver once;
+- the shared stream follower — ``federate_all`` profiles of one child
+  plane share ONE ``/v1/stream`` subscription that dies with its last
+  subscriber, not its first.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import ErrorCode, Orchestrator, TaskRequest
+from repro.gateway import ControlPlaneClient, ControlPlaneGateway, GatewayError
+from repro.substrates import (ChemicalAdapter, MemristiveAdapter,
+                              federate, federate_all)
+from repro.substrates.remote_plane import _PlaneStreamFollower
+
+
+def _vector_task(**kw):
+    return TaskRequest(function="inference", input_modality="vector",
+                       output_modality="vector", payload=[0.1, 0.2, 0.3, 0.4],
+                       **kw)
+
+
+def _await(cond, timeout_s=5.0, interval_s=0.02):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(interval_s)
+    return cond()
+
+
+@pytest.fixture()
+def edge_plane():
+    orch = Orchestrator()
+    orch.register(MemristiveAdapter("edge-m"))
+    gw = ControlPlaneGateway(orch, plane="wire-edge").start()
+    try:
+        yield orch, gw
+    finally:
+        gw.stop()
+
+
+# ---------------------------------------------------------------------------
+# mixed-codec federation: JSON parent hop, binary child hop
+
+
+def test_mixed_codec_federation_json_parent_binary_child(edge_plane):
+    _, edge_gw = edge_plane
+    cloud = Orchestrator()
+    cloud_gw = ControlPlaneGateway(cloud, plane="wire-cloud").start()
+    binary_child = ControlPlaneClient(edge_gw.url, codec="binary")
+    json_parent = ControlPlaneClient(cloud_gw.url)      # wire-identical v1.1
+    try:
+        adapter = federate(cloud, binary_child)
+        res, trace = json_parent.invoke(_vector_task(), deadline_s=30.0)
+        assert res.status == "completed"
+        assert trace.selected == adapter.resource_id
+        assert res.artifacts["remote_trace"]["selected"] == "edge-m"
+        # the child hop really negotiated the binary codec AND rode the
+        # coalesced submit buffer (the v1.2 federated fast path)
+        assert binary_child.codec == "binary"
+        assert binary_child._coalescer.entries >= 1
+        assert binary_child._coalescer.flushes >= 1
+        # same chain again, pure JSON child: results agree across codecs
+        res2, _ = json_parent.invoke(_vector_task(), deadline_s=30.0)
+        assert res2.status == "completed"
+        assert len(res2.output) == len(res.output)
+    finally:
+        json_parent.close()
+        binary_child.close()
+        cloud_gw.stop()
+
+
+@pytest.mark.parametrize("codec", ["json", "binary"])
+def test_full_read_surface_per_codec(edge_plane, codec):
+    """Every GET/POST endpoint answers identically under either codec."""
+    _, gw = edge_plane
+    client = ControlPlaneClient(gw.url, codec=codec)
+    try:
+        assert client.health()["plane"] == "wire-edge"
+        fleet = client.discover()
+        assert [d.resource_id for d in fleet] == ["edge-m"]
+        described = client.describe("edge-m")
+        assert described["descriptor"].resource_id == "edge-m"
+        res, trace = client.invoke(_vector_task(), deadline_s=30.0)
+        assert res.status == "completed" and trace.selected == "edge-m"
+        ticket = client.submit(_vector_task(), deadline_s=30.0)
+        out_res, _ = client.result(ticket, timeout_s=30.0)
+        assert out_res.status == "completed"
+    finally:
+        client.close()
+
+
+# ---------------------------------------------------------------------------
+# connection pool: churn must not leak, cap must hold
+
+
+def test_thread_churn_does_not_leak_pooled_sockets(edge_plane):
+    _, gw = edge_plane
+    client = ControlPlaneClient(gw.url)
+    seen = []
+    try:
+        def one_call():
+            client.health()
+            with client._pool_lock:
+                entry = client._pool.get(threading.get_ident())
+            if entry is not None:
+                seen.append(entry[1])
+
+        for _ in range(3 * ControlPlaneClient.MAX_POOLED_CONNS):
+            t = threading.Thread(target=one_call)
+            t.start()
+            t.join(timeout=10.0)
+            assert not t.is_alive()
+        assert len(seen) == 3 * ControlPlaneClient.MAX_POOLED_CONNS
+        # any pool lookup reaps dead owners: the churned sockets close
+        client.health()
+        with client._pool_lock:
+            assert len(client._pool) <= 2   # this thread (+ mux, if woken)
+        dead = [c for c in seen if c.sock is not None]
+        assert _await(lambda: all(c.sock is None for c in seen)), \
+            f"{len(dead)} sockets from exited threads still open"
+    finally:
+        client.close()
+
+
+def test_pool_cap_bounds_live_threads(edge_plane):
+    _, gw = edge_plane
+    client = ControlPlaneClient(gw.url)
+    hold = threading.Event()
+    started = threading.Barrier(ControlPlaneClient.MAX_POOLED_CONNS + 8 + 1,
+                                timeout=30.0)
+    threads = []
+    try:
+        def one_call():
+            client.health()
+            started.wait()
+            hold.wait(timeout=30.0)
+
+        for _ in range(ControlPlaneClient.MAX_POOLED_CONNS + 8):
+            t = threading.Thread(target=one_call, daemon=True)
+            t.start()
+            threads.append(t)
+        started.wait()
+        # every owner is still alive, so the LRU cap is the only bound
+        client.health()
+        with client._pool_lock:
+            assert len(client._pool) <= ControlPlaneClient.MAX_POOLED_CONNS + 1
+    finally:
+        hold.set()
+        for t in threads:
+            t.join(timeout=10.0)
+        client.close()
+
+
+# ---------------------------------------------------------------------------
+# coalesced execution end-to-end
+
+
+def test_group_commit_batches_concurrent_submitters(edge_plane):
+    _, gw = edge_plane
+    client = ControlPlaneClient(gw.url, coalesce_linger_s=0.05)
+    n = 8
+    tickets = [None] * n
+    try:
+        def submit(i):
+            tickets[i] = client.submit_coalesced(_vector_task())
+
+        threads = [threading.Thread(target=submit, args=(i,))
+                   for i in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30.0)
+        assert all(isinstance(t, str) for t in tickets)
+        assert len(set(tickets)) == n
+        co = client._coalescer
+        assert co.entries == n
+        assert co.flushes < n, \
+            f"no batching happened ({co.flushes} flushes for {n} entries)"
+        # one frame polls them all; resolved tickets deliver exactly once
+        outcomes = client.poll_coalesced(tickets, wait_s=30.0)
+        assert [o["ticket"] for o in outcomes] == tickets
+        done = [o for o in outcomes if o.get("state") == "done"]
+        for out in done:
+            assert out["ok"] and out["result"]["status"] == "completed"
+        again = client.poll_coalesced([o["ticket"] for o in done])
+        assert all(not o["ok"] and o["error"]["code"] == "NOT_FOUND"
+                   for o in again)
+    finally:
+        client.close()
+
+
+def test_coalesced_outcomes_are_per_entry(edge_plane):
+    """One malformed entry fails only its own slot — the strangers sharing
+    its frame keep their tickets (unlike atomic ``submit_many``)."""
+    from repro.gateway import protocol as wire
+
+    _, gw = edge_plane
+    client = ControlPlaneClient(gw.url)
+    try:
+        good = _vector_task()
+        body = client._call("POST", "/v1/submit_coalesced",
+                            wire.request_envelope("submit_coalesced", {
+                                "entries": [
+                                    {"task": wire.task_to_wire(good)},
+                                    {"no_task_here": 1},
+                                ]}))
+        outcomes = body["outcomes"]
+        assert len(outcomes) == 2
+        assert "ticket" in outcomes[0]          # the stranger survives
+        assert outcomes[1]["error"]["code"] == "BAD_REQUEST"
+        res, _ = client.result(outcomes[0]["ticket"], timeout_s=30.0)
+        assert res.status == "completed"
+        # a task no resource can serve fails AT EXECUTION, per-ticket
+        bad = TaskRequest(function="inference", input_modality="spikes",
+                          output_modality="spikes", payload=[1.0])
+        with pytest.raises(GatewayError) as exc:
+            client.invoke_coalesced(bad, deadline_s=10.0)
+        assert exc.value.code == ErrorCode.NO_MATCH
+    finally:
+        client.close()
+
+
+def test_invoke_coalesced_concurrent_waiters_share_the_mux(edge_plane):
+    _, gw = edge_plane
+    client = ControlPlaneClient(gw.url, codec="binary")
+    n = 8
+    results = [None] * n
+    try:
+        def call(i):
+            res, trace = client.invoke_coalesced(_vector_task(),
+                                                 deadline_s=30.0)
+            results[i] = (res, trace)
+
+        threads = [threading.Thread(target=call, args=(i,))
+                   for i in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60.0)
+        assert all(r is not None for r in results)
+        for res, trace in results:
+            assert res.status == "completed"
+            assert trace.selected == "edge-m"
+    finally:
+        client.close()
+
+
+# ---------------------------------------------------------------------------
+# shared stream follower: one subscription per child plane
+
+
+def _follow_threads(gw):
+    want = f"phys-mcp-follow-127.0.0.1:{gw.port}"
+    return [t for t in threading.enumerate()
+            if t.is_alive() and t.name == want]
+
+
+def test_federate_all_shares_one_follower_per_child_plane():
+    edge = Orchestrator()
+    edge.register(MemristiveAdapter("edge-m"))
+    edge.register(ChemicalAdapter())
+    gw = ControlPlaneGateway(edge, plane="multi-edge").start()
+    cloud = Orchestrator()
+    try:
+        adapters = federate_all(cloud, gw.url)
+        assert len(adapters) == 2               # vector + concentration
+        a1, a2 = adapters
+        # ONE follower object, ONE registry slot, ONE stream thread
+        assert a1._follower is a2._follower
+        assert len(_follow_threads(gw)) == 1
+        # ...and both profile adapters still see connects + live health
+        assert _await(lambda: a1._stream_connects >= 1
+                      and a2._stream_connects >= 1)
+        assert _await(lambda: a1.snapshot().health_status == "healthy"
+                      and a2.snapshot().health_status == "healthy")
+
+        # closing ONE profile keeps the sibling streaming
+        follower = a1._follower
+        a1.close()
+        assert a1._follower is None
+        assert a2._follower is follower
+        assert len(_follow_threads(gw)) == 1
+        assert _PlaneStreamFollower._registry.get(
+            ("127.0.0.1", gw.port)) is follower
+
+        # the LAST subscriber tears the stream down and drops the registry
+        a2.close()
+        assert _await(lambda: not _follow_threads(gw))
+        assert ("127.0.0.1", gw.port) not in _PlaneStreamFollower._registry
+    finally:
+        gw.stop()
+
+
+def test_follower_reconnect_fans_out_to_all_profiles():
+    edge = Orchestrator()
+    edge.register(MemristiveAdapter("edge-m"))
+    edge.register(ChemicalAdapter())
+    gw = ControlPlaneGateway(edge, plane="flap-edge").start()
+    port = gw.port
+    cloud = Orchestrator()
+    adapters = federate_all(cloud, gw.url)
+    a1, a2 = adapters
+    try:
+        assert _await(lambda: a1._stream_connects >= 1
+                      and a2._stream_connects >= 1)
+        gw.stop()
+        # stream loss marks EVERY profile down (wire-free, no poll lag)
+        assert _await(lambda: a1.snapshot().readiness == "down"
+                      and a2.snapshot().readiness == "down")
+        gw = ControlPlaneGateway(edge, plane="flap-edge", port=port).start()
+        # the shared follower reconnects once; BOTH adapters observe it
+        assert _await(lambda: a1._stream_connects >= 2
+                      and a2._stream_connects >= 2, timeout_s=8.0)
+        assert _await(lambda: a1.snapshot().health_status == "healthy"
+                      and a2.snapshot().health_status == "healthy")
+        assert len(_follow_threads(gw)) == 1
+    finally:
+        for a in adapters:
+            a.close()
+        gw.stop()
