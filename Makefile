@@ -27,6 +27,14 @@
 #   make bench-hierarchy   multi-hop chain + streaming fan-in benchmark
 #                          (per-hop added latency <= single-hop margin,
 #                          >= 2x fewer requests than cursor polling)
+#   make serving-smoke     ~30s LM serving drill: engine/adapter suite +
+#                          quick continuous-batching trial and a 16-session
+#                          gateway flood (structured DEADLINE refusals,
+#                          zero mid-decode expiries asserted)
+#   make bench-serving     full LM serving benchmark: continuous vs fixed
+#                          batch goodput on a mixed-length trace (asserts
+#                          >= 2x) + 128 concurrent gateway sessions
+#                          (bounded p99 TTFT, admission refusals)
 #   make bench-throughput  headline serial-vs-pooled scheduler benchmark
 #   make bench-recovery    resilience benchmark: goodput under faults with
 #                          vs without the HealthManager
@@ -38,9 +46,9 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast chaos-smoke test-twin twin-smoke test-gateway \
-        gateway-smoke bench-gateway-smoke hierarchy-smoke bench \
-        bench-throughput bench-recovery bench-twin bench-gateway \
-        bench-hierarchy dev-deps
+        gateway-smoke bench-gateway-smoke hierarchy-smoke serving-smoke \
+        bench bench-throughput bench-recovery bench-twin bench-gateway \
+        bench-hierarchy bench-serving dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -70,6 +78,13 @@ bench-gateway-smoke: gateway-smoke
 
 hierarchy-smoke:
 	$(PYTHON) -m benchmarks.bench_hierarchy --smoke
+
+serving-smoke:
+	$(PYTHON) -m pytest -q tests/test_serving.py -m "not slow"
+	$(PYTHON) -m benchmarks.bench_serving --smoke
+
+bench-serving:
+	$(PYTHON) -m benchmarks.bench_serving
 
 bench-gateway:
 	$(PYTHON) -m benchmarks.bench_gateway

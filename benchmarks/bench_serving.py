@@ -1,0 +1,320 @@
+"""LM serving bench: continuous-batching goodput + admission under load.
+
+The serving tentpole makes two measurable claims; each gets a section and
+an assert, 3 committed trials in ``results/bench_serving.json``.
+
+- **goodput** — one mixed-length arrival trace (small prompt-length set so
+  prefill compiles stay bounded; heavy-tailed ``max_new_tokens`` so a few
+  long decodes pin any fixed group) served two ways on the same params:
+
+  * *fixed* — the run-to-completion baseline: requests grouped in arrival
+    order into batches of ``BATCH``, each group holding its slots until
+    the group's longest request finishes (head-of-line blocking + idle
+    slots after short rows retire);
+  * *continuous* — the same requests through ``submit()`` + the decode
+    loop: finished rows leave the batch each step, freed slots re-primed
+    from fresh prefills.
+
+  Goodput = generated tokens / wall second.  Acceptance: continuous >=
+  2x fixed on the full run (the ratio is exactly the fixed path's slot
+  idleness, paid back).
+
+- **concurrency** — one ``LmServingAdapter`` behind a real
+  ``ControlPlaneGateway``; ``SESSIONS`` (>= 128 full-run) client threads
+  share one SDK client and ride ``invoke_coalesced`` (submit coalescing +
+  long-poll mux).  One request in ``DOOMED_EVERY`` carries a deadline
+  budget the roofline admission model cannot meet — those must come back
+  as structured ``DEADLINE`` refusals, never tie up batch slots, and
+  never trip the breaker for everyone else.  Asserts: every doomed
+  request refused as ``DEADLINE``, every admitted request completed,
+  p99 engine TTFT within ``TTFT_P99_BOUND_MS``, and **zero mid-decode
+  deadline expiries for admitted requests** (the admission model's whole
+  point: refuse at the door, never renege mid-decode).
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
+
+``--smoke`` (make serving-smoke, CI) shrinks the trace and session count,
+keeps every correctness assert (refusal taxonomy, zero expiries, admitted
+completion) and drops only the 2x perf bound — tiny traces make the
+ratio noisy, and CI machines should not fail on throughput weather.
+"""
+from __future__ import annotations
+
+import statistics
+import threading
+import time
+from typing import Dict, List
+
+from benchmarks.common import csv_row, save
+
+N_TRIALS = 3
+
+# -- goodput trace (full run) -------------------------------------------------
+BATCH = 8
+MAX_SEQ = 128
+N_REQS = 64
+PROMPT_LENS = (6, 7, 8, 9)        # small set: prefill compiles stay bounded
+LIGHT_MAX_NEW = (2, 3)
+HEAVY_MAX_NEW = 64                # the tail that pins a fixed batch
+HEAVY_EVERY = 8                   # 1 in 8 requests is heavy
+GOODPUT_RATIO_MIN = 2.0
+
+# -- gateway concurrency ------------------------------------------------------
+SESSIONS = 128
+WORKERS = 64
+DOOMED_EVERY = 8
+DOOMED_BUDGET_MS = 20.0           # cannot cover HEAVY_MAX_NEW decode steps
+ADMITTED_BUDGET_MS = 60_000.0     # generous but real: expiry bookkeeping on
+TTFT_P99_BOUND_MS = 2_000.0
+
+ARCH = "internlm2-20b"
+
+
+def _pct(xs: List[float], p: float) -> float:
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(p * (len(xs) - 1)))]
+
+
+def _trace(rng, cfg, n_reqs: int, heavy_max_new: int):
+    """Mixed-length arrival trace: (prompt, max_new) pairs, heavy-tailed."""
+    out = []
+    for i in range(n_reqs):
+        plen = int(rng.choice(PROMPT_LENS))
+        prompt = rng.integers(1, cfg.vocab_size, size=plen).astype("int32")
+        max_new = heavy_max_new if i % HEAVY_EVERY == HEAVY_EVERY - 1 \
+            else int(rng.choice(LIGHT_MAX_NEW))
+        out.append((prompt, max_new))
+    return out
+
+
+def _fixed_run(eng, trace) -> Dict:
+    """Run-to-completion baseline: arrival-order groups of ``batch_size``."""
+    from repro.serving import Request
+
+    reqs = [Request(f"f{i}", p, max_new_tokens=mn)
+            for i, (p, mn) in enumerate(trace)]
+    b = eng.batch_size
+    t0 = time.perf_counter()
+    for i in range(0, len(reqs), b):
+        eng.generate(reqs[i:i + b])
+    wall_s = time.perf_counter() - t0
+    tokens = sum(len(r.generated) for r in reqs)
+    assert all(r.done and len(r.generated) == r.max_new_tokens for r in reqs)
+    return {"tokens": tokens, "wall_s": wall_s,
+            "tokens_per_s": tokens / wall_s}
+
+
+def _continuous_run(eng, trace) -> Dict:
+    """Same trace through the continuous path: submit all, drain."""
+    from repro.serving import Request
+
+    reqs = [Request(f"c{i}", p, max_new_tokens=mn)
+            for i, (p, mn) in enumerate(trace)]
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    eng.drain()
+    wall_s = time.perf_counter() - t0
+    tokens = sum(len(r.generated) for r in reqs)
+    assert all(r.done and len(r.generated) == r.max_new_tokens for r in reqs)
+    ttfts = [r.ttft_ms for r in reqs if r.ttft_ms is not None]
+    return {"tokens": tokens, "wall_s": wall_s,
+            "tokens_per_s": tokens / wall_s,
+            "ttft_p50_ms": _pct(ttfts, 0.50), "ttft_p99_ms": _pct(ttfts, 0.99)}
+
+
+def _goodput_section(smoke: bool) -> Dict:
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.models import model_specs
+    from repro.models.common import init_params
+    from repro.serving import ServingEngine
+
+    cfg = reduced(get_config(ARCH))
+    params = init_params(model_specs(cfg), seed=1)
+    batch = 4 if smoke else BATCH
+    n_reqs = 12 if smoke else N_REQS
+    heavy = 24 if smoke else HEAVY_MAX_NEW
+    fixed_eng = ServingEngine(cfg, params=params, batch_size=batch,
+                              max_seq=MAX_SEQ)
+    cont_eng = ServingEngine(cfg, params=params, batch_size=batch,
+                             max_seq=MAX_SEQ)
+    # identical trace every trial (shapes compile once in the warmup;
+    # trials then measure steady-state serving, not XLA compile weather)
+    trace = _trace(np.random.default_rng(7), cfg, n_reqs, heavy)
+    _fixed_run(fixed_eng, trace)
+    _continuous_run(cont_eng, trace)
+    trials = []
+    for _ in range(1 if smoke else N_TRIALS):
+        fixed = _fixed_run(fixed_eng, trace)
+        cont = _continuous_run(cont_eng, trace)
+        trials.append({"fixed": fixed, "continuous": cont,
+                       "goodput_ratio": cont["tokens_per_s"]
+                       / fixed["tokens_per_s"]})
+    ratios = [t["goodput_ratio"] for t in trials]
+    section = {
+        "batch_size": batch, "n_requests": n_reqs,
+        "prompt_lens": list(PROMPT_LENS), "heavy_max_new": heavy,
+        "heavy_every": HEAVY_EVERY, "light_max_new": list(LIGHT_MAX_NEW),
+        "trials": trials,
+        "goodput_ratio_median": statistics.median(ratios),
+        "goodput_ratio_min": min(ratios),
+    }
+    if not smoke:
+        assert min(ratios) >= GOODPUT_RATIO_MIN, \
+            f"continuous batching goodput ratio {min(ratios):.2f} " \
+            f"< {GOODPUT_RATIO_MIN}x over fixed-batch baseline"
+    return section
+
+
+def _flood_trial(client, sessions: int) -> Dict:
+    """``sessions`` concurrent threads, each one coalesced invoke; a
+    deterministic 1-in-``DOOMED_EVERY`` carries an unmeetable budget."""
+    from repro.core import TaskRequest
+    from repro.core.errors import ErrorCode
+    from repro.gateway.client import GatewayError
+
+    lock = threading.Lock()
+    completed: List[Dict] = []
+    refused: List[str] = []
+    unexpected: List[str] = []
+
+    def one(i: int) -> None:
+        doomed = i % DOOMED_EVERY == DOOMED_EVERY - 1
+        plen = PROMPT_LENS[i % len(PROMPT_LENS)]
+        task = TaskRequest(
+            function="generate", input_modality="tokens",
+            output_modality="tokens",
+            payload={"prompt": [1 + (i + j) % 50 for j in range(plen)],
+                     "max_new_tokens": HEAVY_MAX_NEW if doomed
+                     else 2 + i % 5},
+            latency_budget_ms=DOOMED_BUDGET_MS if doomed
+            else ADMITTED_BUDGET_MS)
+        t0 = time.perf_counter()
+        try:
+            res, _ = client.invoke_coalesced(task)
+            wall_ms = (time.perf_counter() - t0) * 1e3
+            with lock:
+                completed.append({"doomed": doomed, "wall_ms": wall_ms,
+                                  "telemetry": dict(res.telemetry)})
+        except GatewayError as e:
+            with lock:
+                (refused if e.code is ErrorCode.DEADLINE
+                 else unexpected).append(f"{'doomed' if doomed else 'ok'}-"
+                                         f"{i}: {e.code.value}")
+
+    threads = [threading.Thread(target=one, args=(i,), daemon=True)
+               for i in range(sessions)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=180.0)
+    wall_s = time.perf_counter() - t0
+    assert not unexpected, f"non-DEADLINE failures: {unexpected[:5]}"
+    n_doomed = sessions // DOOMED_EVERY
+    assert not any(c["doomed"] for c in completed) \
+        and len(refused) == n_doomed, \
+        f"expected {n_doomed} DEADLINE refusals, got {len(refused)} " \
+        f"({sum(c['doomed'] for c in completed)} doomed served)"
+    assert len(completed) == sessions - n_doomed, \
+        f"admitted completions {len(completed)} != {sessions - n_doomed}"
+    ttfts = [c["telemetry"]["ttft_ms"] for c in completed]
+    walls = [c["wall_ms"] for c in completed]
+    expired = sum(bool(c["telemetry"].get("deadline_expired"))
+                  for c in completed)
+    assert expired == 0, \
+        f"{expired} admitted requests expired mid-decode (admission model " \
+        f"must refuse at the door instead)"
+    return {
+        "sessions": sessions, "wall_s": round(wall_s, 3),
+        "completed": len(completed), "deadline_refused": len(refused),
+        "mid_decode_expiries": expired,
+        "ttft_p50_ms": round(_pct(ttfts, 0.50), 3),
+        "ttft_p99_ms": round(_pct(ttfts, 0.99), 3),
+        "e2e_p50_ms": round(_pct(walls, 0.50), 3),
+        "e2e_p99_ms": round(_pct(walls, 0.99), 3),
+    }
+
+
+def _concurrency_section(smoke: bool) -> Dict:
+    from repro.core import Orchestrator, TaskRequest
+    from repro.gateway import ControlPlaneClient, ControlPlaneGateway
+    from repro.substrates import LmServingAdapter
+
+    sessions = 16 if smoke else SESSIONS
+    orch = Orchestrator(plane="serving-bench")
+    adapter = LmServingAdapter(batch_size=BATCH, max_seq=MAX_SEQ,
+                               max_concurrent=max(sessions, 256))
+    orch.register(adapter)
+    gw = ControlPlaneGateway(orch, plane="serving-bench",
+                             workers=WORKERS).start()
+    client = ControlPlaneClient(gw.url, timeout_s=120.0)
+    try:
+        # warm in-process first: builds the engine, compiles prefill for
+        # every prompt length the flood uses, seeds the cost model
+        for plen in PROMPT_LENS:
+            res, _ = orch.execute(TaskRequest(
+                function="generate", input_modality="tokens",
+                output_modality="tokens",
+                payload={"prompt": list(range(1, plen + 1)),
+                         "max_new_tokens": 4}))
+            assert res.status == "completed"
+        trials = [_flood_trial(client, sessions)
+                  for _ in range(1 if smoke else N_TRIALS)]
+        p99s = [t["ttft_p99_ms"] for t in trials]
+        if not smoke:
+            assert max(p99s) <= TTFT_P99_BOUND_MS, \
+                f"p99 TTFT {max(p99s):.1f}ms over {TTFT_P99_BOUND_MS}ms " \
+                f"bound at {sessions} sessions"
+        m = adapter.engine.metrics
+        assert m["deadline_expired"] == 0
+        return {"sessions": sessions, "workers": WORKERS,
+                "doomed_every": DOOMED_EVERY,
+                "doomed_budget_ms": DOOMED_BUDGET_MS,
+                "trials": trials, "ttft_p99_worst_ms": max(p99s),
+                "engine_requests": m["requests"],
+                "engine_deadline_expired": m["deadline_expired"],
+                "cost_model": adapter.cost.snapshot()}
+    finally:
+        client.close()
+        gw.stop()
+        adapter.close()
+
+
+def run(fast_service, smoke: bool = False) -> List[str]:
+    del fast_service                    # serving brings its own substrate
+    goodput = _goodput_section(smoke)
+    conc = _concurrency_section(smoke)
+    payload = {"arch": ARCH, "max_seq": MAX_SEQ, "smoke": smoke,
+               "goodput": goodput, "concurrency": conc}
+    save("bench_serving_smoke" if smoke else "bench_serving", payload)
+    best = max(t["continuous"]["tokens_per_s"] for t in goodput["trials"])
+    fixed = max(t["fixed"]["tokens_per_s"] for t in goodput["trials"])
+    t0 = conc["trials"][0]
+    return [
+        csv_row("serving_fixed_tokens_per_s", fixed,
+                f"batch={goodput['batch_size']} run-to-completion"),
+        csv_row("serving_continuous_tokens_per_s", best,
+                f"goodput_ratio_median="
+                f"{goodput['goodput_ratio_median']:.2f}x"),
+        csv_row("serving_ttft_p99_ms", conc["ttft_p99_worst_ms"],
+                f"sessions={conc['sessions']} "
+                f"refused={t0['deadline_refused']} "
+                f"expired={conc['engine_deadline_expired']}"),
+    ]
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for row in run(None, smoke=args.smoke):
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

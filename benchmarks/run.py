@@ -31,6 +31,12 @@ Paper artifact map:
                         (vs the single-hop wire margin) and streaming
                         telemetry fan-in vs the N-cursor polling baseline
                         (request count + zero-loss by sequence numbers)
+    bench_serving     — beyond-paper LM serving substrate: continuous
+                        batching vs fixed-batch goodput on a mixed-length
+                        arrival trace (>= 2x), p99 TTFT + structured
+                        DEADLINE admission refusals under >= 128
+                        concurrent gateway sessions (zero mid-decode
+                        expiries for admitted requests)
 """
 import argparse
 import sys
@@ -42,8 +48,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from benchmarks import (bench_cortical, bench_faults, bench_fleet,
                         bench_gateway, bench_hierarchy, bench_http,
                         bench_matcher, bench_overhead, bench_portability,
-                        bench_recovery, bench_roofline, bench_throughput,
-                        bench_twin)
+                        bench_recovery, bench_roofline, bench_serving,
+                        bench_throughput, bench_twin)
 
 BENCHES = {
     "portability": bench_portability.run,
@@ -59,6 +65,7 @@ BENCHES = {
     "twin": bench_twin.run,
     "gateway": bench_gateway.run,
     "hierarchy": bench_hierarchy.run,
+    "serving": bench_serving.run,
 }
 
 

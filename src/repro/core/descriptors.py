@@ -49,6 +49,7 @@ MODALITIES = (
     "vector",             # memristive/photonic: digital vectors/tensors
     "tensor",
     "tensor_shards",      # TPU pod substrate: sharded device arrays
+    "tokens",             # LM serving substrate: token-id sequences
 )
 
 LATENCY_REGIMES = ("slow_seconds", "fast_ms", "sub_ms")

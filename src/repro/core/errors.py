@@ -74,6 +74,8 @@ _CLASSIFIERS = (
                                     "prepare failure", "invoke failure",
                                     "postcondition")),
     (ErrorCode.NOT_FOUND, ("resource unregistered", "no such resource")),
+    (ErrorCode.BAD_REQUEST, ("bad request", "exceeds max_seq", "empty prompt",
+                             "kv cache overflow")),
 )
 
 
@@ -129,3 +131,18 @@ class ControlPlaneError(RuntimeError):
     @classmethod
     def from_wire_error(cls, err: WireError) -> "ControlPlaneError":
         return cls(err.code, err.message, err.detail)
+
+
+class AdmissionRefused(ControlPlaneError):
+    """Raised by an adapter that REFUSES work it predicts it cannot serve
+    within the task's budget (predictive admission control, e.g. the LM
+    serving substrate's roofline admission model).
+
+    Unlike an invocation *failure*, a refusal is not evidence of substrate
+    ill-health: the invocation manager completes the lifecycle session
+    normally (no NEEDS_RESET, no FAILED), and the health manager records
+    the attempt as ok so refusals never trip a circuit breaker.  The
+    refusal message should contain a classifier needle (e.g. "deadline
+    budget", "exceeds max_seq") so prose classification recovers the code
+    after fallback aggregation.
+    """

@@ -21,7 +21,7 @@ from typing import Any, Dict, Optional
 
 from repro.core.contracts import SessionContracts, contracts_from_descriptor
 from repro.core.descriptors import ResourceDescriptor
-from repro.core.errors import ErrorCode, classify_rejection
+from repro.core.errors import AdmissionRefused, ErrorCode, classify_rejection
 from repro.core.lifecycle import LifecycleManager, LifecycleState
 from repro.core.tasks import TaskRequest
 from repro.core.telemetry import TelemetryBus, TelemetryEvent
@@ -188,6 +188,12 @@ class InvocationManager:
         session.started_at = time.perf_counter()
         try:
             raw = adapter.invoke(session)
+        except AdmissionRefused:
+            # predictive refusal, not a substrate fault: close the session
+            # cleanly so breakers/lifecycle never see it as a failure
+            self.lifecycle.complete(rid)
+            session.state = "done"
+            raise
         except Exception as e:
             # this session holds a RUNNING slot; release only its own so
             # overlapping sessions' complete() accounting stays balanced

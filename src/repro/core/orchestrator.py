@@ -29,7 +29,7 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.descriptors import ResourceDescriptor
-from repro.core.errors import ErrorCode, classify_rejection
+from repro.core.errors import AdmissionRefused, ErrorCode, classify_rejection
 from repro.core.health import HealthManager
 from repro.core.invocation import (InvocationError, InvocationManager,
                                    InvocationResult)
@@ -460,6 +460,14 @@ class Orchestrator:
                     result.status = "invalidated"
                     self.twins.invalidate(rid, post)
                 attempt_ok = failure is None
+            except AdmissionRefused as e:
+                # predictive refusal (e.g. roofline admission: the substrate
+                # cannot finish inside the deadline budget).  Not a substrate
+                # fault: the attempt counts as ok for the breaker, and the
+                # prose keeps the refusal's classifier needles so the final
+                # rejection classifies to the refusal's code (e.g. DEADLINE)
+                failure = f"admission refused: {e}"
+                attempt_ok = True
             except InvocationError as e:
                 failure = f"{e.phase} failure: {e}"
             finally:

@@ -74,20 +74,25 @@ def _block_attend(q_blk, k, v, row_pos, col_pos, *, causal, window, kv_valid):
     """Attention for one query block against the full key range.
 
     q_blk: (B, C, K, G, hd) fp-compute; k/v: (B, T, K, hd);
-    row_pos: (C,), col_pos: (T,) absolute positions; kv_valid: (T,) bool or None.
-    Returns (B, C, K, G, hd).
+    row_pos: (C,) / (B, C) and col_pos: (T,) / (B, T) absolute positions
+    (2-D when each batch row sits on its own timeline — continuous batching);
+    kv_valid: (T,) / (B, T) bool or None.  Returns (B, C, K, G, hd).
     """
     hd = q_blk.shape[-1]
     scores = jnp.einsum("bckgh,btkh->bckgt", q_blk, k).astype(jnp.float32)
     scores = scores / np.sqrt(hd)
-    mask = jnp.ones((row_pos.shape[0], col_pos.shape[0]), jnp.bool_)
+    row = row_pos if row_pos.ndim == 2 else row_pos[None]          # (Bm, C)
+    col = col_pos if col_pos.ndim == 2 else col_pos[None]          # (Bm, T)
+    mask = jnp.ones((max(row.shape[0], col.shape[0]),
+                     row.shape[1], col.shape[1]), jnp.bool_)       # (Bm, C, T)
     if causal:
-        mask &= col_pos[None, :] <= row_pos[:, None]
+        mask &= col[:, None, :] <= row[:, :, None]
     if window is not None:
-        mask &= col_pos[None, :] > (row_pos[:, None] - window)
+        mask &= col[:, None, :] > (row[:, :, None] - window)
     if kv_valid is not None:
-        mask &= kv_valid[None, :]
-    scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+        kvv = kv_valid if kv_valid.ndim == 2 else kv_valid[None]
+        mask &= kvv[:, None, :]
+    scores = jnp.where(mask[:, :, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(q_blk.dtype)
     return jnp.einsum("bckgt,btkh->bckgh", probs, v)
 
@@ -213,25 +218,35 @@ def decode_attention(cfg, p: dict, x, cache: dict, pos, *,
 
     Global attention: cache holds T = max_seq slots, slot ``pos`` is written.
     Local attention: cache is a ring buffer of ``window`` slots.
+    ``pos`` is a scalar (the whole batch at one absolute position) or a
+    (B,) vector (continuous batching: each row on its own timeline).
     """
     q, k_new, v_new = project_qkv(p, x)           # (B, 1, ., .)
-    posv = jnp.full((1,), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    posv = pos[:, None] if per_row else jnp.full((1,), pos, jnp.int32)
     if cfg.family != "encdec":
         q = cm.rope(q, posv, cfg.rope_theta)
         k_new = cm.rope(k_new, posv, cfg.rope_theta)
     k_cache, v_cache = cache["k"], cache["v"]
     T = k_cache.shape[1]
-    slot = (pos % jnp.int32(T) if window is not None else pos).astype(jnp.int32)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+    slot = pos % jnp.int32(T) if window is not None else pos
+    if per_row:
+        b = jnp.arange(q.shape[0])
+        k_cache = k_cache.at[b, slot].set(k_new[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[b, slot].set(v_new[:, 0].astype(v_cache.dtype))
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+    idx = jnp.arange(T, dtype=jnp.int32)
     if window is None:
-        col_pos = jnp.arange(T, dtype=jnp.int32)
-        kv_valid = col_pos <= pos
+        col_pos = idx
+        kv_valid = (idx[None, :] <= pos[:, None]) if per_row else (idx <= pos)
     else:
         # ring buffer: slot i holds absolute position p with p % T == i, the
         # largest such p <= pos
-        idx = jnp.arange(T, dtype=jnp.int32)
-        col_pos = pos - ((pos - idx) % jnp.int32(T))
+        prow = pos[:, None] if per_row else pos
+        col_pos = prow - ((prow - idx) % jnp.int32(T))    # (B, T) or (T,)
         kv_valid = col_pos >= 0
     B, _, H, hd = q.shape
     K = k_cache.shape[2]

@@ -127,16 +127,18 @@ def apply_norm(cfg, p: dict, x):
 def rope(x, positions, theta: float = 10000.0, rotary_dim: Optional[int] = None):
     """Rotary position embedding over the trailing head-dim.
 
-    x: (..., seq, heads, head_dim) or (..., seq, head_dim); positions: (..., seq).
+    x: (..., seq, heads, head_dim) or (..., seq, head_dim); positions:
+    (seq,) shared across the batch, or (batch, seq) when each row sits on
+    its own timeline (continuous batching).
     """
     hd = x.shape[-1]
     rd = rotary_dim or hd
     half = rd // 2
     freq = (theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half))
     positions = jnp.atleast_1d(positions)
-    ang = positions[:, None].astype(jnp.float32) * freq            # (seq, half)
+    ang = positions[..., None].astype(jnp.float32) * freq          # (..., seq, half)
     if x.ndim == 4:                                                # (B, S, H, hd)
-        ang = ang[:, None, :]                                      # (S, 1, half)
+        ang = ang[..., None, :]                                    # (..., S, 1, half)
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     x1, x2 = x[..., :half], x[..., half:rd]
     xr = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)

@@ -114,15 +114,26 @@ def mla_prefill(cfg, p: dict, x, positions):
 
 
 def mla_decode(cfg, p: dict, x, cache: dict, pos):
-    """Absorbed decode: scores/read run directly in the 512-d latent space."""
+    """Absorbed decode: scores/read run directly in the 512-d latent space.
+
+    ``pos`` is a scalar or a (B,) vector of per-row absolute positions
+    (continuous batching).
+    """
     a = cfg.mla
-    posv = jnp.full((1,), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    posv = pos[:, None] if per_row else jnp.full((1,), pos, jnp.int32)
     q_nope, q_rope = _queries(cfg, p, x, posv)                    # (B,1,H,·)
     c_new, kr_new = _latent(cfg, p, x, posv)
-    c_kv = jax.lax.dynamic_update_slice_in_dim(
-        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
-    k_rope = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    if per_row:
+        b = jnp.arange(x.shape[0])
+        c_kv = cache["c_kv"].at[b, pos].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+        k_rope = cache["k_rope"].at[b, pos].set(kr_new[:, 0].astype(cache["k_rope"].dtype))
+    else:
+        c_kv = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
 
     # absorb W_uk into q: (B,1,H,nope) x (r,H,nope) -> (B,1,H,r)
     q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
@@ -130,8 +141,10 @@ def mla_decode(cfg, p: dict, x, cache: dict, pos):
     scores = scores + jnp.einsum("bshk,btk->bsht", q_rope, k_rope).astype(jnp.float32)
     scores = scores / np.sqrt(a.qk_nope_head_dim + a.qk_rope_head_dim)
     T = c_kv.shape[1]
-    valid = jnp.arange(T, dtype=jnp.int32) <= pos
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    idx = jnp.arange(T, dtype=jnp.int32)
+    valid = (idx[None, :] <= pos[:, None]) if per_row else (idx <= pos)
+    valid = valid[:, None, None, :] if per_row else valid[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     o_lat = jnp.einsum("bsht,btr->bshr", probs, c_kv)             # latent readout
     o = jnp.einsum("bshr,rhk->bshk", o_lat, p["w_uv"])            # absorb W_uv

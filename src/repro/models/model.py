@@ -172,10 +172,12 @@ def build_decode_step(cfg):
     dec = _decoder(cfg)
 
     def decode_step(params, cache, token, pos):
-        """token: (B,1) int32; pos: () int32 — absolute position of `token`."""
+        """token: (B,1) int32; pos: () or (B,) int32 — absolute position(s)
+        of `token` (a (B,) vector puts each row on its own timeline)."""
         x = _embed_tokens(cfg, params, token)
         if cfg.family == "encdec":
-            x = x + _sinusoid(pos, cfg.d_model).astype(x.dtype)[None]
+            pe = _sinusoid(pos, cfg.d_model).astype(x.dtype)
+            x = x + (pe[:, None] if jnp.ndim(pos) == 1 else pe[None])
         feats, cache, _ = dec.decode(params["decoder"], x, cache, pos)
         feats = cm.apply_norm(cfg, params["final_norm"], feats)
         logits = jnp.einsum("bsd,dv->bsv", feats,

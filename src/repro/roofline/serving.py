@@ -1,0 +1,129 @@
+"""Predictive serving cost model: the roofline as an admission oracle.
+
+The TPU roofline twin (PR 3) predicts *training* step time after the fact;
+serving needs the prediction *before* the work runs: a request that cannot
+finish inside its deadline must be refused at admission (structured
+``DEADLINE``) instead of timing out mid-decode after burning batch slots.
+
+The model prices one decode step of the whole batch from first principles —
+2·N FLOPs per token (``model_flops`` inference form) against parameter +
+KV-cache HBM traffic (``roofline_terms``) — which gives a hardware lower
+bound, then tightens it with measured step/prefill medians exactly like
+``RooflineSurrogate`` does for training (the lower bound stays a floor: a
+noisy fast sample can never make the model optimistic beyond physics).
+
+Predicted completion for a new arrival =
+
+    prefill(prompt) + queue_drain(backlog / batch_size) + steps · step_ms
+
+scaled by a safety factor, with queue drain counted because continuous
+batching admits at slot grain: a full batch retires at most ``batch_size``
+tokens per step.
+"""
+from __future__ import annotations
+
+import collections
+import statistics
+import threading
+from typing import Deque, Dict, Optional
+
+import numpy as np
+
+from repro.models import decode_cache, model_specs
+from repro.models.common import param_count
+from repro.roofline.analysis import HW, Hardware, model_flops, roofline_terms
+
+_DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4, "float64": 8}
+
+
+def _dtype_bytes(name: str) -> int:
+    try:
+        return _DTYPE_BYTES.get(str(name)) or np.dtype(name).itemsize
+    except TypeError:
+        return 4
+
+
+def _cache_bytes_per_row(cfg, max_seq: int) -> int:
+    """HBM footprint of one batch row's decode cache (abstract shapes —
+    never allocates)."""
+    import jax
+
+    tree = decode_cache(cfg, 1, max_seq, abstract=True)
+    return int(sum(np.prod(leaf.shape) * np.dtype(leaf.dtype).itemsize
+                   for leaf in jax.tree.leaves(tree)))
+
+
+class ServingCostModel:
+    """Roofline-prior, measurement-tightened cost model for one engine."""
+
+    #: headroom multiplier on every prediction (scheduling jitter, GC, the
+    #: prose reason a refusal carries shows the *scaled* number)
+    SAFETY = 1.25
+    #: observation windows (medians are robust to jit-compile outliers)
+    WINDOW = 64
+
+    def __init__(self, cfg, *, batch_size: int, max_seq: int,
+                 hw: Hardware = HW, safety: float = SAFETY):
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+        self.safety = safety
+        n_params = param_count(model_specs(cfg))
+        pbytes = n_params * _dtype_bytes(cfg.param_dtype)
+        kv_bytes = _cache_bytes_per_row(cfg, max_seq) * batch_size
+        # one decode step of the full batch: 2·N FLOPs per live token, one
+        # full parameter read, one KV-cache sweep
+        flops = model_flops(n_params, batch_size, kind="inference")
+        self._terms = roofline_terms(flops, pbytes + kv_bytes, 0.0, hw)
+        self.step_lb_ms = self._terms["step_time_lb_s"] * 1e3
+        # per-token prefill lower bound: same arithmetic at batch 1, token 1
+        pf = roofline_terms(model_flops(n_params, 1, kind="inference"),
+                            pbytes, 0.0, hw)
+        self.prefill_lb_ms_per_token = pf["step_time_lb_s"] * 1e3
+        self._lock = threading.Lock()
+        self._step_ms: Deque[float] = collections.deque(maxlen=self.WINDOW)
+        self._prefill_ms_tok: Deque[float] = collections.deque(maxlen=self.WINDOW)
+
+    # -- measurement feed (engine on_step_ms / on_prefill_ms hooks) -----------
+    def observe_step(self, ms: float) -> None:
+        with self._lock:
+            self._step_ms.append(ms)
+
+    def observe_prefill(self, prompt_len: int, ms: float) -> None:
+        if prompt_len > 0:
+            with self._lock:
+                self._prefill_ms_tok.append(ms / prompt_len)
+
+    # -- predictions ----------------------------------------------------------
+    def step_ms(self) -> float:
+        with self._lock:
+            obs = statistics.median(self._step_ms) if self._step_ms else 0.0
+        return max(obs, self.step_lb_ms)
+
+    def prefill_ms(self, prompt_len: int) -> float:
+        with self._lock:
+            obs = (statistics.median(self._prefill_ms_tok)
+                   if self._prefill_ms_tok else 0.0)
+        return prompt_len * max(obs, self.prefill_lb_ms_per_token)
+
+    def predict_request_ms(self, prompt_len: int, max_new_tokens: int,
+                           backlog_tokens: int = 0) -> float:
+        """Predicted arrival→completion time for a new request given the
+        engine's current backlog (tokens owed to queued + live requests)."""
+        step = self.step_ms()
+        decode_steps = max(max_new_tokens - 1, 0)   # first token: prefill
+        drain_steps = backlog_tokens / max(1, self.batch_size)
+        total = (self.prefill_ms(prompt_len)
+                 + (drain_steps + decode_steps) * step)
+        return self.safety * total
+
+    def snapshot(self) -> Dict:
+        with self._lock:
+            n_step, n_pf = len(self._step_ms), len(self._prefill_ms_tok)
+        return {
+            "step_lb_ms": round(self.step_lb_ms, 6),
+            "step_ms": round(self.step_ms(), 4),
+            "prefill_lb_ms_per_token": round(self.prefill_lb_ms_per_token, 6),
+            "dominant": self._terms["dominant"],
+            "observed_steps": n_step,
+            "observed_prefills": n_pf,
+        }

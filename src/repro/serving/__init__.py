@@ -1,2 +1,2 @@
-from repro.serving.cache_utils import extend_cache  # noqa: F401
+from repro.serving.cache_utils import extend_cache, write_slots  # noqa: F401
 from repro.serving.engine import Request, ServingEngine  # noqa: F401

@@ -4,6 +4,11 @@ Prefill emits caches sized to the prompt; decode wants ``max_seq`` slots.
 ``extend_cache`` right-pads the sequence axis of global KV leaves and
 re-rolls ring-buffered local-window leaves so that slot ``p % window`` holds
 absolute position ``p`` (the invariant ``decode_attention`` relies on).
+
+``write_slots`` is the continuous-batching primitive: it scatters the batch
+rows of one cache (a fresh per-request prefill, already extended to decode
+shape) into chosen batch slots of the shared decode cache, so sequences can
+join and leave the running decode batch without touching other rows.
 """
 from __future__ import annotations
 
@@ -56,3 +61,26 @@ def extend_cache(template, prefill_cache, prompt_len: int):
             f"decode template {tmpl.shape}")
 
     return jax.tree_util.tree_map_with_path(f, template, prefill_cache)
+
+
+def write_slots(cache, rows, slots):
+    """Scatter the batch rows of ``rows`` into ``cache`` at indices ``slots``.
+
+    ``rows`` must have the same tree structure and per-leaf trailing shape as
+    ``cache`` with batch size ``len(slots)`` (typically 1: one freshly
+    prefilled request claiming a freed slot).  Leaves under the scan-stacked
+    ``"blocks"`` group carry a leading layer axis, so their batch axis is 1;
+    every other leaf is batch-leading.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+
+    def f(path, dst, src):
+        dst = jnp.asarray(dst)
+        src = jnp.asarray(src).astype(dst.dtype)
+        stacked = any(isinstance(p, jax.tree_util.DictKey) and p.key == "blocks"
+                      for p in path)
+        if stacked:
+            return dst.at[:, slots].set(src)
+        return dst.at[slots].set(src)
+
+    return jax.tree_util.tree_map_with_path(f, cache, rows)

@@ -1,24 +1,42 @@
-"""Batched serving engine: prefill + decode over the KV cache substrate.
+"""LM serving engine: prefill + decode over the KV cache substrate.
 
-A minimal-but-real continuous-batching loop: requests join a waiting queue,
-are prefilled in groups, and decode advances all live sequences one token a
-step.  Built on the same ``build_prefill_step`` / ``build_decode_step``
-functions the dry-run lowers for the 512-chip mesh, so what serves on one
-CPU device here is exactly what compiles for the pod.
+Two serving modes share the same jitted ``build_prefill_step`` /
+``build_decode_step`` functions the dry-run lowers for the 512-chip mesh,
+so what serves on one CPU device here is exactly what compiles for the pod:
+
+- :meth:`ServingEngine.generate` — fixed-batch run-to-completion: one group
+  is left-padded to a common length, prefilled together, and decoded until
+  every member is done.  This is the measurable baseline continuous
+  batching is judged against.
+- continuous batching — :meth:`submit` puts a request on the waiting queue;
+  :meth:`step` advances the shared decode batch one token.  Each batch slot
+  owns an independent timeline: a freed slot is re-primed from a fresh B=1
+  prefill (``cache_utils.write_slots`` scatters the prefilled rows into the
+  shared decode cache) and the per-row position vector keeps every other
+  sequence exact.  Requests join and leave the batch every step, which is
+  what turns mixed-length traffic from head-of-line blocking into goodput.
+
+Per-request serving telemetry (TTFT, decode tokens/s) is stamped on the
+:class:`Request`; the control-plane adapter
+(``repro.substrates.lm_serving``) forwards it to the ``TelemetryBus``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.errors import AdmissionRefused, ErrorCode
 from repro.models import (build_decode_step, build_prefill_step, decode_cache,
                           model_specs)
 from repro.models.common import init_params
+from repro.serving.cache_utils import extend_cache, write_slots
 
 
 @dataclasses.dataclass
@@ -28,10 +46,53 @@ class Request:
     max_new_tokens: int = 8
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: optional absolute deadline (``time.monotonic`` seconds); admission may
+    #: refuse a request predicted to finish past it
+    deadline_s: Optional[float] = None
+    #: serving telemetry (``time.monotonic`` stamps, engine-filled)
+    arrived_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    finished_s: Optional[float] = None
+    #: True when the request finished after its deadline (admitted requests
+    #: should never see this if admission predicts correctly)
+    expired: bool = False
+
+    @property
+    def ttft_ms(self) -> Optional[float]:
+        """Time to first token (arrival → first emitted token)."""
+        if self.arrived_s is None or self.first_token_s is None:
+            return None
+        return (self.first_token_s - self.arrived_s) * 1e3
+
+    @property
+    def tokens_per_s(self) -> Optional[float]:
+        """Decode throughput over the request's full residency."""
+        if (self.arrived_s is None or self.finished_s is None
+                or not self.generated):
+            return None
+        dur = self.finished_s - self.arrived_s
+        return len(self.generated) / dur if dur > 0 else None
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One row of the shared decode batch."""
+
+    index: int
+    request: Optional[Request] = None
+    pos: int = 0                        # next cache position this row writes
+    token: int = 0                      # last emitted token (next decode input)
 
 
 class ServingEngine:
-    """Fixed-batch engine over a reduced config (CPU) or pod mesh (TPU)."""
+    """Serving engine over a reduced config (CPU) or pod mesh (TPU).
+
+    ``generate`` (fixed-batch) and the continuous path (``submit`` /
+    ``step`` / ``drain``) may be used on the same engine, but not
+    concurrently with each other — they share the jitted steps and metrics.
+    Continuous-path entry points are thread-safe; ``submit`` may be called
+    from many threads while a driver thread runs ``step``.
+    """
 
     def __init__(self, cfg, params=None, *, batch_size: int = 2,
                  max_seq: int = 128, seed: int = 0):
@@ -42,8 +103,24 @@ class ServingEngine:
             model_specs(cfg), seed)
         self._prefill = jax.jit(build_prefill_step(cfg))
         self._decode = jax.jit(build_decode_step(cfg), donate_argnums=1)
-        self.metrics: Dict[str, float] = {"prefill_ms": 0.0, "decode_ms": 0.0,
-                                          "tokens": 0}
+        self._prime = jax.jit(self._prime_fn, donate_argnums=2)
+        self.metrics: Dict[str, float] = {
+            "prefill_ms": 0.0, "decode_ms": 0.0, "decode_steps": 0,
+            "tokens": 0, "requests": 0, "deadline_expired": 0}
+        # continuous-batching state
+        self._slots = [_Slot(i) for i in range(batch_size)]
+        self._waiting: Deque[Request] = collections.deque()
+        self._cb_cache = None           # shared decode cache, built lazily
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
+        #: called with each finished Request (adapter → telemetry/waiters)
+        self.on_complete: Optional[Callable[[Request], None]] = None
+        #: admission hook: called with (request, engine) before enqueue;
+        #: raises AdmissionRefused to refuse (e.g. roofline deadline check)
+        self.admission: Optional[Callable[[Request, "ServingEngine"], None]] = None
+        #: observers feeding a cost model (ms per decode step / per prefill)
+        self.on_step_ms: Optional[Callable[[float], None]] = None
+        self.on_prefill_ms: Optional[Callable[[int, float], None]] = None
 
     def _batch_extras(self, B):
         extras = {}
@@ -57,11 +134,70 @@ class ServingEngine:
                 jnp.dtype(self.cfg.param_dtype))
         return extras
 
+    # -- validation -----------------------------------------------------------
+    def _validate(self, r: Request) -> None:
+        """Structured refusal instead of silent cache truncation."""
+        n = len(r.prompt)
+        if n == 0:
+            raise AdmissionRefused(ErrorCode.BAD_REQUEST,
+                                   f"{r.request_id}: empty prompt")
+        if n > self.max_seq:
+            raise AdmissionRefused(
+                ErrorCode.BAD_REQUEST,
+                f"{r.request_id}: prompt length {n} exceeds max_seq "
+                f"{self.max_seq}")
+        if r.max_new_tokens < 1:
+            raise AdmissionRefused(
+                ErrorCode.BAD_REQUEST,
+                f"{r.request_id}: bad request: max_new_tokens "
+                f"{r.max_new_tokens} < 1")
+        if n + r.max_new_tokens > self.max_seq:
+            raise AdmissionRefused(
+                ErrorCode.BAD_REQUEST,
+                f"{r.request_id}: kv cache overflow: prompt {n} + "
+                f"max_new_tokens {r.max_new_tokens} exceeds max_seq "
+                f"{self.max_seq}")
+
+    def _emit(self, r: Request, tok: int) -> None:
+        """Append one generated token; done flips at exactly max_new_tokens
+        so the continuous loop can free the KV slot immediately."""
+        r.generated.append(int(tok))
+        if r.first_token_s is None:
+            r.first_token_s = time.monotonic()
+        if len(r.generated) >= r.max_new_tokens:
+            r.done = True
+            r.finished_s = time.monotonic()
+            if r.deadline_s is not None and r.finished_s > r.deadline_s:
+                r.expired = True
+                self.metrics["deadline_expired"] += 1
+
+    # -- fixed-batch baseline -------------------------------------------------
     def generate(self, requests: List[Request]) -> List[Request]:
-        """Serve a group of requests to completion (greedy decoding)."""
-        assert len(requests) <= self.batch_size
+        """Serve one group to completion (greedy decoding) — the fixed-batch
+        run-to-completion baseline.  Prompts are left-padded to the group's
+        longest; the batch decodes in lockstep until every member is done."""
+        if not requests:
+            return []
+        if len(requests) > self.batch_size:
+            raise AdmissionRefused(
+                ErrorCode.BAD_REQUEST,
+                f"bad request: group of {len(requests)} exceeds batch_size "
+                f"{self.batch_size}")
+        for r in requests:
+            self._validate(r)
         B = self.batch_size
         S = max(len(r.prompt) for r in requests)
+        max_new = max(r.max_new_tokens for r in requests)
+        if S + max_new > self.max_seq:
+            # padded group timeline: every member decodes from position S
+            raise AdmissionRefused(
+                ErrorCode.BAD_REQUEST,
+                f"kv cache overflow: padded prompt {S} + max_new_tokens "
+                f"{max_new} exceeds max_seq {self.max_seq}")
+        now = time.monotonic()
+        for r in requests:
+            if r.arrived_s is None:
+                r.arrived_s = now
         prompts = np.zeros((B, S), np.int32)
         for i, r in enumerate(requests):
             prompts[i, S - len(r.prompt):] = r.prompt     # left-pad
@@ -69,27 +205,172 @@ class ServingEngine:
 
         t0 = time.perf_counter()
         prefill_cache, logits = self._prefill(self.params, batch)
+        logits = jax.block_until_ready(logits)
         self.metrics["prefill_ms"] += (time.perf_counter() - t0) * 1e3
 
         # decode continues in a max_seq cache primed from the prefill cache
-        from repro.serving.cache_utils import extend_cache
         cache = decode_cache(self.cfg, B, self.max_seq)
         cache = extend_cache(cache, prefill_cache, S)
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        max_new = max(r.max_new_tokens for r in requests)
-        for step in range(max_new):
+        # the prefill already predicts each sequence's next token: emit it
+        tok_np = np.asarray(token[:, 0])
+        for i, r in enumerate(requests):
+            self._emit(r, tok_np[i])
+        self.metrics["tokens"] += len(requests)
+        step = 0
+        while any(not r.done for r in requests):
             pos = jnp.int32(S + step)
             t0 = time.perf_counter()
             cache, logits = self._decode(self.params, cache, token, pos)
+            logits = jax.block_until_ready(logits)
             self.metrics["decode_ms"] += (time.perf_counter() - t0) * 1e3
-            self.metrics["tokens"] += len(requests)
+            self.metrics["decode_steps"] += 1
             token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
             tok_np = np.asarray(token[:, 0])
+            emitted = 0
             for i, r in enumerate(requests):
-                if len(r.generated) < r.max_new_tokens:
-                    r.generated.append(int(tok_np[i]))
-                else:
-                    r.done = True
-        for r in requests:
-            r.done = True
+                if not r.done:
+                    self._emit(r, tok_np[i])
+                    emitted += 1
+            # only still-generating rows are billable work
+            self.metrics["tokens"] += emitted
+            step += 1
+        self.metrics["requests"] += len(requests)
         return requests
+
+    # -- continuous batching --------------------------------------------------
+    def submit(self, r: Request) -> Request:
+        """Validate, run admission, and enqueue one request.
+
+        Raises :class:`AdmissionRefused` (BAD_REQUEST for malformed work,
+        or whatever the admission hook raises — e.g. a roofline-predicted
+        DEADLINE) without touching engine state."""
+        self._validate(r)
+        if r.arrived_s is None:
+            r.arrived_s = time.monotonic()
+        if self.admission is not None:
+            self.admission(r, self)
+        with self._work:
+            self._waiting.append(r)
+            self._work.notify_all()
+        return r
+
+    def backlog_tokens(self) -> int:
+        """Tokens still owed to queued + in-flight requests (the quantity a
+        predictive admission model prices a new arrival against)."""
+        with self._lock:
+            owed = sum(r.max_new_tokens for r in self._waiting)
+            owed += sum(s.request.max_new_tokens - len(s.request.generated)
+                        for s in self._slots if s.request is not None)
+            return owed
+
+    def live_slots(self) -> int:
+        with self._lock:
+            return sum(1 for s in self._slots if s.request is not None)
+
+    def _prime_fn(self, params, batch, cb_cache, slot):
+        """Fused admission kernel (jitted once per prompt length): B=1
+        prefill → fit into a max_seq row → scatter into the shared decode
+        cache at ``slot`` → argmax first token.  One dispatch per admission
+        instead of a python-level tree walk per cache leaf (which costs
+        more than several decode steps and would cap continuous-batching
+        goodput on short-request traffic)."""
+        S = batch["tokens"].shape[1]
+        pcache, logits = self._prefill(params, batch)
+        row = extend_cache(decode_cache(self.cfg, 1, self.max_seq),
+                           pcache, S)
+        cb = write_slots(cb_cache, row, slot)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return cb, tok
+
+    def _prime_slot(self, slot: _Slot, r: Request) -> None:
+        """B=1 prefill at the prompt's natural length, scattered into the
+        slot's row of the shared decode cache."""
+        S = len(r.prompt)
+        tokens = jnp.asarray(np.asarray(r.prompt, np.int32)[None, :])
+        batch = {"tokens": tokens, **self._batch_extras(1)}
+        if self._cb_cache is None:
+            self._cb_cache = decode_cache(self.cfg, self.batch_size,
+                                          self.max_seq)
+        t0 = time.perf_counter()
+        self._cb_cache, tok = self._prime(
+            self.params, batch, self._cb_cache,
+            jnp.asarray([slot.index], jnp.int32))
+        tok = int(np.asarray(jax.block_until_ready(tok))[0])
+        ms = (time.perf_counter() - t0) * 1e3
+        self.metrics["prefill_ms"] += ms
+        if self.on_prefill_ms is not None:
+            self.on_prefill_ms(S, ms)
+        slot.request, slot.pos, slot.token = r, S, tok
+        self._emit(r, tok)
+        self.metrics["tokens"] += 1
+        if r.done:                       # max_new_tokens == 1
+            self._finish(slot)
+
+    def _finish(self, slot: _Slot) -> None:
+        r = slot.request
+        slot.request, slot.pos, slot.token = None, 0, 0
+        self.metrics["requests"] += 1
+        if self.on_complete is not None:
+            self.on_complete(r)
+
+    def _admit_locked(self) -> None:
+        for slot in self._slots:
+            if slot.request is None and self._waiting:
+                self._prime_slot(slot, self._waiting.popleft())
+
+    def step(self) -> int:
+        """Advance the shared decode batch one token.  Freed slots are
+        re-primed from the waiting queue first, so sequences join and leave
+        the batch every step.  Returns the number of live tokens emitted
+        (0 = engine idle)."""
+        with self._lock:
+            self._admit_locked()
+            live = [s for s in self._slots if s.request is not None]
+            if not live:
+                return 0
+            tokens = np.zeros((self.batch_size, 1), np.int32)
+            posv = np.zeros((self.batch_size,), np.int32)
+            for s in self._slots:
+                tokens[s.index, 0] = s.token
+                posv[s.index] = s.pos
+            t0 = time.perf_counter()
+            self._cb_cache, logits = self._decode(
+                self.params, self._cb_cache, jnp.asarray(tokens),
+                jnp.asarray(posv))
+            logits = jax.block_until_ready(logits)
+            ms = (time.perf_counter() - t0) * 1e3
+            self.metrics["decode_ms"] += ms
+            self.metrics["decode_steps"] += 1
+            if self.on_step_ms is not None:
+                self.on_step_ms(ms)
+            tok = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+            for s in live:
+                self._emit(s.request, int(tok[s.index]))
+                s.token = int(tok[s.index])
+                s.pos += 1
+                if s.request.done:
+                    self._finish(s)
+            self.metrics["tokens"] += len(live)
+            return len(live)
+
+    def drain(self) -> None:
+        """Run ``step`` until the queue and every slot are empty."""
+        while True:
+            with self._lock:
+                busy = bool(self._waiting) or any(
+                    s.request is not None for s in self._slots)
+            if not busy:
+                return
+            self.step()
+
+    def serve_forever(self, stop: threading.Event,
+                      idle_wait_s: float = 0.05) -> None:
+        """Driver loop for a serving thread: step while there is work, park
+        on the condition variable while idle (``submit`` wakes it)."""
+        while not stop.is_set():
+            if self.step() == 0:
+                with self._work:
+                    if not self._waiting and not any(
+                            s.request is not None for s in self._slots):
+                        self._work.wait(timeout=idle_wait_s)

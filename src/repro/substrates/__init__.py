@@ -4,6 +4,8 @@ from repro.substrates.chemical import (ChemicalAdapter,  # noqa: F401
 from repro.substrates.cortical import (CLClient, CLSimulator,  # noqa: F401
                                        CorticalLabsAdapter)
 from repro.substrates.http_fast import FastService, HTTPFastAdapter  # noqa: F401
+from repro.substrates.lm_serving import (LmServingAdapter,  # noqa: F401
+                                         ServingSurrogate)
 from repro.substrates.memristive import (CrossbarMirrorSurrogate,  # noqa: F401
                                          MemristiveAdapter)
 from repro.substrates.remote_plane import (RemotePlaneAdapter,  # noqa: F401
