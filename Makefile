@@ -35,6 +35,13 @@
 #                          batch goodput on a mixed-length trace (asserts
 #                          >= 2x) + 128 concurrent gateway sessions
 #                          (bounded p99 TTFT, admission refusals)
+#   make test-sim          virtual-time suites: clock semantics, scheduler
+#                          timebase regressions, simulator invariants
+#   make sim-smoke         CI-sized scenario matrix: >=100 planes on pure
+#                          virtual time, all invariant audits, <60s
+#   make bench-scenarios   full planet-scale scenario harness: 6 scenarios
+#                          x 1000 planes x 10k substrates, 1 simulated
+#                          hour each, zero violations + determinism check
 #   make bench-throughput  headline serial-vs-pooled scheduler benchmark
 #   make bench-recovery    resilience benchmark: goodput under faults with
 #                          vs without the HealthManager
@@ -47,6 +54,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast chaos-smoke test-twin twin-smoke test-gateway \
         gateway-smoke bench-gateway-smoke hierarchy-smoke serving-smoke \
+        test-sim sim-smoke bench-scenarios \
         bench bench-throughput bench-recovery bench-twin bench-gateway \
         bench-hierarchy bench-serving dev-deps
 
@@ -85,6 +93,16 @@ serving-smoke:
 
 bench-serving:
 	$(PYTHON) -m benchmarks.bench_serving
+
+test-sim:
+	$(PYTHON) -m pytest -q -m sim
+
+sim-smoke:
+	$(PYTHON) -m pytest -q -m sim
+	$(PYTHON) -m benchmarks.bench_scenarios --smoke
+
+bench-scenarios:
+	$(PYTHON) -m benchmarks.bench_scenarios
 
 bench-gateway:
 	$(PYTHON) -m benchmarks.bench_gateway

@@ -48,8 +48,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from benchmarks import (bench_cortical, bench_faults, bench_fleet,
                         bench_gateway, bench_hierarchy, bench_http,
                         bench_matcher, bench_overhead, bench_portability,
-                        bench_recovery, bench_roofline, bench_serving,
-                        bench_throughput, bench_twin)
+                        bench_recovery, bench_roofline, bench_scenarios,
+                        bench_serving, bench_throughput, bench_twin)
 
 BENCHES = {
     "portability": bench_portability.run,
@@ -66,6 +66,7 @@ BENCHES = {
     "gateway": bench_gateway.run,
     "hierarchy": bench_hierarchy.run,
     "serving": bench_serving.run,
+    "scenarios": bench_scenarios.run,
 }
 
 

@@ -27,6 +27,12 @@ from repro.core.orchestrator import Orchestrator, OrchestrationTrace  # noqa: F4
 from repro.core.policy import PolicyManager  # noqa: F401
 from repro.core.scheduler import ControlPlaneScheduler, SchedulerClosed  # noqa: F401
 from repro.core.registry import CapabilityRegistry  # noqa: F401
+from repro.core.simclock import (Clock, SystemClock, SYSTEM_CLOCK,  # noqa: F401
+                                 VirtualClock, RealSleepForbidden,
+                                 forbid_real_sleep)
+from repro.core.simulator import (FleetSimulator, SimScenario,  # noqa: F401
+                                  scenario_matrix, run_audits,
+                                  event_trace_hash)
 from repro.core.tasks import (TaskRequest, new_task_id,  # noqa: F401
                               set_plane_namespace)
 from repro.core.telemetry import RuntimeSnapshot, TelemetryBus, TelemetryEvent  # noqa: F401

@@ -28,13 +28,23 @@ actionable.
 from __future__ import annotations
 
 import dataclasses
-import time
+import hashlib
+import inspect
+import json
+import random
 from collections import Counter
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.orchestrator import Orchestrator
+from repro.core.simclock import Clock, SYSTEM_CLOCK
 from repro.core.tasks import TaskRequest
 from repro.core.telemetry import RuntimeSnapshot
+
+
+def _clock_of(orch: Orchestrator) -> Clock:
+    """The orchestrator's injected timebase (virtual under the scenario
+    simulator) — harness waits and twin aging must use it, not ``time``."""
+    return getattr(orch, "clock", SYSTEM_CLOCK)
 
 
 @dataclasses.dataclass
@@ -57,7 +67,7 @@ def _set_drift(orch: Orchestrator, rid: str, drift: float) -> None:
 def _stale_twin(orch: Orchestrator, rid: str, age_s: float) -> None:
     tw = orch.twins.get(rid)
     if tw is not None:
-        tw.last_sync = time.time() - age_s
+        tw.last_sync = orch.twins.now() - age_s
 
 
 def build_campaign(local_fast="memristive-local", ext_fast="fast-external",
@@ -239,7 +249,7 @@ def inject_invoke_failure(rid: str, delay_ms: float = 0.0) -> ChaosInjector:
 
         def failing_invoke(session):
             if delay_ms:
-                time.sleep(delay_ms / 1e3)
+                _clock_of(orch).sleep(delay_ms / 1e3)
             raise RuntimeError(f"chaos: injected invoke failure on {rid}")
 
         adapter.invoke = failing_invoke
@@ -258,7 +268,7 @@ def inject_stale_twin(rid: str, age_s: float) -> ChaosInjector:
     def clear(orch: Orchestrator) -> None:
         tw = orch.twins.get(rid)
         if tw is not None:
-            tw.last_sync = time.time()
+            tw.last_sync = orch.twins.now()
 
     return ChaosInjector(f"stale_twin({rid},{age_s}s)",
                          lambda o: _stale_twin(o, rid, age_s), clear)
@@ -409,13 +419,70 @@ def _is_subsequence(needle: Sequence[str], haystack: Sequence[str]) -> bool:
     return all(any(x == y for y in it) for x in needle)
 
 
+#: keys stripped from canonicalized campaign rows: measured timings vary
+#: run-to-run on a real clock and are not part of the campaign's *semantic*
+#: outcome (under a virtual clock they are deterministic anyway)
+_VOLATILE_KEY_MARKERS = ("_ms", "_s", "timestamp", "latency", "wall")
+
+
+def _canonical(obj):
+    """Thread-timing-independent canonical form for trace hashing: dicts
+    sorted by key with volatile timing keys dropped, Counters flattened."""
+    if isinstance(obj, dict):
+        return {k: _canonical(v) for k, v in sorted(obj.items())
+                if not any(m in str(k) for m in _VOLATILE_KEY_MARKERS)}
+    if isinstance(obj, (list, tuple)):
+        return [_canonical(v) for v in obj]
+    if isinstance(obj, float):
+        return round(obj, 9)
+    return obj
+
+
+def campaign_trace_hash(rows: Sequence[Dict], *, extra: Optional[Dict] = None
+                        ) -> str:
+    """Deterministic digest of a campaign's classified outcomes + breaker
+    trajectories.  Two runs of the same scenario matrix with the same seed
+    on a virtual clock (and one worker, so the control plane is strictly
+    sequential) must produce the same hash — the seeded-determinism
+    regression test and the simulator's acceptance audit both key on it."""
+    payload = {"rows": _canonical(list(rows)), "extra": _canonical(extra or {})}
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"),
+                      default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _template_arity(template: Callable) -> int:
+    """Positional arity of a scenario template: legacy templates take
+    ``(i)``; seeded templates take ``(i, rng)`` and draw payload variation
+    from the harness RNG reproducibly."""
+    try:
+        params = list(inspect.signature(template).parameters.values())
+    except (TypeError, ValueError):
+        return 1
+    n = 0
+    for p in params:
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+            n += 1
+        elif p.kind is p.VAR_POSITIONAL:
+            return 2
+    return n
+
+
+def _call_template(template: Callable, i: int,
+                   rng: random.Random) -> TaskRequest:
+    if _template_arity(template) >= 2:
+        return template(i, rng)
+    return template(i)
+
+
 def run_campaign_concurrent(orch: Orchestrator,
                             scenarios: List[ChaosScenario], *,
                             scheduler=None, workers: int = 8,
                             load_template: Optional[
                                 Callable[[int], TaskRequest]] = None,
                             load_tasks: int = 0,
-                            trajectory_timeout_s: float = 10.0) -> Dict:
+                            trajectory_timeout_s: float = 10.0,
+                            seed: Optional[int] = None) -> Dict:
     """Fire chaos scenarios through the scheduler against ONE shared, live
     orchestrator — optionally under background load — and check observed
     outcomes plus breaker-state trajectories.
@@ -428,14 +495,26 @@ def run_campaign_concurrent(orch: Orchestrator,
     Re-admission is *driven*: after ``clear``, a bounded trickle of real
     tasks keeps flowing until the breaker trajectory contains the expected
     subsequence (probation probes only progress when tasks arrive).
+
+    ``seed`` pins the harness RNG (handed to two-argument templates) and is
+    recorded in the result next to ``trace_hash`` — a canonical digest of
+    the classified outcomes + breaker trajectories.  With a fixed seed, a
+    virtual clock on the orchestrator, and ``workers=1`` (strictly
+    sequential control plane, no background health ticker) two runs of the
+    same matrix produce identical rows and identical ``trace_hash``.
     """
     if orch.health is None:
         raise ValueError("run_campaign_concurrent needs an orchestrator "
                          "with its HealthManager enabled")
     from repro.core.scheduler import ControlPlaneScheduler
 
+    rng = random.Random(seed)
     own_scheduler = scheduler is None
-    sched = scheduler or ControlPlaneScheduler(orch, workers=workers)
+    # a seeded campaign must not race the background probe ticker: lazy
+    # promotion on the task path covers re-admission deterministically
+    sched = scheduler or ControlPlaneScheduler(
+        orch, workers=workers,
+        health_tick_interval_s=0.0 if seed is not None else 0.05)
     sched.start()
     load_futures = []
     per_scenario_load = (load_tasks // max(1, len(scenarios))
@@ -444,7 +523,8 @@ def run_campaign_concurrent(orch: Orchestrator,
     try:
         for sc in scenarios:
             for i in range(per_scenario_load):
-                load_futures.append(sched.submit_async(load_template(i)))
+                load_futures.append(sched.submit_async(
+                    _call_template(load_template, i, rng)))
             # a shared live plane carries breaker history across scenarios:
             # settle the target breaker back to healthy, then scope this
             # scenario's trajectory assertions to ITS OWN history window so
@@ -458,7 +538,8 @@ def run_campaign_concurrent(orch: Orchestrator,
             sc.injector.apply(orch)
             try:
                 results = sched.submit_many(
-                    [sc.template(i) for i in range(sc.n_tasks)])
+                    [_call_template(sc.template, i, rng)
+                     for i in range(sc.n_tasks)])
                 observed = Counter(classify(r, t) for r, t in results)
                 selected = sorted({r.resource_id for r, _ in results
                                    if r.resource_id})
@@ -507,12 +588,17 @@ def run_campaign_concurrent(orch: Orchestrator,
     finally:
         if own_scheduler:
             sched.shutdown()
+    load_statuses = dict(Counter(r.status for r, _ in load_results))
+    audit = orch.health.audit()
     return {
         "rows": rows,
         "all_pass": all(r["pass"] for r in rows),
-        "audit": orch.health.audit(),
+        "audit": audit,
         "policy_leak_free": orch.policy.fully_released(),
-        "load_statuses": dict(Counter(r.status for r, _ in load_results)),
+        "load_statuses": load_statuses,
+        "seed": seed,
+        "trace_hash": campaign_trace_hash(
+            rows, extra={"audit": audit, "load_statuses": load_statuses}),
     }
 
 
@@ -521,14 +607,15 @@ def _drive_trajectory(orch: Orchestrator, sched, sc: ChaosScenario,
     """Trickle real tasks until the breaker history SINCE THIS SCENARIO
     contains the expected subsequence (probation → healthy needs actual
     probe traffic)."""
-    deadline = time.monotonic() + timeout_s
+    clock = _clock_of(orch)
+    deadline = clock.monotonic() + timeout_s
     while not _is_subsequence(
             sc.expect_trajectory,
             orch.health.trajectory(sc.breaker_rid)[history_start:]):
-        if time.monotonic() > deadline:
+        if clock.monotonic() > deadline:
             return False
         sched.submit_many([sc.template(-1)])
-        time.sleep(0.01)
+        clock.sleep(0.01)
     return True
 
 
@@ -538,10 +625,11 @@ def _settle_healthy(orch: Orchestrator, sched, sc: ChaosScenario, *,
     scenario starts from a known state; real tasks feed the probes."""
     from repro.core.health import BreakerState
 
-    deadline = time.monotonic() + timeout_s
+    clock = _clock_of(orch)
+    deadline = clock.monotonic() + timeout_s
     while orch.health.state(sc.breaker_rid) is not BreakerState.HEALTHY:
-        if time.monotonic() > deadline:
+        if clock.monotonic() > deadline:
             return False
         sched.submit_many([sc.template(-1)])
-        time.sleep(0.01)
+        clock.sleep(0.01)
     return True

@@ -37,6 +37,7 @@ from repro.core.lifecycle import LifecycleManager
 from repro.core.matcher import Candidate, Matcher
 from repro.core.policy import PolicyManager
 from repro.core.registry import CapabilityRegistry
+from repro.core.simclock import Clock, SYSTEM_CLOCK
 from repro.core.tasks import TaskRequest
 from repro.core.telemetry import TelemetryBus, TelemetryEvent
 from repro.core.topology import PlaneTopology
@@ -114,9 +115,14 @@ class Orchestrator:
                  health=True,
                  twin_fallback_queue_factor: Optional[float]
                  = TWIN_FALLBACK_QUEUE_FACTOR,
-                 plane: str = "plane"):
+                 plane: str = "plane",
+                 clock: Optional[Clock] = None):
+        # one injectable timebase for the whole plane: telemetry stamps,
+        # twin staleness, health cooldowns, admission deadlines.  Virtual
+        # under the scenario simulator; SYSTEM_CLOCK in production.
+        self.clock: Clock = clock or SYSTEM_CLOCK
         self.registry = registry or CapabilityRegistry()
-        self.bus = TelemetryBus()
+        self.bus = TelemetryBus(clock=self.clock)
         # plane identity + federation graph (multi-hop cycle detection);
         # the gateway serves it at /v1/topology and renames it to its plane
         self.topology = PlaneTopology(plane)
@@ -125,7 +131,7 @@ class Orchestrator:
         # so parent planes following this plane's stream track fleet
         # membership live instead of re-fetching on breaker reopen
         self.registry.subscribe(self._on_fleet_change)
-        self.twins = TwinSyncManager(self.bus)
+        self.twins = TwinSyncManager(self.bus, clock=self.clock)
         self.twin_exec = TwinExecutor(self.twins, self.bus)
         self.twin_fallback_queue_factor = twin_fallback_queue_factor
         self.policy = PolicyManager()
@@ -137,6 +143,7 @@ class Orchestrator:
         self.health: Optional[HealthManager] = None
         if health is not False and health is not None:
             kw = dict(health) if isinstance(health, dict) else {}
+            kw.setdefault("clock", self.clock.monotonic)
             self.health = HealthManager(self.bus, self.policy, self.registry,
                                         recoverer=self._reopen_resource, **kw)
         self.matcher: Matcher = matcher_cls(self.registry, self.bus,
@@ -223,11 +230,11 @@ class Orchestrator:
         if deadline is None and task.deadline_budget_ms is not None:
             # a forwarded task's remaining end-to-end budget bounds local
             # admission exactly like a client latency budget would
-            deadline = time.monotonic() + task.deadline_budget_ms / 1e3
+            deadline = self.clock.monotonic() + task.deadline_budget_ms / 1e3
         if deadline is None and task.latency_budget_ms is not None:
             # pin the budget to a fixed deadline once, so repeated fallback
             # attempts share it instead of each getting a fresh full budget
-            deadline = time.monotonic() + task.latency_budget_ms / 1e3
+            deadline = self.clock.monotonic() + task.latency_budget_ms / 1e3
         t_ctl = time.perf_counter()
         tried: set = set()
         cand = self.matcher.select(task)
@@ -371,7 +378,7 @@ class Orchestrator:
         deadline (``execute`` pins the task latency budget to one), else
         the orchestrator default.  Returns seconds (<= 0: non-blocking)."""
         if deadline is not None:
-            return deadline - time.monotonic()
+            return deadline - self.clock.monotonic()
         return self.acquire_timeout_s
 
     #: floor for how long admission waits on a busy substrate before
@@ -403,7 +410,7 @@ class Orchestrator:
             exp_s = desc.capability.timing.expected_latency_ms / 1e3
             patience = min(remaining,
                            max(self.MIN_ACQUIRE_PATIENCE_S, 2.0 * exp_s))
-        t0 = time.monotonic()
+        t0 = self.clock.monotonic()
         if self.policy.acquire(desc, patience):
             return True, None, 0.0
         if patience >= remaining:
@@ -413,7 +420,7 @@ class Orchestrator:
         rank_ms = (time.perf_counter() - t_rank) * 1e3
         if alt is not None:
             return False, alt, rank_ms   # spill: an alternative can take it
-        rest = remaining - (time.monotonic() - t0)
+        rest = remaining - (self.clock.monotonic() - t0)
         return self.policy.acquire(desc, rest), None, rank_ms
 
     def _attempt(self, task: TaskRequest, desc: ResourceDescriptor,

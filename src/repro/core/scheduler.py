@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from collections import deque
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -31,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 from repro.core.errors import ErrorCode
 from repro.core.invocation import InvocationResult
 from repro.core.orchestrator import Orchestrator, OrchestrationTrace
+from repro.core.simclock import Clock, SYSTEM_CLOCK
 from repro.core.tasks import TaskRequest
 
 _STOP = object()
@@ -55,12 +55,18 @@ class ControlPlaneScheduler:
     def __init__(self, orchestrator: Orchestrator, workers: int = 8,
                  queue_size: int = 256,
                  default_deadline_s: Optional[float] = None,
-                 health_tick_interval_s: float = 0.05):
+                 health_tick_interval_s: float = 0.05,
+                 clock: Optional[Clock] = None):
         if workers < 1:
             raise ValueError("workers must be >= 1")
         self.orchestrator = orchestrator
         self.workers = workers
         self.default_deadline_s = default_deadline_s
+        # injectable time source: defaults to the orchestrator's clock so
+        # scheduler deadlines and the orchestrator's admission deadlines
+        # share one timebase (virtual under the scenario simulator)
+        self.clock: Clock = clock or getattr(orchestrator, "clock",
+                                             SYSTEM_CLOCK)
         # background probe cadence for the health manager (0 disables):
         # cooled-down breakers half-open on the tick, not only when a task
         # happens to rank the resource
@@ -73,6 +79,9 @@ class ControlPlaneScheduler:
         self._closed = False
         self._lock = threading.Lock()
         self._idle = threading.Condition(self._lock)
+        # notified whenever a worker takes an item off the bounded queue —
+        # producers blocked on a full queue park here instead of polling
+        self._space = threading.Condition(self._lock)
         self._pending = 0                       # queued + in-flight tasks
         self._stats_lock = threading.Lock()
         self._status_counts: Dict[str, int] = {}
@@ -123,6 +132,9 @@ class ControlPlaneScheduler:
             started = self._started
             threads = list(self._threads)
         self._health_stop.set()
+        with self._lock:
+            # wake producers parked on queue space so they observe _closed
+            self._space.notify_all()
         if started:
             for _ in range(self.workers):
                 self._queue.put((_STOP, None, None, 0.0))
@@ -135,9 +147,12 @@ class ControlPlaneScheduler:
     def _health_probe_loop(self) -> None:
         """Background probe ticks: periodically promote cooled-down OPEN
         breakers to PROBATION so re-admission does not depend on task
-        arrival timing.  Exceptions never kill the ticker."""
+        arrival timing.  Exceptions never kill the ticker.  The wait goes
+        through the injected clock, so a virtual-clock deployment ticks in
+        virtual time."""
         health = self.orchestrator.health
-        while not self._health_stop.wait(self.health_tick_interval_s):
+        while not self.clock.wait_event(self._health_stop,
+                                        self.health_tick_interval_s):
             try:
                 health.tick()
             except Exception:              # noqa: BLE001 — keep ticking
@@ -158,28 +173,30 @@ class ControlPlaneScheduler:
         # to bound admission blocking identically in both modes)
         budget = deadline_s if deadline_s is not None \
             else self.default_deadline_s
-        deadline = (time.monotonic() + budget) if budget is not None else None
-        enqueued = time.perf_counter()
+        clock = self.clock
+        deadline = (clock.monotonic() + budget) if budget is not None else None
+        enqueued = clock.monotonic()
         # closed-check + enqueue are atomic w.r.t. shutdown(), so a task is
         # either rejected here or is guaranteed to sit ahead of the stop
-        # sentinels; only the final successful put needs the lock, so the
-        # queue-full backpressure wait polls at a coarse interval outside it
-        # (this path is only reached when producers have outrun the fleet by
-        # a full queue, where a few ms of producer latency is immaterial)
-        while True:
-            with self._lock:
+        # sentinels.  A full queue parks the producer on the _space
+        # condition (workers notify after every dequeue, shutdown notifies
+        # all), so backpressure costs no polling: the producer wakes the
+        # moment a slot frees instead of rediscovering it up to 10ms late.
+        with self._lock:
+            while True:
                 if self._closed:
                     raise SchedulerClosed("scheduler already shut down")
                 try:
                     self._queue.put_nowait((task, fut, deadline, enqueued))
                 except queue.Full:
-                    pass
+                    clock.wait_for(
+                        self._space,
+                        lambda: self._closed or not self._queue.full())
                 else:
                     self._pending += 1
                     if self._first_enqueue is None:
-                        self._first_enqueue = time.perf_counter()
+                        self._first_enqueue = enqueued
                     return fut
-            time.sleep(0.01)
 
     def submit_many(self, tasks: Sequence[TaskRequest],
                     deadline_s: Optional[float] = None, wait: bool = True
@@ -237,25 +254,29 @@ class ControlPlaneScheduler:
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until every enqueued task has resolved (or timeout).
         Returns True when the scheduler is fully quiesced."""
-        end = None if timeout is None else time.monotonic() + timeout
+        clock = self.clock
+        end = None if timeout is None else clock.monotonic() + timeout
         with self._idle:
             while self._pending > 0:
-                remaining = None if end is None else end - time.monotonic()
+                remaining = None if end is None else end - clock.monotonic()
                 if remaining is not None and remaining <= 0:
                     return False
-                self._idle.wait(timeout=remaining)
+                clock.wait_for(self._idle, lambda: self._pending == 0,
+                               timeout=remaining)
         return True
 
     # -- worker loop ----------------------------------------------------------
     def _worker(self) -> None:
         while True:
             task, fut, deadline, enqueued = self._queue.get()
+            with self._lock:
+                self._space.notify()       # one queue slot freed
             if task is _STOP:
                 return
             try:
                 if not fut.set_running_or_notify_cancel():
                     continue
-                if deadline is not None and time.monotonic() > deadline:
+                if deadline is not None and self.clock.monotonic() > deadline:
                     # queue saturation endpoint: an opted-in task whose
                     # deadline lapsed while queued is served by a valid twin
                     # instead of rejected (same funnel as the orchestrator's)
@@ -287,7 +308,7 @@ class ControlPlaneScheduler:
 
     def _account(self, result: Optional[InvocationResult],
                  enqueued: float) -> None:
-        now = time.perf_counter()
+        now = self.clock.monotonic()
         with self._stats_lock:
             status = result.status if result is not None else "error"
             self._status_counts[status] = \

@@ -1,0 +1,229 @@
+"""Injectable time source: one clock abstraction for production and
+simulation.
+
+Every time-dependent control-plane component (scheduler deadlines and
+backpressure waits, health-manager cooldowns, telemetry staleness, twin
+freshness, chaos-harness drive loops) reads time through a :class:`Clock`
+instead of the ``time`` module directly.  Production uses
+:data:`SYSTEM_CLOCK` (a thin delegate to ``time``); the planet-scale
+scenario harness (:mod:`repro.core.simulator`) injects a
+:class:`VirtualClock`, so a simulated hour of fleet behavior — diurnal
+waves, breaker cooldowns, twin staleness — elapses in the wall-time it
+takes to *process the events*, with zero real sleeps on the simulated
+path.
+
+Design rules:
+
+- ``now()`` is wall-clock epoch seconds (feeds telemetry timestamps and
+  twin ``last_sync``); ``monotonic()`` is the scheduling timebase (feeds
+  deadlines and cooldowns).  A :class:`VirtualClock` advances both in
+  lockstep from a fixed epoch, so same-seed runs produce bit-identical
+  timestamps.
+- waiting is *notification-first*: :meth:`Clock.wait_for` parks on a real
+  ``threading.Condition`` so production waits cost nothing and wake
+  immediately on notify.  Under a :class:`VirtualClock` a bounded wait
+  instead advances virtual time (single-threaded discrete-event
+  semantics) — this is what lets the scheduler's former
+  ``time.sleep(0.01)`` polls virtualize away.
+- :func:`forbid_real_sleep` is the audit hook: it patches ``time.sleep``
+  for the duration of a simulated run and records (or refuses) any real
+  sleep attempted on the simulated path.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from typing import Callable, Iterator, Optional
+
+__all__ = ["Clock", "SystemClock", "VirtualClock", "SYSTEM_CLOCK",
+           "RealSleepForbidden", "forbid_real_sleep"]
+
+
+class Clock:
+    """Abstract time source.  Subclasses supply wall/monotonic time plus
+    the waiting primitives the control plane uses instead of raw
+    ``time.sleep`` / bare condition timeouts."""
+
+    def now(self) -> float:
+        """Wall-clock epoch seconds (telemetry timestamps, twin sync)."""
+        raise NotImplementedError
+
+    def monotonic(self) -> float:
+        """Scheduling timebase (deadlines, cooldowns, latency stats)."""
+        raise NotImplementedError
+
+    def sleep(self, seconds: float) -> None:
+        raise NotImplementedError
+
+    def condition(self, lock: Optional[threading.Lock] = None
+                  ) -> threading.Condition:
+        """A condition variable whose timed waits this clock mediates."""
+        return threading.Condition(lock)
+
+    def wait_for(self, cond: threading.Condition,
+                 predicate: Callable[[], bool],
+                 timeout: Optional[float] = None) -> bool:
+        """Wait on ``cond`` (caller holds it) until ``predicate`` or
+        ``timeout``.  Returns the final predicate value."""
+        raise NotImplementedError
+
+    def wait_event(self, event: threading.Event,
+                   timeout: Optional[float] = None) -> bool:
+        """Wait until ``event`` is set or ``timeout`` elapsed; returns
+        ``event.is_set()`` (the ``threading.Event.wait`` contract)."""
+        raise NotImplementedError
+
+
+class SystemClock(Clock):
+    """Production clock: a thin delegate to the ``time`` module."""
+
+    def now(self) -> float:
+        return time.time()
+
+    def monotonic(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            time.sleep(seconds)
+
+    def wait_for(self, cond: threading.Condition,
+                 predicate: Callable[[], bool],
+                 timeout: Optional[float] = None) -> bool:
+        return cond.wait_for(predicate, timeout=timeout)
+
+    def wait_event(self, event: threading.Event,
+                   timeout: Optional[float] = None) -> bool:
+        return event.wait(timeout=timeout)
+
+
+#: process-wide default — every component's ``clock=None`` resolves here
+SYSTEM_CLOCK = SystemClock()
+
+
+class VirtualClock(Clock):
+    """Deterministic virtual time for the scenario simulator and tests.
+
+    Time only moves when someone *advances* it — ``sleep`` and bounded
+    waits advance instead of blocking, so a simulated hour costs exactly
+    the wall-time of the event processing in between.  Starting from a
+    fixed ``epoch`` makes every timestamp a pure function of the event
+    sequence: same seed → identical timestamps → identical trace hash.
+
+    Thread discipline: the clock is safe to *read* from any thread, but
+    advancing is meant to happen from one logical driver at a time (the
+    simulator's event loop, or a test and its strictly-alternating worker).
+    An unbounded :meth:`wait_for` degenerates to a real notification wait —
+    it consumes no time, virtual or real, and is how scheduler workers park
+    for queue space under a virtual clock.
+    """
+
+    #: fixed wall epoch (2023-11-14T22:13:20Z) — arbitrary but stable, so
+    #: virtual timestamps are reproducible across runs and machines
+    EPOCH = 1_700_000_000.0
+
+    def __init__(self, epoch: float = EPOCH):
+        self.epoch = epoch
+        self._elapsed = 0.0
+        self._sleeps = 0                     # virtual sleeps serviced
+        self._lock = threading.Lock()
+
+    # -- reading ---------------------------------------------------------------
+    def now(self) -> float:
+        with self._lock:
+            return self.epoch + self._elapsed
+
+    def monotonic(self) -> float:
+        with self._lock:
+            return self._elapsed
+
+    @property
+    def virtual_sleeps(self) -> int:
+        """How many sleeps/timed-waits were absorbed into virtual time."""
+        with self._lock:
+            return self._sleeps
+
+    # -- advancing -------------------------------------------------------------
+    def advance(self, seconds: float) -> float:
+        """Move virtual time forward; returns the new monotonic reading."""
+        if seconds < 0:
+            raise ValueError("virtual time cannot run backwards")
+        with self._lock:
+            self._elapsed += seconds
+            return self._elapsed
+
+    def advance_to(self, monotonic_target: float) -> float:
+        """Jump to an absolute monotonic instant (never backwards)."""
+        with self._lock:
+            if monotonic_target < self._elapsed:
+                raise ValueError(
+                    f"virtual time cannot run backwards "
+                    f"({monotonic_target} < {self._elapsed})")
+            self._elapsed = monotonic_target
+            return self._elapsed
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            with self._lock:
+                self._elapsed += seconds
+                self._sleeps += 1
+
+    # -- waiting ---------------------------------------------------------------
+    def wait_for(self, cond: threading.Condition,
+                 predicate: Callable[[], bool],
+                 timeout: Optional[float] = None) -> bool:
+        if predicate():
+            return True
+        if timeout is None:
+            # notification-driven: no time passes, virtual or real — the
+            # waker is another thread (e.g. a scheduler worker freeing a
+            # queue slot), not the passage of time
+            return cond.wait_for(predicate)
+        # bounded wait = discrete-event step: absorb the timeout into
+        # virtual time and re-check.  The caller's wait loop re-evaluates
+        # its deadline against this clock, so polling loops converge in
+        # O(iterations), not O(wall time).
+        self.sleep(timeout)
+        return predicate()
+
+    def wait_event(self, event: threading.Event,
+                   timeout: Optional[float] = None) -> bool:
+        if event.is_set():
+            return True
+        if timeout is None:
+            return event.wait()
+        self.sleep(timeout)
+        return event.is_set()
+
+
+class RealSleepForbidden(AssertionError):
+    """A real ``time.sleep`` was attempted inside a no-real-sleep region."""
+
+
+@contextlib.contextmanager
+def forbid_real_sleep(strict: bool = True) -> Iterator[dict]:
+    """Audit guard for the simulated path: while active, ``time.sleep``
+    raises (``strict=True``) or is counted (``strict=False``).
+
+    Yields a mutable ``{"calls": int}`` the caller can assert on.  The
+    patch is process-global — use around single-threaded simulator runs,
+    not around code legitimately sharing the process with sleeping
+    threads.
+    """
+    counter = {"calls": 0}
+    original = time.sleep
+
+    def guarded(seconds: float) -> None:
+        counter["calls"] += 1
+        if strict:
+            raise RealSleepForbidden(
+                f"time.sleep({seconds!r}) on the simulated path — all "
+                "waiting must go through the injected Clock")
+        original(seconds)
+
+    time.sleep = guarded
+    try:
+        yield counter
+    finally:
+        time.sleep = original

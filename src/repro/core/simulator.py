@@ -1,0 +1,823 @@
+"""Planet-scale scenario harness: deterministic virtual-time fleet
+simulation with continuous invariant audits.
+
+The chaos harness (:mod:`repro.core.faults`) exercises ONE live
+orchestrator with a handful of substrates in real time.  This module
+scales the same recovery machinery to *fleet* shape: thousands of
+simulated planes and tens of thousands of substrates run in-process on a
+:class:`~repro.core.simclock.VirtualClock`, so a simulated hour of
+diurnal waves, flash crowds, partitions and breaker storms costs only the
+wall-time of the event processing — zero real sleeps on the simulated
+path (enforced by :func:`~repro.core.simclock.forbid_real_sleep`).
+
+What is real and what is modeled
+--------------------------------
+
+The *control-plane* components under test are the production classes:
+
+- one :class:`~repro.core.health.HealthManager` per plane (virtual
+  monotonic clock) drives real circuit breakers for every substrate —
+  cooldowns, probation trickles and fidelity trips all run the shipped
+  code paths;
+- one :class:`~repro.core.policy.PolicyManager` per plane enforces
+  concurrency and probation-probe slots;
+- one :class:`~repro.core.telemetry.TelemetryBus` per plane (virtual
+  clock) carries health / ``twin_shadow`` / breaker events;
+- per-substrate :class:`~repro.core.twin.TwinState` ages against the
+  virtual clock; twin-fallback serving uses the real ``valid()`` gate;
+- multi-hop forwarding uses the real
+  :func:`~repro.core.topology.forward_task` budget arithmetic on real
+  :class:`~repro.core.tasks.TaskRequest` objects.
+
+Only the *data plane* is modeled: substrate outcomes are drawn from a
+seeded RNG instead of invoking hardware adapters.
+
+Invariants audited continuously
+-------------------------------
+
+Every simulated run emits a flat trace of event dicts; falsifiable
+auditor functions (:data:`AUDITORS`) re-derive each invariant from the
+recorded evidence, so a buggy simulator — or a mock trace in the test
+suite — is *caught*, not trusted:
+
+- **breaker legality + continuity** — every recorded transition is in
+  :data:`~repro.core.health.LEGAL_BREAKER` and chains from the previous
+  recorded state (first transition starts at ``healthy``);
+- **twin validity** — no task is ever served from a twin whose recorded
+  evidence (invalidation, staleness, confidence) says it was invalid;
+- **budget arithmetic** — every federation hop decrements the hop budget
+  by exactly 1 and the deadline budget by exactly the wire margin;
+- **policy-slot balance** — every acquired concurrency slot is released
+  exactly once, per session, never going negative;
+- **session-id uniqueness** — no two tasks share a session id.
+
+Same seed ⇒ identical trace ⇒ identical :func:`event_trace_hash` — the
+determinism contract ``bench_scenarios`` and the test suite assert on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import heapq
+import json
+import math
+import time
+import types
+from collections import Counter
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import random
+
+from repro.core.health import HealthManager, LEGAL_BREAKER, BreakerState
+from repro.core.policy import PolicyManager
+from repro.core.simclock import VirtualClock, forbid_real_sleep
+from repro.core.tasks import TaskRequest
+from repro.core.telemetry import TelemetryBus, TelemetryEvent
+from repro.core.topology import (DEFAULT_HOP_BUDGET, HOP_WIRE_MARGIN_MS,
+                                 budget_admissible, forward_task,
+                                 remaining_budget_ms)
+from repro.core.twin import TwinState
+
+__all__ = [
+    "SimScenario", "FleetSimulator", "scenario_matrix", "event_trace_hash",
+    "run_audits", "AUDITORS", "DEFAULT_SCENARIO_BUILDERS",
+    "diurnal_wave", "flash_crowd", "regional_partition",
+    "cascading_breaker_storm", "twin_fidelity_collapse",
+    "rolling_protocol_upgrade",
+]
+
+#: twin-fallback staleness bound used by the simulator's serving gate
+TWIN_MAX_AGE_MS = 120_000.0
+#: protocol versions a rolling upgrade walks through, oldest first
+PROTO_VERSIONS = ("v1.0", "v1.1", "v1.2")
+
+
+# ---------------------------------------------------------------------------
+# scenario DSL
+
+
+@dataclasses.dataclass
+class SimScenario:
+    """One entry of the scenario matrix: fleet shape + traffic profile +
+    scripted fault events.
+
+    ``rate_profile(frac)`` maps elapsed-fraction-of-run → arrival-rate
+    multiplier (diurnal waves, flash crowds).  ``events`` is a list of
+    ``(at_s, action, params)`` triples dispatched at virtual instants;
+    actions are the simulator verbs (``partition_region``,
+    ``arm_faults``, ``twin_collapse``, ``upgrade_wave``, …).
+    """
+
+    name: str
+    description: str = ""
+    planes: int = 100
+    substrates_per_plane: int = 10
+    regions: int = 4
+    duration_s: float = 600.0
+    tick_s: float = 10.0
+    #: fleet-wide task arrivals per virtual second (before the profile)
+    base_rate: float = 10.0
+    #: fraction of leaf tasks that take the multi-hop federation path
+    forward_fraction: float = 0.15
+    #: fraction of tasks that request twin-fallback on failure
+    twin_fraction: float = 0.25
+    #: virtual seconds between fleet-wide twin sync refreshes
+    twin_sync_interval_s: float = 30.0
+    rate_profile: Optional[Callable[[float], float]] = None
+    events: List[Tuple[float, str, Dict]] = dataclasses.field(
+        default_factory=list)
+
+    def rate_at(self, frac: float) -> float:
+        mult = self.rate_profile(frac) if self.rate_profile else 1.0
+        return max(0.0, self.base_rate * mult)
+
+
+def _scaled(name: str, description: str, *, planes: int,
+            substrates_per_plane: int, duration_s: float,
+            **kw) -> SimScenario:
+    return SimScenario(name=name, description=description, planes=planes,
+                       substrates_per_plane=substrates_per_plane,
+                       duration_s=duration_s, **kw)
+
+
+def diurnal_wave(*, planes: int = 100, substrates_per_plane: int = 10,
+                 duration_s: float = 600.0) -> SimScenario:
+    """Sinusoidal day/night traffic: rate swings 0.3×–1.7× over the run."""
+    return _scaled(
+        "diurnal-wave", "sinusoidal day/night arrival wave",
+        planes=planes, substrates_per_plane=substrates_per_plane,
+        duration_s=duration_s,
+        rate_profile=lambda f: 1.0 + 0.7 * math.sin(2 * math.pi * f))
+
+
+def flash_crowd(*, planes: int = 100, substrates_per_plane: int = 10,
+                duration_s: float = 600.0) -> SimScenario:
+    """Steady load with an 8× arrival spike over the middle tenth."""
+    def profile(f: float) -> float:
+        return 8.0 if 0.45 <= f < 0.55 else 1.0
+    return _scaled(
+        "flash-crowd", "8x arrival spike over the middle tenth of the run",
+        planes=planes, substrates_per_plane=substrates_per_plane,
+        duration_s=duration_s, rate_profile=profile)
+
+
+def regional_partition(*, planes: int = 100, substrates_per_plane: int = 10,
+                       duration_s: float = 600.0) -> SimScenario:
+    """Region 1 loses inter-region connectivity for the middle third:
+    forwarded tasks drop at the partition boundary and the region's twins
+    age past the staleness bound (twin sync cannot reach them)."""
+    sc = _scaled(
+        "regional-partition",
+        "region 1 partitioned for the middle third of the run",
+        planes=planes, substrates_per_plane=substrates_per_plane,
+        duration_s=duration_s)
+    sc.events = [
+        (duration_s * 0.30, "partition_region", {"region": 1}),
+        (duration_s * 0.65, "heal_region", {"region": 1}),
+    ]
+    return sc
+
+
+def cascading_breaker_storm(*, planes: int = 100,
+                            substrates_per_plane: int = 10,
+                            duration_s: float = 600.0) -> SimScenario:
+    """Hard faults arm on a growing set of substrate cohorts (every 10th
+    plane's substrate 0, then 1, then 2): breakers trip in cascade, clear
+    mid-run, and re-admission flows through probation probes."""
+    sc = _scaled(
+        "breaker-storm",
+        "cascading hard faults across substrate cohorts, then recovery",
+        planes=planes, substrates_per_plane=substrates_per_plane,
+        duration_s=duration_s)
+    cohorts = min(3, substrates_per_plane)
+    for k in range(cohorts):
+        sc.events.append((duration_s * (0.20 + 0.07 * k), "arm_faults",
+                          {"cohort": k, "fail_p": 0.98}))
+    sc.events.append((duration_s * 0.55, "clear_faults", {}))
+    return sc
+
+
+def twin_fidelity_collapse(*, planes: int = 100,
+                           substrates_per_plane: int = 10,
+                           duration_s: float = 600.0) -> SimScenario:
+    """Correlated twin-fidelity collapse in region 0: measured shadow
+    divergence storms trip fidelity breakers AND invalidate the twins, so
+    twin-fallback serving must refuse until recalibration."""
+    sc = _scaled(
+        "twin-collapse",
+        "correlated measured-divergence collapse in region 0",
+        planes=planes, substrates_per_plane=substrates_per_plane,
+        duration_s=duration_s, twin_fraction=0.5)
+    sc.events = [
+        (duration_s * 0.30, "twin_collapse", {"region": 0, "fail_p": 0.9}),
+        (duration_s * 0.70, "twin_restore", {"region": 0}),
+    ]
+    return sc
+
+
+def rolling_protocol_upgrade(*, planes: int = 100,
+                             substrates_per_plane: int = 10,
+                             duration_s: float = 600.0) -> SimScenario:
+    """Mixed-fleet protocol upgrade: three waves walk the fleet from
+    v1.0 through v1.2 while cross-version forwarding keeps negotiating
+    the older minor on every hop."""
+    sc = _scaled(
+        "rolling-upgrade",
+        "three-wave v1.0 -> v1.1 -> v1.2 fleet upgrade under load",
+        planes=planes, substrates_per_plane=substrates_per_plane,
+        duration_s=duration_s, forward_fraction=0.3)
+    sc.events = [
+        (duration_s * 0.20, "upgrade_wave", {"modulo": 3, "phase": 0,
+                                             "version": "v1.1"}),
+        (duration_s * 0.40, "upgrade_wave", {"modulo": 3, "phase": 1,
+                                             "version": "v1.1"}),
+        (duration_s * 0.55, "upgrade_wave", {"modulo": 3, "phase": 2,
+                                             "version": "v1.1"}),
+        (duration_s * 0.70, "upgrade_wave", {"modulo": 1, "phase": 0,
+                                             "version": "v1.2"}),
+    ]
+    return sc
+
+
+DEFAULT_SCENARIO_BUILDERS: Tuple[Callable[..., SimScenario], ...] = (
+    diurnal_wave, flash_crowd, regional_partition, cascading_breaker_storm,
+    twin_fidelity_collapse, rolling_protocol_upgrade,
+)
+
+
+def scenario_matrix(*, planes: int = 100, substrates_per_plane: int = 10,
+                    duration_s: float = 600.0,
+                    builders: Sequence[Callable[..., SimScenario]] =
+                    DEFAULT_SCENARIO_BUILDERS) -> List[SimScenario]:
+    """The full scenario matrix at one fleet scale: every builder
+    instantiated with the same plane/substrate/duration shape."""
+    return [b(planes=planes, substrates_per_plane=substrates_per_plane,
+              duration_s=duration_s) for b in builders]
+
+
+# ---------------------------------------------------------------------------
+# trace hashing
+
+
+def event_trace_hash(trace: Sequence[Dict]) -> str:
+    """Canonical digest of a simulated trace.  Virtual timestamps are a
+    pure function of the event sequence, so they are INCLUDED — two runs
+    hash equal iff they produced bit-identical behavior."""
+    h = hashlib.sha256()
+    for ev in trace:
+        h.update(json.dumps(ev, sort_keys=True, separators=(",", ":"),
+                            default=str).encode())
+        h.update(b"\n")
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# invariant auditors — falsifiable: they re-derive each invariant from the
+# recorded evidence, so they catch both simulator bugs and doctored traces
+
+_LEGAL_BY_VALUE: Dict[str, Tuple[str, ...]] = {
+    src.value: tuple(d.value for d in dsts)
+    for src, dsts in LEGAL_BREAKER.items()
+}
+
+_MAX_VIOLATIONS_REPORTED = 25
+
+
+def _capped(violations: List[str]) -> List[str]:
+    if len(violations) > _MAX_VIOLATIONS_REPORTED:
+        extra = len(violations) - _MAX_VIOLATIONS_REPORTED
+        return violations[:_MAX_VIOLATIONS_REPORTED] + [
+            f"... {extra} more violation(s) suppressed"]
+    return violations
+
+
+def audit_breaker_legality(trace: Sequence[Dict]) -> List[str]:
+    """Every breaker transition is legal AND continuous per resource:
+    ``src`` must equal the previously recorded ``dst`` (implicit start is
+    ``healthy``) and ``src -> dst`` must appear in LEGAL_BREAKER."""
+    v: List[str] = []
+    last: Dict[Tuple, str] = {}
+    for ev in trace:
+        if ev.get("kind") != "breaker":
+            continue
+        key = (ev.get("plane"), ev.get("rid"))
+        src, dst = ev.get("src"), ev.get("dst")
+        prev = last.get(key, BreakerState.HEALTHY.value)
+        if src != prev:
+            v.append(f"breaker discontinuity for {key}: transition claims "
+                     f"src={src!r} but last recorded state was {prev!r}")
+        if dst not in _LEGAL_BY_VALUE.get(src, ()):
+            v.append(f"illegal breaker transition {src!r} -> {dst!r} "
+                     f"for {key}")
+        last[key] = dst
+    return _capped(v)
+
+
+def audit_twin_validity(trace: Sequence[Dict]) -> List[str]:
+    """No serve from an invalid twin: for every ``twin_serve`` event,
+    re-derive validity from the recorded evidence (invalidation reason,
+    age vs bound, confidence vs floor) instead of trusting the flag."""
+    v: List[str] = []
+    for ev in trace:
+        if ev.get("kind") != "twin_serve":
+            continue
+        where = f"session {ev.get('session')!r} on {ev.get('rid')!r}"
+        if not ev.get("valid", False):
+            v.append(f"twin served while flagged invalid: {where}")
+        if ev.get("invalidation_reason"):
+            v.append(f"twin served while invalidated "
+                     f"({ev['invalidation_reason']!r}): {where}")
+        age, bound = ev.get("age_ms"), ev.get("max_age_ms")
+        if age is not None and bound is not None and age > bound:
+            v.append(f"twin served while stale ({age:.0f}ms > "
+                     f"{bound:.0f}ms): {where}")
+        conf, floor = ev.get("confidence"), ev.get("min_confidence")
+        if conf is not None and floor is not None and conf < floor:
+            v.append(f"twin served below confidence floor ({conf:.2f} < "
+                     f"{floor:.2f}): {where}")
+    return _capped(v)
+
+
+def audit_budget_arithmetic(trace: Sequence[Dict]) -> List[str]:
+    """Hop/deadline budget arithmetic is EXACT: each hop decrements the
+    hop budget by 1 and the deadline budget by precisely the wire margin
+    (no drift, no rounding)."""
+    v: List[str] = []
+    for ev in trace:
+        if ev.get("kind") != "hop":
+            continue
+        where = f"session {ev.get('session')!r} via {ev.get('src')!r}"
+        if ev.get("hop_after") != ev.get("hop_before") - 1:
+            v.append(f"hop budget not decremented by exactly 1 "
+                     f"({ev.get('hop_before')} -> {ev.get('hop_after')}): "
+                     f"{where}")
+        before, after = ev.get("budget_before"), ev.get("budget_after")
+        margin = ev.get("margin_ms", HOP_WIRE_MARGIN_MS)
+        if before is not None:
+            if after != before - margin:
+                v.append(f"deadline budget arithmetic inexact "
+                         f"({before!r} - {margin!r} != {after!r}): {where}")
+        elif after is not None:
+            v.append(f"deadline budget appeared from nowhere "
+                     f"(None -> {after!r}): {where}")
+    return _capped(v)
+
+
+def audit_policy_slots(trace: Sequence[Dict]) -> List[str]:
+    """Concurrency-slot accounting balances: per substrate the running
+    acquire/release count never goes negative and ends at zero, and each
+    session releases exactly what it acquired."""
+    v: List[str] = []
+    balance: Dict[Tuple, int] = {}
+    per_session: Dict[Tuple, int] = {}
+    for ev in trace:
+        kind = ev.get("kind")
+        if kind not in ("slot_acquire", "slot_release"):
+            continue
+        key = (ev.get("plane"), ev.get("rid"))
+        skey = (ev.get("session"), ev.get("rid"))
+        delta = 1 if kind == "slot_acquire" else -1
+        balance[key] = balance.get(key, 0) + delta
+        per_session[skey] = per_session.get(skey, 0) + delta
+        if balance[key] < 0:
+            v.append(f"slot released without acquire on {key} "
+                     f"(session {ev.get('session')!r})")
+    for key, n in balance.items():
+        if n > 0:
+            v.append(f"{n} leaked slot(s) on {key}")
+    for (session, rid), n in per_session.items():
+        if n != 0:
+            v.append(f"session {session!r} acquire/release imbalance "
+                     f"({n:+d}) on {rid!r}")
+    return _capped(v)
+
+
+def audit_session_uniqueness(trace: Sequence[Dict]) -> List[str]:
+    v: List[str] = []
+    seen: set = set()
+    for ev in trace:
+        if ev.get("kind") != "session":
+            continue
+        sid = ev.get("session")
+        if sid in seen:
+            v.append(f"duplicate session id {sid!r}")
+        seen.add(sid)
+    return _capped(v)
+
+
+AUDITORS: Dict[str, Callable[[Sequence[Dict]], List[str]]] = {
+    "breaker_legality": audit_breaker_legality,
+    "twin_validity": audit_twin_validity,
+    "budget_arithmetic": audit_budget_arithmetic,
+    "policy_slots": audit_policy_slots,
+    "session_uniqueness": audit_session_uniqueness,
+}
+
+
+def run_audits(trace: Sequence[Dict]) -> Dict[str, List[str]]:
+    """Run every registered auditor; returns ``{name: [violations...]}``
+    (empty lists mean the invariant held)."""
+    return {name: fn(trace) for name, fn in AUDITORS.items()}
+
+
+# ---------------------------------------------------------------------------
+# fleet model
+
+
+def _desc_shim(rid: str, max_concurrent: int):
+    """The minimal descriptor surface PolicyManager.acquire consumes —
+    the simulator models the data plane, not the registry."""
+    return types.SimpleNamespace(
+        resource_id=rid,
+        capability=types.SimpleNamespace(
+            policy=types.SimpleNamespace(max_concurrent=max_concurrent)))
+
+
+class _SimSubstrate:
+    __slots__ = ("rid", "desc", "base_fail_p", "fault_fail_p", "twin",
+                 "latency_ms")
+
+    def __init__(self, rid: str, now: Callable[[], float],
+                 latency_ms: float, base_fail_p: float):
+        self.rid = rid
+        self.desc = _desc_shim(rid, max_concurrent=4)
+        self.base_fail_p = base_fail_p
+        self.fault_fail_p: Optional[float] = None   # armed fault override
+        self.latency_ms = latency_ms
+        self.twin = TwinState(twin_id=f"twin:{rid}", resource_id=rid,
+                              time_fn=now)
+        self.twin.last_sync = now()
+        self.twin.calibration_ts = now()
+
+    def fail_p(self) -> float:
+        return (self.fault_fail_p if self.fault_fail_p is not None
+                else self.base_fail_p)
+
+
+class _SimPlane:
+    __slots__ = ("plane_id", "index", "region", "tier", "proto", "bus",
+                 "policy", "health", "substrates", "partitioned")
+
+    def __init__(self, plane_id: str, index: int, region: int, tier: str,
+                 clock: VirtualClock, substrates: int, rng: random.Random):
+        self.plane_id = plane_id
+        self.index = index
+        self.region = region
+        self.tier = tier                        # leaf | regional | core
+        self.proto = PROTO_VERSIONS[0]
+        self.partitioned = False
+        self.bus = TelemetryBus(history=8, clock=clock)
+        self.policy = PolicyManager()
+        self.health = HealthManager(self.bus, self.policy,
+                                    cooldown_s=5.0, probes_to_close=2,
+                                    clock=clock.monotonic)
+        self.substrates = [
+            _SimSubstrate(f"{plane_id}/s{j}", clock.now,
+                          latency_ms=1.0 + rng.random() * 4.0,
+                          base_fail_p=0.002 + rng.random() * 0.008)
+            for j in range(substrates)
+        ]
+
+
+# ---------------------------------------------------------------------------
+# the simulator
+
+
+class FleetSimulator:
+    """Single-threaded discrete-event simulator over a virtual clock.
+
+    Construction builds the fleet (real per-plane health/policy/telemetry
+    stacks on the shared :class:`VirtualClock`); :meth:`run` executes the
+    scenario's event heap — arrival ticks, twin syncs, scripted fault
+    actions — appending every observable to ``self.trace`` and returning
+    a report with audit results, the trace hash and the real-sleep count
+    (which must be zero).
+    """
+
+    def __init__(self, scenario: SimScenario, seed: int = 0):
+        self.sc = scenario
+        self.seed = seed
+        self.clock = VirtualClock()
+        self.rng = random.Random(seed)
+        self.trace: List[Dict] = []
+        self._task_seq = 0
+        self._events_processed = 0
+        self._outcomes: Counter = Counter()
+        self._breaker_transitions = 0
+        self._proto_pairs: Counter = Counter()
+
+        n_regions = max(1, scenario.regions)
+        self.planes: List[_SimPlane] = []
+        for i in range(scenario.planes):
+            region = i % n_regions
+            # one core plane, one regional hub per region, the rest leaves
+            if i == 0:
+                tier = "core"
+            elif i <= n_regions:
+                tier = "regional"
+            else:
+                tier = "leaf"
+            plane = _SimPlane(f"{scenario.name}-p{i:04d}", i, region, tier,
+                              self.clock, scenario.substrates_per_plane,
+                              self.rng)
+            plane.bus.subscribe(self._make_breaker_listener(plane))
+            self.planes.append(plane)
+        self._regional: Dict[int, _SimPlane] = {
+            p.region: p for p in self.planes if p.tier == "regional"}
+        self._core: _SimPlane = self.planes[0]
+        self._leaves: List[_SimPlane] = [p for p in self.planes
+                                         if p.tier == "leaf"] or self.planes
+
+    # -- trace ----------------------------------------------------------------
+    def _record(self, kind: str, **fields) -> None:
+        ev = {"t": round(self.clock.monotonic(), 6), "kind": kind}
+        ev.update(fields)
+        self.trace.append(ev)
+
+    def _make_breaker_listener(self, plane: _SimPlane):
+        def listen(ev: TelemetryEvent, _plane=plane) -> None:
+            if ev.kind == "breaker":
+                self._breaker_transitions += 1
+                self._record("breaker", plane=_plane.plane_id,
+                             rid=ev.resource_id, src=ev.fields["from"],
+                             dst=ev.fields["to"], reason=ev.fields["reason"])
+        return listen
+
+    # -- scripted scenario actions --------------------------------------------
+    def _dispatch(self, action: str, params: Dict) -> None:
+        self._record("scenario_event", action=action, **params)
+        if action == "partition_region":
+            for p in self.planes:
+                if p.region == params["region"]:
+                    p.partitioned = True
+        elif action == "heal_region":
+            for p in self.planes:
+                if p.region == params["region"]:
+                    p.partitioned = False
+        elif action == "arm_faults":
+            cohort, fail_p = params["cohort"], params["fail_p"]
+            for p in self.planes:
+                if p.index % 10 == 0 and cohort < len(p.substrates):
+                    p.substrates[cohort].fault_fail_p = fail_p
+        elif action == "clear_faults":
+            for p in self.planes:
+                for s in p.substrates:
+                    s.fault_fail_p = None
+        elif action == "twin_collapse":
+            for p in self.planes:
+                if p.region != params["region"]:
+                    continue
+                for s in p.substrates:
+                    # the collapse takes the hardware down WITH its twin:
+                    # the serving gate must refuse the fallback, not lean
+                    # on an invalidated surrogate
+                    if "fail_p" in params:
+                        s.fault_fail_p = params["fail_p"]
+                    s.twin.invalidation_reason = "correlated fidelity collapse"
+                    s.twin.confidence = 0.05
+                    # measured-divergence storm: the real fidelity trip
+                    # needs a streak of beyond-OPEN comparisons
+                    for _ in range(2):
+                        p.bus.emit(TelemetryEvent(
+                            s.rid, "twin_shadow",
+                            {"divergence": 0.99, "tolerance": 0.05}))
+        elif action == "twin_restore":
+            now = self.clock.now()
+            for p in self.planes:
+                if p.region != params["region"]:
+                    continue
+                for s in p.substrates:
+                    s.fault_fail_p = None
+                    s.twin.invalidation_reason = ""
+                    s.twin.confidence = 1.0
+                    s.twin.last_sync = now
+                    s.twin.calibration_ts = now
+        elif action == "upgrade_wave":
+            modulo, phase = params["modulo"], params["phase"]
+            for p in self.planes:
+                if p.index % modulo == phase:
+                    p.proto = params["version"]
+        else:
+            raise ValueError(f"unknown scenario action {action!r}")
+
+    def _twin_sync(self) -> None:
+        """Fleet-wide twin refresh; partitioned regions are unreachable,
+        so their twins keep aging toward the staleness bound."""
+        now = self.clock.now()
+        refreshed = 0
+        for p in self.planes:
+            if p.partitioned:
+                continue
+            for s in p.substrates:
+                if not s.twin.invalidation_reason:
+                    s.twin.last_sync = now
+                    s.twin.observations += 1
+                    refreshed += 1
+        self._record("twin_sync", refreshed=refreshed)
+
+    # -- task path ------------------------------------------------------------
+    def _next_session(self) -> str:
+        sid = f"{self.sc.name}/{self.seed}/s{self._task_seq:07d}"
+        self._task_seq += 1
+        return sid
+
+    def _forward_chain(self, origin: _SimPlane) -> List[_SimPlane]:
+        chain = []
+        hub = self._regional.get(origin.region)
+        if hub is not None and hub is not origin:
+            chain.append(hub)
+        if self._core is not origin and (not chain or
+                                         chain[-1] is not self._core):
+            chain.append(self._core)
+        return chain
+
+    def _run_task(self) -> None:
+        sc, rng = self.sc, self.rng
+        sid = self._next_session()
+        origin = self._leaves[rng.randrange(len(self._leaves))]
+        self._record("session", session=sid, plane=origin.plane_id)
+        wants_twin = rng.random() < sc.twin_fraction
+
+        exec_plane = origin
+        if origin.tier == "leaf" and rng.random() < sc.forward_fraction:
+            task = TaskRequest(function="inference", input_modality="vector",
+                              output_modality="vector",
+                              latency_budget_ms=60.0, task_id=sid)
+            src = origin
+            for hop_target in self._forward_chain(origin):
+                if src.partitioned != hop_target.partitioned or (
+                        src.partitioned and src.region != hop_target.region):
+                    self._record("partition_drop", session=sid,
+                                 src=src.plane_id, dst=hop_target.plane_id)
+                    self._outcomes["partition_drop"] += 1
+                    return
+                ok, why = budget_admissible(task)
+                if not ok:
+                    self._record("hop_refused", session=sid,
+                                 src=src.plane_id, reason=why)
+                    self._outcomes["budget_refused"] += 1
+                    return
+                hop_before = (task.hop_budget if task.hop_budget is not None
+                              else DEFAULT_HOP_BUDGET)
+                budget_before = remaining_budget_ms(task)
+                fwd = forward_task(task, src.plane_id)
+                self._record(
+                    "hop", session=sid, src=src.plane_id,
+                    dst=hop_target.plane_id, hop_before=hop_before,
+                    hop_after=fwd.hop_budget, budget_before=budget_before,
+                    budget_after=fwd.deadline_budget_ms,
+                    margin_ms=HOP_WIRE_MARGIN_MS)
+                self._proto_pairs[(src.proto, hop_target.proto)] += 1
+                task, src = fwd, hop_target
+            exec_plane = src
+
+        self._execute(sid, exec_plane, wants_twin)
+
+    def _execute(self, sid: str, plane: _SimPlane, wants_twin: bool) -> None:
+        rng = self.rng
+        subs = plane.substrates
+        start = rng.randrange(len(subs))
+        tried: List[_SimSubstrate] = []
+        for attempt in range(min(3, len(subs))):
+            sub = subs[(start + attempt) % len(subs)]
+            tried.append(sub)
+            if not plane.policy.acquire(sub.desc, timeout_s=0.0):
+                self._outcomes["busy"] += 1
+                continue
+            self._record("slot_acquire", session=sid, plane=plane.plane_id,
+                         rid=sub.rid)
+            try:
+                allowed, token, reason = plane.health.begin_attempt(sub.rid)
+                if not allowed:
+                    self._record("refused", session=sid, rid=sub.rid,
+                                 reason=reason)
+                    self._outcomes["quarantine_refused"] += 1
+                    continue
+                ok = rng.random() >= sub.fail_p()
+                latency = sub.latency_ms * (1.0 + rng.random())
+                plane.health.finish_attempt(
+                    token, ok, kind="simulated fault" if not ok else "",
+                    latency_ms=latency)
+                self._record("outcome", session=sid, plane=plane.plane_id,
+                             rid=sub.rid, ok=ok,
+                             probe=bool(token and token.probe))
+                if ok:
+                    self._outcomes["completed"] += 1
+                    return
+                self._outcomes["failed_attempt"] += 1
+            finally:
+                plane.policy.release(sub.desc)
+                self._record("slot_release", session=sid,
+                             plane=plane.plane_id, rid=sub.rid)
+            if attempt + 1 < min(3, len(subs)):
+                self._record("reroute", session=sid, plane=plane.plane_id)
+        # hardware path exhausted — twin fallback if the task asked for it
+        if wants_twin and tried:
+            self._try_twin(sid, plane, tried[0])
+        else:
+            self._outcomes["exhausted"] += 1
+
+    def _try_twin(self, sid: str, plane: _SimPlane,
+                  sub: _SimSubstrate) -> None:
+        tw = sub.twin
+        valid, why = tw.valid(TWIN_MAX_AGE_MS)
+        evidence = dict(
+            session=sid, plane=plane.plane_id, rid=sub.rid, valid=valid,
+            reason=why, age_ms=round(tw.age_ms(), 3),
+            max_age_ms=TWIN_MAX_AGE_MS,
+            confidence=round(tw.confidence, 4),
+            min_confidence=TwinState.DEFAULT_MIN_CONFIDENCE,
+            invalidation_reason=tw.invalidation_reason or None)
+        if valid:
+            self._record("twin_serve", **evidence)
+            self._outcomes["twin_served"] += 1
+        else:
+            self._record("twin_refused", **evidence)
+            self._outcomes["twin_refused"] += 1
+
+    # -- event loop -----------------------------------------------------------
+    def _build_heap(self) -> List[Tuple[float, int, str, Dict]]:
+        sc = self.sc
+        heap: List[Tuple[float, int, str, Dict]] = []
+        seq = 0
+        t = sc.tick_s
+        while t <= sc.duration_s:
+            heap.append((t, seq, "tick", {}))
+            seq += 1
+            t += sc.tick_s
+        t = sc.twin_sync_interval_s
+        while t <= sc.duration_s:
+            heap.append((t, seq, "twin_sync", {}))
+            seq += 1
+            t += sc.twin_sync_interval_s
+        for at_s, action, params in sc.events:
+            heap.append((at_s, seq, action, dict(params)))
+            seq += 1
+        heapq.heapify(heap)
+        return heap
+
+    def run(self) -> Dict:
+        """Execute the scenario; returns the report dict.  The entire
+        simulated path runs under :func:`forbid_real_sleep` — any real
+        ``time.sleep`` raises, which is the zero-real-sleep guarantee."""
+        sc = self.sc
+        wall_start = time.perf_counter()
+        heap = self._build_heap()
+        with forbid_real_sleep(strict=True) as sleep_counter:
+            while heap:
+                at_s, _seq, kind, params = heapq.heappop(heap)
+                self.clock.advance_to(at_s)
+                self._events_processed += 1
+                if kind == "tick":
+                    frac = at_s / sc.duration_s
+                    expected = sc.rate_at(frac) * sc.tick_s
+                    n = int(expected)
+                    if self.rng.random() < expected - n:
+                        n += 1
+                    for _ in range(n):
+                        self._run_task()
+                elif kind == "twin_sync":
+                    self._twin_sync()
+                else:
+                    self._dispatch(kind, params)
+        wall_s = time.perf_counter() - wall_start
+
+        violations = run_audits(self.trace)
+        leaked = [p.plane_id for p in self.planes
+                  if not p.policy.fully_released()]
+        if leaked:
+            violations.setdefault("policy_slots", []).extend(
+                f"live PolicyManager reports leaked slots on {pid}"
+                for pid in leaked[:5])
+        started_open = sum(p.health.audit()["started_while_open"]
+                           for p in self.planes)
+        if started_open:
+            violations.setdefault("breaker_legality", []).append(
+                f"{started_open} attempt(s) started while quarantined")
+        return {
+            "scenario": sc.name,
+            "description": sc.description,
+            "seed": self.seed,
+            "planes": sc.planes,
+            "substrates": sc.planes * sc.substrates_per_plane,
+            "virtual_duration_s": sc.duration_s,
+            "tasks": self._task_seq,
+            "events_processed": self._events_processed,
+            "trace_events": len(self.trace),
+            "outcomes": dict(self._outcomes),
+            "breaker_transitions": self._breaker_transitions,
+            "proto_pairs": {f"{a}->{b}": n
+                            for (a, b), n in sorted(self._proto_pairs.items())},
+            "violations": violations,
+            "violations_total": sum(len(v) for v in violations.values()),
+            "trace_hash": event_trace_hash(self.trace),
+            "real_sleep_calls": sleep_counter["calls"],
+            "virtual_sleeps": self.clock.virtual_sleeps,
+            "wall_s": round(wall_s, 4),
+        }
+
+
+def run_matrix(scenarios: Sequence[SimScenario], seed: int = 0) -> List[Dict]:
+    """Run every scenario in the matrix (each with its own fleet) and
+    return the per-scenario reports."""
+    return [FleetSimulator(s, seed=seed).run() for s in scenarios]

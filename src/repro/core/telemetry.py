@@ -21,6 +21,8 @@ import time
 from collections import defaultdict, deque
 from typing import Callable, Dict, List, Optional
 
+from repro.core.simclock import Clock, SYSTEM_CLOCK
+
 HEALTH = ("healthy", "degraded", "failed")
 
 
@@ -37,14 +39,18 @@ class RuntimeSnapshot:
     last_updated: float = dataclasses.field(default_factory=time.time)
     extra: Dict = dataclasses.field(default_factory=dict)
 
-    def aged(self) -> "RuntimeSnapshot":
+    def aged(self, now: Optional[float] = None) -> "RuntimeSnapshot":
         """Copy with age_of_information_ms recomputed (copy-on-read: the
-        stored snapshot is never mutated, so concurrent readers are safe)."""
+        stored snapshot is never mutated, so concurrent readers are safe).
+        ``now`` lets a clock-owning caller (the bus) age against its own
+        timebase; default is wall time."""
+        if now is None:
+            now = time.time()
         return dataclasses.replace(
-            self, age_of_information_ms=(time.time() - self.last_updated) * 1e3)
+            self, age_of_information_ms=(now - self.last_updated) * 1e3)
 
-    def to_dict(self) -> Dict:
-        return dataclasses.asdict(self.aged())
+    def to_dict(self, now: Optional[float] = None) -> Dict:
+        return dataclasses.asdict(self.aged(now))
 
 
 @dataclasses.dataclass
@@ -58,7 +64,7 @@ class TelemetryEvent:
 class TelemetryBus:
     """In-process pub/sub with bounded per-resource history (thread-safe)."""
 
-    def __init__(self, history: int = 256):
+    def __init__(self, history: int = 256, clock: Optional[Clock] = None):
         self._subs: List[Callable[[TelemetryEvent], None]] = []
         self._history: Dict[str, deque] = defaultdict(
             lambda: deque(maxlen=history))
@@ -66,6 +72,10 @@ class TelemetryBus:
         self._queue_depth: Dict[str, int] = defaultdict(int)
         self._epoch = 0
         self._lock = threading.Lock()
+        # injectable timebase: stamps events/snapshots and computes ages —
+        # under the scenario simulator's VirtualClock every timestamp is a
+        # deterministic function of the event sequence
+        self.clock: Clock = clock or SYSTEM_CLOCK
 
     @property
     def epoch(self) -> int:
@@ -88,6 +98,10 @@ class TelemetryBus:
                 pass
 
     def emit(self, event: TelemetryEvent) -> None:
+        # the bus owns the timebase: restamp at publication so subscribers
+        # (twin sync, health, stream severity) all see one consistent —
+        # and, under a virtual clock, deterministic — timeline
+        event.timestamp = self.clock.now()
         with self._lock:
             self._history[event.resource_id].append(event)
             subs = list(self._subs)
@@ -95,11 +109,13 @@ class TelemetryBus:
             fn(event)
 
     def update_snapshot(self, snap: RuntimeSnapshot) -> None:
-        stored = dataclasses.replace(snap, last_updated=time.time())
+        now = self.clock.now()
+        stored = dataclasses.replace(snap, last_updated=now)
         with self._lock:
             self._snapshots[snap.resource_id] = stored
             self._epoch += 1
-        self.emit(TelemetryEvent(snap.resource_id, "health", stored.to_dict()))
+        self.emit(TelemetryEvent(snap.resource_id, "health",
+                                 stored.to_dict(now)))
 
     def snapshot(self, resource_id: str) -> Optional[RuntimeSnapshot]:
         """Aged copy of the stored snapshot with the LIVE queue depth
@@ -109,7 +125,7 @@ class TelemetryBus:
             depth = self._queue_depth.get(resource_id, 0)
         if snap is None:
             return None
-        view = snap.aged()
+        view = snap.aged(self.clock.now())
         view.queue_depth = depth
         return view
 

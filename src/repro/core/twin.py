@@ -63,6 +63,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.core.simclock import Clock, SYSTEM_CLOCK
 from repro.core.telemetry import TelemetryBus, TelemetryEvent
 
 
@@ -218,13 +219,19 @@ class TwinState:
     #: serialization — it is code, not state
     surrogate: Optional[TwinSurrogate] = dataclasses.field(
         default=None, repr=False, compare=False)
+    #: wall-time source for staleness (set by the owning TwinSyncManager
+    #: from its injected clock; None = real time).  Code, not state —
+    #: excluded from comparison and repr like the surrogate.
+    time_fn: Optional[Callable[[], float]] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     #: default ``valid()`` confidence floor; tasks override it via
     #: ``TaskRequest.twin_min_confidence``
     DEFAULT_MIN_CONFIDENCE = 0.3
 
     def age_ms(self) -> float:
-        return (time.time() - self.last_sync) * 1e3
+        now = self.time_fn() if self.time_fn is not None else time.time()
+        return (now - self.last_sync) * 1e3
 
     @property
     def executable(self) -> bool:
@@ -277,14 +284,23 @@ class TwinSyncManager:
     SYNC_CREDIT = 0.05       # confidence restored per clean observation
     DIVERGENCE_EMA = 0.3     # weight of the newest measured divergence
 
-    def __init__(self, bus: TelemetryBus):
+    def __init__(self, bus: TelemetryBus, clock: Optional[Clock] = None):
         self._twins: Dict[str, TwinState] = {}
         self._bus = bus
+        # injectable timebase (defaults to the bus's, so twin staleness and
+        # telemetry timestamps agree); virtual under the scenario simulator
+        self.clock: Clock = clock or getattr(bus, "clock", SYSTEM_CLOCK)
         self._lock = threading.Lock()
         bus.subscribe(self._on_event)
 
+    def now(self) -> float:
+        """This manager's wall-time reading — fault injectors and tests age
+        twins relative to THIS timebase, never raw ``time.time()``."""
+        return self.clock.now()
+
     def register(self, twin: TwinState) -> TwinState:
         with self._lock:
+            twin.time_fn = self.clock.now
             self._twins[twin.resource_id] = twin
         return twin
 
@@ -298,7 +314,7 @@ class TwinSyncManager:
         """The single confidence law (caller holds the lock): blend the
         current confidence toward agreement, never outside [0, 1]."""
         drift = max(0.0, min(1.0, drift))
-        tw.last_sync = ts if ts is not None else time.time()
+        tw.last_sync = ts if ts is not None else self.clock.now()
         tw.observations += 1
         tw.drift_estimate = drift
         tw.confidence = max(0.0, min(1.0, tw.confidence *
@@ -329,8 +345,8 @@ class TwinSyncManager:
         with self._lock:
             tw = self._twins.get(resource_id)
             if tw is not None:
-                tw.calibration_ts = time.time()
-                tw.last_sync = time.time()
+                tw.calibration_ts = self.clock.now()
+                tw.last_sync = self.clock.now()
                 tw.drift_estimate = 0.0
                 tw.confidence = 1.0
                 tw.invalidation_reason = ""

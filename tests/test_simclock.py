@@ -1,0 +1,106 @@
+"""VirtualClock semantics: the determinism substrate of the scenario
+simulator.
+
+- virtual time only moves on advance/sleep, from a fixed epoch, with
+  ``now``/``monotonic`` in lockstep;
+- bounded waits absorb their timeout into virtual time (discrete-event
+  step); unbounded waits are notification-driven and consume no time;
+- ``forbid_real_sleep`` catches (or counts) any real sleep on the
+  simulated path.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core.simclock import (SYSTEM_CLOCK, RealSleepForbidden,
+                                 SystemClock, VirtualClock,
+                                 forbid_real_sleep)
+
+pytestmark = pytest.mark.sim
+
+
+def test_virtual_time_only_moves_on_advance():
+    vc = VirtualClock()
+    assert vc.monotonic() == 0.0
+    assert vc.now() == VirtualClock.EPOCH
+    vc.advance(2.5)
+    assert vc.monotonic() == 2.5
+    assert vc.now() == VirtualClock.EPOCH + 2.5
+    # re-reading does not move time
+    assert vc.monotonic() == 2.5
+
+
+def test_sleep_advances_and_counts():
+    vc = VirtualClock()
+    vc.sleep(1.0)
+    vc.sleep(0.25)
+    vc.sleep(0.0)                        # zero sleeps are free
+    assert vc.monotonic() == 1.25
+    assert vc.virtual_sleeps == 2
+
+
+def test_advance_to_refuses_backwards():
+    vc = VirtualClock()
+    vc.advance_to(5.0)
+    with pytest.raises(ValueError):
+        vc.advance_to(4.0)
+    with pytest.raises(ValueError):
+        vc.advance(-1.0)
+
+
+def test_bounded_wait_absorbs_timeout_into_virtual_time():
+    vc = VirtualClock()
+    cond = threading.Condition()
+    with cond:
+        hit = vc.wait_for(cond, lambda: False, timeout=3.0)
+    assert hit is False
+    assert vc.monotonic() == 3.0          # the wait became a time step
+    ev = threading.Event()
+    assert vc.wait_event(ev, timeout=2.0) is False
+    assert vc.monotonic() == 5.0
+
+
+def test_unbounded_wait_is_notification_driven_and_timeless():
+    vc = VirtualClock()
+    cond = threading.Condition()
+    state = {"ready": False}
+
+    def waker():
+        time.sleep(0.01)
+        with cond:
+            state["ready"] = True
+            cond.notify_all()
+
+    t = threading.Thread(target=waker)
+    t.start()
+    with cond:
+        assert vc.wait_for(cond, lambda: state["ready"]) is True
+    t.join()
+    assert vc.monotonic() == 0.0          # no virtual time passed
+    assert vc.virtual_sleeps == 0
+
+
+def test_forbid_real_sleep_strict_raises():
+    with forbid_real_sleep(strict=True) as counter:
+        with pytest.raises(RealSleepForbidden):
+            time.sleep(0.001)
+    assert counter["calls"] == 1
+    # the patch is removed on exit
+    time.sleep(0)
+
+
+def test_forbid_real_sleep_counting_mode():
+    with forbid_real_sleep(strict=False) as counter:
+        time.sleep(0)
+        time.sleep(0)
+    assert counter["calls"] == 2
+
+
+def test_system_clock_delegates():
+    sc = SystemClock()
+    assert abs(sc.now() - time.time()) < 5.0
+    ev = threading.Event()
+    ev.set()
+    assert sc.wait_event(ev, timeout=0.01) is True
+    assert SYSTEM_CLOCK.monotonic() <= time.monotonic()
