@@ -47,6 +47,9 @@
 #                          vs without the HealthManager
 #   make bench-twin        twin-fallback vs reject-only goodput benchmark
 #   make bench             full benchmark harness (all paper tables)
+#   make lint-plane        planelint --strict (five control-plane invariant
+#                          checkers + pinned goldens), then ruff when
+#                          installed
 #   make dev-deps          install dev/test dependencies
 
 PYTHON ?= python
@@ -56,7 +59,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
         gateway-smoke bench-gateway-smoke hierarchy-smoke serving-smoke \
         test-sim sim-smoke bench-scenarios \
         bench bench-throughput bench-recovery bench-twin bench-gateway \
-        bench-hierarchy bench-serving dev-deps
+        bench-hierarchy bench-serving lint-plane dev-deps
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -121,6 +124,14 @@ bench-twin:
 
 bench:
 	$(PYTHON) -m benchmarks.run
+
+lint-plane:
+	$(PYTHON) -m repro.analysis --strict
+	@if command -v ruff >/dev/null 2>&1; then \
+	    ruff check .; \
+	else \
+	    echo "ruff not installed; skipping (make dev-deps to get it)"; \
+	fi
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt

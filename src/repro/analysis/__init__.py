@@ -1,0 +1,20 @@
+"""planelint: control-plane invariant analysis for the phys-MCP repro.
+
+Static checkers (``python -m repro.analysis``) for the conventions nothing
+else enforces — the injected-Clock seam, lock ordering, guarded-by field
+discipline, the structured ErrorCode taxonomy, and the append-only binary
+intern table — plus a runtime lock-order witness
+(:mod:`repro.analysis.witness`) the chaos/sim fixtures activate so the PR 8
+simulator doubles as a deadlock fuzzer.
+"""
+
+from .framework import (  # noqa: F401
+    Checker,
+    Finding,
+    Project,
+    SourceFile,
+    apply_pragmas,
+    load_project,
+    run_checkers,
+)
+from .checkers import all_checkers  # noqa: F401

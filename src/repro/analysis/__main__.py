@@ -1,0 +1,90 @@
+"""planelint CLI: ``python -m repro.analysis [--strict] [--json] ...``.
+
+Exit status: 1 if any error-severity finding survives pragmas (or, under
+``--strict``, any finding at all); 0 otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .checkers import all_checkers
+from .framework import SEVERITY_ERROR, load_project, run_checkers
+
+
+def repo_root() -> Path:
+    # src/repro/analysis/__main__.py → repo root is three parents up from src/
+    return Path(__file__).resolve().parents[3]
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="planelint — control-plane invariant checkers",
+    )
+    parser.add_argument(
+        "--root", type=Path, default=None,
+        help="repo root (default: auto-detected from the package location)")
+    parser.add_argument(
+        "--rule", action="append", default=None, metavar="NAME",
+        help="run only this rule (repeatable); default: all")
+    parser.add_argument(
+        "--strict", action="store_true",
+        help="exit 1 on warnings too (golden drift etc.)")
+    parser.add_argument(
+        "--json", action="store_true", dest="as_json",
+        help="emit findings as a JSON array")
+    parser.add_argument(
+        "--update-goldens", action="store_true",
+        help="regenerate lock_order.golden / codec_fields.golden, then re-check")
+    parser.add_argument(
+        "--list-rules", action="store_true", help="list rules and exit")
+    args = parser.parse_args(argv)
+
+    checkers = all_checkers()
+    if args.list_rules:
+        for c in checkers:
+            print(f"{c.name:15s} {c.description}")
+        return 0
+    if args.rule:
+        known = {c.name for c in checkers}
+        unknown = set(args.rule) - known
+        if unknown:
+            parser.error(f"unknown rule(s): {', '.join(sorted(unknown))}")
+        checkers = [c for c in checkers if c.name in set(args.rule)]
+
+    root = (args.root or repo_root()).resolve()
+    project = load_project(root)
+
+    if args.update_goldens:
+        for c in checkers:
+            path = c.update_goldens(project)
+            if path:
+                print(f"updated {path}")
+
+    findings, suppressed = run_checkers(project, checkers)
+    errors = [f for f in findings if f.severity == SEVERITY_ERROR]
+    warns = [f for f in findings if f.severity != SEVERITY_ERROR]
+
+    if args.as_json:
+        print(json.dumps([f.to_dict() for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        tail = (
+            f"planelint: {len(errors)} error(s), {len(warns)} warning(s), "
+            f"{suppressed} suppressed by pragmas "
+            f"({len(project.files)} files, {len(checkers)} rule(s))"
+        )
+        print(tail if not findings else "\n" + tail)
+
+    if errors or (args.strict and warns):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""planelint checker registry."""
+
+from __future__ import annotations
+
+from typing import List
+
+from ..framework import Checker
+from .clock_seam import ClockSeamChecker
+from .codec_drift import CodecDriftChecker
+from .error_taxonomy import ErrorTaxonomyChecker
+from .guarded_by import GuardedByChecker
+from .lock_order import LockOrderChecker
+
+__all__ = [
+    "ClockSeamChecker",
+    "CodecDriftChecker",
+    "ErrorTaxonomyChecker",
+    "GuardedByChecker",
+    "LockOrderChecker",
+    "all_checkers",
+]
+
+
+def all_checkers() -> List[Checker]:
+    return [
+        ClockSeamChecker(),
+        LockOrderChecker(),
+        GuardedByChecker(),
+        ErrorTaxonomyChecker(),
+        CodecDriftChecker(),
+    ]

@@ -1,0 +1,167 @@
+"""clock-seam checker: all control-plane time flows through the injected Clock.
+
+PR 8 made the plane runnable on virtual time (``core/simclock.py``): every
+timestamp, timeout, and sleep must route through the injected ``Clock`` so
+the 1000-plane simulator and seeded chaos campaigns stay deterministic and
+wall-free. A single raw ``time.time()`` behind the seam silently mixes wall
+epochs into virtual runs (the VirtualClock epoch is 1.7e9, real wall is
+past it — wall-stamped twins look *fresher than now* and never go stale).
+
+Flagged in scoped modules (outside ``core/simclock.py`` and pragmas):
+
+* calls to ``time.time`` / ``time.monotonic`` / ``time.sleep`` (and the
+  ``_ns`` variants), however the module or function was imported;
+* ``datetime.now`` / ``utcnow`` / ``today`` calls;
+* argless timestamp default-factories: ``field(default_factory=time.time)``;
+* raw-time parameter defaults: ``def __init__(self, clock=time.monotonic)``
+  bakes the wall clock into the signature instead of resolving an injected
+  default at call time.
+
+``time.perf_counter`` is deliberately allowed: it measures *durations* for
+control-overhead accounting and never feeds a timebase decision.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from ..framework import Checker, Finding, Project, SourceFile
+
+SCOPES = ("core/", "gateway/", "substrates/", "serving/", "roofline/", "analysis/")
+ALLOWED_MODULES = {"core/simclock.py"}
+BANNED_TIME_FUNCS = {"time", "monotonic", "sleep", "time_ns", "monotonic_ns"}
+BANNED_DATETIME_FUNCS = {"now", "utcnow", "today"}
+
+_HINT = (
+    "route through the injected Clock (core/simclock.py) or suppress with "
+    "'# planelint: allow(clock-seam)' plus a rationale if wall time is intended"
+)
+
+
+class _TimeImports(ast.NodeVisitor):
+    """Track names bound to the time/datetime modules and their functions."""
+
+    def __init__(self) -> None:
+        self.time_modules: Set[str] = set()
+        self.datetime_modules: Set[str] = set()
+        # local name → banned function name
+        self.direct_time: Dict[str, str] = {}
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            local = alias.asname or alias.name
+            if alias.name == "time":
+                self.time_modules.add(local)
+            elif alias.name == "datetime":
+                self.datetime_modules.add(local)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "time":
+            for alias in node.names:
+                if alias.name in BANNED_TIME_FUNCS:
+                    self.direct_time[alias.asname or alias.name] = alias.name
+        elif node.module == "datetime":
+            for alias in node.names:
+                if alias.name == "datetime":
+                    self.datetime_modules.add(alias.asname or alias.name)
+
+
+def _banned_timestamp_ref(node: ast.expr, imports: _TimeImports) -> str:
+    """Name a banned timestamp function if ``node`` references one, else ''."""
+
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+        base, attr = node.value.id, node.attr
+        if base in imports.time_modules and attr in BANNED_TIME_FUNCS:
+            return f"time.{attr}"
+        if base in imports.datetime_modules and attr in BANNED_DATETIME_FUNCS:
+            return f"datetime.{attr}"
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Attribute):
+        # datetime.datetime.now
+        inner = node.value
+        if (
+            isinstance(inner.value, ast.Name)
+            and inner.value.id in imports.datetime_modules
+            and node.attr in BANNED_DATETIME_FUNCS
+        ):
+            return f"datetime.{node.attr}"
+    if isinstance(node, ast.Name) and node.id in imports.direct_time:
+        return f"time.{imports.direct_time[node.id]}"
+    return ""
+
+
+class ClockSeamChecker(Checker):
+    name = "clock-seam"
+    description = "no raw wall-clock calls outside simclock.py; use the injected Clock"
+
+    def check(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for sf in project.iter_files(SCOPES):
+            if sf.mod in ALLOWED_MODULES:
+                continue
+            findings.extend(self._check_file(sf))
+        return findings
+
+    def _check_file(self, sf: SourceFile) -> List[Finding]:
+        imports = _TimeImports()
+        imports.visit(sf.tree)
+        findings: List[Finding] = []
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for default in list(node.args.defaults) + [
+                    d for d in node.args.kw_defaults if d is not None
+                ]:
+                    ref = _banned_timestamp_ref(default, imports)
+                    if ref:
+                        findings.append(
+                            Finding(
+                                rule=self.name,
+                                path=sf.rel,
+                                line=default.lineno,
+                                message=(
+                                    f"raw-time parameter default ({ref}) bakes the "
+                                    "wall clock into the signature"
+                                ),
+                                hint=(
+                                    "default the parameter to None and resolve the "
+                                    "injected clock in the body; " + _HINT
+                                ),
+                            )
+                        )
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            ref = _banned_timestamp_ref(node.func, imports)
+            if ref:
+                findings.append(
+                    Finding(
+                        rule=self.name,
+                        path=sf.rel,
+                        line=node.lineno,
+                        message=f"raw {ref}() call behind the virtual-time seam",
+                        hint=_HINT,
+                    )
+                )
+                continue
+            # field(default_factory=time.time) — stamps wall time at
+            # construction, before any clock can be injected.
+            for kw in node.keywords:
+                if kw.arg == "default_factory" and kw.value is not None:
+                    ref = _banned_timestamp_ref(kw.value, imports)
+                    if ref:
+                        findings.append(
+                            Finding(
+                                rule=self.name,
+                                path=sf.rel,
+                                line=node.lineno,
+                                message=(
+                                    f"argless timestamp default-factory ({ref}) stamps "
+                                    "wall time before a clock can be injected"
+                                ),
+                                hint=(
+                                    "default to None and stamp from the owning "
+                                    "component's injected clock; " + _HINT
+                                ),
+                            )
+                        )
+        return findings

@@ -1,0 +1,285 @@
+"""codec-drift checker: the binary intern table is append-only and complete.
+
+The PR 6 binary codec (``gateway/protocol.py``) compresses dict keys via
+``INTERNED_FIELDS`` — both ends index into the tuple *by position*, so the
+table is append-only: reordering or removing an entry silently corrupts
+every frame exchanged with an older peer (a MAJOR protocol break).  This
+checker pins the contract to a committed golden
+(``analysis/codec_fields.golden``) and cross-checks the table against the
+JSON wire field set:
+
+* duplicates in ``INTERNED_FIELDS`` — error (later entry is unreachable);
+* committed golden is no longer a *prefix* of the live table — error
+  (entries were reordered or removed);
+* live table has entries appended beyond the golden — warn until the
+  golden is reviewed and regenerated (``--update-goldens``);
+* a wire dataclass field (``TaskRequest``/``InvocationResult``/
+  ``OrchestrationTrace``/``RuntimeSnapshot``) or a ``protocol.py`` envelope
+  key that is not interned — error (it rides the hot path as a raw string);
+* an interned entry that appears nowhere in the statically visible wire
+  universe — warn (dead weight that can never be removed; document it in
+  the golden's ``[exempt]`` section if it is produced dynamically).
+
+The golden's ``[exempt]`` section lists reviewed names excluded from the
+last two checks.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from ..framework import Checker, Finding, Project, SourceFile
+
+PROTOCOL_MOD = "gateway/protocol.py"
+GOLDEN = "src/repro/analysis/codec_fields.golden"
+
+#: dataclasses whose to_wire()/to_dict() forms cross the process boundary
+WIRE_DATACLASSES = {
+    "TaskRequest": "core/tasks.py",
+    "InvocationResult": "core/invocation.py",
+    "OrchestrationTrace": "core/orchestrator.py",
+    "RuntimeSnapshot": "core/telemetry.py",
+}
+
+#: modules scanned for the wire-key universe (dict displays, .get("k"),
+#: d["k"] with literal keys)
+UNIVERSE_PREFIXES = ("gateway/", "core/", "substrates/", "serving/")
+
+
+def load_interned(project: Project) -> Tuple[List[str], int]:
+    """(INTERNED_FIELDS entries in order, assignment line)."""
+
+    sf = project.file_by_mod(PROTOCOL_MOD)
+    if sf is None:
+        return [], 0
+    for node in sf.tree.body:
+        if (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and node.targets[0].id == "INTERNED_FIELDS"
+        ):
+            entries = [
+                c.value
+                for c in ast.walk(node.value)
+                if isinstance(c, ast.Constant) and isinstance(c.value, str)
+            ]
+            return entries, node.lineno
+    return [], 0
+
+
+def _literal_keys(sf: SourceFile) -> Set[str]:
+    """String keys visible in dict displays, subscripts, and .get() calls."""
+
+    keys: Set[str] = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Dict):
+            for k in node.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    keys.add(k.value)
+        elif isinstance(node, ast.Subscript):
+            s = node.slice
+            if isinstance(s, ast.Constant) and isinstance(s.value, str):
+                keys.add(s.value)
+        elif (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in ("get", "setdefault", "pop")
+            and node.args
+        ):
+            a0 = node.args[0]
+            if isinstance(a0, ast.Constant) and isinstance(a0.value, str):
+                keys.add(a0.value)
+    return keys
+
+
+def dataclass_fields(project: Project) -> Dict[str, Set[str]]:
+    """Wire dataclass name → declared field names (AnnAssign, public)."""
+
+    out: Dict[str, Set[str]] = {}
+    for cls, mod in WIRE_DATACLASSES.items():
+        sf = project.file_by_mod(mod)
+        if sf is None:
+            continue
+        for node in sf.tree.body:
+            if isinstance(node, ast.ClassDef) and node.name == cls:
+                fields = set()
+                for stmt in node.body:
+                    if isinstance(stmt, ast.AnnAssign) and isinstance(
+                        stmt.target, ast.Name
+                    ):
+                        ann = ast.unparse(stmt.annotation) if stmt.annotation else ""
+                        if "ClassVar" in ann:
+                            continue
+                        if not stmt.target.id.startswith("_"):
+                            fields.add(stmt.target.id)
+                out[cls] = fields
+    return out
+
+
+def _parse_golden(text: str) -> Dict[str, List[str]]:
+    sections: Dict[str, List[str]] = {"interned": [], "exempt": []}
+    current = "interned"
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("[") and line.endswith("]"):
+            current = line[1:-1]
+            sections.setdefault(current, [])
+            continue
+        sections[current].append(line)
+    return sections
+
+
+class CodecDriftChecker(Checker):
+    name = "codec-drift"
+    description = "INTERNED_FIELDS is append-only vs the golden and covers the wire field set"
+
+    def check(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        interned, table_line = load_interned(project)
+        sf = project.file_by_mod(PROTOCOL_MOD)
+        if sf is None or not interned:
+            return [
+                Finding(
+                    rule=self.name,
+                    path=PROTOCOL_MOD,
+                    line=1,
+                    message="could not locate INTERNED_FIELDS in gateway/protocol.py",
+                    hint="the codec contract moved; update the codec-drift checker",
+                )
+            ]
+
+        seen: Set[str] = set()
+        for i, entry in enumerate(interned):
+            if entry in seen:
+                findings.append(
+                    Finding(
+                        rule=self.name,
+                        path=sf.rel,
+                        line=table_line,
+                        message=f"duplicate interned field {entry!r} (index {i} is unreachable)",
+                        hint="remove the duplicate before any peer ships it",
+                    )
+                )
+            seen.add(entry)
+
+        golden_path = project.root / GOLDEN
+        exempt: Set[str] = set()
+        if not golden_path.exists():
+            findings.append(
+                Finding(
+                    rule=self.name,
+                    path=GOLDEN,
+                    line=1,
+                    message="no committed codec golden",
+                    hint="run 'python -m repro.analysis --update-goldens' and commit",
+                    severity="warn",
+                )
+            )
+        else:
+            sections = _parse_golden(golden_path.read_text(encoding="utf-8"))
+            golden_interned = sections.get("interned", [])
+            exempt = set(sections.get("exempt", []))
+            if interned[: len(golden_interned)] != golden_interned:
+                findings.append(
+                    Finding(
+                        rule=self.name,
+                        path=sf.rel,
+                        line=table_line,
+                        message=(
+                            "INTERNED_FIELDS is no longer a prefix-extension of the "
+                            "committed golden — entries were reordered or removed "
+                            "(MAJOR protocol break: peers index by position)"
+                        ),
+                        hint="restore the original prefix; only append new entries",
+                    )
+                )
+            elif len(interned) > len(golden_interned):
+                appended = interned[len(golden_interned):]
+                findings.append(
+                    Finding(
+                        rule=self.name,
+                        path=sf.rel,
+                        line=table_line,
+                        message=(
+                            f"{len(appended)} interned field(s) appended beyond the "
+                            f"golden: {', '.join(appended)}"
+                        ),
+                        hint="review, then 'python -m repro.analysis --update-goldens'",
+                        severity="warn",
+                    )
+                )
+
+        # coverage: wire dataclass fields + protocol.py keys must be interned
+        must: Dict[str, str] = {}
+        for cls, fields in dataclass_fields(project).items():
+            for f in fields:
+                must.setdefault(f, f"{cls} field")
+        for key in sorted(_literal_keys(sf)):
+            must.setdefault(key, "protocol.py envelope key")
+        for name in sorted(must):
+            if name not in seen and name not in exempt:
+                findings.append(
+                    Finding(
+                        rule=self.name,
+                        path=sf.rel,
+                        line=table_line,
+                        message=(
+                            f"wire field {name!r} ({must[name]}) is not interned — "
+                            "it rides the binary hot path as a raw string"
+                        ),
+                        hint=(
+                            "append it to INTERNED_FIELDS (append-only!) or list it "
+                            "under [exempt] in the codec golden with a review note"
+                        ),
+                    )
+                )
+
+        # dead entries: interned but nowhere in the visible wire universe
+        universe: Set[str] = set()
+        for usf in project.iter_files(UNIVERSE_PREFIXES):
+            universe |= _literal_keys(usf)
+        for fields in dataclass_fields(project).values():
+            universe |= fields
+        for entry in interned:
+            if entry not in universe and entry not in exempt:
+                findings.append(
+                    Finding(
+                        rule=self.name,
+                        path=sf.rel,
+                        line=table_line,
+                        message=(
+                            f"interned field {entry!r} not found in the wire universe "
+                            "— dead table weight (and append-only means it can never "
+                            "be removed)"
+                        ),
+                        hint="if produced dynamically, list it under [exempt] in the golden",
+                        severity="warn",
+                    )
+                )
+        return findings
+
+    def update_goldens(self, project: Project) -> str:
+        interned, _ = load_interned(project)
+        golden_path = project.root / GOLDEN
+        exempt: List[str] = []
+        if golden_path.exists():
+            exempt = _parse_golden(
+                golden_path.read_text(encoding="utf-8")
+            ).get("exempt", [])
+        lines = [
+            "# planelint codec golden — committed snapshot of INTERNED_FIELDS",
+            "# (gateway/protocol.py). The live table must remain a prefix-",
+            "# extension of [interned]: reordering or removing entries is a",
+            "# MAJOR protocol break. [exempt] lists reviewed names excluded",
+            "# from coverage/dead-entry checks (dynamic or endpoint-local).",
+            "[interned]",
+            *interned,
+            "[exempt]",
+            *exempt,
+        ]
+        golden_path.write_text("\n".join(lines) + "\n", encoding="utf-8")
+        return GOLDEN

@@ -1,0 +1,202 @@
+"""error-taxonomy checker: every rejection carries a structured ErrorCode.
+
+PR 4 introduced ``core/errors.py``: a closed ``ErrorCode`` enum, typed
+``ControlPlaneError``/``AdmissionRefused`` exceptions, and
+``classify_rejection`` — a needle table (``_CLASSIFIERS``) that maps legacy
+free-text reasons onto codes so old reason strings keep classifying.  This
+checker keeps the funnel tight in the modules a client can actually reach
+(orchestrator, scheduler, invocation, gateway, remote/serving substrates):
+
+* R1: typed error constructors (``ControlPlaneError``, ``AdmissionRefused``,
+  ``WireError``) must get an ``ErrorCode``, not a bare string, as the code;
+* R2: ``InvocationResult(status="rejected", ...)`` may only be built inside
+  ``core/invocation.py`` — everyone else goes through
+  ``InvocationManager.rejected`` so telemetry always carries ``error_code``;
+* R3: a ``rejected(...)``/``_reject_or_twin(...)`` call with a fully
+  literal reason must either pass ``code=`` or use a reason that one of the
+  ``_CLASSIFIERS`` needles can classify (otherwise it lands on the
+  catch-all INTERNAL and the breaker/taxonomy telemetry goes blind).
+  Non-literal reasons are skipped — the classifier handles them at runtime.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from ..framework import Checker, Finding, Project, SourceFile
+
+SCOPE_MODULES = (
+    "core/orchestrator.py",
+    "core/scheduler.py",
+    "core/invocation.py",
+    "substrates/remote_plane.py",
+    "substrates/lm_serving.py",
+)
+SCOPE_PREFIXES = ("gateway/",)
+
+TYPED_ERROR_CTORS = {"ControlPlaneError", "AdmissionRefused", "WireError"}
+REJECT_FUNNELS = {"rejected": 1, "_reject_or_twin": 2}  # name → reason arg index
+
+
+def _in_scope(sf: SourceFile) -> bool:
+    return sf.mod in SCOPE_MODULES or any(
+        sf.mod.startswith(p) for p in SCOPE_PREFIXES
+    )
+
+
+def load_needles(project: Project) -> Set[str]:
+    """Extract the _CLASSIFIERS needle strings from core/errors.py."""
+
+    sf = project.file_by_mod("core/errors.py")
+    needles: Set[str] = set()
+    if sf is None:
+        return needles
+    for node in sf.tree.body:
+        if (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and node.targets[0].id == "_CLASSIFIERS"
+        ):
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                    needles.add(sub.value.lower())
+    return needles
+
+
+def _literal_str(node: ast.expr) -> Optional[str]:
+    """The compile-time value of a fully literal string expression, else None."""
+
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.JoinedStr):
+        parts = []
+        for v in node.values:
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                parts.append(v.value)
+            elif isinstance(v, ast.FormattedValue):
+                return None  # runtime content could add a needle; skip
+        return "".join(parts)
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        left = _literal_str(node.left)
+        right = _literal_str(node.right)
+        if left is not None and right is not None:
+            return left + right
+    return None
+
+
+def _passes_code(node: ast.Call) -> bool:
+    for kw in node.keywords:
+        if kw.arg == "code" and not (
+            isinstance(kw.value, ast.Constant) and kw.value.value is None
+        ):
+            return True
+    return False
+
+
+class ErrorTaxonomyChecker(Checker):
+    name = "error-taxonomy"
+    description = "rejections reachable from orchestrator/scheduler/gateway carry ErrorCodes"
+
+    def check(self, project: Project) -> List[Finding]:
+        needles = load_needles(project)
+        findings: List[Finding] = []
+        for sf in project.iter_files():
+            if not _in_scope(sf):
+                continue
+            findings.extend(self._check_file(sf, needles))
+        return findings
+
+    def _check_file(self, sf: SourceFile, needles: Set[str]) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = None
+            if isinstance(node.func, ast.Name):
+                fname = node.func.id
+            elif isinstance(node.func, ast.Attribute):
+                fname = node.func.attr
+
+            # R1: typed error constructors want an ErrorCode first.
+            if fname in TYPED_ERROR_CTORS:
+                code_arg: Optional[ast.expr] = node.args[0] if node.args else None
+                for kw in node.keywords:
+                    if kw.arg == "code":
+                        code_arg = kw.value
+                if isinstance(code_arg, ast.Constant) and isinstance(
+                    code_arg.value, str
+                ):
+                    findings.append(
+                        Finding(
+                            rule=self.name,
+                            path=sf.rel,
+                            line=node.lineno,
+                            message=(
+                                f"{fname}(...) built with a bare string code "
+                                f"{code_arg.value!r} instead of an ErrorCode"
+                            ),
+                            hint="pass ErrorCode.<MEMBER> (core/errors.py)",
+                        )
+                    )
+
+            # R2: rejected results are minted only by InvocationManager.
+            if (
+                fname == "InvocationResult"
+                and sf.mod != "core/invocation.py"
+            ):
+                for kw in node.keywords:
+                    if (
+                        kw.arg == "status"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value == "rejected"
+                    ):
+                        findings.append(
+                            Finding(
+                                rule=self.name,
+                                path=sf.rel,
+                                line=node.lineno,
+                                message=(
+                                    "InvocationResult(status='rejected') built outside "
+                                    "core/invocation.py bypasses the error_code funnel"
+                                ),
+                                hint="use InvocationManager.rejected(task, reason, code=...)",
+                            )
+                        )
+
+            # R3: literal reasons through the funnels must classify.
+            if fname in REJECT_FUNNELS and isinstance(node.func, ast.Attribute):
+                if _passes_code(node):
+                    continue
+                idx = REJECT_FUNNELS[fname]
+                reason_arg: Optional[ast.expr] = None
+                if len(node.args) > idx:
+                    reason_arg = node.args[idx]
+                for kw in node.keywords:
+                    if kw.arg == "reason":
+                        reason_arg = kw.value
+                if reason_arg is None:
+                    continue
+                literal = _literal_str(reason_arg)
+                if literal is None:
+                    continue
+                low = literal.lower()
+                if needles and not any(n in low for n in needles):
+                    findings.append(
+                        Finding(
+                            rule=self.name,
+                            path=sf.rel,
+                            line=node.lineno,
+                            message=(
+                                f"bare-string rejection {literal!r} matches no "
+                                "classifier needle and no code= was passed "
+                                "(lands on ErrorCode.INTERNAL)"
+                            ),
+                            hint=(
+                                "pass code=ErrorCode.<MEMBER>, or extend "
+                                "_CLASSIFIERS in core/errors.py"
+                            ),
+                        )
+                    )
+        return findings

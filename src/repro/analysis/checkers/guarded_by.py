@@ -1,0 +1,135 @@
+"""guarded-by checker: annotated fields are only touched under their lock.
+
+A field whose introducing assignment carries a trailing
+``# guarded_by: _lock`` comment must only be read or written while that
+lock (or a condition backed by it) is held.  Lock scope is computed by the
+same walk the lock-order checker uses, so local aliases
+(``lk = self._lock``), condition aliasing (``with self._idle:`` holds
+``_lock``), and class-level shared locks (``with Cls._shared_lock:``) all
+count as holding the lock.
+
+``__init__`` (and ``__post_init__``) are exempt: the object is not yet
+shared.  A method whose ``def`` line carries ``# planelint: holds(_lock)``
+declares a caller-holds contract and is trusted (the contract itself is a
+convention callers must uphold — the runtime witness exercises it).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Tuple
+
+from ..framework import Checker, Finding, Project
+from ..model import ClassModel, ProjectModel, analyze_method, build_model
+
+SCOPES = ("core/", "gateway/", "substrates/", "serving/")
+EXEMPT_METHODS = {"__init__", "__post_init__"}
+
+
+def _guarded_fields(cm: ClassModel) -> Dict[str, Tuple[str, int]]:
+    """field attr → (declared lock attr, decl line) from # guarded_by pragmas."""
+
+    fields: Dict[str, Tuple[str, int]] = {}
+    # class-level declarations: _shared_pool = None  # guarded_by: _shared_pool_lock
+    for stmt in cm.node.body:
+        target = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and isinstance(
+            stmt.targets[0], ast.Name
+        ):
+            target = stmt.targets[0].id
+        elif isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+            target = stmt.target.id
+        if target and stmt.lineno in cm.sf.guarded:
+            fields[target] = (cm.sf.guarded[stmt.lineno], stmt.lineno)
+    # instance fields: self._x = ...  # guarded_by: _lock
+    for func in cm.methods.values():
+        for node in ast.walk(func):
+            tgt = None
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt = node.targets[0]
+            elif isinstance(node, ast.AnnAssign):
+                tgt = node.target
+            if (
+                isinstance(tgt, ast.Attribute)
+                and isinstance(tgt.value, ast.Name)
+                and tgt.value.id in ("self", "cls")
+                and node.lineno in cm.sf.guarded
+            ):
+                fields.setdefault(tgt.attr, (cm.sf.guarded[node.lineno], node.lineno))
+    return fields
+
+
+class GuardedByChecker(Checker):
+    name = "guarded-by"
+    description = "fields annotated '# guarded_by: _lock' are only accessed under that lock"
+
+    def check(self, project: Project) -> List[Finding]:
+        model = build_model(project, SCOPES)
+        findings: List[Finding] = []
+        for cm in model.classes.values():
+            fields = _guarded_fields(cm)
+            if not fields:
+                continue
+            findings.extend(self._check_class(model, cm, fields))
+        return findings
+
+    def _check_class(
+        self,
+        model: ProjectModel,
+        cm: ClassModel,
+        fields: Dict[str, Tuple[str, int]],
+    ) -> List[Finding]:
+        findings: List[Finding] = []
+        canon_of: Dict[str, str] = {}
+        for attr, (lock_attr, decl_line) in fields.items():
+            canon = cm.canonical_lock(lock_attr)
+            if canon is None:
+                findings.append(
+                    Finding(
+                        rule=self.name,
+                        path=cm.sf.rel,
+                        line=decl_line,
+                        message=(
+                            f"guarded_by names unknown lock '{lock_attr}' "
+                            f"on {cm.name}.{attr}"
+                        ),
+                        hint="the lock must be a threading Lock/RLock/Condition attribute of the class",
+                    )
+                )
+            else:
+                canon_of[attr] = canon
+        if not canon_of:
+            return findings
+
+        for mname, func in cm.methods.items():
+            if mname in EXEMPT_METHODS:
+                continue
+            trusted = {
+                cm.canonical_lock(attr)
+                for attr in cm.sf.holds_locks(func.lineno)
+            }
+            trusted.discard(None)
+            info = analyze_method(model, cm, func)
+            for attr, ctx, line, held in info.accesses:
+                canon = canon_of.get(attr)
+                if canon is None:
+                    continue
+                if canon in held or canon in trusted:
+                    continue
+                verb = "written" if ctx == "store" else "read"
+                findings.append(
+                    Finding(
+                        rule=self.name,
+                        path=cm.sf.rel,
+                        line=line,
+                        message=(
+                            f"{cm.name}.{attr} {verb} without holding "
+                            f"{canon} (declared guarded_by)"
+                        ),
+                        hint=(
+                            f"wrap in 'with self.{canon.rsplit('.', 1)[1]}:' or mark the "
+                            "method '# planelint: holds(...)' if callers hold it"
+                        ),
+                    )
+                )
+        return findings

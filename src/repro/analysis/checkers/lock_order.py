@@ -1,0 +1,320 @@
+"""lock-order checker: the cross-module lock-acquisition graph stays acyclic.
+
+Builds a directed graph over canonical lock ids (``Class._attr`` for lock
+attributes, ``Class.method()`` for lock-factory methods such as
+``LifecycleManager.lock``).  An edge ``A -> B`` means some code path
+acquires ``B`` while holding ``A`` — either a nested ``with`` directly, or
+a call made under ``A`` whose transitive callees acquire ``B`` (resolved
+through attribute types, local aliases, and subclass expansion; see
+``analysis/model.py``).  Conditions alias their backing lock, so
+``scheduler._idle``/``_space`` are the same node as ``scheduler._lock``.
+
+Findings:
+
+* any cycle in the graph — a potential deadlock under the PR 8 fault
+  storms (error);
+* a non-reentrant ``threading.Lock`` transitively re-acquired while held —
+  certain self-deadlock (error);
+* drift from the committed ``analysis/lock_order.golden`` — new edges are
+  fine but must be reviewed and re-committed via ``--update-goldens``
+  (warn; fails under ``--strict``).
+
+Known blind spot: opaque callables (``self.clock()`` where ``clock`` is a
+bare ``Callable``) contribute no edges.  The runtime witness
+(``repro.analysis.witness``) covers those paths under the simulator.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List, Set, Tuple
+
+from ..framework import Checker, Finding, Project
+from ..model import (
+    REENTRANT_KINDS,
+    DISPATCHER_NAMES,
+    MethodInfo,
+    ProjectModel,
+    analyze_all,
+    build_model,
+)
+
+SCOPES = ("core/", "gateway/", "substrates/", "serving/")
+GOLDEN = "src/repro/analysis/lock_order.golden"
+
+_CYCLE_HINT = (
+    "break the cycle by releasing the first lock before acquiring the second "
+    "(copy state out, then call), or impose a single global order"
+)
+
+
+def build_lock_graph(
+    project: Project,
+) -> Tuple[ProjectModel, Dict[str, Set[str]], Dict[Tuple[str, str], Tuple[str, int]]]:
+    """Return (model, adjacency, edge witness sites)."""
+
+    model = build_model(project, SCOPES)
+    infos = analyze_all(model)
+
+    # Dynamic pub/sub dispatch: emit/_notify-style methods call every
+    # registered handler at the held-set of their unresolved local calls
+    # (``fn(event)`` inside the dispatch loop).
+    for (cls, mname), info in infos.items():
+        if mname in DISPATCHER_NAMES and info.unresolved_held:
+            for held, line in info.unresolved_held:
+                for hcls, hmethod in model.handlers:
+                    info.calls.append(((hcls, hmethod), held, line))
+
+    # Transitive lock acquisitions per method, to a fixpoint.
+    trans: Dict[Tuple[str, str], Set[str]] = {
+        key: {lock for lock, _, _ in info.acquisitions} for key, info in infos.items()
+    }
+    changed = True
+    while changed:
+        changed = False
+        for key, info in infos.items():
+            acc = trans[key]
+            before = len(acc)
+            for (tcls, tmethod), _held, _line in info.calls:
+                for impl in model.resolve_method(tcls, tmethod):
+                    acc |= trans.get(impl, set())
+            if len(acc) != before:
+                changed = True
+
+    adj: Dict[str, Set[str]] = {}
+    sites: Dict[Tuple[str, str], Tuple[str, int]] = {}
+
+    def add_edge(a: str, b: str, info: MethodInfo, line: int) -> None:
+        if a == b:
+            return
+        adj.setdefault(a, set()).add(b)
+        sites.setdefault((a, b), (_site_path(model, info), line))
+
+    for key, info in infos.items():
+        for lock, line, held in info.acquisitions:
+            for h in held:
+                add_edge(h, lock, info, line)
+        for (tcls, tmethod), held, line in info.calls:
+            if not held:
+                continue
+            callee_locks: Set[str] = set()
+            for impl in model.resolve_method(tcls, tmethod):
+                callee_locks |= trans.get(impl, set())
+            for h in held:
+                for lock in callee_locks:
+                    add_edge(h, lock, info, line)
+    return model, adj, sites
+
+
+def _site_path(model: ProjectModel, info: MethodInfo) -> str:
+    cm = model.classes.get(info.key[0])
+    return cm.sf.rel if cm is not None else "?"
+
+
+def _self_reacquire_findings(
+    project: Project, model: ProjectModel
+) -> List[Finding]:
+    """A plain Lock acquired again (directly or via calls) while held."""
+
+    infos = analyze_all(model)
+    trans: Dict[Tuple[str, str], Set[Tuple[str, int, str]]] = {}
+    for key, info in infos.items():
+        trans[key] = {(lock, line, _site_path(model, info)) for lock, line, _ in info.acquisitions}
+    changed = True
+    while changed:
+        changed = False
+        for key, info in infos.items():
+            acc = trans[key]
+            before = len(acc)
+            for (tcls, tmethod), _held, _line in info.calls:
+                for impl in model.resolve_method(tcls, tmethod):
+                    acc |= trans.get(impl, set())
+            if len(acc) != before:
+                changed = True
+
+    findings: List[Finding] = []
+    seen: Set[Tuple[str, int]] = set()
+    for key, info in infos.items():
+        for lock, line, held in info.acquisitions:
+            if lock in held and model.lock_kinds.get(lock) not in REENTRANT_KINDS:
+                site = (_site_path(model, info), line)
+                if site not in seen:
+                    seen.add(site)
+                    findings.append(
+                        Finding(
+                            rule="lock-order",
+                            path=site[0],
+                            line=site[1],
+                            message=(
+                                f"non-reentrant lock {lock} re-acquired while "
+                                "already held — self-deadlock"
+                            ),
+                            hint="use threading.RLock or restructure to release first",
+                        )
+                    )
+        for (tcls, tmethod), held, line in info.calls:
+            for impl in model.resolve_method(tcls, tmethod):
+                for lock, alin, apath in trans.get(impl, set()):
+                    if lock in held and model.lock_kinds.get(lock) not in REENTRANT_KINDS:
+                        site = (_site_path(model, info), line)
+                        if site not in seen:
+                            seen.add(site)
+                            findings.append(
+                                Finding(
+                                    rule="lock-order",
+                                    path=site[0],
+                                    line=site[1],
+                                    message=(
+                                        f"call under non-reentrant lock {lock} reaches "
+                                        f"{impl[0]}.{impl[1]} which re-acquires it "
+                                        f"({apath}:{alin}) — self-deadlock"
+                                    ),
+                                    hint="release before calling, or make the callee lock-free",
+                                )
+                            )
+    return findings
+
+
+def _find_cycles(adj: Dict[str, Set[str]]) -> List[List[str]]:
+    """Simple cycles via DFS on each strongly-connected component."""
+
+    index: Dict[str, int] = {}
+    low: Dict[str, int] = {}
+    on_stack: Set[str] = set()
+    stack: List[str] = []
+    sccs: List[List[str]] = []
+    counter = [0]
+
+    def strongconnect(v: str) -> None:
+        index[v] = low[v] = counter[0]
+        counter[0] += 1
+        stack.append(v)
+        on_stack.add(v)
+        for w in sorted(adj.get(v, ())):
+            if w not in index:
+                strongconnect(w)
+                low[v] = min(low[v], low[w])
+            elif w in on_stack:
+                low[v] = min(low[v], index[w])
+        if low[v] == index[v]:
+            comp = []
+            while True:
+                w = stack.pop()
+                on_stack.discard(w)
+                comp.append(w)
+                if w == v:
+                    break
+            sccs.append(comp)
+
+    nodes = sorted(set(adj) | {w for ws in adj.values() for w in ws})
+    for v in nodes:
+        if v not in index:
+            strongconnect(v)
+
+    cycles = []
+    for comp in sccs:
+        if len(comp) > 1:
+            cycles.append(sorted(comp))
+        elif comp and comp[0] in adj.get(comp[0], ()):
+            cycles.append(comp)
+    return cycles
+
+
+def render_graph(adj: Dict[str, Set[str]]) -> List[str]:
+    return [f"{a} -> {b}" for a in sorted(adj) for b in sorted(adj[a])]
+
+
+class LockOrderChecker(Checker):
+    name = "lock-order"
+    description = "inter-module lock-acquisition graph has no cycles and matches the golden"
+
+    def check(self, project: Project) -> List[Finding]:
+        model, adj, sites = build_lock_graph(project)
+        findings = _self_reacquire_findings(project, model)
+        for cycle in _find_cycles(adj):
+            edges = []
+            for i, a in enumerate(cycle):
+                b = cycle[(i + 1) % len(cycle)]
+                site = sites.get((a, b))
+                if site:
+                    edges.append(f"{a} -> {b} ({site[0]}:{site[1]})")
+            first_site = sites.get((cycle[0], cycle[1 % len(cycle)]), ("?", 0))
+            findings.append(
+                Finding(
+                    rule=self.name,
+                    path=first_site[0],
+                    line=first_site[1],
+                    message=(
+                        "lock-order cycle (potential deadlock): "
+                        + "; ".join(edges or cycle)
+                    ),
+                    hint=_CYCLE_HINT,
+                )
+            )
+        findings.extend(self._golden_findings(project, adj, sites))
+        return findings
+
+    def _golden_findings(
+        self,
+        project: Project,
+        adj: Dict[str, Set[str]],
+        sites: Dict[Tuple[str, str], Tuple[str, int]],
+    ) -> List[Finding]:
+        golden_path = project.root / GOLDEN
+        current = render_graph(adj)
+        if not golden_path.exists():
+            return [
+                Finding(
+                    rule=self.name,
+                    path=GOLDEN,
+                    line=1,
+                    message="no committed lock-order golden",
+                    hint="run 'python -m repro.analysis --update-goldens' and commit",
+                    severity="warn",
+                )
+            ]
+        golden = [
+            ln.strip()
+            for ln in golden_path.read_text(encoding="utf-8").splitlines()
+            if ln.strip() and not ln.lstrip().startswith("#")
+        ]
+        findings: List[Finding] = []
+        for edge in sorted(set(current) - set(golden)):
+            a, _, b = edge.partition(" -> ")
+            site = sites.get((a, b), (GOLDEN, 1))
+            findings.append(
+                Finding(
+                    rule=self.name,
+                    path=site[0],
+                    line=site[1],
+                    message=f"new lock-order edge not in golden: {edge}",
+                    hint=(
+                        "review the new acquisition order, then "
+                        "'python -m repro.analysis --update-goldens'"
+                    ),
+                    severity="warn",
+                )
+            )
+        for edge in sorted(set(golden) - set(current)):
+            findings.append(
+                Finding(
+                    rule=self.name,
+                    path=GOLDEN,
+                    line=1,
+                    message=f"stale golden edge no longer in code: {edge}",
+                    hint="'python -m repro.analysis --update-goldens' to prune",
+                    severity="warn",
+                )
+            )
+        return findings
+
+    def update_goldens(self, project: Project) -> str:
+        _model, adj, _sites = build_lock_graph(project)
+        golden_path = project.root / GOLDEN
+        lines = [
+            "# planelint lock-order golden — the discovered static lock-acquisition",
+            "# graph. 'A -> B' means some path acquires B while holding A. Reviewed",
+            "# edges only; regenerate with: python -m repro.analysis --update-goldens",
+        ] + render_graph(adj)
+        golden_path.write_text("\n".join(lines) + "\n", encoding="utf-8")
+        return GOLDEN

@@ -1,0 +1,183 @@
+"""planelint framework — pluggable AST checkers for control-plane invariants.
+
+The control plane encodes several correctness conventions that nothing in
+the type system enforces: the injected-``Clock`` seam (PR 8), lock ordering
+across ~30 locks, the structured ``ErrorCode`` taxonomy (PR 4), and the
+append-only binary intern table (PR 6). ``planelint`` turns those
+conventions into machine-checked rules.
+
+Suppression pragmas (checked per rule name):
+
+* ``# planelint: allow(rule[, rule2])`` — trailing a line suppresses that
+  line; on a comment-only line it suppresses the next line.
+* ``# planelint: allow-file(rule)`` — anywhere in a file suppresses the
+  rule for the whole file.
+* ``# planelint: holds(_lock)`` — trailing a ``def`` line, declares a
+  caller-holds-lock contract trusted by the guarded-by checker.
+
+Field-guard annotations use ``# guarded_by: _lock`` trailing the
+assignment that introduces the field (see the guarded-by checker).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+_ALLOW_RE = re.compile(r"#\s*planelint:\s*allow\(([^)]*)\)")
+_ALLOW_FILE_RE = re.compile(r"#\s*planelint:\s*allow-file\(([^)]*)\)")
+_HOLDS_RE = re.compile(r"#\s*planelint:\s*holds\(([^)]*)\)")
+_GUARDED_RE = re.compile(r"#\s*guarded_by:\s*([A-Za-z_][A-Za-z0-9_]*)")
+
+SEVERITY_ERROR = "error"
+SEVERITY_WARN = "warn"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a file and line."""
+
+    rule: str
+    path: str  # repo-relative, e.g. "src/repro/core/telemetry.py"
+    line: int
+    message: str
+    hint: str = ""
+    severity: str = SEVERITY_ERROR
+
+    def format(self) -> str:
+        txt = f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+        if self.hint:
+            txt += f"\n    hint: {self.hint}"
+        return txt
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+def _split_rules(raw: str) -> Set[str]:
+    return {part.strip() for part in raw.split(",") if part.strip()}
+
+
+class SourceFile:
+    """A parsed source file plus its planelint pragma tables."""
+
+    def __init__(self, root: Path, path: Path) -> None:
+        self.path = path
+        self.rel = path.relative_to(root).as_posix()
+        # Module path relative to the package root, used for checker scoping
+        # ("core/telemetry.py" rather than "src/repro/core/telemetry.py").
+        parts = Path(self.rel).parts
+        if parts[:2] == ("src", "repro"):
+            self.mod = "/".join(parts[2:])
+        else:
+            self.mod = self.rel
+        self.text = path.read_text(encoding="utf-8")
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(path))
+        self.allow: Dict[int, Set[str]] = {}
+        self.allow_file: Set[str] = set()
+        self.holds: Dict[int, Set[str]] = {}
+        self.guarded: Dict[int, str] = {}
+        self._scan_pragmas()
+
+    def _scan_pragmas(self) -> None:
+        for lineno, line in enumerate(self.lines, start=1):
+            m = _ALLOW_FILE_RE.search(line)
+            if m:
+                self.allow_file |= _split_rules(m.group(1))
+            m = _ALLOW_RE.search(line)
+            if m:
+                target = lineno + 1 if line.lstrip().startswith("#") else lineno
+                self.allow.setdefault(target, set()).update(_split_rules(m.group(1)))
+            m = _HOLDS_RE.search(line)
+            if m:
+                self.holds.setdefault(lineno, set()).update(_split_rules(m.group(1)))
+            m = _GUARDED_RE.search(line)
+            if m:
+                self.guarded[lineno] = m.group(1)
+
+    def allows(self, rule: str, line: int) -> bool:
+        return rule in self.allow_file or rule in self.allow.get(line, ())
+
+    def holds_locks(self, def_line: int) -> Set[str]:
+        return self.holds.get(def_line, set())
+
+
+class Project:
+    """All analyzed source files, keyed by repo-relative path."""
+
+    def __init__(self, root: Path, files: Sequence[SourceFile]) -> None:
+        self.root = root
+        self.files: Dict[str, SourceFile] = {sf.rel: sf for sf in files}
+        self.by_mod: Dict[str, SourceFile] = {sf.mod: sf for sf in files}
+
+    def iter_files(self, prefixes: Optional[Sequence[str]] = None) -> Iterable[SourceFile]:
+        for sf in sorted(self.files.values(), key=lambda s: s.rel):
+            if prefixes is None or any(sf.mod.startswith(p) for p in prefixes):
+                yield sf
+
+    def file_by_mod(self, mod: str) -> Optional[SourceFile]:
+        return self.by_mod.get(mod)
+
+
+def load_project(root: Path, rel_paths: Optional[Sequence[str]] = None) -> Project:
+    """Load ``src/repro`` (or an explicit file list) into a ``Project``."""
+
+    root = root.resolve()
+    if rel_paths is None:
+        paths = sorted((root / "src" / "repro").rglob("*.py"))
+    else:
+        paths = [root / rel for rel in rel_paths]
+    files = []
+    for path in paths:
+        if "__pycache__" in path.parts:
+            continue
+        files.append(SourceFile(root, path))
+    return Project(root, files)
+
+
+class Checker:
+    """Base class: one named rule producing findings over a project."""
+
+    name: str = ""
+    description: str = ""
+
+    def check(self, project: Project) -> List[Finding]:
+        raise NotImplementedError
+
+    def update_goldens(self, project: Project) -> Optional[str]:
+        """Rewrite any golden file this checker owns; return its path."""
+
+        return None
+
+
+def apply_pragmas(project: Project, findings: Sequence[Finding]) -> tuple[List[Finding], int]:
+    """Drop findings suppressed by allow pragmas; return (kept, n_suppressed)."""
+
+    kept: List[Finding] = []
+    suppressed = 0
+    for f in findings:
+        sf = project.files.get(f.path)
+        if sf is not None and sf.allows(f.rule, f.line):
+            suppressed += 1
+        else:
+            kept.append(f)
+    return kept, suppressed
+
+
+def run_checkers(
+    project: Project,
+    checkers: Sequence[Checker],
+) -> tuple[List[Finding], int]:
+    all_findings: List[Finding] = []
+    suppressed_total = 0
+    for checker in checkers:
+        found = checker.check(project)
+        kept, suppressed = apply_pragmas(project, found)
+        all_findings.extend(kept)
+        suppressed_total += suppressed
+    all_findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return all_findings, suppressed_total

@@ -1,0 +1,532 @@
+"""Project concurrency model: classes, locks, attribute types, call edges.
+
+Shared by the lock-order and guarded-by checkers.  The model is built in
+two passes over the AST:
+
+1. per class: declared locks (``self._x = threading.Lock()``, class-level
+   locks, ``Condition(self._lock)`` aliasing its backing lock), attribute
+   types (``self.x = ClassName(...)``, annotated assignments, annotated
+   ``__init__`` parameters), lock-factory methods (return annotation is a
+   threading lock type, e.g. ``LifecycleManager.lock``), and pub/sub
+   handler registrations (``bus.subscribe(self._on_event)``);
+2. per method: a single recursive walk records lock acquisitions (with
+   the held-set at acquisition), resolved calls (with the held-set at the
+   call site), and ``self.<attr>`` accesses (for guarded-by).
+
+Resolution is deliberately conservative: a call we cannot resolve to a
+``(class, method)`` pair contributes nothing.  Dynamic pub/sub dispatch is
+modeled by convention — methods named ``emit``/``_notify``/``publish``/
+``dispatch`` are assumed to call every registered handler at the held-set
+of their unresolved local calls (so dispatching under a lock shows up as
+edges into every subscriber).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .framework import Project, SourceFile
+
+LOCK_CTORS = {"Lock": "lock", "RLock": "rlock", "Condition": "condition"}
+REENTRANT_KINDS = {"rlock", "condition", "factory-rlock"}
+DISPATCHER_NAMES = {"emit", "_notify", "publish", "dispatch"}
+SUBSCRIBE_NAMES = {"subscribe", "add_listener", "add_done_callback"}
+
+
+@dataclasses.dataclass
+class LockDecl:
+    cls: str
+    attr: str
+    kind: str                 # lock | rlock | condition | factory-rlock | factory-lock
+    backing: Optional[str]    # condition's backing lock attr (None = own)
+    line: int
+    mod: str
+
+
+@dataclasses.dataclass
+class ClassModel:
+    name: str
+    sf: SourceFile
+    node: ast.ClassDef
+    bases: List[str] = dataclasses.field(default_factory=list)
+    locks: Dict[str, LockDecl] = dataclasses.field(default_factory=dict)
+    attr_types: Dict[str, str] = dataclasses.field(default_factory=dict)
+    methods: Dict[str, ast.FunctionDef] = dataclasses.field(default_factory=dict)
+    lock_factories: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def canonical_lock(self, attr: str) -> Optional[str]:
+        """Resolve a lock attribute to its canonical id, following condition
+        aliases to the backing lock (``_idle``/``_space`` → ``_lock``)."""
+        seen = set()
+        while attr in self.locks and attr not in seen:
+            seen.add(attr)
+            decl = self.locks[attr]
+            if decl.kind == "condition" and decl.backing:
+                attr = decl.backing
+                continue
+            return f"{self.name}.{attr}"
+        return None
+
+
+@dataclasses.dataclass
+class MethodInfo:
+    key: Tuple[str, str]
+    acquisitions: List[Tuple[str, int, Tuple[str, ...]]] = \
+        dataclasses.field(default_factory=list)
+    calls: List[Tuple[Tuple[str, str], Tuple[str, ...], int]] = \
+        dataclasses.field(default_factory=list)
+    accesses: List[Tuple[str, str, int, Tuple[str, ...]]] = \
+        dataclasses.field(default_factory=list)
+    # held-sets of calls we could NOT resolve (drives pub/sub dispatch edges)
+    unresolved_held: List[Tuple[Tuple[str, ...], int]] = \
+        dataclasses.field(default_factory=list)
+
+
+class _ImportTable:
+    """Names bound to the threading module / its lock constructors."""
+
+    def __init__(self, tree: ast.Module) -> None:
+        self.threading_modules: Set[str] = set()
+        self.direct_ctors: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "threading":
+                        self.threading_modules.add(alias.asname or alias.name)
+            elif isinstance(node, ast.ImportFrom) and node.module == "threading":
+                for alias in node.names:
+                    if alias.name in LOCK_CTORS:
+                        self.direct_ctors[alias.asname or alias.name] = \
+                            LOCK_CTORS[alias.name]
+
+
+def _lock_ctor_kind(node: ast.expr, imports: _ImportTable) -> Optional[str]:
+    """'lock'/'rlock'/'condition' when ``node`` is a threading lock call."""
+    if not isinstance(node, ast.Call):
+        return None
+    f = node.func
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+            and f.value.id in imports.threading_modules:
+        return LOCK_CTORS.get(f.attr)
+    if isinstance(f, ast.Name):
+        return imports.direct_ctors.get(f.id)
+    return None
+
+
+def _annotation_class(node: Optional[ast.expr]) -> Optional[str]:
+    """Extract a class name from an annotation: ``T``, ``"T"``,
+    ``Optional[T]``, ``module.T``."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value.strip()
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Subscript):
+        base = node.value
+        if isinstance(base, ast.Name) and base.id in ("Optional",):
+            return _annotation_class(node.slice)
+    return None
+
+
+def _lock_factory_kind(func: ast.FunctionDef,
+                       imports: _ImportTable) -> Optional[str]:
+    """A method whose return annotation is a threading lock type hands out
+    locks (e.g. ``LifecycleManager.lock(rid) -> threading.RLock``)."""
+    ann = func.returns
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Attribute) and isinstance(ann.value, ast.Name) \
+            and ann.value.id in imports.threading_modules:
+        kind = LOCK_CTORS.get(ann.attr)
+    elif isinstance(ann, ast.Name):
+        kind = imports.direct_ctors.get(ann.id)
+    else:
+        kind = None
+    return f"factory-{kind}" if kind else None
+
+
+class ProjectModel:
+    def __init__(self) -> None:
+        self.classes: Dict[str, ClassModel] = {}
+        self.subclasses: Dict[str, Set[str]] = {}
+        self.handlers: List[Tuple[str, str]] = []
+        self.lock_kinds: Dict[str, str] = {}     # canonical id → kind
+        self.lock_sites: Dict[str, Tuple[str, int]] = {}
+
+    def subtree(self, cls: str) -> List[str]:
+        out, stack = [], [cls]
+        seen: Set[str] = set()
+        while stack:
+            c = stack.pop()
+            if c in seen:
+                continue
+            seen.add(c)
+            out.append(c)
+            stack.extend(self.subclasses.get(c, ()))
+        return out
+
+    def resolve_method(self, cls: str, name: str) -> List[Tuple[str, str]]:
+        """All (class, method) implementations reachable from a call on a
+        ``cls``-typed receiver: the class or any subclass defining it."""
+        keys = []
+        for c in self.subtree(cls):
+            cm = self.classes.get(c)
+            if cm is not None and name in cm.methods:
+                keys.append((c, name))
+        return keys
+
+
+def build_model(project: Project,
+                prefixes: Sequence[str]) -> ProjectModel:
+    model = ProjectModel()
+    per_file_imports: Dict[str, _ImportTable] = {}
+    for sf in project.iter_files(prefixes):
+        imports = _ImportTable(sf.tree)
+        per_file_imports[sf.rel] = imports
+        for node in sf.tree.body:
+            if not isinstance(node, ast.ClassDef):
+                continue
+            cm = ClassModel(node.name, sf, node)
+            cm.bases = [b.attr if isinstance(b, ast.Attribute) else
+                        b.id if isinstance(b, ast.Name) else ""
+                        for b in node.bases]
+            _scan_class(cm, imports)
+            # first definition wins on name collision (names are unique in
+            # practice across the scoped control-plane modules)
+            model.classes.setdefault(node.name, cm)
+    for cm in model.classes.values():
+        for base in cm.bases:
+            if base in model.classes:
+                model.subclasses.setdefault(base, set()).add(cm.name)
+        for attr, decl in cm.locks.items():
+            canon = cm.canonical_lock(attr)
+            if canon == f"{cm.name}.{attr}":
+                model.lock_kinds[canon] = decl.kind
+                model.lock_sites[canon] = (decl.mod, decl.line)
+        for mname, kind in cm.lock_factories.items():
+            canon = f"{cm.name}.{mname}()"
+            model.lock_kinds[canon] = kind
+            model.lock_sites[canon] = (cm.sf.mod,
+                                       cm.methods[mname].lineno)
+    # pub/sub handler registrations (second pass: needs the class table)
+    for cm in model.classes.values():
+        for node in ast.walk(cm.node):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in SUBSCRIBE_NAMES:
+                for arg in node.args:
+                    if isinstance(arg, ast.Attribute) \
+                            and isinstance(arg.value, ast.Name) \
+                            and arg.value.id == "self" \
+                            and arg.attr in cm.methods:
+                        model.handlers.append((cm.name, arg.attr))
+    return model
+
+
+def _scan_class(cm: ClassModel, imports: _ImportTable) -> None:
+    init_params: Dict[str, str] = {}
+    for stmt in cm.node.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            cm.methods[stmt.name] = stmt
+            kind = _lock_factory_kind(stmt, imports)
+            if kind:
+                cm.lock_factories[stmt.name] = kind
+            if stmt.name == "__init__":
+                for a in stmt.args.args + stmt.args.kwonlyargs:
+                    t = _annotation_class(a.annotation)
+                    if t:
+                        init_params[a.arg] = t
+        elif isinstance(stmt, ast.Assign):
+            kind = _lock_ctor_kind(stmt.value, imports)
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name) and kind:
+                    cm.locks[tgt.id] = LockDecl(
+                        cm.name, tgt.id, kind, None, stmt.lineno, cm.sf.mod)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            kind = _lock_ctor_kind(stmt.value, imports)
+            if isinstance(stmt.target, ast.Name) and kind:
+                cm.locks[stmt.target.id] = LockDecl(
+                    cm.name, stmt.target.id, kind, None, stmt.lineno,
+                    cm.sf.mod)
+
+    for func in cm.methods.values():
+        for node in ast.walk(func):
+            tgt = None
+            value = None
+            annotation = None
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt, value = node.targets[0], node.value
+            elif isinstance(node, ast.AnnAssign) and node.target is not None:
+                tgt, value, annotation = node.target, node.value, \
+                    node.annotation
+            if not (isinstance(tgt, ast.Attribute)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id in ("self", "cls")):
+                continue
+            attr = tgt.attr
+            kind = _lock_ctor_kind(value, imports) if value is not None \
+                else None
+            if kind:
+                backing = None
+                if kind == "condition" and isinstance(value, ast.Call) \
+                        and value.args:
+                    a0 = value.args[0]
+                    if isinstance(a0, ast.Attribute) \
+                            and isinstance(a0.value, ast.Name) \
+                            and a0.value.id == "self":
+                        backing = a0.attr
+                cm.locks.setdefault(attr, LockDecl(
+                    cm.name, attr, kind, backing, node.lineno, cm.sf.mod))
+                continue
+            t = _annotation_class(annotation)
+            if t is None and value is not None:
+                t = _value_class(value, init_params)
+            if t and attr not in cm.attr_types:
+                cm.attr_types[attr] = t
+
+
+def _value_class(value: ast.expr, params: Dict[str, str]) -> Optional[str]:
+    """Class name for ``self.x = <value>``: constructor call, annotated
+    parameter, or the first resolvable operand of ``a or b``."""
+    if isinstance(value, ast.Call):
+        f = value.func
+        if isinstance(f, ast.Name):
+            return f.id if f.id[:1].isupper() else None
+        if isinstance(f, ast.Attribute):
+            return f.attr if f.attr[:1].isupper() else None
+    if isinstance(value, ast.Name):
+        return params.get(value.id)
+    if isinstance(value, ast.BoolOp):
+        for v in value.values:
+            t = _value_class(v, params)
+            if t:
+                return t
+    return None
+
+
+# ---------------------------------------------------------------------------
+# per-method analysis
+
+
+class _MethodAnalyzer:
+    def __init__(self, model: ProjectModel, cm: ClassModel,
+                 func: ast.FunctionDef) -> None:
+        self.model = model
+        self.cm = cm
+        self.func = func
+        self.info = MethodInfo(key=(cm.name, func.name))
+        self.param_types: Dict[str, str] = {}
+        for a in func.args.args + func.args.kwonlyargs:
+            t = _annotation_class(a.annotation)
+            if t:
+                self.param_types[a.arg] = t
+        # local var → chain of self attributes ("x = self.a.b" → ("a","b"))
+        self.aliases: Dict[str, Tuple[str, ...]] = {}
+        self.local_types: Dict[str, str] = {}
+        # names bound inside the method (params, assignments, loop targets):
+        # only calls to THESE count as unresolved dynamic dispatch — a bare
+        # builtin like list() under a lock is not a callback invocation
+        self.local_names: Set[str] = {
+            a.arg for a in func.args.args + func.args.kwonlyargs
+        }
+
+    def run(self) -> MethodInfo:
+        self._visit_body(self.func.body, ())
+        return self.info
+
+    # -- resolution helpers ---------------------------------------------------
+    def _self_chain(self, node: ast.expr) -> Optional[Tuple[str, ...]]:
+        """``self.a.b`` → ("a", "b"); follows local aliases one level."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            if node.id in ("self", "cls"):
+                return tuple(reversed(parts))
+            if node.id in self.aliases:
+                return self.aliases[node.id] + tuple(reversed(parts))
+        return None
+
+    def _chain_type(self, chain: Tuple[str, ...]) -> Optional[str]:
+        """Type of ``self.<chain>`` walking attr_types across classes."""
+        cur = self.cm.name
+        for attr in chain:
+            cm = self.model.classes.get(cur)
+            if cm is None:
+                return None
+            cur = cm.attr_types.get(attr)
+            if cur is None:
+                return None
+        return cur
+
+    def _resolve_lock(self, node: ast.expr) -> Optional[Tuple[str, str, int]]:
+        """Lock id for a with-item: ``(lock_id, kind, line)`` or None."""
+        line = getattr(node, "lineno", self.func.lineno)
+        # with self.lock(rid):  — lock-factory call
+        if isinstance(node, ast.Call):
+            callee = self._resolve_callee(node.func)
+            if callee is not None:
+                tcls, mname = callee
+                for c in self.model.subtree(tcls):
+                    cm = self.model.classes.get(c)
+                    if cm is not None and mname in cm.lock_factories:
+                        canon = f"{c}.{mname}()"
+                        return canon, cm.lock_factories[mname], line
+            return None
+        chain = self._self_chain(node)
+        if chain:
+            if len(chain) == 1:
+                canon = self.cm.canonical_lock(chain[0])
+                if canon:
+                    return canon, self.model.lock_kinds.get(canon, "lock"), \
+                        line
+            else:
+                owner = self._chain_type(chain[:-1])
+                if owner and owner in self.model.classes:
+                    canon = self.model.classes[owner].canonical_lock(chain[-1])
+                    if canon:
+                        return canon, \
+                            self.model.lock_kinds.get(canon, "lock"), line
+        # with ClassName._shared_lock:
+        if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+            owner = self.model.classes.get(node.value.id)
+            if owner is not None:
+                canon = owner.canonical_lock(node.attr)
+                if canon:
+                    return canon, self.model.lock_kinds.get(canon, "lock"), \
+                        line
+        # with lk:  — local alias of a lock attribute
+        if isinstance(node, ast.Name) and node.id in self.aliases:
+            return self._resolve_lock(ast.copy_location(
+                ast.Attribute(value=ast.Name(id="self"),
+                              attr=self.aliases[node.id][-1])
+                if len(self.aliases[node.id]) == 1 else node, node)) \
+                if len(self.aliases[node.id]) == 1 else None
+        return None
+
+    def _resolve_callee(self, f: ast.expr) -> Optional[Tuple[str, str]]:
+        if isinstance(f, ast.Attribute):
+            base = f.value
+            if isinstance(base, ast.Name):
+                if base.id in ("self", "cls"):
+                    return (self.cm.name, f.attr)
+                if base.id in self.model.classes:
+                    return (base.id, f.attr)
+                if base.id in self.local_types:
+                    return (self.local_types[base.id], f.attr)
+                if base.id in self.aliases:
+                    t = self._chain_type(self.aliases[base.id])
+                    if t:
+                        return (t, f.attr)
+                if base.id in self.param_types:
+                    return (self.param_types[base.id], f.attr)
+                return None
+            chain = self._self_chain(base)
+            if chain:
+                t = self._chain_type(chain)
+                if t:
+                    return (t, f.attr)
+            return None
+        if isinstance(f, ast.Name) and f.id in self.model.classes:
+            return (f.id, "__init__")
+        return None
+
+    # -- the walk -------------------------------------------------------------
+    def _visit_body(self, body: List[ast.stmt],
+                    held: Tuple[str, ...]) -> None:
+        for stmt in body:
+            self._visit(stmt, held)
+
+    def _visit(self, node: ast.AST, held: Tuple[str, ...]) -> None:
+        if isinstance(node, ast.With):
+            inner = held
+            for item in node.items:
+                self._visit(item.context_expr, inner)
+                resolved = self._resolve_lock(item.context_expr)
+                if resolved is not None:
+                    lock_id, _kind, line = resolved
+                    self.info.acquisitions.append((lock_id, line, inner))
+                    inner = inner + (lock_id,)
+            self._visit_body(node.body, inner)
+            return
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            for tname in ast.walk(node.target):
+                if isinstance(tname, ast.Name):
+                    self.local_names.add(tname.id)
+            for child in ast.iter_child_nodes(node):
+                self._visit(child, held)
+            return
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                for tn in ast.walk(t):
+                    if isinstance(tn, ast.Name):
+                        self.local_names.add(tn.id)
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            chain = self._self_chain(node.value)
+            if chain:
+                self.aliases[name] = chain
+            else:
+                t = _value_class(node.value, self.param_types)
+                if t and t in self.model.classes:
+                    self.local_types[name] = t
+                elif isinstance(node.value, ast.BoolOp):
+                    for v in node.value.values:
+                        c = self._self_chain(v)
+                        if c:
+                            self.aliases[name] = c
+                            break
+            self._visit(node.value, held)
+            return
+        if isinstance(node, ast.Call):
+            callee = self._resolve_callee(node.func)
+            line = node.lineno
+            if callee is not None:
+                self.info.calls.append((callee, held, line))
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in self.local_names:
+                self.info.unresolved_held.append((held, line))
+            for child in ast.iter_child_nodes(node):
+                self._visit(child, held)
+            return
+        if isinstance(node, ast.Attribute):
+            if isinstance(node.value, ast.Name) and (
+                    node.value.id in ("self", "cls")
+                    or node.value.id == self.cm.name):
+                ctx = "store" if isinstance(node.ctx, (ast.Store, ast.Del)) \
+                    else "load"
+                self.info.accesses.append((node.attr, ctx, node.lineno, held))
+            self._visit(node.value, held)
+            return
+        if isinstance(node, ast.Lambda):
+            # predicates passed to wait_for run with the condition re-held —
+            # analyze the body at the current held-set
+            self._visit(node.body, held)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested def: deferred execution (thread targets, callbacks) —
+            # analyze with an empty held-set
+            self._visit_body(node.body, ())
+            return
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, held)
+
+
+def analyze_method(model: ProjectModel, cm: ClassModel,
+                   func: ast.FunctionDef) -> MethodInfo:
+    return _MethodAnalyzer(model, cm, func).run()
+
+
+def analyze_all(model: ProjectModel) -> Dict[Tuple[str, str], MethodInfo]:
+    infos: Dict[Tuple[str, str], MethodInfo] = {}
+    for cm in model.classes.values():
+        for func in cm.methods.values():
+            infos[(cm.name, func.name)] = analyze_method(model, cm, func)
+    return infos

@@ -1,0 +1,359 @@
+"""Runtime lock-order witness: the dynamic half of the lock-order checker.
+
+The static checker (``repro.analysis.checkers.lock_order``) derives the
+lock graph from the AST, but opaque callables — ``self.clock()``, bus
+subscribers, injected recoverers — contribute no edges there.  This module
+closes that blind spot at runtime: :func:`witnessed_locks` monkeypatches
+``threading.Lock``/``threading.RLock`` inside a ``with`` window so every
+lock *constructed* in the window is wrapped in an :class:`OrderedLock`
+that reports to a shared :class:`LockWitness`:
+
+- **order edges** are recorded at acquire-*attempt* time (lockdep-style:
+  the intent to nest is the fact, whether or not the acquire succeeds),
+  from every lock the thread already holds to the one it is acquiring;
+- **self-reacquire** of a non-reentrant ``Lock`` the thread already holds
+  is reported immediately (the real program would deadlock there);
+- **hold-while-blocking** is reported when a thread parks on a condition
+  (``Condition.wait`` / ``wait_for``) while still holding *other*
+  witnessed locks — the sleeping thread pins those locks, so any waker
+  that needs one of them deadlocks.
+
+Locks are aggregated by **allocation site** (``file:line`` of the
+constructor call), mirroring the static checker's canonical
+``Class._attr`` naming: a 1000-plane fleet contributes one node per lock
+*field*, not one per instance.  The deliberate blind spot is ordering
+between two instances born at the same site — same-site edges are
+skipped rather than reported as self-cycles.
+
+Nothing here records timestamps: the report is a pure function of the
+witnessed acquisition sequence, so a deterministic run (virtual clock,
+seeded RNG, sequenced threads) yields a byte-identical report.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import sys
+import threading
+from _thread import get_ident
+from typing import Dict, List, Optional, Set, Tuple
+
+# captured before any patching: the witness's own state must never be
+# guarded by a witnessed lock (the bookkeeping would recurse)
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+
+_SKIP_FILES = (threading.__file__, __file__, contextlib.__file__)
+
+
+class WitnessViolation(AssertionError):
+    """A lock-order cycle or blocking violation observed at runtime."""
+
+
+def _call_site() -> Tuple[str, bool]:
+    """(file:line, is_plumbing) for the frame that constructed the lock,
+    skipping stdlib threading internals and this module (so
+    ``Condition()``'s implicit ``RLock()`` is attributed to the
+    ``Condition(...)`` call site).
+
+    ``is_plumbing`` is True when the lock was born inside
+    ``Thread.__init__`` — the interpreter's own bootstrap Event, signalled
+    by the runtime regardless of any user lock, so blocking on it (as
+    ``Thread.start`` does) is not a user-level ordering fact."""
+
+    frame = sys._getframe(1)
+    plumbing = False
+    while frame is not None and frame.f_code.co_filename in _SKIP_FILES:
+        slf = frame.f_locals.get("self")
+        if isinstance(slf, threading.Thread):
+            plumbing = True
+        frame = frame.f_back
+    if frame is None:
+        return "<unknown>", plumbing
+    filename = frame.f_code.co_filename
+    marker = "src/repro/"
+    idx = filename.rfind(marker)
+    if idx >= 0:
+        filename = filename[idx + len(marker):]
+    else:
+        filename = filename.rsplit("/", 1)[-1]
+    return f"{filename}:{frame.f_lineno}", plumbing
+
+
+class OrderedLock:
+    """Drop-in ``Lock``/``RLock`` wrapper reporting to a :class:`LockWitness`.
+
+    Implements the full protocol ``threading.Condition`` probes for —
+    ``acquire``/``release``/``_is_owned``/``_release_save``/
+    ``_acquire_restore`` — so a witnessed lock can back a condition, and
+    the ``_release_save`` call doubles as the wait-entry hook for
+    hold-while-blocking detection."""
+
+    __slots__ = ("_inner", "_witness", "site", "label", "reentrant",
+                 "plumbing")
+
+    def __init__(self, inner, witness: "LockWitness", site: str,
+                 label: str, reentrant: bool, plumbing: bool = False) -> None:
+        self._inner = inner
+        self._witness = witness
+        self.site = site
+        self.label = label
+        self.reentrant = reentrant
+        self.plumbing = plumbing
+
+    # -- core lock protocol ---------------------------------------------------
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        self._witness._before_acquire(self)
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._witness._push(self, 1)
+        return got
+
+    def release(self) -> None:
+        self._inner.release()
+        self._witness._pop(self)
+
+    def __enter__(self) -> "OrderedLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def locked(self) -> bool:
+        locked = getattr(self._inner, "locked", None)
+        if locked is not None:
+            return locked()
+        return self._witness._held_anywhere(self)
+
+    # -- condition-variable protocol -----------------------------------------
+    def _is_owned(self) -> bool:
+        is_owned = getattr(self._inner, "_is_owned", None)
+        if is_owned is not None:
+            return is_owned()
+        return self._witness._thread_holds(self)
+
+    def _release_save(self):
+        # Condition.wait enters here with the lock held: the thread is
+        # about to block, so any OTHER held lock is a blocking hazard
+        self._witness._on_wait(self)
+        release_save = getattr(self._inner, "_release_save", None)
+        if release_save is not None:
+            inner_state = release_save()
+        else:
+            self._inner.release()
+            inner_state = None
+        count = self._witness._pop_all(self)
+        return (inner_state, count)
+
+    def _acquire_restore(self, state) -> None:
+        inner_state, count = state
+        acquire_restore = getattr(self._inner, "_acquire_restore", None)
+        if acquire_restore is not None:
+            acquire_restore(inner_state)
+        else:
+            self._inner.acquire()
+        # the post-wait reacquire restores a hold the thread already
+        # ordered before waiting — no new edge is recorded
+        self._witness._push(self, count)
+
+    def __repr__(self) -> str:
+        return f"<OrderedLock {self.label} reentrant={self.reentrant}>"
+
+
+class LockWitness:
+    """Accumulates acquisition orders and violations across all
+    :class:`OrderedLock` instances wrapped for it."""
+
+    def __init__(self) -> None:
+        self._mu = _REAL_LOCK()
+        # thread ident -> acquisition stack of [lock, recursion_count]
+        self._held: Dict[int, List[List]] = {}
+        # allocation-site order graph: site -> set of sites acquired under it
+        self._edges: Dict[str, Set[str]] = {}
+        self._violations: List[str] = []
+        self._site_counts: Dict[str, int] = {}
+        self._locks_created = 0
+
+    # -- lock construction ----------------------------------------------------
+    def wrap(self, inner, reentrant: bool, site: Optional[str] = None
+             ) -> OrderedLock:
+        if site is None:
+            site, plumbing = _call_site()
+        else:
+            plumbing = False
+        with self._mu:
+            n = self._site_counts.get(site, 0)
+            self._site_counts[site] = n + 1
+            self._locks_created += 1
+        return OrderedLock(inner, self, site, f"{site}#{n}", reentrant,
+                           plumbing)
+
+    # -- bookkeeping hooks (called from OrderedLock) ---------------------------
+    def _before_acquire(self, lock: OrderedLock) -> None:
+        tid = get_ident()
+        with self._mu:
+            stack = self._held.get(tid, ())
+            for entry in stack:
+                if entry[0] is lock:
+                    if not lock.reentrant:
+                        self._violations.append(
+                            "self-reacquire of non-reentrant lock "
+                            f"{lock.label} (thread would deadlock)")
+                    return          # reentrant reacquire: no new ordering
+            if lock.plumbing:
+                return              # thread-bootstrap locks: no user edges
+            for entry in stack:
+                held = entry[0]
+                a, b = held.site, lock.site
+                if a != b and not held.plumbing:
+                    # same-site instance pairs stay unchecked
+                    self._edges.setdefault(a, set()).add(b)
+
+    def _push(self, lock: OrderedLock, count: int) -> None:
+        tid = get_ident()
+        with self._mu:
+            stack = self._held.setdefault(tid, [])
+            for entry in stack:
+                if entry[0] is lock:
+                    entry[1] += count
+                    return
+            stack.append([lock, count])
+
+    def _pop(self, lock: OrderedLock) -> None:
+        tid = get_ident()
+        with self._mu:
+            stack = self._held.get(tid, [])
+            for i in range(len(stack) - 1, -1, -1):
+                if stack[i][0] is lock:
+                    stack[i][1] -= 1
+                    if stack[i][1] <= 0:
+                        del stack[i]
+                    return
+
+    def _pop_all(self, lock: OrderedLock) -> int:
+        """Remove every recursion level of ``lock`` for this thread
+        (Condition.wait fully releases); returns the count to restore."""
+
+        tid = get_ident()
+        with self._mu:
+            stack = self._held.get(tid, [])
+            for i in range(len(stack) - 1, -1, -1):
+                if stack[i][0] is lock:
+                    count = stack[i][1]
+                    del stack[i]
+                    return count
+        return 1
+
+    def _on_wait(self, lock: OrderedLock) -> None:
+        if lock.plumbing:
+            return      # Thread.start joining its bootstrap Event: benign
+        tid = get_ident()
+        with self._mu:
+            others = sorted(entry[0].label
+                            for entry in self._held.get(tid, ())
+                            if entry[0] is not lock
+                            and not entry[0].plumbing)
+            if others:
+                self._violations.append(
+                    f"hold-while-blocking: waiting on condition backed by "
+                    f"{lock.label} while holding {', '.join(others)}")
+
+    def _thread_holds(self, lock: OrderedLock) -> bool:
+        tid = get_ident()
+        with self._mu:
+            return any(entry[0] is lock
+                       for entry in self._held.get(tid, ()))
+
+    def _held_anywhere(self, lock: OrderedLock) -> bool:
+        with self._mu:
+            return any(entry[0] is lock
+                       for stack in self._held.values()
+                       for entry in stack)
+
+    # -- reporting -------------------------------------------------------------
+    def edges(self) -> List[str]:
+        with self._mu:
+            return sorted(f"{a} -> {b}"
+                          for a, succ in self._edges.items() for b in succ)
+
+    def cycles(self) -> List[List[str]]:
+        """Deterministic elementary-cycle scan of the site graph (DFS from
+        each node in sorted order; cycles canonicalized by rotation)."""
+
+        with self._mu:
+            adj = {a: sorted(succ) for a, succ in self._edges.items()}
+        seen: Set[Tuple[str, ...]] = set()
+        cycles: List[List[str]] = []
+
+        def dfs(node: str, path: List[str], on_path: Set[str]) -> None:
+            for nxt in adj.get(node, ()):
+                if nxt in on_path:
+                    cyc = path[path.index(nxt):]
+                    pivot = cyc.index(min(cyc))
+                    canon = tuple(cyc[pivot:] + cyc[:pivot])
+                    if canon not in seen:
+                        seen.add(canon)
+                        cycles.append(list(canon))
+                elif len(path) < 32:        # bounded: graphs here are tiny
+                    path.append(nxt)
+                    on_path.add(nxt)
+                    dfs(nxt, path, on_path)
+                    on_path.discard(nxt)
+                    path.pop()
+
+        for start in sorted(adj):
+            dfs(start, [start], {start})
+        return sorted(cycles)
+
+    def violations(self) -> List[str]:
+        with self._mu:
+            return sorted(set(self._violations))
+
+    def report(self) -> Dict:
+        return {
+            "locks": self._locks_created,
+            "edges": self.edges(),
+            "cycles": self.cycles(),
+            "violations": self.violations(),
+        }
+
+    def assert_clean(self) -> None:
+        """Raise :class:`WitnessViolation` on any cycle or violation."""
+
+        problems: List[str] = []
+        for cyc in self.cycles():
+            problems.append("lock-order cycle: " + " -> ".join(cyc + [cyc[0]]))
+        problems.extend(self.violations())
+        if problems:
+            raise WitnessViolation(
+                "lock witness observed {} problem(s):\n  {}".format(
+                    len(problems), "\n  ".join(problems)))
+
+
+@contextlib.contextmanager
+def witnessed_locks(witness: Optional[LockWitness] = None):
+    """Patch ``threading.Lock``/``threading.RLock`` so every lock created
+    inside the window is witnessed.  Yields the :class:`LockWitness`.
+
+    Locks created *before* the window stay unwrapped (and invisible);
+    build the system under test inside the window.  ``Condition()``,
+    ``Event()`` and ``concurrent.futures`` plumbing constructed in the
+    window pick up witnessed locks automatically because they call the
+    patched module-level constructors."""
+
+    w = witness if witness is not None else LockWitness()
+
+    def make_lock():
+        return w.wrap(_REAL_LOCK(), reentrant=False)
+
+    def make_rlock():
+        return w.wrap(_REAL_RLOCK(), reentrant=True)
+
+    threading.Lock = make_lock          # type: ignore[assignment]
+    threading.RLock = make_rlock        # type: ignore[assignment]
+    try:
+        yield w
+    finally:
+        threading.Lock = _REAL_LOCK     # type: ignore[assignment]
+        threading.RLock = _REAL_RLOCK   # type: ignore[assignment]

@@ -14,7 +14,6 @@ violated validity bound triggers fallback, which is RQ2's recovery behavior.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, Optional, Tuple
 
 
@@ -58,7 +57,9 @@ class SessionContracts:
     timing: TimingContract
     lifecycle: LifecycleContract
     telemetry: TelemetryContract
-    created_at: float = dataclasses.field(default_factory=time.time)
+    # stamped by the session opener from its injected clock (None = not
+    # stamped; never defaulted to wall time — see the clock-seam rule)
+    created_at: Optional[float] = None
 
     def to_dict(self) -> Dict:
         return {
@@ -69,8 +70,13 @@ class SessionContracts:
         }
 
 
-def contracts_from_descriptor(desc, task) -> SessionContracts:
-    """Derive session contracts from a capability descriptor + task request."""
+def contracts_from_descriptor(desc, task,
+                              now: Optional[float] = None) -> SessionContracts:
+    """Derive session contracts from a capability descriptor + task request.
+
+    ``now`` stamps ``created_at`` from the caller's injected clock (the
+    session opener passes its bus clock so virtual-time runs stay fully
+    virtual)."""
     cap = desc.capability
     timing = TimingContract(
         expected_latency_ms=cap.timing.expected_latency_ms,
@@ -89,4 +95,4 @@ def contracts_from_descriptor(desc, task) -> SessionContracts:
         optional_fields=cap.observability.telemetry_fields,
         twin_linked_fields=cap.observability.twin_linked_fields,
     )
-    return SessionContracts(timing, lifecycle, telemetry)
+    return SessionContracts(timing, lifecycle, telemetry, created_at=now)

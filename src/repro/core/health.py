@@ -39,13 +39,17 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import time
 from collections import deque
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
 
 import threading
 
+from repro.core.simclock import SYSTEM_CLOCK
 from repro.core.telemetry import TelemetryBus, TelemetryEvent
+
+if TYPE_CHECKING:  # pragma: no cover - annotations only
+    from repro.core.policy import PolicyManager
+    from repro.core.registry import CapabilityRegistry
 
 
 class BreakerState(enum.Enum):
@@ -183,14 +187,15 @@ class HealthManager:
     probation trickle budget.
     """
 
-    def __init__(self, bus: TelemetryBus, policy, registry=None, *,
+    def __init__(self, bus: TelemetryBus, policy: "PolicyManager",
+                 registry: Optional["CapabilityRegistry"] = None, *,
                  cooldown_s: float = 5.0,
                  cooldown_backoff: float = 2.0,
                  cooldown_max_s: float = 60.0,
                  probe_budget: int = 1,
                  probes_to_close: int = 3,
                  thresholds: Optional[Dict] = None,
-                 clock: Callable[[], float] = time.monotonic,
+                 clock: Optional[Callable[[], float]] = None,
                  recoverer: Optional[Callable[[str], bool]] = None):
         self.bus = bus
         self.policy = policy
@@ -201,20 +206,22 @@ class HealthManager:
         self.probe_budget = max(1, probe_budget)
         self.probes_to_close = max(1, probes_to_close)
         self._threshold_overrides = dict(thresholds or {})
-        self.clock = clock
+        # monotonic timebase for cooldown/probation timing; default is the
+        # process clock seam (virtual under the scenario simulator)
+        self.clock = clock if clock is not None else SYSTEM_CLOCK.monotonic
         self.recoverer = recoverer
-        self._breakers: Dict[str, _Breaker] = {}
-        self._history: Dict[str, List[BreakerTransition]] = {}
+        self._breakers: Dict[str, _Breaker] = {}               # guarded_by: _lock
+        self._history: Dict[str, List[BreakerTransition]] = {}  # guarded_by: _lock
         self._lock = threading.RLock()
         # audit counters for the chaos harness / stress suite
-        self._refused_while_open = 0
-        self._refused_probe_budget = 0
-        self._refused_awaiting_rearm = 0
-        self._started_while_open = 0       # MUST stay 0: quarantine invariant
+        self._refused_while_open = 0       # guarded_by: _lock
+        self._refused_probe_budget = 0     # guarded_by: _lock
+        self._refused_awaiting_rearm = 0   # guarded_by: _lock
+        self._started_while_open = 0       # guarded_by: _lock — MUST stay 0
         bus.subscribe(self._on_event)
 
     # -- breaker bookkeeping --------------------------------------------------
-    def _breaker(self, rid: str) -> _Breaker:
+    def _breaker(self, rid: str) -> _Breaker:  # planelint: holds(_lock)
         br = self._breakers.get(rid)
         if br is None:
             th = HealthThresholds(**self._threshold_overrides)
@@ -227,7 +234,7 @@ class HealthManager:
             self._history.setdefault(rid, [])
         return br
 
-    def _transition(self, rid: str, br: _Breaker, dst: BreakerState,
+    def _transition(self, rid: str, br: _Breaker, dst: BreakerState,  # planelint: holds(_lock)
                     reason: str, pending: List[BreakerTransition]) -> None:
         src = br.state
         if dst is src:

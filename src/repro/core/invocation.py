@@ -102,7 +102,8 @@ class InvocationManager:
         self.bus = bus
 
     def open_session(self, task: TaskRequest, desc: ResourceDescriptor) -> Session:
-        contracts = contracts_from_descriptor(desc, task)
+        contracts = contracts_from_descriptor(desc, task,
+                                              now=self.bus.clock.now())
         return Session(_next_session_id(), task, desc, contracts)
 
     def _recover_if_needed(self, session: Session,

@@ -18,8 +18,9 @@ from __future__ import annotations
 import dataclasses
 import enum
 import threading
-import time
 from typing import Dict, List, Optional, Tuple
+
+from repro.core.simclock import Clock, SYSTEM_CLOCK
 
 
 class LifecycleState(enum.Enum):
@@ -60,7 +61,10 @@ class Transition:
 
 
 class LifecycleManager:
-    def __init__(self):
+    def __init__(self, clock: Optional[Clock] = None):
+        # injectable timebase: transition log stamps are virtual under the
+        # scenario simulator, wall on a live plane
+        self.clock: Clock = clock or SYSTEM_CLOCK
         self._states: Dict[str, LifecycleState] = {}
         self._log: Dict[str, List[Transition]] = {}
         self._active: Dict[str, int] = {}
@@ -105,7 +109,7 @@ class LifecycleManager:
             with self._global:
                 self._states[rid] = dst
                 self._log.setdefault(rid, []).append(
-                    Transition(src.value, dst.value, action, time.time(),
+                    Transition(src.value, dst.value, action, self.clock.now(),
                                duration_ms))
 
     # convenience wrappers mirroring the paper's verbs -----------------------
@@ -128,7 +132,7 @@ class LifecycleManager:
                 with self._global:
                     self._active[rid] += 1
                 self._append(rid, Transition("running", "running",
-                                             "invoke-overlap", time.time()))
+                                             "invoke-overlap", self.clock.now()))
                 return
             self.transition(rid, LifecycleState.RUNNING, "invoke")
             with self._global:
@@ -147,14 +151,15 @@ class LifecycleManager:
                 # pending reset (recovery from FAILED resets anyway, and a
                 # stale flag would force a spurious NEEDS_RESET later)
                 self._append(rid, Transition("failed", "failed",
-                                             "complete-after-fail", time.time()))
+                                             "complete-after-fail",
+                                             self.clock.now()))
                 return
             if needs_reset:
                 with self._global:
                     self._pending_reset[rid] = True
             if remaining > 0:
                 self._append(rid, Transition("running", "running",
-                                             "complete-overlap", time.time()))
+                                             "complete-overlap", self.clock.now()))
                 return
             with self._global:
                 pending = self._pending_reset.pop(rid, False)
@@ -169,7 +174,7 @@ class LifecycleManager:
         with self.lock(rid):
             if self.state(rid) == LifecycleState.FAILED:
                 self._append(rid, Transition("failed", "failed",
-                                             f"fail:{why}", time.time()))
+                                             f"fail:{why}", self.clock.now()))
             else:
                 self.transition(rid, LifecycleState.FAILED, f"fail:{why}")
             with self._global:

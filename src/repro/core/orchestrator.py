@@ -135,7 +135,7 @@ class Orchestrator:
         self.twin_exec = TwinExecutor(self.twins, self.bus)
         self.twin_fallback_queue_factor = twin_fallback_queue_factor
         self.policy = PolicyManager()
-        self.lifecycle = LifecycleManager()
+        self.lifecycle = LifecycleManager(clock=self.clock)
         self.acquire_timeout_s = acquire_timeout_s
         # telemetry-driven recovery loop: ``health=True`` (default) builds a
         # HealthManager with default thresholds, a dict forwards constructor

@@ -32,9 +32,9 @@ class PolicyDecision:
 
 class PolicyManager:
     def __init__(self):
-        self._locks: Dict[str, threading.Semaphore] = {}
-        self._held: Dict[str, int] = {}
-        self._probes: Dict[str, int] = {}
+        self._locks: Dict[str, threading.Semaphore] = {}  # guarded_by: _lock
+        self._held: Dict[str, int] = {}                   # guarded_by: _lock
+        self._probes: Dict[str, int] = {}                 # guarded_by: _lock
         self._lock = threading.Lock()
 
     def _sem(self, desc: ResourceDescriptor) -> threading.Semaphore:

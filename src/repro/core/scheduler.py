@@ -72,27 +72,27 @@ class ControlPlaneScheduler:
         # happens to rank the resource
         self.health_tick_interval_s = health_tick_interval_s
         self._health_stop = threading.Event()
-        self._health_thread: Optional[threading.Thread] = None
+        self._health_thread: Optional[threading.Thread] = None  # guarded_by: _lock
         self._queue: "queue.Queue" = queue.Queue(maxsize=queue_size)
-        self._threads: List[threading.Thread] = []
-        self._started = False
-        self._closed = False
+        self._threads: List[threading.Thread] = []              # guarded_by: _lock
+        self._started = False                                   # guarded_by: _lock
+        self._closed = False                                    # guarded_by: _lock
         self._lock = threading.Lock()
         self._idle = threading.Condition(self._lock)
         # notified whenever a worker takes an item off the bounded queue —
         # producers blocked on a full queue park here instead of polling
         self._space = threading.Condition(self._lock)
-        self._pending = 0                       # queued + in-flight tasks
+        self._pending = 0   # guarded_by: _lock — queued + in-flight tasks
         self._stats_lock = threading.Lock()
-        self._status_counts: Dict[str, int] = {}
-        self._per_resource: Dict[str, int] = {}
-        self._latencies_ms: List[float] = []
+        self._status_counts: Dict[str, int] = {}    # guarded_by: _stats_lock
+        self._per_resource: Dict[str, int] = {}     # guarded_by: _stats_lock
+        self._latencies_ms: List[float] = []        # guarded_by: _stats_lock
         # recent completion timestamps: the observed DRAIN RATE for
         # retry_after_s (end-to-end latencies include queue wait, which
         # would inflate a backoff hint exactly when the queue is busy)
-        self._done_times: "deque[float]" = deque(maxlen=32)
-        self._first_enqueue: Optional[float] = None
-        self._last_done: Optional[float] = None
+        self._done_times: "deque[float]" = deque(maxlen=32)  # guarded_by: _stats_lock
+        self._first_enqueue: Optional[float] = None          # guarded_by: _stats_lock
+        self._last_done: Optional[float] = None              # guarded_by: _stats_lock
 
     # -- lifecycle ------------------------------------------------------------
     def start(self) -> "ControlPlaneScheduler":
@@ -131,6 +131,9 @@ class ControlPlaneScheduler:
             self._closed = True
             started = self._started
             threads = list(self._threads)
+            # snapshot under the lock: start() writes _health_thread while
+            # holding _lock, so an unlocked read below could miss it
+            health_thread = self._health_thread
         self._health_stop.set()
         with self._lock:
             # wake producers parked on queue space so they observe _closed
@@ -141,8 +144,8 @@ class ControlPlaneScheduler:
             if wait:
                 for t in threads:
                     t.join()
-                if self._health_thread is not None:
-                    self._health_thread.join()
+                if health_thread is not None:
+                    health_thread.join()
 
     def _health_probe_loop(self) -> None:
         """Background probe ticks: periodically promote cooled-down OPEN
@@ -194,9 +197,14 @@ class ControlPlaneScheduler:
                         lambda: self._closed or not self._queue.full())
                 else:
                     self._pending += 1
-                    if self._first_enqueue is None:
-                        self._first_enqueue = enqueued
-                    return fut
+                    break
+        # _first_enqueue belongs to the stats group (read in stats() under
+        # _stats_lock); stamp it AFTER releasing _lock so the two locks are
+        # never nested
+        with self._stats_lock:
+            if self._first_enqueue is None:
+                self._first_enqueue = enqueued
+        return fut
 
     def submit_many(self, tasks: Sequence[TaskRequest],
                     deadline_s: Optional[float] = None, wait: bool = True

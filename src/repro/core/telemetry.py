@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from collections import defaultdict, deque
 from typing import Callable, Dict, List, Optional
 
@@ -36,16 +35,21 @@ class RuntimeSnapshot:
     viability: Optional[float] = None          # wetware-specific
     contamination: Optional[float] = None      # chemical-specific
     queue_depth: int = 0
-    last_updated: float = dataclasses.field(default_factory=time.time)
+    # stamped by the clock-owning bus at update_snapshot; None = never
+    # stored (a raw default_factory=time.time here would mix wall epochs
+    # into virtual-time runs and make twins look fresher than now)
+    last_updated: Optional[float] = None
     extra: Dict = dataclasses.field(default_factory=dict)
 
     def aged(self, now: Optional[float] = None) -> "RuntimeSnapshot":
         """Copy with age_of_information_ms recomputed (copy-on-read: the
         stored snapshot is never mutated, so concurrent readers are safe).
         ``now`` lets a clock-owning caller (the bus) age against its own
-        timebase; default is wall time."""
+        timebase; an unstamped snapshot has age 0."""
+        if self.last_updated is None:
+            return dataclasses.replace(self, age_of_information_ms=0.0)
         if now is None:
-            now = time.time()
+            now = SYSTEM_CLOCK.now()
         return dataclasses.replace(
             self, age_of_information_ms=(now - self.last_updated) * 1e3)
 
@@ -58,19 +62,21 @@ class TelemetryEvent:
     resource_id: str
     kind: str                                  # result | health | drift | lifecycle
     fields: Dict
-    timestamp: float = dataclasses.field(default_factory=time.time)
+    # the bus restamps at emit() from its injected clock; None = not yet
+    # published (events never cross the wire unstamped)
+    timestamp: Optional[float] = None
 
 
 class TelemetryBus:
     """In-process pub/sub with bounded per-resource history (thread-safe)."""
 
     def __init__(self, history: int = 256, clock: Optional[Clock] = None):
-        self._subs: List[Callable[[TelemetryEvent], None]] = []
-        self._history: Dict[str, deque] = defaultdict(
+        self._subs: List[Callable[[TelemetryEvent], None]] = []  # guarded_by: _lock
+        self._history: Dict[str, deque] = defaultdict(           # guarded_by: _lock
             lambda: deque(maxlen=history))
-        self._snapshots: Dict[str, RuntimeSnapshot] = {}
-        self._queue_depth: Dict[str, int] = defaultdict(int)
-        self._epoch = 0
+        self._snapshots: Dict[str, RuntimeSnapshot] = {}         # guarded_by: _lock
+        self._queue_depth: Dict[str, int] = defaultdict(int)     # guarded_by: _lock
+        self._epoch = 0                                          # guarded_by: _lock
         self._lock = threading.Lock()
         # injectable timebase: stamps events/snapshots and computes ages —
         # under the scenario simulator's VirtualClock every timestamp is a

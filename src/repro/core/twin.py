@@ -57,7 +57,6 @@ from __future__ import annotations
 import copy
 import dataclasses
 import threading
-import time
 from collections import OrderedDict
 from typing import Callable, Dict, Optional, Tuple
 
@@ -163,7 +162,7 @@ class RecordReplaySurrogate(TwinSurrogate):
                  key_fn: Optional[Callable] = None):
         self.capacity = capacity
         self._key = key_fn or (lambda task: repr(task.payload))
-        self._records: "OrderedDict[str, Dict]" = OrderedDict()
+        self._records: "OrderedDict[str, Dict]" = OrderedDict()  # guarded_by: _lock
         self._lock = threading.Lock()
 
     def observe(self, task, raw: Dict) -> None:
@@ -202,8 +201,12 @@ class TwinState:
     kind: str = "behavioral"               # ode | behavioral | roofline | record
     confidence: float = 1.0                # decays with drift & staleness
     drift_estimate: float = 0.0
-    last_sync: float = dataclasses.field(default_factory=time.time)
-    calibration_ts: float = dataclasses.field(default_factory=time.time)
+    # stamped by the owning TwinSyncManager's clock at register(); a raw
+    # default_factory=time.time here would stamp wall epochs into
+    # virtual-time runs (wall is past the VirtualClock epoch, so such
+    # twins would look fresher-than-now and never go stale)
+    last_sync: Optional[float] = None
+    calibration_ts: Optional[float] = None
     observations: int = 0
     model: Dict = dataclasses.field(default_factory=dict)   # twin parameters
     #: why the twin was last invalidated ("" = not invalidated); pins
@@ -230,7 +233,10 @@ class TwinState:
     DEFAULT_MIN_CONFIDENCE = 0.3
 
     def age_ms(self) -> float:
-        now = self.time_fn() if self.time_fn is not None else time.time()
+        if self.last_sync is None:
+            return 0.0
+        now = self.time_fn() if self.time_fn is not None \
+            else SYSTEM_CLOCK.now()
         return (now - self.last_sync) * 1e3
 
     @property
@@ -285,7 +291,7 @@ class TwinSyncManager:
     DIVERGENCE_EMA = 0.3     # weight of the newest measured divergence
 
     def __init__(self, bus: TelemetryBus, clock: Optional[Clock] = None):
-        self._twins: Dict[str, TwinState] = {}
+        self._twins: Dict[str, TwinState] = {}   # guarded_by: _lock
         self._bus = bus
         # injectable timebase (defaults to the bus's, so twin staleness and
         # telemetry timestamps agree); virtual under the scenario simulator
@@ -301,6 +307,12 @@ class TwinSyncManager:
     def register(self, twin: TwinState) -> TwinState:
         with self._lock:
             twin.time_fn = self.clock.now
+            # stamp unset sync metadata from this manager's timebase so a
+            # freshly built TwinState is "synced now" on ITS clock
+            if twin.last_sync is None:
+                twin.last_sync = self.clock.now()
+            if twin.calibration_ts is None:
+                twin.calibration_ts = self.clock.now()
             self._twins[twin.resource_id] = twin
         return twin
 
@@ -309,7 +321,7 @@ class TwinSyncManager:
             return self._twins.get(resource_id)
 
     # -- the one shared confidence update -------------------------------------
-    def _observe(self, tw: TwinState, drift: float,
+    def _observe(self, tw: TwinState, drift: float,  # planelint: holds(_lock)
                  ts: Optional[float] = None) -> None:
         """The single confidence law (caller holds the lock): blend the
         current confidence toward agreement, never outside [0, 1]."""

@@ -57,15 +57,15 @@ class TwinExecutor:
     #: lifecycle, so a per-instance pool would leak its threads; the shared
     #: pool is lazily created once and bounded at SHADOW_WORKERS threads no
     #: matter how many control planes exist
-    _shared_pool: Optional[ThreadPoolExecutor] = None
+    _shared_pool: Optional[ThreadPoolExecutor] = None  # guarded_by: _shared_pool_lock
     _shared_pool_lock = threading.Lock()
 
     def __init__(self, twins: TwinSyncManager, bus: TelemetryBus):
         self.twins = twins
         self.bus = bus
         self._lock = threading.Lock()
-        self._serve_log: List[Dict] = []
-        self._counters: Dict[str, int] = {
+        self._serve_log: List[Dict] = []     # guarded_by: _lock
+        self._counters: Dict[str, int] = {   # guarded_by: _lock
             "twin_serves": 0,
             "twin_serves_invalid": 0,     # MUST stay 0: serve-validity invariant
             "twin_serve_refusals": 0,
@@ -209,7 +209,7 @@ class TwinExecutor:
             "serve_id": serve_id, "task_id": task.task_id,
             "resource_id": rid, "twin_id": tw.twin_id, "mode": mode,
             "valid_at_serve": ok, "confidence_at_serve": round(conf, 4),
-            "reason": reason, "at": time.time(),
+            "reason": reason, "at": self.twins.now(),
         }
         with self._lock:
             self._serve_log.append(entry)

@@ -40,6 +40,9 @@ credential-less planes with ``UNAUTHORIZED``).  Streaming:
 :meth:`ControlPlaneClient.stream` opens one server-push subscription
 (``/v1/stream``) that replaces a whole polling-cursor loop.
 """
+# planelint: allow-file(clock-seam) — client-side SDK: runs in arbitrary
+# processes against a real HTTP gateway; there is no injected plane clock
+# on this side of the wire, so wall deadlines/backoff are intended.
 from __future__ import annotations
 
 import http.client

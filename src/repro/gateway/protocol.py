@@ -277,6 +277,13 @@ INTERNED_FIELDS = (
     "timestamp", "severity", "fields", "health_status", "drift_score",
     "queue_depth", "readiness", "extra", "execution_ms", "observation_ms",
     "descriptors", "descriptor", "snapshot", "twin", "retry_after_s",
+    # 1.2 additions (appended — see the append-only rule above; planelint's
+    # codec-drift checker pins this against analysis/codec_fields.golden):
+    # the remaining wire-dataclass fields and envelope keys that previously
+    # rode as raw strings
+    "age_of_information_ms", "contamination", "contracts", "fallback_used",
+    "invalidation_reason", "last_updated", "max_twin_age_ms", "reason",
+    "rejected_reason", "repeated", "shadow_divergence", "viability",
 )
 _INTERN_IDS = {s: i for i, s in enumerate(INTERNED_FIELDS)}
 

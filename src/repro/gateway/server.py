@@ -188,7 +188,7 @@ class TelemetryCursorLog:
         are consumed silently — they advance the returned cursor but never
         cut the wait short, so a filtered long-poll on a busy plane stays a
         long-poll instead of degenerating into a tight request loop."""
-        deadline = time.monotonic() + max(0.0, timeout_s)
+        deadline = time.monotonic() + max(0.0, timeout_s)  # planelint: allow(clock-seam) — long-polls block real client sockets
         with self._cond:
             while True:
                 dropped = 0
@@ -216,7 +216,7 @@ class TelemetryCursorLog:
                 # nothing matches: everything past the cursor (if anything)
                 # was filtered out — consume it and keep waiting
                 cursor = max(cursor, self._next_seq - 1)
-                remaining = deadline - time.monotonic()
+                remaining = deadline - time.monotonic()  # planelint: allow(clock-seam) — wire transport
                 if remaining <= 0 or self._closed:
                     return {"events": [], "next_cursor": cursor,
                             "dropped": dropped,
@@ -481,7 +481,7 @@ class _WireLoop:
             self._wakeup()
 
     def call_later(self, delay_s: float, fn: Callable[[], None]) -> None:
-        deadline = time.monotonic() + max(0.0, delay_s)
+        deadline = time.monotonic() + max(0.0, delay_s)  # planelint: allow(clock-seam) — selector-loop timer
 
         def arm() -> None:
             heapq.heappush(self._timers,
@@ -501,7 +501,7 @@ class _WireLoop:
     def _run(self) -> None:
         self._ident = threading.get_ident()
         while self.running:
-            now = time.monotonic()
+            now = time.monotonic()  # planelint: allow(clock-seam) — selector-loop timer
             while self._timers and self._timers[0][0] <= now:
                 _, _, fn = heapq.heappop(self._timers)
                 self._safe(fn)
@@ -510,7 +510,7 @@ class _WireLoop:
             if has_tasks:
                 timeout: Optional[float] = 0.0
             elif self._timers:
-                timeout = max(0.0, self._timers[0][0] - time.monotonic())
+                timeout = max(0.0, self._timers[0][0] - time.monotonic())  # planelint: allow(clock-seam) — selector-loop timer
             else:
                 timeout = None
             try:
@@ -856,7 +856,7 @@ class ControlPlaneGateway:
                                                 capacity=telemetry_capacity)
         self._tickets: Dict[str, Future] = {}
         self._tickets_lock = threading.Lock()
-        self._started_at = time.time()
+        self._started_at = orchestrator.clock.now()
         self._loop = _WireLoop(self, "127.0.0.1", port)
         self.port = self._loop.address[1]
 
@@ -1002,7 +1002,8 @@ class ControlPlaneGateway:
                 breakers = None
         return {
             "plane": self.plane,
-            "uptime_s": round(time.time() - self._started_at, 3),
+            "uptime_s": round(
+                self.orchestrator.clock.now() - self._started_at, 3),
             "resources": resources,
             "breakers": breakers,
             "scheduler": {"pending": self.scheduler.pending},
@@ -1133,7 +1134,7 @@ class ControlPlaneGateway:
         heartbeat_s = min(max(self._q_num(q, "heartbeat_s", 10.0, float),
                               self.MIN_HEARTBEAT_S), self.MAX_HEARTBEAT_S)
         max_s = self._q_num(q, "max_s", 0.0, float)
-        deadline = (time.monotonic() + max_s) if max_s > 0 else None
+        deadline = (time.monotonic() + max_s) if max_s > 0 else None  # planelint: allow(clock-seam) — stream deadline vs real client
         w = handler.begin_stream("application/x-ndjson")
         try:
             streaming.write_chunk(w, streaming.control_line(
@@ -1151,7 +1152,8 @@ class ControlPlaneGateway:
                 for desc in self.orchestrator.registry.all():
                     entry = {"resource_id": desc.resource_id,
                              "kind": "registry", "seq": 0,
-                             "timestamp": time.time(), "severity": "info",
+                             "timestamp": self.orchestrator.clock.now(),
+                             "severity": "info",
                              "fields": {"action": "register", "epoch": epoch,
                                         "plane_id": self.plane_id,
                                         "descriptor": desc.to_dict(),
@@ -1164,7 +1166,7 @@ class ControlPlaneGateway:
                     fields = dict(snap.to_dict(), baseline=True)
                     entry = {"resource_id": desc.resource_id,
                              "kind": "health", "seq": 0,
-                             "timestamp": time.time(),
+                             "timestamp": self.orchestrator.clock.now(),
                              "severity": streaming.event_severity("health",
                                                                   fields),
                              "fields": fields}
@@ -1173,15 +1175,17 @@ class ControlPlaneGateway:
             while True:
                 timeout = heartbeat_s
                 if deadline is not None:
-                    timeout = min(timeout, max(0.0,
-                                               deadline - time.monotonic()))
+                    timeout = min(timeout, max(
+                        0.0,
+                        deadline - time.monotonic()))  # planelint: allow(clock-seam) — wire transport
                 out = self.telemetry_log.read(
                     cursor, timeout_s=timeout, limit=256, match=filt.matches)
                 cursor = out["next_cursor"]
                 for entry in out["events"]:
                     streaming.write_chunk(w, streaming.event_line(entry))
-                if out["closed"] or (deadline is not None
-                                     and time.monotonic() >= deadline):
+                if out["closed"] or (
+                        deadline is not None
+                        and time.monotonic() >= deadline):  # planelint: allow(clock-seam) — wire transport
                     streaming.write_chunk(w, streaming.control_line(
                         "end", cursor=cursor,
                         dropped_events=out["dropped_events"]))

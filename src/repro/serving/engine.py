@@ -163,10 +163,10 @@ class ServingEngine:
         so the continuous loop can free the KV slot immediately."""
         r.generated.append(int(tok))
         if r.first_token_s is None:
-            r.first_token_s = time.monotonic()
+            r.first_token_s = time.monotonic()  # planelint: allow(clock-seam) — serving-engine timebase (ROADMAP: virtualize)
         if len(r.generated) >= r.max_new_tokens:
             r.done = True
-            r.finished_s = time.monotonic()
+            r.finished_s = time.monotonic()  # planelint: allow(clock-seam) — serving-engine timebase (ROADMAP: virtualize)
             if r.deadline_s is not None and r.finished_s > r.deadline_s:
                 r.expired = True
                 self.metrics["deadline_expired"] += 1
@@ -194,7 +194,7 @@ class ServingEngine:
                 ErrorCode.BAD_REQUEST,
                 f"kv cache overflow: padded prompt {S} + max_new_tokens "
                 f"{max_new} exceeds max_seq {self.max_seq}")
-        now = time.monotonic()
+        now = time.monotonic()  # planelint: allow(clock-seam) — serving-engine timebase (ROADMAP: virtualize)
         for r in requests:
             if r.arrived_s is None:
                 r.arrived_s = now
@@ -247,7 +247,7 @@ class ServingEngine:
         DEADLINE) without touching engine state."""
         self._validate(r)
         if r.arrived_s is None:
-            r.arrived_s = time.monotonic()
+            r.arrived_s = time.monotonic()  # planelint: allow(clock-seam) — serving-engine timebase (ROADMAP: virtualize)
         if self.admission is not None:
             self.admission(r, self)
         with self._work:

@@ -70,9 +70,9 @@ class CLSimulator:
     def open_session(self, culture_id: str) -> str:
         if culture_id not in self._cultures:
             raise KeyError(f"unknown culture {culture_id}")
-        time.sleep(self.SESSION_HANDLING_S / 2)
+        time.sleep(self.SESSION_HANDLING_S / 2)  # planelint: allow(clock-seam) — emulated CL-API session dwell
         sid = f"cl-session-{next(_session_ctr):04d}"
-        self._sessions[sid] = CLSession(sid, culture_id, time.time())
+        self._sessions[sid] = CLSession(sid, culture_id, time.time())  # planelint: allow(clock-seam) — external-API wall stamp
         return sid
 
     def upload_stim_program(self, session_id: str, program: Dict) -> None:
@@ -82,7 +82,7 @@ class CLSimulator:
         sess = self._sessions[session_id]
         if sess.program is None:
             raise RuntimeError("no stimulation program uploaded")
-        time.sleep(self.SESSION_HANDLING_S / 2)
+        time.sleep(self.SESSION_HANDLING_S / 2)  # planelint: allow(clock-seam) — emulated CL-API session dwell
         culture = self._cultures[sess.culture_id]
         t0 = time.perf_counter()
         fp, rate, delay = culture.run(sess.program.get("pattern", [1, 0, 1]),

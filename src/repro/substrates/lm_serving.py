@@ -179,7 +179,7 @@ class LmServingAdapter(SubstrateAdapter):
     def _admission(self, r: Request, engine: ServingEngine) -> None:
         if r.deadline_s is None:
             return
-        remaining_ms = (r.deadline_s - time.monotonic()) * 1e3
+        remaining_ms = (r.deadline_s - time.monotonic()) * 1e3  # planelint: allow(clock-seam) — serving-engine timebase (ROADMAP: virtualize)
         backlog = engine.backlog_tokens()
         pred_ms = self.cost.predict_request_ms(len(r.prompt),
                                                r.max_new_tokens, backlog)
@@ -235,7 +235,7 @@ class LmServingAdapter(SubstrateAdapter):
         deadline_s = None
         budget_ms = session.task.latency_budget_ms
         if budget_ms is not None:
-            deadline_s = time.monotonic() + budget_ms / 1e3
+            deadline_s = time.monotonic() + budget_ms / 1e3  # planelint: allow(clock-seam) — serving-engine timebase (ROADMAP: virtualize)
         r = Request(req_id, prompt, max_new_tokens=max_new,
                     deadline_s=deadline_s)
         t0 = time.perf_counter()

@@ -181,7 +181,7 @@ class _PlaneStreamFollower:
                 stream = self._client.stream(
                     cursor=0, kinds=("registry", "health", "breaker"),
                     heartbeat_s=RemotePlaneAdapter.STREAM_HEARTBEAT_S)
-                connected_at = time.time()
+                connected_at = time.time()  # planelint: allow(clock-seam) — wall stamp of a real federation stream
                 with self._lock:
                     self._connected = True
                     self._active = stream

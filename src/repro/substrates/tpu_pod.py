@@ -239,7 +239,7 @@ class TpuPodSubstrate(SubstrateAdapter):
             self._state, metrics = self._step_fn(self._state, batch)
             metrics = {k: float(v) for k, v in metrics.items()}
             if self._injected_slowdown:
-                time.sleep(self._injected_slowdown)
+                time.sleep(self._injected_slowdown)  # planelint: allow(clock-seam) — fault injection: real stall on the jax path
             self._step_times.append((time.perf_counter() - ts) * 1e3)
             self._step += 1
         backend_ms = (time.perf_counter() - t0) * 1e3

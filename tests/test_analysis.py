@@ -1,0 +1,550 @@
+"""planelint: falsifiability tests for every static rule + the runtime witness.
+
+Each checker must (a) catch a deliberately violating fixture and (b) pass
+the fixed twin of the same fixture — a rule that cannot fail is not a
+rule.  The witness tests prove an injected ABBA interleaving is reported
+deterministically, and the sim/chaos-marked tests run the PR 8 scenario
+matrix and concurrent fault campaign under the witness, so the 1000-plane
+simulator doubles as a deadlock fuzzer.
+"""
+import textwrap
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import all_checkers, apply_pragmas, load_project, run_checkers
+from repro.analysis.checkers.clock_seam import ClockSeamChecker
+from repro.analysis.checkers.codec_drift import CodecDriftChecker
+from repro.analysis.checkers.error_taxonomy import ErrorTaxonomyChecker
+from repro.analysis.checkers.guarded_by import GuardedByChecker
+from repro.analysis.checkers.lock_order import (LockOrderChecker,
+                                                build_lock_graph,
+                                                render_graph, _find_cycles)
+from repro.analysis.witness import (LockWitness, WitnessViolation,
+                                    witnessed_locks)
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _fixture(tmp_path: Path, files: dict) -> Path:
+    """Write {relpath: source} under tmp_path/src/repro and return tmp_path."""
+    for rel, src in files.items():
+        path = tmp_path / "src" / "repro" / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(textwrap.dedent(src), encoding="utf-8")
+    return tmp_path
+
+
+def _run(checker, root: Path):
+    return checker.check(load_project(root))
+
+
+# -- clock-seam -------------------------------------------------------------
+
+BAD_CLOCK = """
+    import time
+    from dataclasses import dataclass, field
+
+
+    def stamp():
+        return time.time()
+
+
+    def wait(dt, ts=time.monotonic()):
+        time.sleep(dt)
+
+
+    @dataclass
+    class Snap:
+        at: float = field(default_factory=time.time)
+"""
+
+GOOD_CLOCK = """
+    from typing import Optional
+
+
+    def stamp(now: Optional[float] = None):
+        return now
+
+
+    def wait(clock, dt):
+        clock.sleep(dt)
+"""
+
+
+def test_clock_seam_catches_violations_and_passes_fixed_twin(tmp_path):
+    root = _fixture(tmp_path, {"core/mod.py": BAD_CLOCK,
+                               "core/fixed.py": GOOD_CLOCK})
+    findings = _run(ClockSeamChecker(), root)
+    assert len(findings) == 4        # time.time, param default, sleep, factory
+    assert all(f.rule == "clock-seam" for f in findings)
+    assert all(f.path == "src/repro/core/mod.py" for f in findings)
+    assert all(f.hint for f in findings)
+
+    fixed = _fixture(tmp_path / "fixed", {"core/mod.py": GOOD_CLOCK})
+    assert _run(ClockSeamChecker(), fixed) == []
+
+
+def test_clock_seam_ignores_out_of_scope_modules(tmp_path):
+    root = _fixture(tmp_path, {"kernels/mod.py": BAD_CLOCK})
+    assert _run(ClockSeamChecker(), root) == []
+
+
+def test_pragma_suppresses_same_line_and_next_line(tmp_path):
+    root = _fixture(tmp_path, {"core/mod.py": """
+        import time
+
+
+        def a():
+            return time.time()  # planelint: allow(clock-seam) — test wants wall
+
+        def b():
+            # planelint: allow(clock-seam) — comment-only form covers next line
+            return time.time()
+
+        def c():
+            return time.time()
+    """})
+    project = load_project(root)
+    raw = ClockSeamChecker().check(project)
+    assert len(raw) == 3
+    kept, suppressed = apply_pragmas(project, raw)
+    assert suppressed == 2
+    assert len(kept) == 1 and kept[0].line > 10
+
+
+def test_allow_file_pragma_suppresses_whole_module(tmp_path):
+    root = _fixture(tmp_path, {"core/mod.py": """
+        # planelint: allow-file(clock-seam) — fixture-wide waiver
+        import time
+
+
+        def a():
+            return time.time()
+    """})
+    project = load_project(root)
+    kept, suppressed = apply_pragmas(project, ClockSeamChecker().check(project))
+    assert kept == [] and suppressed == 1
+
+
+# -- lock-order -------------------------------------------------------------
+
+ABBA = """
+    import threading
+
+
+    class S:
+        def __init__(self):
+            self._a = threading.Lock()
+            self._b = threading.Lock()
+
+        def one(self):
+            with self._a:
+                with self._b:
+                    pass
+
+        def two(self):
+            with self._b:
+                with self._a:
+                    pass
+"""
+
+ABBA_FIXED = ABBA.replace("with self._b:\n                with self._a:",
+                          "with self._a:\n                with self._b:")
+
+
+def _errors(findings):
+    return [f for f in findings if f.severity == "error"]
+
+
+def test_lock_order_catches_abba_cycle_and_passes_fixed_twin(tmp_path):
+    findings = _errors(_run(LockOrderChecker(),
+                            _fixture(tmp_path, {"core/mod.py": ABBA})))
+    assert len(findings) == 1
+    assert "cycle" in findings[0].message
+    assert "S._a" in findings[0].message and "S._b" in findings[0].message
+
+    fixed = _fixture(tmp_path / "fixed", {"core/mod.py": ABBA_FIXED})
+    assert _errors(_run(LockOrderChecker(), fixed)) == []
+
+
+def test_lock_order_catches_self_reacquire_of_plain_lock(tmp_path):
+    bad = """
+        import threading
+
+
+        class S:
+            def __init__(self):
+                self._a = threading.Lock()
+
+            def outer(self):
+                with self._a:
+                    self.inner()
+
+            def inner(self):
+                with self._a:
+                    pass
+    """
+    findings = _errors(_run(LockOrderChecker(),
+                            _fixture(tmp_path, {"core/mod.py": bad})))
+    assert findings and all("self-deadlock" in f.message for f in findings)
+
+    fixed = _fixture(tmp_path / "fixed", {
+        "core/mod.py": bad.replace("threading.Lock()", "threading.RLock()")})
+    assert _errors(_run(LockOrderChecker(), fixed)) == []
+
+
+def test_repo_lock_graph_is_acyclic_and_matches_golden():
+    """Regression for the committed golden: the real control plane's static
+    lock graph stays acyclic and exactly matches analysis/lock_order.golden
+    (new edges must be reviewed + regenerated, never drift in silently)."""
+    project = load_project(REPO_ROOT)
+    _model, adj, _sites = build_lock_graph(project)
+    assert _find_cycles(adj) == []
+    golden_path = REPO_ROOT / "src/repro/analysis/lock_order.golden"
+    assert golden_path.exists()
+    golden = [ln.strip() for ln in golden_path.read_text().splitlines()
+              if ln.strip() and not ln.startswith("#")]
+    assert render_graph(adj) == golden
+
+
+# -- guarded-by -------------------------------------------------------------
+
+GUARDED_BAD = """
+    import threading
+
+
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._count = 0   # guarded_by: _lock
+
+        def good(self):
+            with self._lock:
+                self._count += 1
+
+        def bad(self):
+            return self._count
+"""
+
+
+def test_guarded_by_catches_unlocked_access_and_passes_fixed_twin(tmp_path):
+    findings = _run(GuardedByChecker(),
+                    _fixture(tmp_path, {"core/mod.py": GUARDED_BAD}))
+    assert len(findings) == 1
+    assert "read without holding Box._lock" in findings[0].message
+    assert findings[0].line == 15
+
+    fixed_src = GUARDED_BAD.replace(
+        "return self._count",
+        "with self._lock:\n                return self._count")
+    fixed = _fixture(tmp_path / "fixed", {"core/mod.py": fixed_src})
+    assert _run(GuardedByChecker(), fixed) == []
+
+
+def test_guarded_by_trusts_holds_pragma_and_condition_alias(tmp_path):
+    src = """
+        import threading
+
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cond = threading.Condition(self._lock)
+                self._count = 0   # guarded_by: _lock
+
+            def via_condition(self):
+                with self._cond:
+                    self._count += 1
+
+            def helper(self):  # planelint: holds(_lock)
+                self._count += 1
+    """
+    assert _run(GuardedByChecker(),
+                _fixture(tmp_path, {"core/mod.py": src})) == []
+
+
+# -- error-taxonomy ---------------------------------------------------------
+
+ERRORS_MOD = """
+    _CLASSIFIERS = (
+        ("queue full", "QUEUE_SATURATED"),
+        ("deadline", "DEADLINE"),
+    )
+"""
+
+TAXONOMY_BAD = """
+    class Scheduler:
+        def reject_paths(self, task, trace, inv):
+            raise ControlPlaneError("oops", code="queue_saturated")
+
+        def mint(self, task):
+            return InvocationResult(task_id=task.task_id, status="rejected")
+
+        def funnel(self, inv, task):
+            return inv.rejected(task, "mystery wording nobody classifies")
+"""
+
+TAXONOMY_FIXED = """
+    class Scheduler:
+        def reject_paths(self, task, trace, inv):
+            raise ControlPlaneError("oops", code=ErrorCode.QUEUE_SATURATED)
+
+        def funnel(self, inv, task):
+            return inv.rejected(task, "queue full right now")
+
+        def funnel2(self, inv, task, why):
+            return inv.rejected(task, f"dynamic: {why}")
+
+        def funnel3(self, inv, task):
+            return inv.rejected(task, "mystery wording", code=ErrorCode.INTERNAL)
+"""
+
+
+def test_error_taxonomy_catches_all_three_rules_and_passes_fixed_twin(tmp_path):
+    root = _fixture(tmp_path, {"core/errors.py": ERRORS_MOD,
+                               "core/scheduler.py": TAXONOMY_BAD})
+    findings = _run(ErrorTaxonomyChecker(), root)
+    messages = " | ".join(f.message for f in findings)
+    assert len(findings) == 3
+    assert "bare string code" in messages              # R1
+    assert "bypasses the error_code funnel" in messages  # R2
+    assert "matches no" in messages                    # R3
+
+    fixed = _fixture(tmp_path / "fixed", {"core/errors.py": ERRORS_MOD,
+                                          "core/scheduler.py": TAXONOMY_FIXED})
+    assert _run(ErrorTaxonomyChecker(), fixed) == []
+
+
+# -- codec-drift ------------------------------------------------------------
+
+def test_codec_drift_catches_duplicate_and_reorder(tmp_path):
+    root = _fixture(tmp_path, {"gateway/protocol.py": """
+        INTERNED_FIELDS = ("kind", "body", "kind")
+    """})
+    golden = tmp_path / "src/repro/analysis/codec_fields.golden"
+    golden.parent.mkdir(parents=True, exist_ok=True)
+    golden.write_text("[interned]\nkind\nstatus\nbody\n[exempt]\nkind\nbody\nstatus\n")
+    findings = _errors(_run(CodecDriftChecker(), root))
+    messages = " | ".join(f.message for f in findings)
+    assert "duplicate interned field 'kind'" in messages
+    assert "no longer a prefix-extension" in messages
+
+
+def test_codec_drift_appended_entries_warn_until_golden_regenerated(tmp_path):
+    root = _fixture(tmp_path, {"gateway/protocol.py": """
+        INTERNED_FIELDS = ("kind", "body", "fresh")
+    """})
+    golden = tmp_path / "src/repro/analysis/codec_fields.golden"
+    golden.parent.mkdir(parents=True, exist_ok=True)
+    golden.write_text("[interned]\nkind\nbody\n[exempt]\nkind\nbody\nfresh\n")
+    findings = _run(CodecDriftChecker(), root)
+    assert _errors(findings) == []
+    warns = [f for f in findings if f.severity == "warn"]
+    assert len(warns) == 1 and "appended beyond the golden: fresh" in warns[0].message
+
+    # regenerating the golden absorbs the appended entry and preserves exempt
+    CodecDriftChecker().update_goldens(load_project(root))
+    assert _run(CodecDriftChecker(), root) == []
+
+
+def test_codec_drift_catches_uninterned_wire_field(tmp_path):
+    root = _fixture(tmp_path, {
+        "gateway/protocol.py": """
+            INTERNED_FIELDS = ("kind",)
+
+            def encode(env):
+                return {"kind": env.kind, "payload": env.payload}
+        """})
+    golden = tmp_path / "src/repro/analysis/codec_fields.golden"
+    golden.parent.mkdir(parents=True, exist_ok=True)
+    golden.write_text("[interned]\nkind\n[exempt]\n")
+    findings = _errors(_run(CodecDriftChecker(), root))
+    assert len(findings) == 1
+    assert "wire field 'payload'" in findings[0].message
+
+
+# -- whole-repo gate --------------------------------------------------------
+
+def test_repo_is_strict_clean_under_all_checkers():
+    """The acceptance gate CI runs: zero errors AND zero warnings on the
+    real repo across all five rules (pragma-suppressed findings allowed)."""
+    project = load_project(REPO_ROOT)
+    findings, _suppressed = run_checkers(project, all_checkers())
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_cli_strict_exits_zero_on_repo():
+    from repro.analysis.__main__ import main
+    assert main(["--strict"]) == 0
+
+
+def test_cli_rejects_unknown_rule():
+    from repro.analysis.__main__ import main
+    with pytest.raises(SystemExit):
+        main(["--rule", "no-such-rule"])
+
+
+# -- runtime witness --------------------------------------------------------
+
+def _run_abba_once() -> LockWitness:
+    """Deterministically interleave an ABBA acquisition with events: T1
+    takes A then attempts B; T2 takes B then attempts A.  Timeouts keep
+    the test from deadlocking — the ORDER edges are recorded at attempt
+    time, so the cycle is witnessed either way."""
+    with witnessed_locks() as w:
+        lock_a = threading.Lock()
+        lock_b = threading.Lock()
+    t1_has_a = threading.Event()
+    t2_has_b = threading.Event()
+
+    def t1():
+        with lock_a:
+            t1_has_a.set()
+            t2_has_b.wait(timeout=5)
+            if lock_b.acquire(timeout=0.05):
+                lock_b.release()
+
+    def t2():
+        t1_has_a.wait(timeout=5)
+        with lock_b:
+            t2_has_b.set()
+            if lock_a.acquire(timeout=0.5):
+                lock_a.release()
+
+    threads = [threading.Thread(target=t1), threading.Thread(target=t2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return w
+
+
+def test_witness_reports_injected_abba_deterministically():
+    first = _run_abba_once().report()
+    second = _run_abba_once().report()
+    assert len(first["cycles"]) == 1
+    assert len(first["cycles"][0]) == 2
+    with pytest.raises(WitnessViolation, match="lock-order cycle"):
+        _run_abba_once().assert_clean()
+    # byte-identical across runs: no timestamps, sites not instances
+    assert first == second
+
+
+def test_witness_consistent_order_is_clean():
+    with witnessed_locks() as w:
+        lock_a = threading.Lock()
+        lock_b = threading.Lock()
+
+    def worker():
+        for _ in range(50):
+            with lock_a:
+                with lock_b:
+                    pass
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(w.edges()) == 1
+    w.assert_clean()
+
+
+def test_witness_flags_self_reacquire_of_plain_lock():
+    with witnessed_locks() as w:
+        lock = threading.Lock()
+        rlock = threading.RLock()
+    with lock:
+        assert not lock.acquire(timeout=0.01)   # recorded before blocking
+    with rlock:
+        with rlock:                             # reentrant: fine
+            pass
+    assert any("self-reacquire" in v for v in w.violations())
+    assert len(w.violations()) == 1
+
+
+def test_witness_flags_hold_while_blocking_on_condition():
+    with witnessed_locks() as w:
+        outer = threading.Lock()
+        cond = threading.Condition(threading.Lock())
+
+    def bad():
+        with outer:
+            with cond:
+                cond.wait(timeout=0.01)
+
+    t = threading.Thread(target=bad)
+    t.start()
+    t.join()
+    assert any("hold-while-blocking" in v for v in w.violations())
+    with pytest.raises(WitnessViolation, match="hold-while-blocking"):
+        w.assert_clean()
+
+
+def test_witness_condition_wait_for_round_trip_is_clean():
+    with witnessed_locks() as w:
+        cond = threading.Condition(threading.Lock())
+        done = []
+
+    def waiter():
+        with cond:
+            assert cond.wait_for(lambda: done, timeout=5)
+
+    def setter():
+        with cond:
+            done.append(1)
+            cond.notify_all()
+
+    threads = [threading.Thread(target=waiter), threading.Thread(target=setter)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    w.assert_clean()
+
+
+# -- witness under the PR 8 scenario matrix / chaos campaign ----------------
+
+@pytest.mark.sim
+def test_witness_clean_under_scenario_matrix():
+    """The virtual-time fleet simulator doubles as a deadlock fuzzer: every
+    scenario builder runs under the witness and the observed acquisition
+    graph must stay acyclic with no blocking violations."""
+    from repro.core.simulator import FleetSimulator, scenario_matrix
+
+    with witnessed_locks() as w:
+        for sc in scenario_matrix(planes=20, substrates_per_plane=4,
+                                  duration_s=120.0):
+            report = FleetSimulator(sc, seed=11).run()
+            assert report["real_sleep_calls"] == 0
+    assert w.report()["locks"] > 100
+    w.assert_clean()
+
+
+@pytest.mark.chaos
+def test_witness_clean_under_concurrent_chaos_campaign():
+    """Real threads, real locks: the full concurrent fault campaign runs
+    with every control-plane lock witnessed.  This covers the static
+    checker's known blind spot (opaque clock/subscriber callables)."""
+    from repro.core import Orchestrator, TaskRequest
+    from repro.core.faults import (build_concurrent_campaign,
+                                   run_campaign_concurrent)
+    from repro.substrates import standard_testbed
+
+    def _task(i):
+        return TaskRequest(function="inference", input_modality="vector",
+                           output_modality="vector",
+                           payload=[0.2, 0.4, 0.1, 0.3])
+
+    with witnessed_locks() as w:
+        orch = Orchestrator(health={"cooldown_s": 0.2, "probes_to_close": 2})
+        standard_testbed(orch)
+        report = run_campaign_concurrent(
+            orch, build_concurrent_campaign(), workers=8,
+            load_template=_task, load_tasks=24)
+        assert report["all_pass"], \
+            [r for r in report["rows"] if not r["pass"]]
+    assert w.report()["locks"] > 50
+    w.assert_clean()
