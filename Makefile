@@ -27,14 +27,18 @@
 #   make bench-hierarchy   multi-hop chain + streaming fan-in benchmark
 #                          (per-hop added latency <= single-hop margin,
 #                          >= 2x fewer requests than cursor polling)
-#   make serving-smoke     ~30s LM serving drill: engine/adapter suite +
-#                          quick continuous-batching trial and a 16-session
-#                          gateway flood (structured DEADLINE refusals,
-#                          zero mid-decode expiries asserted)
+#   make serving-smoke     LM serving drill: engine/adapter + paged-KV
+#                          suites (allocator properties, paged/contiguous
+#                          parity), quick continuous-batching + paged
+#                          trials and a 16-session gateway flood
+#                          (structured DEADLINE/QUEUE_SATURATED refusals,
+#                          zero mid-decode expiries, zero page leaks)
 #   make bench-serving     full LM serving benchmark: continuous vs fixed
 #                          batch goodput on a mixed-length trace (asserts
-#                          >= 2x) + 128 concurrent gateway sessions
-#                          (bounded p99 TTFT, admission refusals)
+#                          >= 2x), paged-KV parity/capacity/prefix gates
+#                          (>= 1x goodput, 2x capacity, >= 30% TTFT cut)
+#                          + 128 concurrent gateway sessions (bounded
+#                          p99 TTFT, admission refusals)
 #   make test-sim          virtual-time suites: clock semantics, scheduler
 #                          timebase regressions, simulator invariants
 #   make sim-smoke         CI-sized scenario matrix: >=100 planes on pure
@@ -91,7 +95,8 @@ hierarchy-smoke:
 	$(PYTHON) -m benchmarks.bench_hierarchy --smoke
 
 serving-smoke:
-	$(PYTHON) -m pytest -q tests/test_serving.py -m "not slow"
+	$(PYTHON) -m pytest -q tests/test_serving.py tests/test_kv_pages.py \
+		tests/test_serving_paged.py -m "not slow"
 	$(PYTHON) -m benchmarks.bench_serving --smoke
 
 bench-serving:

@@ -284,6 +284,11 @@ INTERNED_FIELDS = (
     "age_of_information_ms", "contamination", "contracts", "fallback_used",
     "invalidation_reason", "last_updated", "max_twin_age_ms", "reason",
     "rejected_reason", "repeated", "shadow_divergence", "viability",
+    # 1.3 additions: paged-KV serving capacity telemetry + structured
+    # QUEUE_SATURATED refusal detail
+    "page_size", "pool_pages", "pool_pages_used", "pool_pages_free",
+    "pool_utilization", "prefix_hit_rate", "prefix_cached_tokens",
+    "backlog_prefill_tokens", "needed_pages", "reserved_pages",
 )
 _INTERN_IDS = {s: i for i, s in enumerate(INTERNED_FIELDS)}
 

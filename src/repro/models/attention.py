@@ -185,10 +185,29 @@ def self_attention(cfg, p: dict, x, positions, *, causal=True,
     return out_proj(p, o)
 
 
-def prefill_attention(cfg, p: dict, x, positions, *, window: Optional[int] = None):
-    """Self-attention that also returns the KV cache (ring-buffered if local)."""
+def prefill_attention(cfg, p: dict, x, positions, *, window: Optional[int] = None,
+                      past: Optional[dict] = None, past_len: int = 0):
+    """Self-attention that also returns the KV cache (ring-buffered if local).
+
+    With ``past`` (k/v of an already-cached prefix, (B, past_len, K, hd)),
+    only the suffix is computed: queries at ``positions`` (absolute, i.e.
+    ``past_len + arange(S)``) attend over concat(past, suffix) and the
+    returned cache covers the *suffix only* — the prefix's pages already
+    hold its K/V.
+    """
     from repro.distributed.sp_attention import maybe_sp_attention_fused
     from repro.distributed.sp_block import sp_gqa_block
+
+    if past is not None:
+        q, k, v = project_qkv(p, x, sp_constrain=True)
+        if cfg.family != "encdec":
+            q = cm.rope(q, positions, cfg.rope_theta)
+            k = cm.rope(k, positions, cfg.rope_theta)
+        k_all = jnp.concatenate([past["k"].astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([past["v"].astype(v.dtype), v], axis=1)
+        o = chunked_attention(q, k_all, v_all, causal=True, window=window,
+                              chunk=cfg.attn_chunk, q_offset=past_len)
+        return out_proj(p, o), {"k": k, "v": v}
 
     blk = sp_gqa_block(cfg, p, x, positions, causal=True, window=window,
                        with_cache=True)
@@ -255,6 +274,46 @@ def decode_attention(cfg, p: dict, x, cache: dict, pos, *,
                       window=window, kv_valid=kv_valid)
     o = o.reshape(B, 1, H, hd)
     return out_proj(p, o), {"k": k_cache, "v": v_cache}
+
+
+def paged_decode_attention(cfg, p: dict, x, cache: dict, pos, tables, *,
+                           page_size: int):
+    """One-token decode against a block-granular paged KV pool.
+
+    cache k/v: (num_pages+1, page_size, K, hd) — row 0 is the null page
+    that dead batch rows write into and no one reads.
+    tables: (B, max_pages) int32 page ids (0 where unallocated) — the
+    per-row page-index vectors generalizing the per-row position vectors.
+    pos: (B,) per-row absolute positions.  The engine guarantees every
+    position <= pos[b] is backed by a real page in row b's table, and that
+    the write page (block ``pos // page_size``) is private to row b —
+    shared prefix pages are immutable by construction.
+    """
+    q, k_new, v_new = project_qkv(p, x)           # (B, 1, ., .)
+    pos = jnp.asarray(pos, jnp.int32)
+    posv = pos[:, None]
+    if cfg.family != "encdec":
+        q = cm.rope(q, posv, cfg.rope_theta)
+        k_new = cm.rope(k_new, posv, cfg.rope_theta)
+    k_pool, v_pool = cache["k"], cache["v"]
+    B = q.shape[0]
+    b = jnp.arange(B)
+    pid = tables[b, pos // jnp.int32(page_size)]  # (B,) write page per row
+    off = pos % jnp.int32(page_size)
+    k_pool = k_pool.at[pid, off].set(k_new[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[pid, off].set(v_new[:, 0].astype(v_pool.dtype))
+    K, hd = k_pool.shape[-2], k_pool.shape[-1]
+    T = tables.shape[1] * page_size
+    k = k_pool[tables].reshape(B, T, K, hd)       # gather through the table
+    v = v_pool[tables].reshape(B, T, K, hd)
+    idx = jnp.arange(T, dtype=jnp.int32)
+    kv_valid = idx[None, :] <= pos[:, None]
+    H = q.shape[2]
+    qg = q.reshape(B, 1, K, H // K, hd)
+    o = _block_attend(qg, k, v, posv, idx, causal=True, window=None,
+                      kv_valid=kv_valid)
+    o = o.reshape(B, 1, H, hd)
+    return out_proj(p, o), {"k": k_pool, "v": v_pool}
 
 
 def cross_attention(cfg, p: dict, x, kv_cache: dict):

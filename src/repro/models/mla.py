@@ -13,6 +13,8 @@ Two execution paths:
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -102,8 +104,37 @@ def mla_attention(cfg, p: dict, x, positions):
     return constrain_residual(y)
 
 
-def mla_prefill(cfg, p: dict, x, positions):
+def mla_prefill(cfg, p: dict, x, positions, *, past: Optional[dict] = None,
+                past_len: int = 0):
+    """With ``past`` (latents of an already-cached prefix), only the suffix
+    is computed on the decompressed path: suffix queries at absolute
+    ``positions`` attend over concat(past, suffix) latents, and the
+    returned cache covers the suffix only."""
     from repro.distributed.sp_block import sp_mla_block
+
+    if past is not None:
+        a = cfg.mla
+        c_suf, kr_suf = _latent(cfg, p, x, positions)
+        c_all = jnp.concatenate([past["c_kv"].astype(c_suf.dtype), c_suf],
+                                axis=1)
+        kr_all = jnp.concatenate([past["k_rope"].astype(kr_suf.dtype), kr_suf],
+                                 axis=1)
+        q_nope, q_rope = _queries(cfg, p, x, positions)
+        k_nope = jnp.einsum("btr,rhk->bthk", c_all, p["w_uk"])
+        v = jnp.einsum("btr,rhk->bthk", c_all, p["w_uv"])
+        B, T = c_all.shape[0], c_all.shape[1]
+        k_rope_h = jnp.broadcast_to(kr_all[:, :, None, :],
+                                    (B, T, cfg.num_heads, a.qk_rope_head_dim))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+        qk_hd, v_hd = q.shape[-1], v.shape[-1]
+        if v_hd < qk_hd:
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_hd - v_hd)))
+        o = chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                              q_offset=past_len)
+        o = o[..., :a.v_head_dim]
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"]).astype(x.dtype)
+        return out, {"c_kv": c_suf, "k_rope": kr_suf}
 
     blk = sp_mla_block(cfg, p, x, positions, with_cache=True)
     if blk is not None:
@@ -113,13 +144,29 @@ def mla_prefill(cfg, p: dict, x, positions):
     return out, {"c_kv": c_kv, "k_rope": k_rope}
 
 
+def _absorbed_read(cfg, p: dict, x_dtype, q_nope, q_rope, c_kv, k_rope, valid):
+    """Absorbed-path scores + latent readout shared by the contiguous and
+    paged decode variants.  valid: bool mask broadcastable to (B,1,H,T)."""
+    a = cfg.mla
+    # absorb W_uk into q: (B,1,H,nope) x (r,H,nope) -> (B,1,H,r)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+    scores = jnp.einsum("bshr,btr->bsht", q_lat, c_kv).astype(jnp.float32)
+    scores = scores + jnp.einsum("bshk,btk->bsht", q_rope,
+                                 k_rope).astype(jnp.float32)
+    scores = scores / np.sqrt(a.qk_nope_head_dim + a.qk_rope_head_dim)
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x_dtype)
+    o_lat = jnp.einsum("bsht,btr->bshr", probs, c_kv)             # latent readout
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, p["w_uv"])            # absorb W_uv
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]).astype(x_dtype)
+
+
 def mla_decode(cfg, p: dict, x, cache: dict, pos):
     """Absorbed decode: scores/read run directly in the 512-d latent space.
 
     ``pos`` is a scalar or a (B,) vector of per-row absolute positions
     (continuous batching).
     """
-    a = cfg.mla
     pos = jnp.asarray(pos, jnp.int32)
     per_row = pos.ndim == 1
     posv = pos[:, None] if per_row else jnp.full((1,), pos, jnp.int32)
@@ -135,18 +182,41 @@ def mla_decode(cfg, p: dict, x, cache: dict, pos):
         k_rope = jax.lax.dynamic_update_slice_in_dim(
             cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
 
-    # absorb W_uk into q: (B,1,H,nope) x (r,H,nope) -> (B,1,H,r)
-    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
-    scores = jnp.einsum("bshr,btr->bsht", q_lat, c_kv).astype(jnp.float32)
-    scores = scores + jnp.einsum("bshk,btk->bsht", q_rope, k_rope).astype(jnp.float32)
-    scores = scores / np.sqrt(a.qk_nope_head_dim + a.qk_rope_head_dim)
     T = c_kv.shape[1]
     idx = jnp.arange(T, dtype=jnp.int32)
     valid = (idx[None, :] <= pos[:, None]) if per_row else (idx <= pos)
     valid = valid[:, None, None, :] if per_row else valid[None, None, None, :]
-    scores = jnp.where(valid, scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    o_lat = jnp.einsum("bsht,btr->bshr", probs, c_kv)             # latent readout
-    o = jnp.einsum("bshr,rhk->bshk", o_lat, p["w_uv"])            # absorb W_uv
-    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"]).astype(x.dtype)
+    out = _absorbed_read(cfg, p, x.dtype, q_nope, q_rope, c_kv, k_rope, valid)
     return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_paged_decode(cfg, p: dict, x, cache: dict, pos, tables, *,
+                     page_size: int):
+    """Absorbed decode against a block-granular paged latent pool.
+
+    cache c_kv: (num_pages+1, page_size, kv_lora); k_rope likewise — row 0
+    is the null page.  tables: (B, max_pages) int32 page ids (0 where
+    unallocated); pos: (B,) per-row absolute positions.  Same engine
+    guarantees as ``paged_decode_attention``: valid positions are backed
+    by real pages and the write page is private to its row.
+    """
+    a = cfg.mla
+    pos = jnp.asarray(pos, jnp.int32)
+    posv = pos[:, None]
+    q_nope, q_rope = _queries(cfg, p, x, posv)                    # (B,1,H,·)
+    c_new, kr_new = _latent(cfg, p, x, posv)
+    B = x.shape[0]
+    b = jnp.arange(B)
+    pid = tables[b, pos // jnp.int32(page_size)]
+    off = pos % jnp.int32(page_size)
+    c_pool = cache["c_kv"].at[pid, off].set(
+        c_new[:, 0].astype(cache["c_kv"].dtype))
+    kr_pool = cache["k_rope"].at[pid, off].set(
+        kr_new[:, 0].astype(cache["k_rope"].dtype))
+    T = tables.shape[1] * page_size
+    c_kv = c_pool[tables].reshape(B, T, a.kv_lora_rank)
+    k_rope = kr_pool[tables].reshape(B, T, a.qk_rope_head_dim)
+    idx = jnp.arange(T, dtype=jnp.int32)
+    valid = (idx[None, :] <= pos[:, None])[:, None, None, :]
+    out = _absorbed_read(cfg, p, x.dtype, q_nope, q_rope, c_kv, k_rope, valid)
+    return out, {"c_kv": c_pool, "k_rope": kr_pool}

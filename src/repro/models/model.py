@@ -16,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import common as cm
-from repro.models.transformer import LayerDef, Stack
+from repro.models.transformer import (_PAGED_MIXER_LEAVES, LayerDef, Stack,
+                                      build_layer_defs)
 from repro.distributed.ctx import constrain
 
 
@@ -189,3 +190,93 @@ def build_decode_step(cfg):
 
 def decode_cache(cfg, batch: int, seq_len: int, abstract: bool = False):
     return _decoder(cfg).cache(batch, seq_len, abstract)
+
+
+# ---------------------------------------------------------------------------
+# paged serving (block-granular KV pool + prefix reuse)
+
+
+def decode_cache_paged(cfg, batch: int, seq_len: int, pool_pages: int,
+                       page_size: int, abstract: bool = False):
+    """Decode cache with attn/mla leaves in ``(pool_pages+1, page_size, ...)``
+    pool layout (row 0 = null page); resident leaves stay ``(batch, ...)``."""
+    return _decoder(cfg).paged_cache(batch, seq_len, pool_pages, page_size,
+                                     abstract)
+
+
+def paged_cache_flags(cfg):
+    """Cache-structured bool tree marking pool-layout leaves."""
+    return _decoder(cfg).paged_flags()
+
+
+def paged_support(cfg):
+    """-> (any_paged, prefix_ok): whether the arch has pageable cache
+    leaves at all, and whether prefix-cache reuse is sound for it (every
+    mixer pageable, no cross-attention, no encoder/image context)."""
+    defs = build_layer_defs(cfg)
+    any_paged = any(d.mixer in _PAGED_MIXER_LEAVES for d in defs)
+    prefix_ok = (cfg.family not in ("encdec", "vision")
+                 and all(d.mixer in _PAGED_MIXER_LEAVES and not d.cross
+                         for d in defs))
+    return any_paged, prefix_ok
+
+
+def _past_seq_len(past) -> int:
+    """Static prefix length from a past tree's leaf shapes (trace-time)."""
+    for path, leaf in jax.tree_util.tree_flatten_with_path(past)[0]:
+        name = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                name = p.key
+                break
+        if name in ("k", "v"):
+            return int(leaf.shape[-3])
+        if name in ("c_kv", "k_rope"):
+            return int(leaf.shape[-2])
+    raise ValueError("past tree has no recognizable KV leaf")
+
+
+def build_prefill_past_step(cfg):
+    """Suffix-only prefill against an already-cached prefix.
+
+    ``past`` is a cache-structured tree of the prefix's K/V (latents for
+    MLA) at batch 1; its static leaf shapes carry the prefix length, so the
+    jit specializes per (suffix_len, prefix_len) pair.  Only archs where
+    :func:`paged_support` reports ``prefix_ok`` may use this.
+    """
+    dec = _decoder(cfg)
+
+    def prefill_past_step(params, batch, past):
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        past_len = _past_seq_len(past)
+        positions = past_len + jnp.arange(S, dtype=jnp.int32)
+        x = _embed_tokens(cfg, params, tokens)
+        feats, cache, _ = dec.prefill(params["decoder"], x, positions, None,
+                                      past=past, past_len=past_len)
+        feats = cm.apply_norm(cfg, params["final_norm"], feats[:, -1:])
+        logits = jnp.einsum("bsd,dv->bsv", feats,
+                            _logit_kernel(cfg, params)).astype(jnp.float32)
+        return cache, logits[:, 0]
+
+    return prefill_past_step
+
+
+def build_decode_step_paged(cfg, page_size: int):
+    dec = _decoder(cfg)
+
+    def decode_step(params, cache, token, pos, tables):
+        """token: (B,1) int32; pos: (B,) absolute positions; tables:
+        (B, max_pages) int32 page ids (0 = unallocated/null)."""
+        x = _embed_tokens(cfg, params, token)
+        if cfg.family == "encdec":
+            pe = _sinusoid(pos, cfg.d_model).astype(x.dtype)
+            x = x + (pe[:, None] if jnp.ndim(pos) == 1 else pe[None])
+        feats, cache, _ = dec.decode(params["decoder"], x, cache, pos,
+                                     tables=tables, page_size=page_size)
+        feats = cm.apply_norm(cfg, params["final_norm"], feats)
+        logits = jnp.einsum("bsd,dv->bsv", feats,
+                            _logit_kernel(cfg, params)).astype(jnp.float32)
+        return cache, logits[:, 0]
+
+    return decode_step

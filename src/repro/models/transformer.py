@@ -167,6 +167,44 @@ def stack_cache(tree, n: int, abstract: bool):
     return jax.tree.map(f, tree)
 
 
+#: cache leaves that page (global, unbounded-growth KV); every other leaf is
+#: *resident* — bounded per-row state (ring-buffer window, recurrent/rwkv
+#: carries, precomputed cross K/V) that stays slot-granular
+_PAGED_MIXER_LEAVES = {"attn": ("k", "v"), "mla": ("c_kv", "k_rope")}
+
+
+def layer_cache_paged(cfg, ld: LayerDef, batch: int, seq_len: int,
+                      pool_pages: int, page_size: int, abstract: bool):
+    """Like :func:`layer_cache`, but pageable leaves take the pool layout
+    ``(pool_pages + 1, page_size, ...)`` — row 0 is the null/trash page —
+    shared across batch rows via per-row page tables.  Resident leaves keep
+    their slot-granular ``(batch, ...)`` layout."""
+    c = layer_cache(cfg, ld, batch, seq_len, abstract)
+    pdt = jnp.dtype(cfg.param_dtype)
+
+    def mk(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    if ld.mixer == "attn":
+        K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        c["k"] = mk((pool_pages + 1, page_size, K, hd), pdt)
+        c["v"] = mk((pool_pages + 1, page_size, K, hd), pdt)
+    elif ld.mixer == "mla":
+        a = cfg.mla
+        c["c_kv"] = mk((pool_pages + 1, page_size, a.kv_lora_rank), pdt)
+        c["k_rope"] = mk((pool_pages + 1, page_size, a.qk_rope_head_dim), pdt)
+    return c
+
+
+def layer_paged_flags(cfg, ld: LayerDef) -> dict:
+    """Cache-structured tree of bools: True on pageable leaves."""
+    paged = _PAGED_MIXER_LEAVES.get(ld.mixer, ())
+    base = layer_cache(cfg, ld, 1, 2, abstract=True)
+    return {name: name in paged for name in base}
+
+
 # ---------------------------------------------------------------------------
 # layer application
 
@@ -225,13 +263,21 @@ def apply_layer_train(cfg, ld, p, x, positions, ctx, aux, bidirectional=False):
     return x, aux
 
 
-def apply_layer_prefill(cfg, ld, p, x, positions, ctx, aux):
-    """Train-path compute + emit decode cache."""
+def apply_layer_prefill(cfg, ld, p, x, positions, ctx, aux,
+                        past=None, past_len=0):
+    """Train-path compute + emit decode cache.
+
+    ``past`` (prefix-cache reuse) carries this layer's already-computed
+    prefix K/V (or latents); only attn/mla mixers support it — the engine
+    gates prefix sharing to stacks made purely of those."""
     x = constrain(x, ("batch", "act_seq", None))
     cache = {}
     h = cm.apply_norm(cfg, p["ln1"], x)
+    if past is not None and ld.mixer not in _PAGED_MIXER_LEAVES:
+        raise ValueError(f"prefix reuse unsupported for mixer {ld.mixer!r}")
     if ld.mixer == "attn":
-        out, kv = attn.prefill_attention(cfg, p["mixer"], h, positions)
+        out, kv = attn.prefill_attention(cfg, p["mixer"], h, positions,
+                                         past=past, past_len=past_len)
         # right-pad the cache to the cell's full seq_len is done by caller
         cache.update(kv)
     elif ld.mixer == "local_attn":
@@ -239,7 +285,8 @@ def apply_layer_prefill(cfg, ld, p, x, positions, ctx, aux):
                                          window=cfg.local_window)
         cache.update(kv)
     elif ld.mixer == "mla":
-        out, kv = mla_mod.mla_prefill(cfg, p["mixer"], h, positions)
+        out, kv = mla_mod.mla_prefill(cfg, p["mixer"], h, positions,
+                                      past=past, past_len=past_len)
         cache.update(kv)
     elif ld.mixer == "recurrent":
         out, (hf, conv) = rglru_mod.rglru_block(cfg, p["mixer"], h)
@@ -268,14 +315,24 @@ def apply_layer_prefill(cfg, ld, p, x, positions, ctx, aux):
     return x, constrain_cache(cache), aux
 
 
-def apply_layer_decode(cfg, ld, p, x, cache, pos, aux):
-    """x: (B,1,d). Returns (x, new_cache)."""
+def apply_layer_decode(cfg, ld, p, x, cache, pos, aux,
+                       tables=None, page_size=None):
+    """x: (B,1,d). Returns (x, new_cache).
+
+    With ``tables`` (paged serving), attn/mla leaves live in a shared page
+    pool gathered through per-row page tables; resident mixers are
+    untouched — they keep per-row state and the per-row ``pos`` vector."""
     x = constrain(x, ("batch", "act_seq", None))
     h = cm.apply_norm(cfg, p["ln1"], x)
     new_cache = dict(cache)
     if ld.mixer == "attn":
-        out, kv = attn.decode_attention(cfg, p["mixer"], h,
-                                        {"k": cache["k"], "v": cache["v"]}, pos)
+        if tables is not None:
+            out, kv = attn.paged_decode_attention(
+                cfg, p["mixer"], h, {"k": cache["k"], "v": cache["v"]}, pos,
+                tables, page_size=page_size)
+        else:
+            out, kv = attn.decode_attention(
+                cfg, p["mixer"], h, {"k": cache["k"], "v": cache["v"]}, pos)
         new_cache.update(kv)
     elif ld.mixer == "local_attn":
         out, kv = attn.decode_attention(cfg, p["mixer"], h,
@@ -283,9 +340,15 @@ def apply_layer_decode(cfg, ld, p, x, cache, pos, aux):
                                         window=cfg.local_window)
         new_cache.update(kv)
     elif ld.mixer == "mla":
-        out, kv = mla_mod.mla_decode(cfg, p["mixer"], h,
-                                     {"c_kv": cache["c_kv"],
-                                      "k_rope": cache["k_rope"]}, pos)
+        if tables is not None:
+            out, kv = mla_mod.mla_paged_decode(
+                cfg, p["mixer"], h,
+                {"c_kv": cache["c_kv"], "k_rope": cache["k_rope"]}, pos,
+                tables, page_size=page_size)
+        else:
+            out, kv = mla_mod.mla_decode(cfg, p["mixer"], h,
+                                         {"c_kv": cache["c_kv"],
+                                          "k_rope": cache["k_rope"]}, pos)
         new_cache.update(kv)
     elif ld.mixer == "recurrent":
         out, hf, conv = rglru_mod.rglru_decode(cfg, p["mixer"], h,
@@ -360,6 +423,40 @@ class Stack:
                            for i, d in enumerate(self.suffix)}
         return c
 
+    def paged_cache(self, batch: int, seq_len: int, pool_pages: int,
+                    page_size: int, abstract: bool = False) -> dict:
+        """Decode cache with pageable leaves in pool layout (null page at
+        row 0); ``seq_len`` still sizes the resident leaves."""
+        def lc(d):
+            return layer_cache_paged(self.cfg, d, batch, seq_len,
+                                     pool_pages, page_size, abstract)
+        c = {}
+        if self.prefix:
+            c["prefix"] = {str(i): lc(d) for i, d in enumerate(self.prefix)}
+        if self.reps:
+            c["blocks"] = {str(i): stack_cache(lc(d), self.reps, abstract)
+                           for i, d in enumerate(self.cycle)}
+        if self.suffix:
+            c["suffix"] = {str(i): lc(d) for i, d in enumerate(self.suffix)}
+        return c
+
+    def paged_flags(self) -> dict:
+        """Cache-structured bool tree: True on pageable (pool-layout) leaves.
+        Matches :meth:`cache`'s tree structure exactly (bools under
+        ``blocks`` are not layer-stacked — a leaf's pagedness is uniform
+        across the scanned cycle repetitions)."""
+        c = {}
+        if self.prefix:
+            c["prefix"] = {str(i): layer_paged_flags(self.cfg, d)
+                           for i, d in enumerate(self.prefix)}
+        if self.reps:
+            c["blocks"] = {str(i): layer_paged_flags(self.cfg, d)
+                           for i, d in enumerate(self.cycle)}
+        if self.suffix:
+            c["suffix"] = {str(i): layer_paged_flags(self.cfg, d)
+                           for i, d in enumerate(self.suffix)}
+        return c
+
     # -- forward ------------------------------------------------------------
     def train(self, p: dict, x, positions, ctx=None):
         cfg = self.cfg
@@ -381,36 +478,49 @@ class Stack:
                                        ctx, aux, self.bidirectional)
         return x, aux
 
-    def prefill(self, p: dict, x, positions, ctx=None):
+    def prefill(self, p: dict, x, positions, ctx=None, past=None, past_len=0):
+        """``past`` (prefix-cache reuse): a cache-structured tree of this
+        stack's prefix K/V at length ``past_len``; only the suffix in ``x``
+        is computed and the emitted cache covers that suffix."""
         cfg = self.cfg
         aux = jnp.zeros((), jnp.float32)
         caches = {}
         if self.prefix:
             caches["prefix"] = {}
             for i, d in enumerate(self.prefix):
-                x, c, aux = apply_layer_prefill(cfg, d, p["prefix"][str(i)], x,
-                                                positions, ctx, aux)
+                x, c, aux = apply_layer_prefill(
+                    cfg, d, p["prefix"][str(i)], x, positions, ctx, aux,
+                    past=None if past is None else past["prefix"][str(i)],
+                    past_len=past_len)
                 caches["prefix"][str(i)] = c
         if self.reps:
-            def body(carry, bp):
+            def body(carry, scanned):
                 x, aux = carry
+                bp, bpast = scanned if past is not None else (scanned, None)
                 cs = {}
                 for i, d in enumerate(self.cycle):
-                    x, c, aux = apply_layer_prefill(cfg, d, bp[str(i)], x,
-                                                    positions, ctx, aux)
+                    x, c, aux = apply_layer_prefill(
+                        cfg, d, bp[str(i)], x, positions, ctx, aux,
+                        past=None if bpast is None else bpast[str(i)],
+                        past_len=past_len)
                     cs[str(i)] = c
                 return (x, aux), cs
             body = cm.maybe_remat(body, cfg.remat_policy)
-            (x, aux), caches["blocks"] = jax.lax.scan(body, (x, aux), p["blocks"])
+            scanned = (p["blocks"] if past is None
+                       else (p["blocks"], past["blocks"]))
+            (x, aux), caches["blocks"] = jax.lax.scan(body, (x, aux), scanned)
         if self.suffix:
             caches["suffix"] = {}
             for i, d in enumerate(self.suffix):
-                x, c, aux = apply_layer_prefill(cfg, d, p["suffix"][str(i)], x,
-                                                positions, ctx, aux)
+                x, c, aux = apply_layer_prefill(
+                    cfg, d, p["suffix"][str(i)], x, positions, ctx, aux,
+                    past=None if past is None else past["suffix"][str(i)],
+                    past_len=past_len)
                 caches["suffix"][str(i)] = c
         return x, caches, aux
 
-    def decode(self, p: dict, x, caches: dict, pos):
+    def decode(self, p: dict, x, caches: dict, pos, tables=None,
+               page_size=None):
         cfg = self.cfg
         aux = jnp.zeros((), jnp.float32)
         new = {}
@@ -418,7 +528,8 @@ class Stack:
             new["prefix"] = {}
             for i, d in enumerate(self.prefix):
                 x, c, aux = apply_layer_decode(cfg, d, p["prefix"][str(i)], x,
-                                               caches["prefix"][str(i)], pos, aux)
+                                               caches["prefix"][str(i)], pos, aux,
+                                               tables=tables, page_size=page_size)
                 new["prefix"][str(i)] = c
         if self.reps:
             def body(carry, scanned):
@@ -427,7 +538,9 @@ class Stack:
                 ncs = {}
                 for i, d in enumerate(self.cycle):
                     x, c, aux = apply_layer_decode(cfg, d, bp[str(i)], x,
-                                                   bc[str(i)], pos, aux)
+                                                   bc[str(i)], pos, aux,
+                                                   tables=tables,
+                                                   page_size=page_size)
                     ncs[str(i)] = c
                 return (x, aux), ncs
             (x, aux), new["blocks"] = jax.lax.scan(
@@ -436,6 +549,7 @@ class Stack:
             new["suffix"] = {}
             for i, d in enumerate(self.suffix):
                 x, c, aux = apply_layer_decode(cfg, d, p["suffix"][str(i)], x,
-                                               caches["suffix"][str(i)], pos, aux)
+                                               caches["suffix"][str(i)], pos, aux,
+                                               tables=tables, page_size=page_size)
                 new["suffix"][str(i)] = c
         return x, new, aux

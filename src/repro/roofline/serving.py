@@ -29,7 +29,8 @@ from typing import Deque, Dict, Optional
 
 import numpy as np
 
-from repro.models import decode_cache, model_specs
+from repro.models import (decode_cache, decode_cache_paged, model_specs,
+                          paged_cache_flags)
 from repro.models.common import param_count
 from repro.roofline.analysis import HW, Hardware, model_flops, roofline_terms
 
@@ -53,6 +54,26 @@ def _cache_bytes_per_row(cfg, max_seq: int) -> int:
                    for leaf in jax.tree.leaves(tree)))
 
 
+def _paged_cache_bytes(cfg, batch: int, max_seq: int, pool_pages: int,
+                       page_size: int):
+    """-> (pool_bytes, resident_bytes) of the paged decode cache (abstract
+    shapes).  ``pool_bytes`` spans all ``pool_pages + 1`` rows (incl. the
+    null page); resident leaves keep the slot-granular batch layout."""
+    import jax
+
+    tree = decode_cache_paged(cfg, batch, max_seq, pool_pages, page_size,
+                              abstract=True)
+    flags = paged_cache_flags(cfg)
+    pool_b = resident_b = 0
+    for flag, leaf in zip(jax.tree.leaves(flags), jax.tree.leaves(tree)):
+        b = int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+        if flag:
+            pool_b += b
+        else:
+            resident_b += b
+    return pool_b, resident_b
+
+
 class ServingCostModel:
     """Roofline-prior, measurement-tightened cost model for one engine."""
 
@@ -63,13 +84,30 @@ class ServingCostModel:
     WINDOW = 64
 
     def __init__(self, cfg, *, batch_size: int, max_seq: int,
-                 hw: Hardware = HW, safety: float = SAFETY):
+                 hw: Hardware = HW, safety: float = SAFETY,
+                 page_size: Optional[int] = None,
+                 pool_pages: Optional[int] = None):
         self.batch_size = batch_size
         self.max_seq = max_seq
         self.safety = safety
+        self.page_size = page_size
+        self.pool_pages = pool_pages
         n_params = param_count(model_specs(cfg))
         pbytes = n_params * _dtype_bytes(cfg.param_dtype)
-        kv_bytes = _cache_bytes_per_row(cfg, max_seq) * batch_size
+        if page_size is not None and pool_pages:
+            # paged engine: KV HBM is priced in pages — a full pool for the
+            # static step bound (conservative), live + predicted-growth
+            # pages for dynamic capacity questions (page_hbm_bytes)
+            pool_b, resident_b = _paged_cache_bytes(
+                cfg, batch_size, max_seq, pool_pages, page_size)
+            self.bytes_per_page = pool_b // (pool_pages + 1)
+            self.resident_cache_bytes = resident_b
+            kv_bytes = resident_b + pool_pages * self.bytes_per_page
+        else:
+            self.bytes_per_page = 0
+            self.resident_cache_bytes = 0
+            kv_bytes = _cache_bytes_per_row(cfg, max_seq) * batch_size
+        self.kv_hbm_bytes = kv_bytes
         # one decode step of the full batch: 2·N FLOPs per live token, one
         # full parameter read, one KV-cache sweep
         flops = model_flops(n_params, batch_size, kind="inference")
@@ -105,21 +143,36 @@ class ServingCostModel:
                    if self._prefill_ms_tok else 0.0)
         return prompt_len * max(obs, self.prefill_lb_ms_per_token)
 
+    def page_hbm_bytes(self, live_pages: int, growth_pages: int = 0) -> int:
+        """KV HBM footprint at ``live_pages`` pool pages in use plus a
+        predicted-growth allowance — what a paged engine actually touches,
+        as opposed to the ``batch × max_seq`` worst case."""
+        return int(self.resident_cache_bytes
+                   + (live_pages + growth_pages) * self.bytes_per_page)
+
     def predict_request_ms(self, prompt_len: int, max_new_tokens: int,
-                           backlog_tokens: int = 0) -> float:
+                           backlog_tokens: int = 0, *,
+                           backlog_prefill_tokens: int = 0,
+                           cached_prefix_tokens: int = 0) -> float:
         """Predicted arrival→completion time for a new request given the
-        engine's current backlog (tokens owed to queued + live requests)."""
+        engine's current backlog.  ``backlog_tokens`` is decode work owed
+        to queued + live requests; ``backlog_prefill_tokens`` is un-prefilled
+        prompt work of waiting requests (priced at prefill rate, not decode
+        rate).  ``cached_prefix_tokens`` are prompt tokens the prefix cache
+        already holds — only the suffix is prefilled."""
         step = self.step_ms()
         decode_steps = max(max_new_tokens - 1, 0)   # first token: prefill
         drain_steps = backlog_tokens / max(1, self.batch_size)
-        total = (self.prefill_ms(prompt_len)
+        suffix = max(prompt_len - cached_prefix_tokens, 1)
+        total = (self.prefill_ms(suffix)
+                 + self.prefill_ms(backlog_prefill_tokens)
                  + (drain_steps + decode_steps) * step)
         return self.safety * total
 
     def snapshot(self) -> Dict:
         with self._lock:
             n_step, n_pf = len(self._step_ms), len(self._prefill_ms_tok)
-        return {
+        snap = {
             "step_lb_ms": round(self.step_lb_ms, 6),
             "step_ms": round(self.step_ms(), 4),
             "prefill_lb_ms_per_token": round(self.prefill_lb_ms_per_token, 6),
@@ -127,3 +180,6 @@ class ServingCostModel:
             "observed_steps": n_step,
             "observed_prefills": n_pf,
         }
+        if self.bytes_per_page:
+            snap["bytes_per_page"] = self.bytes_per_page
+        return snap

@@ -1,2 +1,5 @@
-from repro.serving.cache_utils import extend_cache, write_slots  # noqa: F401
+from repro.serving.cache_utils import (extend_cache, gather_pages,  # noqa: F401
+                                       write_prefill_paged, write_slots)
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.kv_pages import (PagePool, PoolExhausted,  # noqa: F401
+                                    PrefixCache)

@@ -9,6 +9,15 @@ absolute position ``p`` (the invariant ``decode_attention`` relies on).
 rows of one cache (a fresh per-request prefill, already extended to decode
 shape) into chosen batch slots of the shared decode cache, so sequences can
 join and leave the running decode batch without touching other rows.
+
+``write_prefill_paged`` / ``gather_pages`` are the paged-serving variants:
+pageable leaves (global attn K/V, MLA latents) live in a shared
+``(num_pages+1, page_size, ...)`` pool indexed through per-row page tables,
+while resident leaves (ring-buffer window, recurrent/rwkv carries, cross
+K/V) keep the slot-granular layout.  A bool ``flags`` tree (from
+``repro.models.paged_cache_flags``) tells the two layouts apart — leaf
+names alone cannot (``k``/``v`` is paged under global attention but
+resident under a local ring buffer).
 """
 from __future__ import annotations
 
@@ -28,6 +37,33 @@ def _leaf_name(path):
     return None
 
 
+def _stacked(path) -> bool:
+    return any(isinstance(p, jax.tree_util.DictKey) and p.key == "blocks"
+               for p in path)
+
+
+def _fit_seq(name, tmpl, src, prompt_len: int):
+    """Fit a prefill seq leaf into a decode-shaped template (pad the seq
+    axis, or ring-roll + keep-latest for bounded windows)."""
+    base_rank = 3 if name in ("c_kv", "k_rope") else 4
+    ax = _SEQ_LEAVES[name] + (src.ndim - base_rank)
+    src_len = src.shape[ax]
+    tmpl_len = tmpl.shape[ax]
+    if src_len < prompt_len:
+        # ring buffer (local window): slot p % w must hold position p
+        w = src_len
+        shift = prompt_len % w
+        src = jnp.roll(src, shift, axis=ax)
+    if src.shape[ax] <= tmpl_len:
+        pad = [(0, 0)] * src.ndim
+        pad[ax] = (0, tmpl_len - src.shape[ax])
+        return jnp.pad(src, pad)
+    # template window smaller than source: keep the latest slots
+    sl = [slice(None)] * src.ndim
+    sl[ax] = slice(src.shape[ax] - tmpl_len, None)
+    return src[tuple(sl)]
+
+
 def extend_cache(template, prefill_cache, prompt_len: int):
     """Fit ``prefill_cache`` into ``template`` (zeros of decode shape)."""
 
@@ -38,24 +74,7 @@ def extend_cache(template, prefill_cache, prompt_len: int):
         if src.shape == tmpl.shape:
             return src
         if name in _SEQ_LEAVES:
-            base_rank = 3 if name in ("c_kv", "k_rope") else 4
-            ax = _SEQ_LEAVES[name] + (src.ndim - base_rank)
-            src_len = src.shape[ax]
-            tmpl_len = tmpl.shape[ax]
-            if src_len < prompt_len:
-                # ring buffer (local window): slot p % w must hold position p
-                w = src_len
-                shift = prompt_len % w
-                src = jnp.roll(src, shift, axis=ax)
-            if src.shape[ax] <= tmpl_len:
-                pad = [(0, 0)] * src.ndim
-                pad[ax] = (0, tmpl_len - src.shape[ax])
-                out = jnp.pad(src, pad)
-                return out
-            # template window smaller than source: keep the latest slots
-            sl = [slice(None)] * src.ndim
-            sl[ax] = slice(src.shape[ax] - tmpl_len, None)
-            return src[tuple(sl)]
+            return _fit_seq(name, tmpl, src, prompt_len)
         raise ValueError(
             f"cache leaf {name!r}: prefill shape {src.shape} does not fit "
             f"decode template {tmpl.shape}")
@@ -77,10 +96,75 @@ def write_slots(cache, rows, slots):
     def f(path, dst, src):
         dst = jnp.asarray(dst)
         src = jnp.asarray(src).astype(dst.dtype)
-        stacked = any(isinstance(p, jax.tree_util.DictKey) and p.key == "blocks"
-                      for p in path)
-        if stacked:
+        if _stacked(path):
             return dst.at[:, slots].set(src)
         return dst.at[slots].set(src)
 
     return jax.tree_util.tree_map_with_path(f, cache, rows)
+
+
+def write_prefill_paged(flags, cache, prefill_cache, pages, slot,
+                        prompt_len: int, page_size: int):
+    """Scatter one B=1 prefill into the paged decode cache.
+
+    Pageable leaves: the prefilled tokens (zero-padded to whole pages) are
+    scattered into pool rows ``pages`` — one page id per token block, in
+    block order.  Prefix reuse passes only the *suffix* prefill here with
+    the suffix's (private) pages; the suffix always starts page-aligned
+    because only whole pages are ever shared.  Resident leaves: the row is
+    fitted (``extend_cache`` semantics) and scattered at batch ``slot``.
+    """
+    pages = jnp.asarray(pages, jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    n = pages.shape[0]
+
+    def f(path, flag, dst, src):
+        dst = jnp.asarray(dst)
+        src = jnp.asarray(src).astype(dst.dtype)
+        stacked = _stacked(path)
+        if flag:
+            s = src[:, 0] if stacked else src[0]       # drop the B=1 axis
+            ax = 1 if stacked else 0                   # seq axis after drop
+            pad_n = n * page_size - s.shape[ax]
+            if pad_n:
+                spec = [(0, 0)] * s.ndim
+                spec[ax] = (0, pad_n)
+                s = jnp.pad(s, spec)
+            s = s.reshape(s.shape[:ax] + (n, page_size) + s.shape[ax + 1:])
+            return dst.at[:, pages].set(s) if stacked else dst.at[pages].set(s)
+        name = _leaf_name(path)
+        tmpl = dst[:, :1] if stacked else dst[:1]
+        if src.shape != tmpl.shape:
+            if name not in _SEQ_LEAVES:
+                raise ValueError(
+                    f"cache leaf {name!r}: prefill shape {src.shape} does "
+                    f"not fit decode row {tmpl.shape}")
+            src = _fit_seq(name, tmpl, src, prompt_len)
+        return dst.at[:, slot].set(src) if stacked else dst.at[slot].set(src)
+
+    return jax.tree_util.tree_map_with_path(f, flags, cache, prefill_cache)
+
+
+def gather_pages(flags, cache, pages):
+    """Gather pool pages into contiguous past leaves for prefix reuse.
+
+    Every leaf must be pageable (prefix sharing is gated to pure attn/mla
+    stacks); returns ``(1, n_pages * page_size, ...)`` leaves (with the
+    leading layer axis preserved for stacked ``blocks`` leaves) shaped like
+    a B=1 prefill of the shared prefix.
+    """
+    pages = jnp.asarray(pages, jnp.int32)
+
+    def f(path, flag, leaf):
+        if not flag:
+            raise ValueError(
+                f"prefix gather hit a non-paged leaf {_leaf_name(path)!r}")
+        leaf = jnp.asarray(leaf)
+        if _stacked(path):
+            g = leaf[:, pages]                         # (reps, n, ps, ...)
+            return g.reshape((g.shape[0], 1, g.shape[1] * g.shape[2])
+                             + g.shape[3:])
+        g = leaf[pages]                                # (n, ps, ...)
+        return g.reshape((1, g.shape[0] * g.shape[1]) + g.shape[2:])
+
+    return jax.tree_util.tree_map_with_path(f, flags, cache)

@@ -37,8 +37,10 @@ from repro.core.descriptors import (CapabilityDescriptor, LifecycleSemantics,
                                     ResourceDescriptor, SignalSpec,
                                     TimingSemantics)
 from repro.core.errors import AdmissionRefused, ErrorCode
+from repro.core.simclock import SYSTEM_CLOCK, Clock
 from repro.core.telemetry import RuntimeSnapshot
 from repro.core.twin import TwinNotReady, TwinState, TwinSurrogate
+from repro.models import paged_support
 from repro.roofline.serving import ServingCostModel
 from repro.serving.engine import Request, ServingEngine
 from repro.substrates.base import SubstrateAdapter
@@ -109,7 +111,10 @@ class LmServingAdapter(SubstrateAdapter):
     def __init__(self, arch: str = "internlm2-20b", *, batch_size: int = 4,
                  max_seq: int = 128, seed: int = 0,
                  max_concurrent: int = 256, safety: Optional[float] = None,
-                 calibrate: bool = True):
+                 calibrate: bool = True, paged: bool = False,
+                 page_size: int = 16, pool_pages: Optional[int] = None,
+                 prefix_sharing: bool = True,
+                 clock: Optional[Clock] = None):
         super().__init__()
         self.arch = arch
         self.resource_id = f"lm-serving-{arch}"
@@ -119,7 +124,17 @@ class LmServingAdapter(SubstrateAdapter):
         self.seed = seed
         self.max_concurrent = max_concurrent
         self.calibrate = calibrate
+        self.clock = clock if clock is not None else SYSTEM_CLOCK
+        self.paged = paged
+        self.page_size = page_size
+        self.pool_pages = pool_pages
+        self.prefix_sharing = prefix_sharing
         kw = {} if safety is None else {"safety": safety}
+        if paged and paged_support(self.cfg)[0]:
+            max_pages = -(-max_seq // page_size)
+            self.pool_pages = (pool_pages if pool_pages is not None
+                               else batch_size * max_pages)
+            kw.update(page_size=page_size, pool_pages=self.pool_pages)
         self.cost = ServingCostModel(self.cfg, batch_size=batch_size,
                                      max_seq=max_seq, **kw)
         self.engine: Optional[ServingEngine] = None
@@ -161,13 +176,15 @@ class LmServingAdapter(SubstrateAdapter):
                                      max_concurrent=self.max_concurrent),
             supports_repeated_invocation=True,
         )
+        kv = (f"paged kv pool={self.pool_pages}x{self.page_size}tok"
+              if self.paged and self.pool_pages else "slot-granular kv")
         return ResourceDescriptor(
             resource_id=self.resource_id, substrate_class="lm_serving",
             adapter_type="in_process", location="cloud",
             twin_binding=f"twin-{self.resource_id}", capability=cap,
             description=f"{self.arch} continuous-batching LM serving "
                         f"(batch={self.batch_size}, max_seq={self.max_seq}, "
-                        f"roofline admission)")
+                        f"{kv}, roofline admission)")
 
     # -- engine lifecycle -----------------------------------------------------
     def _on_complete(self, r: Request) -> None:
@@ -179,26 +196,36 @@ class LmServingAdapter(SubstrateAdapter):
     def _admission(self, r: Request, engine: ServingEngine) -> None:
         if r.deadline_s is None:
             return
-        remaining_ms = (r.deadline_s - time.monotonic()) * 1e3  # planelint: allow(clock-seam) — serving-engine timebase (ROADMAP: virtualize)
-        backlog = engine.backlog_tokens()
-        pred_ms = self.cost.predict_request_ms(len(r.prompt),
-                                               r.max_new_tokens, backlog)
+        remaining_ms = (r.deadline_s - self.clock.monotonic()) * 1e3
+        backlog = engine.backlog()
+        cached = engine.cached_prefix_tokens(r.prompt)
+        pred_ms = self.cost.predict_request_ms(
+            len(r.prompt), r.max_new_tokens, backlog["decode_tokens"],
+            backlog_prefill_tokens=backlog["prefill_tokens"],
+            cached_prefix_tokens=cached)
         if pred_ms > remaining_ms:
             raise AdmissionRefused(
                 ErrorCode.DEADLINE,
                 f"{r.request_id}: predicted completion {pred_ms:.0f}ms "
                 f"exceeds remaining deadline budget {remaining_ms:.0f}ms "
-                f"(backlog {backlog} tokens)",
+                f"(backlog {backlog['decode_tokens']} decode + "
+                f"{backlog['prefill_tokens']} prefill tokens)",
                 detail={"predicted_ms": round(pred_ms, 1),
                         "remaining_ms": round(remaining_ms, 1),
-                        "backlog_tokens": backlog})
+                        "backlog_tokens": backlog["decode_tokens"],
+                        "backlog_prefill_tokens": backlog["prefill_tokens"],
+                        "prefix_cached_tokens": cached})
 
     def prepare(self, session) -> None:
         self._check_prepare_fault()
         if self.engine is not None:
             return
         engine = ServingEngine(self.cfg, batch_size=self.batch_size,
-                               max_seq=self.max_seq, seed=self.seed)
+                               max_seq=self.max_seq, seed=self.seed,
+                               paged=self.paged, page_size=self.page_size,
+                               pool_pages=self.pool_pages,
+                               prefix_sharing=self.prefix_sharing,
+                               clock=self.clock)
         engine.on_complete = self._on_complete
         engine.admission = self._admission
         engine.on_step_ms = self.cost.observe_step
@@ -235,7 +262,7 @@ class LmServingAdapter(SubstrateAdapter):
         deadline_s = None
         budget_ms = session.task.latency_budget_ms
         if budget_ms is not None:
-            deadline_s = time.monotonic() + budget_ms / 1e3  # planelint: allow(clock-seam) — serving-engine timebase (ROADMAP: virtualize)
+            deadline_s = self.clock.monotonic() + budget_ms / 1e3
         r = Request(req_id, prompt, max_new_tokens=max_new,
                     deadline_s=deadline_s)
         t0 = time.perf_counter()
@@ -262,6 +289,7 @@ class LmServingAdapter(SubstrateAdapter):
             "health_status": "healthy",
             "observation_ms": total_ms,
             "deadline_expired": bool(r.expired),
+            **self.engine.pool_stats(),
         })
         return {
             "output": {"request_id": req_id, "tokens": list(r.generated),
@@ -277,14 +305,12 @@ class LmServingAdapter(SubstrateAdapter):
         the lifecycle manager guarantees no sessions in flight)."""
         if self.engine is None:
             return
-        with self.engine._lock:
-            self.engine._waiting.clear()
-            for s in self.engine._slots:
-                s.request, s.pos, s.token = None, 0, 0
-            self.engine._cb_cache = None
+        self.engine.flush()
 
     def close(self) -> None:
         self._stop.set()
+        if self.engine is not None:
+            self.engine.wake()      # the idle driver parks unbounded
         if self._driver is not None:
             self._driver.join(timeout=2.0)
             self._driver = None
@@ -293,13 +319,16 @@ class LmServingAdapter(SubstrateAdapter):
         if self.engine is None:
             return RuntimeSnapshot(self.resource_id)
         m = self.engine.metrics
+        backlog = self.engine.backlog()
         return RuntimeSnapshot(
             self.resource_id,
             health_status="healthy",
             extra={"backlog_tokens": self.engine.backlog_tokens(),
+                   "backlog_prefill_tokens": backlog["prefill_tokens"],
                    "live_slots": self.engine.live_slots(),
                    "requests": m["requests"],
                    "deadline_expired": m["deadline_expired"],
+                   **self.engine.pool_stats(),
                    **self.cost.snapshot()})
 
     def make_twin(self) -> Optional[TwinState]:

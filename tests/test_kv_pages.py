@@ -1,0 +1,283 @@
+"""Property tests for the paged-KV allocator and prefix cache.
+
+The allocator invariants (no leaks, no double frees, refcounts drain to
+zero, prefix sharing never aliases divergent suffixes) are checked with
+randomized operation sequences validated against a pure-python reference
+model.  When ``hypothesis`` is installed the same state machine also runs
+under its shrinking engine; the seeded fallback keeps the properties
+exercised in environments without it.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.kv_pages import (PagePool, PoolExhausted, PrefixCache,
+                                    _block_keys)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# -- PagePool basics ----------------------------------------------------------
+
+def test_alloc_never_returns_null_page():
+    pool = PagePool(8, 16)
+    pages = pool.alloc(8)
+    assert 0 not in pages
+    assert sorted(pages) == list(range(1, 9))
+
+
+def test_alloc_exhaustion_raises_and_leaves_pool_intact():
+    pool = PagePool(4, 16)
+    pool.alloc(3)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(2)
+    assert pool.free_pages() == 1            # failed alloc took nothing
+    pool.alloc(1)
+    assert pool.free_pages() == 0
+
+
+def test_refcount_lifecycle_and_double_free():
+    pool = PagePool(4, 16)
+    [p] = pool.alloc(1)
+    assert pool.refcount(p) == 1
+    assert pool.incref(p) == 2
+    assert pool.decref(p) == 1
+    assert pool.decref(p) == 0               # freed here
+    assert pool.free_pages() == 4
+    with pytest.raises(AssertionError):
+        pool.decref(p)                       # double free
+
+
+def test_reserve_is_admission_accounting_not_allocation():
+    pool = PagePool(8, 16)
+    assert pool.reserve(5)
+    assert pool.free_pages() == 8            # nothing allocated yet
+    assert not pool.reserve(4)               # 5 + 4 > 8
+    assert pool.reserve(3)
+    pool.unreserve(5)
+    assert pool.reserved_pages == 3
+    pool.unreserve(3)
+    assert pool.reserved_pages == 0
+
+
+def test_audit_clean_pool():
+    pool = PagePool(6, 16)
+    a = pool.alloc(2)
+    stats = pool.audit()
+    assert stats["used"] == 2 and stats["free"] == 4
+    for p in a:
+        pool.decref(p)
+    assert pool.audit()["used"] == 0
+
+
+# -- randomized allocator state machine --------------------------------------
+
+def _run_pool_ops(seed: int, num_pages: int = 12, steps: int = 400):
+    """Random alloc/incref/decref/reserve ops against a reference model."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages, 16)
+    model = {}                               # page -> refcount
+    reserved = 0
+    for _ in range(steps):
+        op = rng.integers(0, 5)
+        if op == 0:                          # alloc
+            n = int(rng.integers(1, 4))
+            if pool.free_pages() >= n:
+                pages = pool.alloc(n)
+                assert len(set(pages)) == n
+                assert not (set(pages) & set(model)), "allocated a live page"
+                for p in pages:
+                    model[p] = 1
+            else:
+                with pytest.raises(PoolExhausted):
+                    pool.alloc(n)
+        elif op == 1 and model:              # incref
+            p = int(rng.choice(list(model)))
+            model[p] += 1
+            assert pool.incref(p) == model[p]
+        elif op == 2 and model:              # decref
+            p = int(rng.choice(list(model)))
+            model[p] -= 1
+            assert pool.decref(p) == model[p]
+            if model[p] == 0:
+                del model[p]
+        elif op == 3:                        # reserve
+            n = int(rng.integers(1, 5))
+            ok = pool.reserve(n)
+            assert ok == (reserved + n <= num_pages)
+            if ok:
+                reserved += n
+        elif op == 4 and reserved:           # unreserve
+            n = int(rng.integers(1, reserved + 1))
+            pool.unreserve(n)
+            reserved -= n
+        stats = pool.audit()                 # invariants hold at every step
+        assert stats["used"] == len(model)
+        assert stats["free"] == num_pages - len(model)
+        assert stats["reserved"] == reserved
+        for p, rc in model.items():
+            assert pool.refcount(p) == rc
+    # drain: refcounts all the way to zero releases every page
+    for p, rc in list(model.items()):
+        for _ in range(rc):
+            pool.decref(p)
+    assert pool.audit()["used"] == 0
+    assert pool.free_pages() == num_pages
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_pool_random_ops(seed):
+    _run_pool_ops(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_pool_random_ops_hypothesis(seed):
+        _run_pool_ops(seed, steps=120)
+
+
+# -- chain hash ---------------------------------------------------------------
+
+def test_block_keys_chain_depends_on_all_prior_blocks():
+    ps = 4
+    a = np.arange(12, dtype=np.int32)
+    b = a.copy()
+    b[1] = 99                                # mutate inside block 0
+    ka = _block_keys(a, ps, 3)
+    kb = _block_keys(b, ps, 3)
+    assert ka[0] != kb[0]
+    assert ka[1] != kb[1] and ka[2] != kb[2]   # chained: later keys differ too
+    c = a.copy()
+    c[5] = 99                                # mutate inside block 1 only
+    kc = _block_keys(c, ps, 3)
+    assert ka[0] == kc[0]                    # block 0 unaffected
+    assert ka[1] != kc[1] and ka[2] != kc[2]
+
+
+# -- PrefixCache --------------------------------------------------------------
+
+def _mkpool(pages=32, ps=4):
+    pool = PagePool(pages, ps)
+    return pool, PrefixCache(pool)
+
+
+def test_prefix_lookup_miss_then_hit():
+    pool, pc = _mkpool()
+    prompt = np.arange(10, dtype=np.int32)
+    assert pc.lookup(prompt, 4) == (0, [])
+    pages = pool.alloc(3)
+    pc.insert(prompt, pages, 4)              # registers blocks 0 and 1
+    n, shared = pc.lookup(prompt, 4)
+    assert n == 2 and shared == pages[:2]
+    assert pool.refcount(pages[0]) == 3      # owner + cache + lookup
+    assert pc.probe(prompt, 4) == 8
+
+
+def test_prefix_lookup_always_leaves_a_suffix_token():
+    """A prompt that is exactly whole cached blocks must still prefill ≥1
+    token (the engine needs prefill logits for the first generated token)."""
+    pool, pc = _mkpool()
+    prompt = np.arange(8, dtype=np.int32)    # exactly 2 blocks of 4
+    pages = pool.alloc(2)
+    pc.insert(prompt, pages, 4)
+    n, shared = pc.lookup(prompt, 4)
+    assert n == 1 and shared == pages[:1]    # capped below full coverage
+    assert pc.probe(prompt, 4) == 4
+
+
+def test_prefix_sharing_never_aliases_divergent_suffixes():
+    pool, pc = _mkpool()
+    common = np.arange(8, dtype=np.int32)
+    a = np.concatenate([common, np.array([70, 71, 72], np.int32)])
+    b = np.concatenate([common, np.array([80, 81, 82], np.int32)])
+    pages_a = pool.alloc(3)
+    pc.insert(a, pages_a, 4)
+    n, shared = pc.lookup(b, 4)
+    assert n == 2 and shared == pages_a[:2]  # common full blocks shared
+    # b's divergent block must get its own page, never a's third page
+    fresh = pool.alloc(1)
+    assert fresh[0] != pages_a[2]
+    pc.insert(b, shared + fresh, 4)
+    # a's third block key is untouched: looking up a still returns a's page
+    n_a, shared_a = pc.lookup(a, 4)
+    assert shared_a[:2] == pages_a[:2]
+    assert pc.probe(a, 4) == 8               # a's block 2 is a partial (3 tok)
+
+
+def test_prefix_divergence_inside_a_block_shares_nothing_past_it():
+    pool, pc = _mkpool()
+    a = np.arange(8, dtype=np.int32)
+    b = a.copy()
+    b[2] = 99                                # diverges inside block 0
+    pages = pool.alloc(2)
+    pc.insert(a, pages, 4)
+    assert pc.lookup(b, 4) == (0, [])
+
+
+def test_prefix_eviction_decrefs_and_frees_cache_only_pages():
+    pool, pc = _mkpool(pages=4, ps=4)
+    prompt = np.arange(8, dtype=np.int32)
+    pages = pool.alloc(2)
+    pc.insert(prompt, pages, 4)
+    for p in pages:                          # owner finishes
+        pool.decref(p)
+    assert pool.used_pages() == 2            # held by the cache alone
+    assert pc.evict_one()
+    assert pc.evict_one()
+    assert not pc.evict_one()
+    assert pool.used_pages() == 0
+    assert pool.audit()["used"] == 0
+
+
+def test_prefix_hit_rate_accounting():
+    pool, pc = _mkpool()
+    prompt = np.arange(9, dtype=np.int32)
+    pages = pool.alloc(3)
+    pc.insert(prompt, pages, 4)
+    pc.lookup(prompt, 4)                     # 8 of 9 lookup tokens cached
+    assert pc.hit_tokens == 8 and pc.lookup_tokens == 9
+    assert pc.hit_rate() == pytest.approx(8 / 9)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_prefix_cache_random_workload_drains_clean(seed):
+    """Random insert/lookup/evict/finish traffic: every page the model
+    thinks is live is live, and a full drain releases everything."""
+    rng = np.random.default_rng(seed)
+    ps = 4
+    pool = PagePool(64, ps)
+    pc = PrefixCache(pool)
+    live = []                                # [(pages, n_shared)]
+    for _ in range(60):
+        op = rng.integers(0, 3)
+        if op == 0:                          # admit a request
+            length = int(rng.integers(1, 17))
+            prompt = rng.integers(0, 6, size=length).astype(np.int32)
+            need = -(-length // ps)
+            n, shared = pc.lookup(prompt, ps)
+            fresh_n = need - n
+            if pool.free_pages() < fresh_n:
+                for p in shared:
+                    pool.decref(p)
+                continue
+            pages = list(shared) + pool.alloc(fresh_n)
+            pc.insert(prompt, pages, ps)
+            live.append(pages)
+        elif op == 1 and live:               # finish a request
+            pages = live.pop(int(rng.integers(0, len(live))))
+            for p in pages:
+                pool.decref(p)
+        elif op == 2:
+            pc.evict_one()
+        pool.audit()
+    for pages in live:
+        for p in pages:
+            pool.decref(p)
+    pc.flush()
+    stats = pool.audit()
+    assert stats["used"] == 0 and stats["free"] == 64

@@ -161,7 +161,9 @@ def test_continuous_submit_threadsafe_with_driver(cfg, params):
                                max_new_tokens=3)) for i in range(6)]
     assert done.wait(60.0), "driver thread did not finish the queue"
     stop.set()
+    eng.wake()          # the idle park is unbounded, not a poll
     driver.join(timeout=5.0)
+    assert not driver.is_alive(), "driver did not observe stop after wake"
     assert all(r.done and len(r.generated) == 3 for r in reqs)
 
 
